@@ -1,0 +1,53 @@
+//! §5 tuning demo: grid-search (ChunkSize, K) for a model/context pair and
+//! print the ranked feasible grid (Table 4 / Table 6 machinery).
+//!
+//! ```bash
+//! cargo run --release --example gridsearch [-- <model> <ctx>]
+//! ```
+
+use chunkflow::config::{ModelSpec, ParallelConfig, RecomputeGranularity};
+use chunkflow::tune::GridSearch;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let model = args.first().map(|s| s.as_str()).unwrap_or("qwen2.5-7b");
+    let ctx = args
+        .get(1)
+        .and_then(|s| chunkflow::util::cli::parse_size(s))
+        .unwrap_or(256 * 1024);
+
+    let spec = ModelSpec::preset(model)?;
+    let parallel = ParallelConfig::new(4, 4, RecomputeGranularity::Selective);
+    let mut gs = GridSearch::standard(spec, parallel, ctx);
+    gs.global_batch_size = 128;
+    gs.iters = 2;
+
+    println!(
+        "grid search: {model} @ {} context, {} (batch {})\n",
+        chunkflow::util::format_tokens(ctx),
+        "TP=4 PP=4 selective",
+        gs.global_batch_size
+    );
+    println!(
+        "{:>10} {:>4} {:>14} {:>10} {:>12} {:>6}",
+        "ChunkSize", "K", "iter seconds", "bubble", "peak mem", "fits"
+    );
+    for p in gs.run() {
+        println!(
+            "{:>10} {:>4} {:>14.3} {:>9.1}% {:>12} {:>6}",
+            chunkflow::util::format_tokens(p.chunk_size),
+            p.k,
+            p.avg_iteration_seconds,
+            p.bubble_ratio * 100.0,
+            chunkflow::util::format_bytes(p.peak_memory_bytes),
+            if p.feasible { "yes" } else { "OOM" }
+        );
+    }
+    let best = gs.best().unwrap();
+    println!(
+        "\nbest feasible: ({}, {}) — compare paper Table 4",
+        chunkflow::util::format_tokens(best.chunk_size),
+        best.k
+    );
+    Ok(())
+}

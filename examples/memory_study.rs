@@ -1,0 +1,86 @@
+//! Memory-model study: reproduces Table 5 (ChunkFlow peak vs ChunkSize) and
+//! the Figure 1 micro-step trace, then sweeps K to show the K*ChunkSize
+//! activation law.
+//!
+//! ```bash
+//! cargo run --release --example memory_study
+//! ```
+
+use chunkflow::baseline;
+use chunkflow::config::{ModelSpec, ParallelConfig, RecomputeGranularity};
+use chunkflow::data::{BatchSampler, LengthDistribution};
+use chunkflow::memory::{MemoryModel, GPU_CAPACITY};
+
+const K: u64 = 1024;
+const GIB: f64 = (1u64 << 30) as f64;
+
+fn main() -> anyhow::Result<()> {
+    let spec = ModelSpec::preset("qwen2.5-7b")?;
+    let mm = MemoryModel::new(
+        spec.clone(),
+        ParallelConfig::new(4, 1, RecomputeGranularity::Selective),
+    );
+
+    println!("== Table 5: ChunkFlow peak memory (7B, <4,4,1,selective>, K=1) ==");
+    println!("{:>6} {:>10} {:>10}", "ctx", "ChunkSize", "peak GiB");
+    for ctx in [32 * K, 256 * K] {
+        for cs in [2 * K, 4 * K, 8 * K] {
+            println!(
+                "{:>6} {:>10} {:>10.1}",
+                chunkflow::util::format_tokens(ctx),
+                chunkflow::util::format_tokens(cs),
+                mm.chunkflow_peak(cs, 1, ctx) as f64 / GIB
+            );
+        }
+    }
+
+    println!("\n== K sweep (ctx 256K, ChunkSize 8K): activation = K * ChunkSize ==");
+    for k in [1u64, 2, 4, 8, 16] {
+        let peak = mm.chunkflow_peak(8 * K, k, 256 * K);
+        println!(
+            "K={k:<3} peak {:>6.1} GiB {}",
+            peak as f64 / GIB,
+            if peak <= GPU_CAPACITY { "" } else { "  <-- OOM" }
+        );
+    }
+
+    println!("\n== Figure 1: Megatron micro-step footprints (1000 steps) ==");
+    let mut sampler =
+        BatchSampler::new(LengthDistribution::lmsys_chat_1m(), 32 * K, 1000, 42);
+    let trace = baseline::microstep_memory_trace(&sampler.next_batch(), &mm);
+    let (peak, under45) = baseline::trace_stats(&trace, 45 * (1u64 << 30));
+    println!(
+        "peak {:.1} GiB (paper ~75 GB); {:.1}% of micro-steps under 45 GB (paper 97.7%)",
+        peak as f64 / GIB,
+        under45 * 100.0
+    );
+    let mut hist = vec![0usize; 11];
+    for &b in &trace {
+        hist[((b as f64 / GIB / 8.0) as usize).min(10)] += 1;
+    }
+    for (i, n) in hist.iter().enumerate() {
+        if *n > 0 {
+            println!(
+                "{:>3}-{:<3} GiB | {:<60} {n}",
+                i * 8,
+                (i + 1) * 8,
+                "#".repeat(1 + n * 59 / trace.len())
+            );
+        }
+    }
+
+    println!("\n== Baseline OOM wall at 256K (the paper's Obs. 2) ==");
+    for (rec, name) in [
+        (RecomputeGranularity::Selective, "selective"),
+        (RecomputeGranularity::Full, "full"),
+    ] {
+        let m = MemoryModel::new(spec.clone(), ParallelConfig::new(4, 1, rec));
+        let p = m.baseline_peak(256 * K);
+        println!(
+            "<4,4,1,{name}>: one 256K micro-batch peaks at {:.0} GiB {}",
+            p as f64 / GIB,
+            if p <= GPU_CAPACITY { "(fits)" } else { "(OOM)" }
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,80 @@
+//! Pipeline-schedule studies at realistic scale: sweeps PP degree and
+//! ChunkSize over sampled evaluation batches and prints bubble/makespan
+//! tables (the mechanism behind Figures 6-8).
+//!
+//! ```bash
+//! cargo run --release --example pipeline_sim [-- <ctx-tokens>]
+//! ```
+
+use chunkflow::chunk::construct_chunks;
+use chunkflow::config::{ModelSpec, ParallelConfig, RecomputeGranularity};
+use chunkflow::data::{BatchSampler, LengthDistribution};
+use chunkflow::pipeline::onef1b;
+use chunkflow::sim::CostModel;
+
+const K: u64 = 1024;
+
+fn main() -> anyhow::Result<()> {
+    let ctx: u64 = std::env::args()
+        .nth(1)
+        .and_then(|s| chunkflow::util::cli::parse_size(&s))
+        .unwrap_or(128 * K);
+    let spec = ModelSpec::preset("qwen2.5-7b")?;
+    let mut sampler =
+        BatchSampler::new(LengthDistribution::evaluation_dataset(), ctx, 192, 42);
+    let batch = sampler.next_batch();
+    let total: u64 = batch.iter().map(|s| s.len).sum();
+    println!(
+        "batch: {} seqs, {} total tokens, longest {} (ctx {})\n",
+        batch.len(),
+        total,
+        chunkflow::util::format_tokens(batch.iter().map(|s| s.len).max().unwrap()),
+        chunkflow::util::format_tokens(ctx),
+    );
+
+    println!(
+        "{:>4} {:>10} {:>4} {:>8} {:>12} {:>10}",
+        "PP", "ChunkSize", "K", "chunks", "iter (s)", "bubble"
+    );
+    for pp in [2u64, 4, 8] {
+        let cost = CostModel::new(
+            spec.clone(),
+            ParallelConfig::new(4, pp, RecomputeGranularity::Selective),
+        );
+        // Baseline row: sequences as micro-batches.
+        let items: Vec<onef1b::PipelineItem> = batch
+            .iter()
+            .map(|s| {
+                let c = cost.stage_costs(s.len, s.len);
+                onef1b::PipelineItem { fwd_cost: c.fwd, bwd_cost: c.bwd }
+            })
+            .collect();
+        let t = onef1b::simulate_standard(&items, pp as usize)?;
+        println!(
+            "{pp:>4} {:>10} {:>4} {:>8} {:>12.3} {:>9.1}%",
+            "none",
+            "-",
+            items.len(),
+            t.makespan,
+            t.bubble_ratio() * 100.0
+        );
+        for chunk_size in [2 * K, 8 * K, 32 * K] {
+            for k in [1usize, 8] {
+                let set = construct_chunks(&batch, chunk_size);
+                let t = onef1b::simulate_state_aware(&set, k, pp as usize, |id| {
+                    let c = &set.chunks[id];
+                    cost.stage_costs(c.total_len(), c.prefix_len() + c.total_len())
+                })?;
+                println!(
+                    "{pp:>4} {:>10} {k:>4} {:>8} {:>12.3} {:>9.1}%",
+                    chunkflow::util::format_tokens(chunk_size),
+                    set.chunks.len(),
+                    t.makespan,
+                    t.bubble_ratio() * 100.0
+                );
+            }
+        }
+        println!();
+    }
+    Ok(())
+}

@@ -1,0 +1,79 @@
+//! Quickstart: the ChunkFlow pipeline in five minutes, no artifacts needed.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Walks the paper's core loop on a toy batch: Algorithm 1 chunk
+//! construction, Algorithm 2 state-aware scheduling, and the state-aware
+//! 1F1B pipeline simulation, printing the schedule and bubble ratios.
+
+use chunkflow::chunk::construct_chunks;
+use chunkflow::data::Sequence;
+use chunkflow::pipeline::{onef1b, OpCosts};
+use chunkflow::schedule::{schedule_step, ChunkOp};
+
+fn main() -> anyhow::Result<()> {
+    // The paper's Figure 2 batch: sequences of 1, 1, 2 and 4 "Units".
+    let batch = vec![
+        Sequence { id: 0, len: 1 },
+        Sequence { id: 1, len: 1 },
+        Sequence { id: 2, len: 2 },
+        Sequence { id: 3, len: 4 },
+    ];
+    println!("batch: lengths {:?}\n", batch.iter().map(|s| s.len).collect::<Vec<_>>());
+
+    // --- Algorithm 1: chunk construction (ChunkSize = 2 Units) -------------
+    let set = construct_chunks(&batch, 2);
+    println!("Algorithm 1 with ChunkSize = 2:");
+    for c in &set.chunks {
+        println!(
+            "  chunk {}: {} tokens, {} ({} segment(s))",
+            c.id,
+            c.total_len(),
+            if c.is_dependent() { "dependent" } else { "standalone" },
+            c.segments.len()
+        );
+    }
+
+    // --- Algorithm 2: state-aware schedule ---------------------------------
+    let plan = schedule_step(&set, 1);
+    println!("\nAlgorithm 2 (K = 1) per-group op plans:");
+    for g in &plan.groups {
+        let ops: Vec<String> = g
+            .ops
+            .iter()
+            .map(|op| match op {
+                ChunkOp::Forward { chunk, retain } => {
+                    format!("F{}{}", g.chunk_ids[*chunk], if *retain { "*" } else { "" })
+                }
+                ChunkOp::RecomputeForward { chunk } => format!("rF{}", g.chunk_ids[*chunk]),
+                ChunkOp::Backward { chunk } => format!("B{}", g.chunk_ids[*chunk]),
+            })
+            .collect();
+        println!("  chunks {:?}: {}", g.chunk_ids, ops.join(" "));
+    }
+
+    // --- Pipeline: baseline vs state-aware 1F1B ----------------------------
+    let items: Vec<onef1b::PipelineItem> = batch
+        .iter()
+        .map(|s| onef1b::PipelineItem { fwd_cost: s.len as f64, bwd_cost: 2.0 * s.len as f64 })
+        .collect();
+    let base = onef1b::simulate_standard(&items, 4)?;
+    println!("\nstandard 1F1B over raw sequences (PP = 4):");
+    println!("  bubble ratio {:.2}% (paper: 57.14%)", base.bubble_ratio() * 100.0);
+    println!("{}", base.gantt(64));
+
+    for k in [1, 2] {
+        let t = onef1b::simulate_state_aware(&set, k, 4, |id| {
+            let len = set.chunks[id].total_len() as f64;
+            OpCosts { fwd: len, bwd: 2.0 * len }
+        })?;
+        println!("state-aware 1F1B, ChunkSize=2, K={k}:");
+        println!("  bubble ratio {:.2}%, makespan {} units", t.bubble_ratio() * 100.0, t.makespan);
+        println!("{}", t.gantt(64));
+    }
+    println!("Next: `cargo run --release -- report all` regenerates every paper artifact,");
+    println!("and `examples/train_e2e.rs` trains a real model through this machinery.");
+    Ok(())
+}

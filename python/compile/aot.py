@@ -1,0 +1,161 @@
+"""AOT export: lower the L2 chunk programs to HLO text + manifest.json.
+
+Emits, per KV-prefix bucket P in {0, C, 2C, ..., (M-1)*C}:
+
+  {model}_chunk_vjp_p{P}.hlo.txt  (params, tokens, targets, pos, seg,
+                                   kv_in[P], g_kv_own)
+                          -> (loss_sum, n_tok, kv_own, d_params..., d_kv_in)
+  {model}_fwd_kv_p{P}.hlo.txt     (params, tokens, targets, pos, seg, kv_in[P])
+                          -> (loss_sum, n_tok, kv_own)
+
+plus `{model}_full_step_s{S}.hlo.txt` oracles used by the rust integration tests,
+and `manifest.json` describing the model config, parameter layout, buckets
+and file names for `rust/src/runtime`.
+
+HLO *text* is the interchange format (NOT serialized protos): jax >= 0.5
+emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+parser reassigns ids (see /opt/xla-example/README.md).
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts --model tiny \
+        --chunk-size 256 --max-chunks 4
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(fn, example_args) -> str:
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def chunk_arg_specs(cfg: M.ModelConfig, c: int, p: int):
+    """Specs for (tokens, targets, pos, seg, kv_in)."""
+    l, h, d = cfg.num_layers, cfg.num_heads, cfg.head_dim
+    return (
+        spec((c,), jnp.int32),
+        spec((c,), jnp.int32),
+        spec((c,), jnp.int32),
+        spec((c,), jnp.int32),
+        spec((l, 2, p, h, d)),
+    )
+
+
+def param_specs(cfg: M.ModelConfig):
+    shapes = M.param_shapes(cfg)
+    return [spec(shapes[name]) for name in M.PARAM_ORDER]
+
+
+def export(cfg_name: str, chunk_size: int, max_chunks: int, out_dir: str,
+           full_lens=None) -> dict:
+    cfg = M.PRESETS[cfg_name]
+    os.makedirs(out_dir, exist_ok=True)
+    l, h, d = cfg.num_layers, cfg.num_heads, cfg.head_dim
+    files = {}
+
+    def write(name: str, text: str):
+        path = os.path.join(out_dir, name)
+        with open(path, "w") as f:
+            f.write(text)
+        files[name] = {
+            "bytes": len(text),
+            "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+        }
+        print(f"  wrote {name} ({len(text)//1024} KiB)")
+
+    fwd_kv = M.make_fwd_kv(cfg)
+    chunk_vjp = M.make_chunk_vjp(cfg)
+
+    buckets = []
+    for i in range(max_chunks):
+        p = i * chunk_size
+        args = chunk_arg_specs(cfg, chunk_size, p)
+        pargs = param_specs(cfg)
+        write(f"{cfg_name}_fwd_kv_p{p}.hlo.txt", to_hlo_text(fwd_kv, (pargs, *args)))
+        g_kv = spec((l, 2, chunk_size, h, d))
+        write(
+            f"{cfg_name}_chunk_vjp_p{p}.hlo.txt",
+            to_hlo_text(chunk_vjp, (pargs, *args, g_kv)),
+        )
+        buckets.append(p)
+
+    # Full-sequence oracles for integration tests (small lengths only).
+    full_step = M.make_full_step(cfg)
+    full_lens = full_lens if full_lens is not None else []
+    for s in full_lens:
+        args = (
+            spec((s,), jnp.int32),
+            spec((s,), jnp.int32),
+            spec((s,), jnp.int32),
+            spec((s,), jnp.int32),
+        )
+        write(f"{cfg_name}_full_step_s{s}.hlo.txt", to_hlo_text(full_step, (param_specs(cfg), *args)))
+
+    shapes = M.param_shapes(cfg)
+    manifest = {
+        "model": {
+            "name": cfg_name,
+            "vocab_size": cfg.vocab_size,
+            "hidden_size": cfg.hidden_size,
+            "num_layers": cfg.num_layers,
+            "num_heads": cfg.num_heads,
+            "intermediate_size": cfg.intermediate_size,
+            "rope_theta": cfg.rope_theta,
+            "param_count": M.param_count(cfg),
+        },
+        "chunk_size": chunk_size,
+        "max_chunks": max_chunks,
+        "kv_buckets": buckets,
+        "full_step_lens": list(full_lens),
+        "params": [
+            {"name": n, "shape": list(shapes[n]), "size": int(jnp.prod(jnp.array(shapes[n])))}
+            for n in M.PARAM_ORDER
+        ],
+        "kv_own_shape": [l, 2, chunk_size, h, d],
+        "files": files,
+        # Output layouts (tuple element order) for the rust runtime.
+        "outputs": {
+            "fwd_kv": ["loss_sum", "n_tok", "kv_own"],
+            "chunk_vjp": ["loss_sum", "n_tok", "kv_own"]
+            + [f"d_{n}" for n in M.PARAM_ORDER]
+            + ["d_kv_in"],
+            "full_step": ["loss_sum", "n_tok"] + [f"d_{n}" for n in M.PARAM_ORDER],
+        },
+    }
+    with open(os.path.join(out_dir, f"manifest_{cfg_name}.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"  wrote manifest_{cfg_name}.json")
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--model", default="tiny", choices=list(M.PRESETS))
+    ap.add_argument("--chunk-size", type=int, default=256)
+    ap.add_argument("--max-chunks", type=int, default=4)
+    ap.add_argument("--full-lens", type=int, nargs="*", default=[512])
+    args = ap.parse_args()
+    print(f"exporting {args.model} (C={args.chunk_size}, M={args.max_chunks})")
+    export(args.model, args.chunk_size, args.max_chunks, args.out_dir, args.full_lens)
+
+
+if __name__ == "__main__":
+    main()

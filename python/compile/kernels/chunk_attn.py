@@ -1,0 +1,215 @@
+"""Layer 1: chunked causal flash-attention Pallas kernel with KV-prefix state.
+
+The compute hot-spot of ChunkFlow's chunk execution: attention for a chunk of
+``T`` query tokens whose keys/values are the concatenation of a stored prefix
+(``P`` tokens of the same sequence, carried in the StateStore by the L3
+scheduler) and the chunk's own ``T`` tokens.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid iterates
+``(head, q_block, kv_block)``; the Q tile stays VMEM-resident across the
+kv_block axis while K/V tiles stream HBM->VMEM, accumulating with the online
+softmax (m/l running statistics) — the TPU-idiomatic flash-attention
+schedule. Dots hit the MXU via ``jnp.dot(..., preferred_element_type=f32)``
+on (block_q x head_dim) @ (head_dim x block_k) tiles.
+
+Masking combines three conditions (all positions are *global*: a query at
+chunk slot i sits at global position P + i):
+
+- causal:   kv_pos <= q_pos
+- segment:  packed standalone chunks must not attend across sequences;
+            segment ids -1 mark padding, which self-attends only (keeping
+            softmax well-defined without polluting real tokens)
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; correctness is asserted against ``ref.py`` and real-TPU
+performance is *estimated* from the block shapes (EXPERIMENTS.md §Perf).
+
+The kernel is wrapped in a ``jax.custom_vjp``: pallas_call has no autodiff
+rule, so the backward pass recomputes attention in pure jnp (the standard
+flash-attention recompute strategy; memory stays O(T * block) either way).
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(
+    # prefetched scalars would go here on real TPU; interpret mode reads refs
+    q_ref,  # [H, block_q, head_dim]
+    k_ref,  # [H, block_k, head_dim]
+    v_ref,  # [H, block_k, head_dim]
+    qpos_ref,  # [block_q] global positions of queries
+    qseg_ref,  # [block_q] segment ids of queries
+    kpos_ref,  # [block_k] global positions of keys
+    kseg_ref,  # [block_k] segment ids of keys
+    o_ref,  # [H, block_q, head_dim] output accumulator
+    m_ref,  # [H, block_q] running max
+    l_ref,  # [H, block_q] running sum
+    *,
+    scale: float,
+):
+    """One (q_block, kv_block) step of the online-softmax accumulation.
+
+    All heads are processed in one grid step: the head axis rides along as a
+    batch dimension of the MXU dots. On TPU this amortizes the grid-step
+    overhead and keeps the MXU fed with back-to-back [bq, d] @ [d, bk]
+    per-head tiles from the same VMEM-resident Q block; under interpret=True
+    it is also the difference between H*Tq*Sk/bq/bk tiny numpy dispatches
+    and Tq*Sk/bq/bk batched ones (~10x wall-clock, EXPERIMENTS.md §Perf).
+    """
+    kv_idx = pl.program_id(1)
+
+    @pl.when(kv_idx == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[...].astype(jnp.float32)
+    k = k_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+
+    # Batched MXU matmul: [H, bq, d] @ [H, bk, d]^T -> [H, bq, bk].
+    s = jax.lax.dot_general(
+        q, k, (((2,), (2,)), ((0,), (0,))), preferred_element_type=jnp.float32
+    ) * scale
+
+    qpos = qpos_ref[...]
+    qseg = qseg_ref[...]
+    kpos = kpos_ref[...]
+    kseg = kseg_ref[...]
+
+    causal = kpos[None, :] <= qpos[:, None]
+    same_seg = (qseg[:, None] == kseg[None, :]) & (qseg[:, None] >= 0)
+    self_tok = (qpos[:, None] == kpos[None, :]) & (qseg[:, None] == kseg[None, :])
+    mask = (causal & (same_seg | self_tok))[None, :, :]
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    l_prev = l_ref[...]
+    m_cur = jnp.max(s, axis=2)
+    m_new = jnp.maximum(m_prev, m_cur)
+    # Rescale previous accumulator, add this block's contribution.
+    p = jnp.exp(s - m_new[:, :, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = l_prev * alpha + jnp.sum(p, axis=2)
+    o_ref[...] = o_ref[...] * alpha[:, :, None] + jax.lax.dot_general(
+        p, v, (((2,), (1,)), ((0,), (0,))), preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+
+def _chunk_attention_fwd_impl(
+    q, k, v, q_pos, q_seg, k_pos, k_seg, *, block_q, block_k
+):
+    """Pallas forward: q [H, T, D]; k, v [H, S, D] (S = P + T)."""
+    num_heads, t, head_dim = q.shape
+    s_len = k.shape[1]
+    scale = 1.0 / (head_dim ** 0.5)
+
+    # Pad sequence axes to block multiples; padded kv slots get segment -2
+    # (matches nothing, including pad queries at -1) and position -1.
+    t_pad = -t % block_q
+    s_pad = -s_len % block_k
+    qp = jnp.pad(q, ((0, 0), (0, t_pad), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, s_pad), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, s_pad), (0, 0)))
+    # Padded q slots: unique non-negative positions + segment -1 with a
+    # self-match via the self_tok clause is NOT available (their kv twin may
+    # not exist), so give them segment -3 and let them match padded kv -3 at
+    # causal positions: simplest is to give both pads a shared segment and
+    # ascending positions so each pad query sees at least one key.
+    q_pos_p = jnp.pad(q_pos, (0, t_pad), constant_values=0)
+    q_seg_p = jnp.pad(q_seg, (0, t_pad), constant_values=-1)
+    k_pos_p = jnp.pad(k_pos, (0, s_pad), constant_values=-7)
+    k_seg_p = jnp.pad(k_seg, (0, s_pad), constant_values=-2)
+
+    tq = qp.shape[1]
+    sk = kp.shape[1]
+    grid = (tq // block_q, sk // block_k)
+
+    kernel = partial(_attn_kernel, scale=scale)
+    out_shape = [
+        jax.ShapeDtypeStruct((num_heads, tq, head_dim), jnp.float32),  # o
+        jax.ShapeDtypeStruct((num_heads, tq), jnp.float32),  # m
+        jax.ShapeDtypeStruct((num_heads, tq), jnp.float32),  # l
+    ]
+    o, _m, l = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((num_heads, block_q, head_dim), lambda i, j: (0, i, 0)),
+            pl.BlockSpec((num_heads, block_k, head_dim), lambda i, j: (0, j, 0)),
+            pl.BlockSpec((num_heads, block_k, head_dim), lambda i, j: (0, j, 0)),
+            pl.BlockSpec((block_q,), lambda i, j: (i,)),
+            pl.BlockSpec((block_q,), lambda i, j: (i,)),
+            pl.BlockSpec((block_k,), lambda i, j: (j,)),
+            pl.BlockSpec((block_k,), lambda i, j: (j,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((num_heads, block_q, head_dim), lambda i, j: (0, i, 0)),
+            pl.BlockSpec((num_heads, block_q), lambda i, j: (0, i)),
+            pl.BlockSpec((num_heads, block_q), lambda i, j: (0, i)),
+        ],
+        out_shape=out_shape,
+        interpret=True,
+    )(qp, kp, vp, q_pos_p, q_seg_p, k_pos_p, k_seg_p)
+
+    # Normalize; guard fully-masked rows (padding queries with no match).
+    l_safe = jnp.where(l > 0.0, l, 1.0)
+    o = o / l_safe[..., None]
+    return o[:, :t, :]
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(7, 8))
+def chunk_attention(q, k, v, q_pos, q_seg, k_pos, k_seg, block_q=DEFAULT_BLOCK_Q,
+                    block_k=DEFAULT_BLOCK_K):
+    """Chunked causal attention with KV prefix.
+
+    Args:
+      q:     [H, T, D] queries (RoPE already applied).
+      k, v:  [H, S, D] keys/values, S = prefix + T (prefix slice comes from
+             the StateStore, post-RoPE).
+      q_pos: [T] int32 global positions of the chunk's tokens.
+      q_seg: [T] int32 segment ids (-1 = padding).
+      k_pos: [S] int32 global positions of keys.
+      k_seg: [S] int32 segment ids of keys.
+
+    Returns [H, T, D] attention output.
+    """
+    return _chunk_attention_fwd_impl(
+        q, k, v, q_pos, q_seg, k_pos, k_seg, block_q=block_q, block_k=block_k
+    )
+
+
+def _fwd(q, k, v, q_pos, q_seg, k_pos, k_seg, block_q, block_k):
+    o = _chunk_attention_fwd_impl(
+        q, k, v, q_pos, q_seg, k_pos, k_seg, block_q=block_q, block_k=block_k
+    )
+    return o, (q, k, v, q_pos, q_seg, k_pos, k_seg)
+
+
+def _bwd(block_q, block_k, res, g):
+    """Backward via recompute in pure jnp (flash-attention recompute)."""
+    q, k, v, q_pos, q_seg, k_pos, k_seg = res
+
+    def f(q_, k_, v_):
+        return ref.chunk_attention_ref(q_, k_, v_, q_pos, q_seg, k_pos, k_seg)
+
+    _, vjp = jax.vjp(f, q, k, v)
+    dq, dk, dv = vjp(g)
+    return dq, dk, dv, None, None, None, None
+
+
+chunk_attention.defvjp(_fwd, _bwd)

@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the chunked causal attention kernel.
+
+This is the CORE correctness signal for Layer 1: `chunk_attn.py` must match
+this dense implementation (pytest + hypothesis sweep shapes). It is also the
+backward-pass implementation of the kernel's custom_vjp (flash-attention
+recompute strategy).
+"""
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def chunk_attention_ref(q, k, v, q_pos, q_seg, k_pos, k_seg):
+    """Dense reference attention.
+
+    Args mirror `chunk_attn.chunk_attention`:
+      q: [H, T, D]; k, v: [H, S, D]; positions/segments as int32 vectors.
+    Returns [H, T, D].
+    """
+    scale = 1.0 / (q.shape[-1] ** 0.5)
+    s = jnp.einsum("htd,hsd->hts", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+
+    causal = k_pos[None, :] <= q_pos[:, None]
+    same_seg = (q_seg[:, None] == k_seg[None, :]) & (q_seg[:, None] >= 0)
+    self_tok = (q_pos[:, None] == k_pos[None, :]) & (q_seg[:, None] == k_seg[None, :])
+    mask = causal & (same_seg | self_tok)
+
+    s = jnp.where(mask[None, :, :], s, NEG_INF)
+    # Guard rows with no valid key (fully-masked padding queries).
+    row_max = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - row_max)
+    p = jnp.where(mask[None, :, :], p, 0.0)
+    denom = jnp.sum(p, axis=-1, keepdims=True)
+    p = p / jnp.where(denom > 0.0, denom, 1.0)
+    return jnp.einsum("hts,hsd->htd", p, v.astype(jnp.float32))

@@ -1,0 +1,269 @@
+"""Layer 2: the chunked transformer forward/backward in JAX.
+
+A GPT-style decoder (pre-RMSNorm, RoPE, SwiGLU MLP, tied embeddings) whose
+forward is expressed *per chunk with explicit KV state*, so the Rust
+scheduler can chain chunks of a long sequence with exact gradients
+(DESIGN.md section "Chunked-Backward"):
+
+    fwd_kv(params, batch, kv_in)              -> (loss_sum, n_tok, kv_own)
+    chunk_vjp(params, batch, kv_in, g_kv_own) -> (loss_sum, n_tok, kv_own,
+                                                  d_params..., d_kv_in)
+
+`kv_in` is the concatenated post-RoPE K/V of the sequence's earlier chunks
+([L, 2, P, H, D]); `kv_own` is this chunk's contribution ([L, 2, T, H, D]).
+`g_kv_own` carries the loss-gradient w.r.t. this chunk's KV accumulated from
+later chunks' `d_kv_in` — the explicit chain rule that replaces framework
+autograd across the AOT boundary.
+
+Chunk inputs (all fixed length T = ChunkSize; L3 conventions):
+  tokens:  [T] int32  (pad: 0)
+  targets: [T] int32  next-token ids, -1 where no loss (padding, final token
+           of a sequence, cross-segment boundaries)
+  pos:     [T] int32  position within the owning sequence (pad: 1_000_000+i)
+  seg:     [T] int32  segment id within the chunk (pad: -1; dependent chunks
+           use 0 everywhere)
+
+Attention is Layer 1's Pallas kernel (`kernels.chunk_attn`); layers are
+stacked and scanned to keep the lowered HLO compact.
+"""
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.chunk_attn import chunk_attention
+
+
+class ModelConfig(NamedTuple):
+    vocab_size: int = 512
+    hidden_size: int = 128
+    num_layers: int = 2
+    num_heads: int = 4
+    intermediate_size: int = 384
+    rope_theta: float = 10000.0
+
+    @property
+    def head_dim(self) -> int:
+        return self.hidden_size // self.num_heads
+
+
+TINY = ModelConfig()
+GPT_100M = ModelConfig(
+    vocab_size=512,
+    hidden_size=768,
+    num_layers=12,
+    num_heads=12,
+    intermediate_size=2048,
+)
+
+PRESETS = {"tiny": TINY, "gpt-100m": GPT_100M}
+
+# Flat parameter order for the Rust boundary (manifest.json mirrors this).
+PARAM_ORDER = [
+    "embed",   # [V, h]
+    "ln_f",    # [h]
+    "wq",      # [L, h, h]
+    "wk",      # [L, h, h]
+    "wv",      # [L, h, h]
+    "wo",      # [L, h, h]
+    "w_gate",  # [L, h, i]
+    "w_up",    # [L, h, i]
+    "w_down",  # [L, i, h]
+    "norm1",   # [L, h]
+    "norm2",   # [L, h]
+]
+
+
+def param_shapes(cfg: ModelConfig) -> dict:
+    v, h, l, i = cfg.vocab_size, cfg.hidden_size, cfg.num_layers, cfg.intermediate_size
+    return {
+        "embed": (v, h),
+        "ln_f": (h,),
+        "wq": (l, h, h),
+        "wk": (l, h, h),
+        "wv": (l, h, h),
+        "wo": (l, h, h),
+        "w_gate": (l, h, i),
+        "w_up": (l, h, i),
+        "w_down": (l, i, h),
+        "norm1": (l, h),
+        "norm2": (l, h),
+    }
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    """Scaled-normal init; norms at 1."""
+    shapes = param_shapes(cfg)
+    params = {}
+    keys = jax.random.split(key, len(PARAM_ORDER))
+    for name, k in zip(PARAM_ORDER, keys):
+        shape = shapes[name]
+        if name in ("ln_f", "norm1", "norm2"):
+            params[name] = jnp.ones(shape, jnp.float32)
+        elif name == "embed":
+            params[name] = 0.02 * jax.random.normal(k, shape, jnp.float32)
+        else:
+            fan_in = shape[-2]
+            params[name] = jax.random.normal(k, shape, jnp.float32) / jnp.sqrt(fan_in)
+    return params
+
+
+def params_to_flat(params: dict) -> list:
+    return [params[name] for name in PARAM_ORDER]
+
+
+def flat_to_params(flat: list) -> dict:
+    return dict(zip(PARAM_ORDER, flat))
+
+
+def param_count(cfg: ModelConfig) -> int:
+    import math
+
+    return sum(math.prod(s) for s in param_shapes(cfg).values())
+
+
+def _rmsnorm(x, w):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + 1e-6) * w
+
+
+def _rope(x, pos, theta):
+    """Rotary embedding: x [H, T, D], pos [T]."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = pos.astype(jnp.float32)[:, None] * freqs[None, :]  # [T, half]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _layer(cfg: ModelConfig, x, layer_params, kv_in_layer, pos, seg, k_pos, k_seg):
+    """One transformer layer over a chunk.
+
+    x: [T, h]; kv_in_layer: [2, P, H, D] prefix K/V (post-RoPE).
+    Returns (x_out [T, h], kv_own [2, T, H, D]).
+    """
+    wq, wk, wv, wo, w_gate, w_up, w_down, norm1, norm2 = layer_params
+    t = x.shape[0]
+    hd = cfg.head_dim
+
+    xn = _rmsnorm(x, norm1)
+    q = (xn @ wq).reshape(t, cfg.num_heads, hd).transpose(1, 0, 2)  # [H, T, D]
+    k = (xn @ wk).reshape(t, cfg.num_heads, hd).transpose(1, 0, 2)
+    v = (xn @ wv).reshape(t, cfg.num_heads, hd).transpose(1, 0, 2)
+
+    q = _rope(q, pos, cfg.rope_theta)
+    k = _rope(k, pos, cfg.rope_theta)
+
+    kv_own = jnp.stack([k, v]).transpose(0, 2, 1, 3)  # [2, T, H, D]
+
+    # Full K/V = stored prefix + own.
+    k_full = jnp.concatenate([kv_in_layer[0].transpose(1, 0, 2), k], axis=1)
+    v_full = jnp.concatenate([kv_in_layer[1].transpose(1, 0, 2), v], axis=1)
+
+    attn = chunk_attention(q, k_full, v_full, pos, seg, k_pos, k_seg)  # [H, T, D]
+    attn = attn.transpose(1, 0, 2).reshape(t, cfg.hidden_size)
+    x = x + attn @ wo
+
+    xn = _rmsnorm(x, norm2)
+    x = x + (jax.nn.silu(xn @ w_gate) * (xn @ w_up)) @ w_down
+    return x, kv_own
+
+
+def chunk_forward(cfg: ModelConfig, params: dict, tokens, targets, pos, seg, kv_in):
+    """Forward over one chunk.
+
+    kv_in: [L, 2, P, H, D] (P may be 0).
+    Returns (loss_sum, n_tok, kv_own [L, 2, T, H, D]).
+    """
+    p = kv_in.shape[2]
+    # Key metadata: prefix tokens belong to the (single) owning sequence of a
+    # dependent chunk: segment 0, positions 0..P-1. L3 guarantees prefixes
+    # exist only for dependent chunks whose live tokens use segment 0.
+    k_pos = jnp.concatenate([jnp.arange(p, dtype=jnp.int32), pos])
+    k_seg = jnp.concatenate([jnp.zeros(p, dtype=jnp.int32), seg])
+
+    x = params["embed"][tokens]  # [T, h]
+
+    layer_names = ["wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down", "norm1", "norm2"]
+    stacked = [params[n] for n in layer_names]
+
+    def body(carry, per_layer):
+        layer_params, kv_in_layer = per_layer
+        x_out, kv_own = _layer(
+            cfg, carry, layer_params, kv_in_layer, pos, seg, k_pos, k_seg
+        )
+        return x_out, kv_own
+
+    x, kv_own = jax.lax.scan(body, x, (stacked, kv_in))
+
+    x = _rmsnorm(x, params["ln_f"])
+    logits = x @ params["embed"].T  # tied head: [T, V]
+
+    valid = targets >= 0
+    safe_targets = jnp.where(valid, targets, 0)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, safe_targets[:, None], axis=-1)[:, 0]
+    loss_sum = jnp.sum(jnp.where(valid, nll, 0.0))
+    n_tok = jnp.sum(valid.astype(jnp.float32))
+    return loss_sum, n_tok, kv_own
+
+
+# ----- AOT entry points ------------------------------------------------------
+
+
+def make_fwd_kv(cfg: ModelConfig):
+    """State-only forward (Alg. 2 first pass): activations discarded by
+    construction (nothing retained across the call), KV + loss returned."""
+
+    def fwd_kv(flat_params, tokens, targets, pos, seg, kv_in):
+        params = flat_to_params(list(flat_params))
+        loss_sum, n_tok, kv_own = chunk_forward(
+            cfg, params, tokens, targets, pos, seg, kv_in
+        )
+        return loss_sum, n_tok, kv_own
+
+    return fwd_kv
+
+
+def make_chunk_vjp(cfg: ModelConfig):
+    """Forward + backward for one chunk with the explicit KV chain rule.
+
+    Cotangents: d(loss_sum)=1 for this chunk plus `g_kv_own` flowing back
+    from later chunks into this chunk's KV output.
+    """
+
+    def chunk_vjp(flat_params, tokens, targets, pos, seg, kv_in, g_kv_own):
+        def f(flat_params_, kv_in_):
+            params = flat_to_params(list(flat_params_))
+            return chunk_forward(cfg, params, tokens, targets, pos, seg, kv_in_)
+
+        (loss_sum, n_tok, kv_own), vjp = jax.vjp(f, list(flat_params), kv_in)
+        d_flat, d_kv_in = vjp((jnp.float32(1.0), jnp.float32(0.0), g_kv_own))
+        return (loss_sum, n_tok, kv_own, *d_flat, d_kv_in)
+
+    return chunk_vjp
+
+
+def make_full_step(cfg: ModelConfig):
+    """Reference unchunked step over a full sequence (oracle for the
+    chunked-equals-full gradient test and the rust integration test)."""
+
+    def full_step(flat_params, tokens, targets, pos, seg):
+        l = cfg.num_layers
+        kv_in = jnp.zeros((l, 2, 0, cfg.num_heads, cfg.head_dim), jnp.float32)
+
+        def f(flat_params_):
+            params = flat_to_params(list(flat_params_))
+            loss_sum, n_tok, _ = chunk_forward(
+                cfg, params, tokens, targets, pos, seg, kv_in
+            )
+            return loss_sum, n_tok
+
+        (loss_sum, n_tok), vjp = jax.vjp(f, list(flat_params))
+        (d_flat,) = vjp((jnp.float32(1.0), jnp.float32(0.0)))
+        return (loss_sum, n_tok, *d_flat)
+
+    return full_step

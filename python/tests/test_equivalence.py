@@ -1,0 +1,191 @@
+"""The paper's mathematical-equivalence claim (§4, "gradients from each
+chunk are accumulated to ensure mathematical equivalence with existing
+training methods"): running Algorithm 2 over chunks — first-pass fwd_kv,
+then chunk_vjp in descending order with KV-gradient chaining — reproduces
+the full-sequence loss and parameter gradients exactly.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+
+CFG = M.TINY
+
+
+def run_full(flat, toks, targets, pos, seg):
+    out = M.make_full_step(CFG)(flat, toks, targets, pos, seg)
+    return out[0], out[1], out[2:]
+
+
+def run_chunked(flat, toks, targets, pos, seg, c, k_retained=1):
+    """Algorithm 2 (K=1 semantics, the real trainer's path)."""
+    fwd_kv = M.make_fwd_kv(CFG)
+    chunk_vjp = M.make_chunk_vjp(CFG)
+    l, h, d = CFG.num_layers, CFG.num_heads, CFG.head_dim
+    s = toks.shape[0]
+    assert s % c == 0
+    n = s // c
+
+    # Pass 1 (ascending): state-only forwards, store KV.
+    kv_store = []
+    losses = []
+    for i in range(n):
+        sl = slice(i * c, (i + 1) * c)
+        kv_in = (
+            jnp.concatenate(kv_store, axis=2)
+            if kv_store
+            else jnp.zeros((l, 2, 0, h, d), jnp.float32)
+        )
+        loss, _ntok, kv_own = fwd_kv(flat, toks[sl], targets[sl], pos[sl], seg[sl], kv_in)
+        kv_store.append(kv_own)
+        losses.append(loss)
+
+    # Pass 2 (descending): recompute-forward + backward with KV chaining.
+    g_kv = [jnp.zeros((l, 2, c, h, d), jnp.float32) for _ in range(n)]
+    grads = None
+    total_loss = 0.0
+    for i in reversed(range(n)):
+        sl = slice(i * c, (i + 1) * c)
+        kv_in = (
+            jnp.concatenate(kv_store[:i], axis=2)
+            if i > 0
+            else jnp.zeros((l, 2, 0, h, d), jnp.float32)
+        )
+        out = M.make_chunk_vjp(CFG)(
+            flat, toks[sl], targets[sl], pos[sl], seg[sl], kv_in, g_kv[i]
+        )
+        loss, _ntok = out[0], out[1]
+        d_flat = out[3 : 3 + len(flat)]
+        d_kv_in = out[-1]
+        total_loss += loss
+        grads = d_flat if grads is None else [a + b for a, b in zip(grads, d_flat)]
+        # Scatter d_kv_in into earlier chunks' pending KV gradients.
+        for j in range(i):
+            g_kv[j] = g_kv[j] + d_kv_in[:, :, j * c : (j + 1) * c]
+    return total_loss, losses, grads
+
+
+def make_sequence(s, seed=0):
+    key = jax.random.PRNGKey(seed)
+    toks = jax.random.randint(key, (s,), 0, CFG.vocab_size).astype(jnp.int32)
+    targets = jnp.concatenate([toks[1:], jnp.array([-1], jnp.int32)])
+    pos = jnp.arange(s, dtype=jnp.int32)
+    seg = jnp.zeros(s, jnp.int32)
+    return toks, targets, pos, seg
+
+
+@pytest.fixture(scope="module")
+def flat_params():
+    return M.params_to_flat(M.init_params(CFG, jax.random.PRNGKey(42)))
+
+
+@pytest.mark.parametrize("n_chunks", [2, 3, 4])
+def test_chunked_equals_full(flat_params, n_chunks):
+    c = 32
+    s = n_chunks * c
+    toks, targets, pos, seg = make_sequence(s, seed=n_chunks)
+    loss_f, _n, grads_f = run_full(flat_params, toks, targets, pos, seg)
+    loss_c, _losses, grads_c = run_chunked(flat_params, toks, targets, pos, seg, c)
+    np.testing.assert_allclose(float(loss_c), float(loss_f), rtol=1e-5)
+    for name, gf, gc in zip(M.PARAM_ORDER, grads_f, grads_c):
+        np.testing.assert_allclose(
+            np.asarray(gc), np.asarray(gf), atol=1e-4, rtol=1e-3,
+            err_msg=f"gradient mismatch for {name}",
+        )
+
+
+def test_first_pass_losses_match_backward_pass(flat_params):
+    """Pass-1 losses (LossList in Alg. 2) equal the recomputed pass-2 losses."""
+    c, n = 32, 3
+    toks, targets, pos, seg = make_sequence(c * n, seed=9)
+    _loss, losses_fwd, _ = run_chunked(flat_params, toks, targets, pos, seg, c)
+    loss_f, _n2, _ = run_full(flat_params, toks, targets, pos, seg)
+    np.testing.assert_allclose(float(sum(losses_fwd)), float(loss_f), rtol=1e-5)
+
+
+def test_packed_standalone_chunk_equals_separate_sequences(flat_params):
+    """A packed chunk of two sequences == the two sequences run separately."""
+    c = 64
+    t1, t2 = 40, 24
+    k1, k2 = jax.random.PRNGKey(1), jax.random.PRNGKey(2)
+    toks1 = jax.random.randint(k1, (t1,), 0, CFG.vocab_size).astype(jnp.int32)
+    toks2 = jax.random.randint(k2, (t2,), 0, CFG.vocab_size).astype(jnp.int32)
+
+    l, h, d = CFG.num_layers, CFG.num_heads, CFG.head_dim
+    kv0 = jnp.zeros((l, 2, 0, h, d), jnp.float32)
+    fwd = M.make_fwd_kv(CFG)
+
+    # Packed chunk.
+    toks = jnp.concatenate([toks1, toks2])
+    targets = jnp.concatenate(
+        [toks1[1:], jnp.array([-1], jnp.int32), toks2[1:], jnp.array([-1], jnp.int32)]
+    )
+    pos = jnp.concatenate([jnp.arange(t1), jnp.arange(t2)]).astype(jnp.int32)
+    seg = jnp.concatenate([jnp.zeros(t1), jnp.ones(t2)]).astype(jnp.int32)
+    loss_packed, n_packed, _ = fwd(flat_params, toks, targets, pos, seg, kv0)
+
+    # Separate runs.
+    def single(toks_):
+        s = toks_.shape[0]
+        targets_ = jnp.concatenate([toks_[1:], jnp.array([-1], jnp.int32)])
+        pos_ = jnp.arange(s, dtype=jnp.int32)
+        seg_ = jnp.zeros(s, jnp.int32)
+        return fwd(flat_params, toks_, targets_, pos_, seg_, kv0)
+
+    loss1, n1, _ = single(toks1)
+    loss2, n2, _ = single(toks2)
+    np.testing.assert_allclose(float(loss_packed), float(loss1 + loss2), rtol=1e-5)
+    assert float(n_packed) == float(n1 + n2) == t1 + t2 - 2
+
+
+def test_padding_is_inert(flat_params):
+    """Padding the chunk tail changes neither loss nor gradients."""
+    c, pad = 48, 16
+    toks, targets, pos, seg = make_sequence(c, seed=3)
+    vjp = M.make_chunk_vjp(CFG)
+    l, h, d = CFG.num_layers, CFG.num_heads, CFG.head_dim
+    kv0 = jnp.zeros((l, 2, 0, h, d), jnp.float32)
+
+    out = vjp(flat_params, toks, targets, pos, seg, kv0,
+              jnp.zeros((l, 2, c, h, d), jnp.float32))
+    loss_a, grads_a = out[0], out[3 : 3 + len(flat_params)]
+
+    toks_p = jnp.concatenate([toks, jnp.zeros(pad, jnp.int32)])
+    targets_p = jnp.concatenate([targets, -jnp.ones(pad, jnp.int32)])
+    pos_p = jnp.concatenate([pos, 1_000_000 + jnp.arange(pad, dtype=jnp.int32)])
+    seg_p = jnp.concatenate([seg, -jnp.ones(pad, jnp.int32)])
+    out_p = vjp(flat_params, toks_p, targets_p, pos_p, seg_p, kv0,
+                jnp.zeros((l, 2, c + pad, h, d), jnp.float32))
+    loss_b, grads_b = out_p[0], out_p[3 : 3 + len(flat_params)]
+
+    np.testing.assert_allclose(float(loss_a), float(loss_b), rtol=1e-6)
+    for ga, gb in zip(grads_a, grads_b):
+        np.testing.assert_allclose(np.asarray(ga), np.asarray(gb), atol=5e-5)
+
+
+def test_kv_gradient_chain_is_necessary(flat_params):
+    """Dropping g_kv (stop-gradient across chunks) changes the gradients —
+    i.e. the chain rule the runtime implements is load-bearing."""
+    c, n = 32, 2
+    toks, targets, pos, seg = make_sequence(c * n, seed=5)
+    _loss, _l, grads_exact = run_chunked(flat_params, toks, targets, pos, seg, c)
+
+    # Truncated variant: never scatter d_kv_in.
+    fwd = M.make_fwd_kv(CFG)
+    vjp = M.make_chunk_vjp(CFG)
+    l, h, d = CFG.num_layers, CFG.num_heads, CFG.head_dim
+    kv0 = jnp.zeros((l, 2, 0, h, d), jnp.float32)
+    _, _, kv1 = fwd(flat_params, toks[:c], targets[:c], pos[:c], seg[:c], kv0)
+    zeros = jnp.zeros((l, 2, c, h, d), jnp.float32)
+    out1 = vjp(flat_params, toks[c:], targets[c:], pos[c:], seg[c:], kv1, zeros)
+    out0 = vjp(flat_params, toks[:c], targets[:c], pos[:c], seg[:c], kv0, zeros)
+    grads_trunc = [a + b for a, b in zip(out1[3 : 3 + len(flat_params)],
+                                         out0[3 : 3 + len(flat_params)])]
+    diffs = [
+        float(jnp.max(jnp.abs(a - b))) for a, b in zip(grads_exact, grads_trunc)
+    ]
+    assert max(diffs) > 1e-4, "truncated grads should differ"

@@ -1,0 +1,195 @@
+"""Layer-1 correctness: Pallas chunk-attention kernel vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes, prefix lengths, block sizes and segment layouts;
+every case asserts allclose against ref.py and gradient flow through the
+custom_vjp.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.chunk_attn import chunk_attention
+from compile.kernels.ref import chunk_attention_ref
+
+
+def make_inputs(key, heads, t, d, prefix, seg_layout="single"):
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (heads, t, d), jnp.float32)
+    k = jax.random.normal(ks[1], (heads, prefix + t, d), jnp.float32)
+    v = jax.random.normal(ks[2], (heads, prefix + t, d), jnp.float32)
+    if seg_layout == "single":
+        q_pos = jnp.arange(prefix, prefix + t, dtype=jnp.int32)
+        q_seg = jnp.zeros(t, jnp.int32)
+    elif seg_layout == "packed":
+        # Two segments of t//2, restarting positions (standalone chunk).
+        assert prefix == 0
+        half = t // 2
+        q_pos = jnp.concatenate(
+            [jnp.arange(half), jnp.arange(t - half)]
+        ).astype(jnp.int32)
+        q_seg = jnp.concatenate(
+            [jnp.zeros(half), jnp.ones(t - half)]
+        ).astype(jnp.int32)
+    elif seg_layout == "padded":
+        # Last quarter is padding.
+        pad = max(t // 4, 1)
+        live = t - pad
+        q_pos = jnp.concatenate(
+            [jnp.arange(prefix, prefix + live), 1_000_000 + jnp.arange(pad)]
+        ).astype(jnp.int32)
+        q_seg = jnp.concatenate([jnp.zeros(live), -jnp.ones(pad)]).astype(jnp.int32)
+    k_pos = jnp.concatenate([jnp.arange(prefix, dtype=jnp.int32), q_pos])
+    k_seg = jnp.concatenate([jnp.zeros(prefix, dtype=jnp.int32), q_seg])
+    return q, k, v, q_pos, q_seg, k_pos, k_seg
+
+
+def assert_matches_ref(args, atol=2e-5):
+    out = chunk_attention(*args)
+    expect = chunk_attention_ref(*args)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=atol)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    heads=st.sampled_from([1, 2, 4]),
+    t=st.sampled_from([8, 32, 100, 128, 160]),
+    d=st.sampled_from([8, 16, 32]),
+    prefix_chunks=st.integers(0, 3),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_matches_ref_dependent_chunks(heads, t, d, prefix_chunks, seed):
+    """Dependent-chunk layout: single segment with a KV prefix."""
+    key = jax.random.PRNGKey(seed)
+    args = make_inputs(key, heads, t, d, prefix_chunks * t, "single")
+    assert_matches_ref(args)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    t=st.sampled_from([16, 64, 96]),
+    d=st.sampled_from([16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_matches_ref_packed_segments(t, d, seed):
+    """Standalone packed chunks: two sequences, positions restart."""
+    key = jax.random.PRNGKey(seed)
+    args = make_inputs(key, 2, t, d, 0, "packed")
+    assert_matches_ref(args)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    t=st.sampled_from([16, 64, 128]),
+    prefix_chunks=st.integers(0, 2),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_matches_ref_with_padding(t, prefix_chunks, seed):
+    """Padded tail slots (-1 segments) must not pollute real tokens."""
+    key = jax.random.PRNGKey(seed)
+    args = make_inputs(key, 2, t, 16, prefix_chunks * t, "padded")
+    assert_matches_ref(args)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    block_q=st.sampled_from([16, 64, 128]),
+    block_k=st.sampled_from([32, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_block_shape_invariance(block_q, block_k, seed):
+    """Output must not depend on the BlockSpec tiling."""
+    key = jax.random.PRNGKey(seed)
+    args = make_inputs(key, 2, 96, 16, 96, "single")
+    out = chunk_attention(*args, block_q, block_k)
+    expect = chunk_attention_ref(*args)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=2e-5)
+
+
+def test_causality():
+    """Perturbing a future token never changes an earlier output."""
+    key = jax.random.PRNGKey(7)
+    q, k, v, q_pos, q_seg, k_pos, k_seg = make_inputs(key, 2, 32, 16, 0, "single")
+    out1 = chunk_attention(q, k, v, q_pos, q_seg, k_pos, k_seg)
+    k2 = k.at[:, -1, :].add(100.0)
+    v2 = v.at[:, -1, :].add(100.0)
+    out2 = chunk_attention(q, k2, v2, q_pos, q_seg, k_pos, k_seg)
+    np.testing.assert_allclose(
+        np.asarray(out1[:, :-1]), np.asarray(out2[:, :-1]), atol=1e-6
+    )
+    assert not np.allclose(np.asarray(out1[:, -1]), np.asarray(out2[:, -1]))
+
+
+def test_segment_isolation():
+    """Tokens of one packed sequence never attend to the other."""
+    key = jax.random.PRNGKey(9)
+    q, k, v, q_pos, q_seg, k_pos, k_seg = make_inputs(key, 1, 64, 16, 0, "packed")
+    out1 = chunk_attention(q, k, v, q_pos, q_seg, k_pos, k_seg)
+    # Blast segment 1's keys/values; segment 0 outputs must be unchanged.
+    k2 = k.at[:, 32:, :].add(50.0)
+    v2 = v.at[:, 32:, :].add(50.0)
+    out2 = chunk_attention(q, k2, v2, q_pos, q_seg, k_pos, k_seg)
+    np.testing.assert_allclose(
+        np.asarray(out1[:, :32]), np.asarray(out2[:, :32]), atol=1e-6
+    )
+
+
+def test_prefix_equivalence_to_full_sequence():
+    """Chunk attention with prefix == full attention restricted to the chunk."""
+    key = jax.random.PRNGKey(11)
+    heads, t, d = 2, 32, 16
+    full_t = 2 * t
+    q_full, k_full, v_full, pos_f, seg_f, kpos_f, kseg_f = make_inputs(
+        key, heads, full_t, d, 0, "single"
+    )
+    out_full = chunk_attention_ref(q_full, k_full, v_full, pos_f, seg_f, kpos_f, kseg_f)
+    # Second half as a chunk with the first half as prefix.
+    q2 = q_full[:, t:, :]
+    out_chunk = chunk_attention(
+        q2,
+        k_full,
+        v_full,
+        pos_f[t:],
+        seg_f[t:],
+        kpos_f,
+        kseg_f,
+    )
+    np.testing.assert_allclose(
+        np.asarray(out_chunk), np.asarray(out_full[:, t:, :]), atol=2e-5
+    )
+
+
+def test_gradients_flow():
+    """custom_vjp backward produces finite grads matching the ref vjp."""
+    key = jax.random.PRNGKey(13)
+    args = make_inputs(key, 2, 32, 16, 32, "single")
+    q, k, v = args[:3]
+    meta = args[3:]
+
+    def f_kernel(q, k, v):
+        return jnp.sum(chunk_attention(q, k, v, *meta) ** 2)
+
+    def f_ref(q, k, v):
+        return jnp.sum(chunk_attention_ref(q, k, v, *meta) ** 2)
+
+    g1 = jax.grad(f_kernel, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        assert np.all(np.isfinite(np.asarray(a)))
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
+
+
+def test_empty_prefix_is_plain_causal():
+    key = jax.random.PRNGKey(15)
+    args = make_inputs(key, 4, 64, 16, 0, "single")
+    assert_matches_ref(args)
+
+
+@pytest.mark.parametrize("t", [1, 2, 7])
+def test_tiny_chunks(t):
+    """Degenerate chunk lengths well below the block size."""
+    key = jax.random.PRNGKey(17)
+    args = make_inputs(key, 1, t, 8, 0, "single")
+    assert_matches_ref(args)

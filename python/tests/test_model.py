@@ -1,0 +1,114 @@
+"""Layer-2 model unit tests: shapes, loss behaviour, RoPE/position handling,
+parameter bookkeeping."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+CFG = M.TINY
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG, jax.random.PRNGKey(0))
+
+
+def batch(s, seed=0):
+    key = jax.random.PRNGKey(seed)
+    toks = jax.random.randint(key, (s,), 0, CFG.vocab_size).astype(jnp.int32)
+    targets = jnp.concatenate([toks[1:], jnp.array([-1], jnp.int32)])
+    return toks, targets, jnp.arange(s, dtype=jnp.int32), jnp.zeros(s, jnp.int32)
+
+
+def test_param_count_formula(params):
+    total = sum(int(np.prod(p.shape)) for p in params.values())
+    assert total == M.param_count(CFG)
+
+
+def test_gpt100m_is_about_100m():
+    assert 8.0e7 < M.param_count(M.GPT_100M) < 1.3e8
+
+
+def test_flat_roundtrip(params):
+    flat = M.params_to_flat(params)
+    back = M.flat_to_params(flat)
+    assert set(back) == set(params)
+    for k in params:
+        np.testing.assert_array_equal(np.asarray(back[k]), np.asarray(params[k]))
+
+
+def test_forward_shapes(params):
+    s = 64
+    toks, targets, pos, seg = batch(s)
+    l, h, d = CFG.num_layers, CFG.num_heads, CFG.head_dim
+    kv0 = jnp.zeros((l, 2, 0, h, d), jnp.float32)
+    loss, n, kv = M.chunk_forward(CFG, params, toks, targets, pos, seg, kv0)
+    assert loss.shape == () and n.shape == ()
+    assert kv.shape == (l, 2, s, h, d)
+    assert float(n) == s - 1
+
+
+def test_initial_loss_near_uniform(params):
+    """Fresh init should predict ~uniform: loss/token ~= ln(vocab)."""
+    s = 128
+    toks, targets, pos, seg = batch(s, seed=1)
+    l, h, d = CFG.num_layers, CFG.num_heads, CFG.head_dim
+    kv0 = jnp.zeros((l, 2, 0, h, d), jnp.float32)
+    loss, n, _ = M.chunk_forward(CFG, params, toks, targets, pos, seg, kv0)
+    per_tok = float(loss) / float(n)
+    assert abs(per_tok - np.log(CFG.vocab_size)) < 1.0, per_tok
+
+
+def test_one_sgd_step_reduces_loss(params):
+    s = 64
+    toks, targets, pos, seg = batch(s, seed=2)
+    flat = M.params_to_flat(params)
+    l, h, d = CFG.num_layers, CFG.num_heads, CFG.head_dim
+    vjp = M.make_chunk_vjp(CFG)
+    g_kv = jnp.zeros((l, 2, s, h, d), jnp.float32)
+    kv0 = jnp.zeros((l, 2, 0, h, d), jnp.float32)
+    out = vjp(flat, toks, targets, pos, seg, kv0, g_kv)
+    loss0 = float(out[0])
+    grads = out[3 : 3 + len(flat)]
+    flat2 = [p - 1e-2 * g for p, g in zip(flat, grads)]
+    out2 = vjp(flat2, toks, targets, pos, seg, kv0, g_kv)
+    assert float(out2[0]) < loss0
+
+
+def test_rope_positions_matter(params):
+    """Shifting positions changes outputs (positions are really used)."""
+    s = 32
+    toks, targets, pos, seg = batch(s, seed=3)
+    l, h, d = CFG.num_layers, CFG.num_heads, CFG.head_dim
+    kv0 = jnp.zeros((l, 2, 0, h, d), jnp.float32)
+    loss_a, _, _ = M.chunk_forward(CFG, params, toks, targets, pos, seg, kv0)
+    loss_b, _, _ = M.chunk_forward(CFG, params, toks, targets, pos + 5, seg, kv0)
+    assert abs(float(loss_a) - float(loss_b)) > 1e-6
+
+
+def test_kv_own_is_post_rope(params):
+    """Stored KV must already include rotary rotation: feeding it back as a
+    prefix at the right positions reproduces full attention (covered in
+    equivalence tests); here check it differs from the un-rotated K."""
+    s = 16
+    toks, targets, pos, seg = batch(s, seed=4)
+    l, h, d = CFG.num_layers, CFG.num_heads, CFG.head_dim
+    kv0 = jnp.zeros((l, 2, 0, h, d), jnp.float32)
+    _, _, kv_a = M.chunk_forward(CFG, params, toks, targets, pos, seg, kv0)
+    _, _, kv_b = M.chunk_forward(CFG, params, toks, targets, pos + 7, seg, kv0)
+    assert float(jnp.max(jnp.abs(kv_a[:, 0] - kv_b[:, 0]))) > 1e-6, "K rotated"
+    # V of the FIRST layer is position-independent (later layers see
+    # position-shifted attention outputs, so only layer 0 is a clean probe).
+    np.testing.assert_allclose(
+        np.asarray(kv_a[0, 1]), np.asarray(kv_b[0, 1]), atol=1e-6
+    )
+
+
+def test_presets_consistent():
+    for name, cfg in M.PRESETS.items():
+        assert cfg.hidden_size % cfg.num_heads == 0, name
+        shapes = M.param_shapes(cfg)
+        assert set(shapes) == set(M.PARAM_ORDER)

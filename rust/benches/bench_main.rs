@@ -1,0 +1,204 @@
+//! Benchmark harness (`cargo bench`): one suite per paper table/figure plus
+//! hot-path micro-benchmarks. criterion is unavailable offline; this uses
+//! the in-tree `util::bench` harness (warmup, adaptive batching,
+//! mean/p50/p95/min, throughput) and writes machine-readable results to
+//! `target/bench_results.json`.
+//!
+//! Suites (DESIGN.md §4 experiment index):
+//!   construction  — Algorithm 1 over evaluation batches (hot path)
+//!   scheduling    — Algorithm 2 plan generation + validation
+//!   pipeline      — discrete-event simulator throughput (Figures 2/6/7)
+//!   e2e           — per-iteration simulation, baseline vs ChunkFlow across
+//!                   model x context (Figure 8 rows)
+//!   table6        — the (ChunkSize, K) sweep at constant ChunkSize*K
+//!   memory        — memory-model evaluation (Table 5 / Figure 1 trace)
+//!   runtime       — PJRT chunk-step latency (requires `make artifacts`)
+
+use chunkflow::baseline::{paper_table3, paper_table4};
+use chunkflow::chunk::construct_chunks;
+use chunkflow::config::{ModelSpec, ParallelConfig, RecomputeGranularity};
+use chunkflow::data::{BatchSampler, LengthDistribution, Sequence};
+use chunkflow::memory::MemoryModel;
+use chunkflow::pipeline::onef1b;
+use chunkflow::schedule::{schedule_step, validate_group_plan};
+use chunkflow::sim::{simulate_baseline_iteration, simulate_chunkflow_iteration, CostModel};
+use chunkflow::util::bench::{black_box, Bencher};
+
+const K: u64 = 1024;
+
+fn eval_batch(ctx: u64, n: usize, seed: u64) -> Vec<Sequence> {
+    BatchSampler::new(LengthDistribution::evaluation_dataset(), ctx, n, seed).next_batch()
+}
+
+fn bench_construction(b: &mut Bencher) {
+    println!("\n-- suite: chunk construction (Algorithm 1) --");
+    for (n, ctx) in [(256usize, 32 * K), (256, 256 * K), (1024, 256 * K)] {
+        let batch = eval_batch(ctx, n, 42);
+        b.bench_items(
+            &format!("construct/{n}seq_ctx{}", chunkflow::util::format_tokens(ctx)),
+            Some(n as f64),
+            || {
+                black_box(construct_chunks(black_box(&batch), 8 * K));
+            },
+        );
+    }
+}
+
+fn bench_scheduling(b: &mut Bencher) {
+    println!("\n-- suite: state-aware scheduling (Algorithm 2) --");
+    for n in [256usize, 1024] {
+        let batch = eval_batch(256 * K, n, 7);
+        let set = construct_chunks(&batch, 8 * K);
+        b.bench_items(
+            &format!("schedule/{}chunks", set.chunks.len()),
+            Some(set.chunks.len() as f64),
+            || {
+                black_box(schedule_step(black_box(&set), 4));
+            },
+        );
+        let plan = schedule_step(&set, 4);
+        b.bench(&format!("validate/{}groups", plan.groups.len()), || {
+            for g in &plan.groups {
+                black_box(validate_group_plan(g).unwrap());
+            }
+        });
+    }
+}
+
+fn bench_pipeline(b: &mut Bencher) {
+    println!("\n-- suite: pipeline simulator --");
+    // Figure 2 micro-case: must stay nanoseconds-fast (grid search runs it
+    // thousands of times).
+    let items: Vec<onef1b::PipelineItem> = [1.0, 1.0, 2.0, 4.0]
+        .iter()
+        .map(|&l| onef1b::PipelineItem { fwd_cost: l, bwd_cost: 2.0 * l })
+        .collect();
+    b.bench("pipeline/figure2_toy", || {
+        black_box(onef1b::simulate_standard(black_box(&items), 4).unwrap());
+    });
+
+    for n in [128usize, 512] {
+        let batch = eval_batch(128 * K, n, 3);
+        let set = construct_chunks(&batch, 8 * K);
+        let m = set.chunks.len();
+        b.bench_items(
+            &format!("pipeline/state_aware_{m}chunks_pp4"),
+            Some((m * 4 * 2) as f64), // ops scheduled
+            || {
+                black_box(
+                    onef1b::simulate_state_aware(black_box(&set), 4, 4, |id| {
+                        let len = set.chunks[id].total_len() as f64;
+                        chunkflow::pipeline::OpCosts { fwd: len, bwd: 2.0 * len }
+                    })
+                    .unwrap(),
+                );
+            },
+        );
+    }
+}
+
+fn bench_e2e(b: &mut Bencher) {
+    println!("\n-- suite: figure8 end-to-end iteration simulation --");
+    for model in ["qwen2.5-7b", "qwen2.5-72b"] {
+        for ctx in [32 * K, 256 * K] {
+            let spec = ModelSpec::preset(model).unwrap();
+            let base_cfg = paper_table3(model, ctx).unwrap();
+            let (cs, kk) = paper_table4(model, ctx).unwrap();
+            let mut cf_cfg = base_cfg.clone();
+            cf_cfg.recompute = RecomputeGranularity::Selective;
+            let base_cost = CostModel::new(spec.clone(), base_cfg);
+            let cf_cost = CostModel::new(spec, cf_cfg);
+            let batch = eval_batch(ctx, 256, 42);
+            let tag = format!("{model}_ctx{}", chunkflow::util::format_tokens(ctx));
+            b.bench(&format!("e2e/megatron/{tag}"), || {
+                black_box(simulate_baseline_iteration(black_box(&batch), &base_cost).unwrap());
+            });
+            b.bench(&format!("e2e/chunkflow/{tag}"), || {
+                black_box(
+                    simulate_chunkflow_iteration(black_box(&batch), &cf_cost, cs, kk as usize)
+                        .unwrap(),
+                );
+            });
+        }
+    }
+}
+
+fn bench_table6(b: &mut Bencher) {
+    println!("\n-- suite: table6 (ChunkSize, K) sweep --");
+    let spec = ModelSpec::preset("qwen2.5-7b").unwrap();
+    let cfg = ParallelConfig::new(4, 4, RecomputeGranularity::Selective);
+    let cost = CostModel::new(spec, cfg);
+    let batch = eval_batch(256 * K, 256, 42);
+    for (cs, kk) in [(2 * K, 16usize), (8 * K, 4), (32 * K, 1)] {
+        b.bench(
+            &format!("table6/chunk{}_k{kk}", chunkflow::util::format_tokens(cs)),
+            || {
+                black_box(
+                    simulate_chunkflow_iteration(black_box(&batch), &cost, cs, kk).unwrap(),
+                );
+            },
+        );
+    }
+}
+
+fn bench_memory(b: &mut Bencher) {
+    println!("\n-- suite: memory model (Table 5 / Figure 1) --");
+    let mm = MemoryModel::new(
+        ModelSpec::preset("qwen2.5-7b").unwrap(),
+        ParallelConfig::new(4, 1, RecomputeGranularity::Selective),
+    );
+    b.bench("memory/table5_all_rows", || {
+        for ctx in [32 * K, 256 * K] {
+            for cs in [2 * K, 4 * K, 8 * K] {
+                black_box(mm.chunkflow_peak(cs, 1, ctx));
+            }
+        }
+    });
+    let batch = eval_batch(32 * K, 1000, 42);
+    b.bench_items("memory/figure1_trace_1000steps", Some(1000.0), || {
+        black_box(chunkflow::baseline::microstep_memory_trace(
+            black_box(&batch),
+            &mm,
+        ));
+    });
+}
+
+fn bench_runtime(b: &mut Bencher) {
+    println!("\n-- suite: PJRT runtime chunk step (tiny artifacts) --");
+    if !std::path::Path::new("artifacts/manifest_tiny.json").exists() {
+        println!("   SKIP: run `make artifacts`");
+        return;
+    }
+    use chunkflow::config::TrainConfig;
+    use chunkflow::train::Trainer;
+    let mut cfg = TrainConfig::default_for(ModelSpec::preset("tiny").unwrap());
+    cfg.context_length = 1024;
+    let dist = LengthDistribution::from_cdf("bench", &[(256, 0.7)], 1024);
+    let trainer = Trainer::new(cfg, dist).expect("trainer");
+    let short = vec![Sequence { id: 1, len: 200 }];
+    let long = vec![Sequence { id: 2, len: 1024 }];
+    b.bench_items("runtime/standalone_chunk_vjp_200tok", Some(200.0), || {
+        black_box(trainer.compute_gradients(black_box(&short)).unwrap());
+    });
+    b.bench_items("runtime/dependent_group_4chunks_1024tok", Some(1024.0), || {
+        black_box(trainer.compute_gradients(black_box(&long)).unwrap());
+    });
+}
+
+fn main() {
+    println!("chunkflow benchmark harness (paper-artifact suites)\n");
+    let mut b = Bencher::new(200, 800);
+    bench_construction(&mut b);
+    bench_scheduling(&mut b);
+    bench_pipeline(&mut b);
+    bench_e2e(&mut b);
+    bench_table6(&mut b);
+    bench_memory(&mut b);
+    bench_runtime(&mut b);
+    let j = b.to_json();
+    if let Err(e) = j.write_file(std::path::Path::new("target/bench_results.json")) {
+        eprintln!("could not write bench_results.json: {e}");
+    } else {
+        println!("\nwrote target/bench_results.json ({} entries)", b.results().len());
+    }
+}

@@ -1,0 +1,193 @@
+//! The Megatron-LM-like baseline execution model.
+//!
+//! Encodes the paper's Table 3: for each (model, context length), the
+//! parallel strategy `<TP, SP, PP, Recompute>` used by the baseline — chosen
+//! as the best-performing configuration that does not OOM when a micro-batch
+//! holds the longest admitted sequence. Also provides the config *search*
+//! that derives such a table from the memory model, and the Figure 1
+//! micro-step memory trace.
+
+use crate::config::{ModelSpec, ParallelConfig, RecomputeGranularity};
+use crate::data::Sequence;
+use crate::memory::{MemoryModel, GPU_CAPACITY};
+
+/// Paper Table 3, verbatim.
+pub fn paper_table3(model: &str, context: u64) -> Option<ParallelConfig> {
+    use RecomputeGranularity::{Full, Selective};
+    let k256 = 256 * 1024;
+    let cfg = match (model, context) {
+        ("qwen2.5-7b", c) if c < k256 => ParallelConfig::new(4, 1, Selective),
+        ("qwen2.5-7b", _) => ParallelConfig::new(4, 4, Full),
+        ("qwen2.5-14b", c) if c < k256 => ParallelConfig::new(4, 4, Selective),
+        ("qwen2.5-14b", _) => ParallelConfig::new(4, 4, Full),
+        ("qwen2.5-32b", c) if c < k256 => ParallelConfig::new(4, 4, Selective),
+        ("qwen2.5-32b", _) => ParallelConfig::new(4, 4, Full),
+        ("qwen2.5-72b", _) => ParallelConfig::new(8, 4, Selective),
+        _ => return None,
+    };
+    Some(cfg)
+}
+
+/// Paper Table 4: ChunkFlow's best (ChunkSize, K) per (model, context).
+pub fn paper_table4(model: &str, context: u64) -> Option<(u64, u64)> {
+    let k = 1024;
+    let k256 = 256 * k;
+    Some(match (model, context) {
+        ("qwen2.5-7b", c) if c < k256 => (32 * k, 1),
+        ("qwen2.5-7b", _) => (8 * k, 16),
+        ("qwen2.5-14b", _) => (8 * k, 8),
+        ("qwen2.5-32b", _) => (8 * k, 6),
+        ("qwen2.5-72b", _) => (8 * k, 16),
+        _ => return None,
+    })
+}
+
+/// Candidate strategies the search sweeps (TP within a node, PP across).
+fn candidate_configs() -> Vec<(u64, u64)> {
+    // (tp, pp) pairs; SP always on.
+    vec![(1, 1), (2, 1), (4, 1), (8, 1), (2, 2), (4, 2), (4, 4), (8, 2), (8, 4), (8, 8)]
+}
+
+/// Derive a baseline config from the memory model: the fewest GPUs (then
+/// cheapest recompute) that fits the longest admitted sequence as one
+/// micro-batch, mirroring how the paper picked Table 3.
+pub fn derive_baseline_config(model: &ModelSpec, context: u64) -> Option<ParallelConfig> {
+    use RecomputeGranularity::{Full, Selective};
+    let mut best: Option<ParallelConfig> = None;
+    for (tp, pp) in candidate_configs() {
+        for rec in [Selective, Full] {
+            let cfg = ParallelConfig::new(tp, pp, rec);
+            let mm = MemoryModel::new(model.clone(), cfg.clone());
+            // In-flight set for 1F1B at stage 0: the long sequence plus
+            // (PP-1) typical short ones.
+            let mut in_flight = vec![context];
+            in_flight.extend(std::iter::repeat(1024).take(pp as usize - 1));
+            let peak = mm.baseline_pipeline_peak(&in_flight);
+            if peak <= GPU_CAPACITY {
+                let better = match &best {
+                    None => true,
+                    Some(b) => {
+                        let (gb, gc) = (b.world_size(), cfg.world_size());
+                        gc < gb
+                            || (gc == gb
+                                && rec == Selective
+                                && b.recompute == Full)
+                    }
+                };
+                if better {
+                    best = Some(cfg);
+                }
+            }
+        }
+    }
+    best
+}
+
+/// Figure 1: per-micro-step peak memory trace for the baseline (micro-batch
+/// = one sequence), in bytes per GPU.
+pub fn microstep_memory_trace(batch: &[Sequence], mm: &MemoryModel) -> Vec<u64> {
+    batch.iter().map(|s| mm.baseline_peak(s.len)).collect()
+}
+
+/// Summary statistics for the Figure 1 narrative: peak and the fraction of
+/// micro-steps under a threshold.
+pub fn trace_stats(trace: &[u64], threshold: u64) -> (u64, f64) {
+    let peak = trace.iter().copied().max().unwrap_or(0);
+    let under = trace.iter().filter(|&&b| b < threshold).count() as f64
+        / trace.len().max(1) as f64;
+    (peak, under)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{BatchSampler, LengthDistribution};
+
+    #[test]
+    fn table3_entries_exist_for_all_eval_points() {
+        for m in ["qwen2.5-7b", "qwen2.5-14b", "qwen2.5-32b", "qwen2.5-72b"] {
+            for ctx in [32 * 1024, 256 * 1024] {
+                let cfg = paper_table3(m, ctx).unwrap();
+                assert!(cfg.world_size() >= 4);
+                assert!(paper_table4(m, ctx).is_some());
+            }
+        }
+    }
+
+    #[test]
+    fn table3_paper_configs_fit_in_memory_model_at_32k() {
+        // The 32K-context Table 3 strategies must be OOM-free under our
+        // memory model (calibration sanity check). The 256K rows are NOT
+        // asserted: under Megatron's own published activation accounting, a
+        // single unchunked 256K micro-batch through 72B at <8,8,4,selective>
+        // exceeds 80 GB; the paper's feasibility there must rest on
+        // unstated optimizations (see EXPERIMENTS.md §Deviations).
+        for m in ["qwen2.5-7b", "qwen2.5-14b", "qwen2.5-32b", "qwen2.5-72b"] {
+            for ctx in [32 * 1024u64] {
+                let spec = ModelSpec::preset(m).unwrap();
+                let cfg = paper_table3(m, ctx).unwrap();
+                let mm = MemoryModel::new(spec, cfg.clone());
+                let mut in_flight = vec![ctx];
+                in_flight.extend(std::iter::repeat(1024).take(cfg.pp as usize - 1));
+                let peak = mm.baseline_pipeline_peak(&in_flight);
+                assert!(
+                    peak <= GPU_CAPACITY,
+                    "{m}@{ctx}: paper config {} peaks at {} GiB",
+                    cfg.paper_format(),
+                    peak / (1 << 30)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn derived_config_fits_and_is_minimal() {
+        let spec = ModelSpec::preset("qwen2.5-7b").unwrap();
+        let cfg = derive_baseline_config(&spec, 32 * 1024).unwrap();
+        // 7B/32K should need only a single node's worth of GPUs.
+        assert!(cfg.world_size() <= 8, "got {}", cfg.paper_format());
+        // 256K needs more GPUs or heavier recompute.
+        let cfg256 = derive_baseline_config(&spec, 256 * 1024).unwrap();
+        assert!(
+            cfg256.world_size() > cfg.world_size()
+                || cfg256.recompute == RecomputeGranularity::Full,
+            "256K must cost more: {} vs {}",
+            cfg256.paper_format(),
+            cfg.paper_format()
+        );
+    }
+
+    #[test]
+    fn trace_reproduces_figure1_shape() {
+        // 7B/32K/selective micro-steps: peak ~75 GB, vast majority < 45 GB.
+        let spec = ModelSpec::preset("qwen2.5-7b").unwrap();
+        let mm = MemoryModel::new(
+            spec,
+            ParallelConfig::new(4, 1, RecomputeGranularity::Selective),
+        );
+        let mut sampler = BatchSampler::new(
+            LengthDistribution::lmsys_chat_1m(),
+            32 * 1024,
+            1000,
+            42,
+        );
+        let batch = sampler.next_batch();
+        let trace = microstep_memory_trace(&batch, &mm);
+        let (peak, under45) = trace_stats(&trace, 45 * (1 << 30));
+        let peak_gib = peak as f64 / (1 << 30) as f64;
+        assert!(peak_gib < 80.0, "no OOM: {peak_gib:.1}");
+        assert!(under45 > 0.9, "most micro-steps are small: {under45:.3}");
+    }
+
+    #[test]
+    fn bigger_model_derives_bigger_world() {
+        let w7 = derive_baseline_config(&ModelSpec::preset("qwen2.5-7b").unwrap(), 32 * 1024)
+            .unwrap()
+            .world_size();
+        let w72 =
+            derive_baseline_config(&ModelSpec::preset("qwen2.5-72b").unwrap(), 32 * 1024)
+                .unwrap()
+                .world_size();
+        assert!(w72 > w7);
+    }
+}

@@ -1,0 +1,173 @@
+//! Bin packing with a bin-count budget — the inner loop of Algorithm 1.
+//!
+//! The paper's heuristic: for BinCnt = 1.. try to pack the short sequences
+//! into `BinCnt` bins of capacity `ChunkSize`; accept the first feasible
+//! count. We decide feasibility with best-fit-decreasing (BFD) restricted to
+//! the allowed number of bins. BFD is a strong heuristic for this decision
+//! problem; since we sweep BinCnt upward, the returned packing is always
+//! valid and uses the minimal count *reachable by BFD* — at most 11/9·OPT+1
+//! by the classic FFD bound, and we start the sweep at the token-sum lower
+//! bound so typical cases are provably optimal.
+
+/// Try to pack `weights` into at most `bin_cnt` bins of capacity `cap`
+/// using best-fit-decreasing. Returns item-index bins on success.
+pub fn fits_in_bins(weights: &[u64], cap: u64, bin_cnt: usize) -> Option<Vec<Vec<usize>>> {
+    assert!(weights.iter().all(|&w| w <= cap), "item exceeds capacity");
+    let mut order: Vec<usize> = (0..weights.len()).collect();
+    // Decreasing weight; stable tiebreak on index for determinism.
+    order.sort_by_key(|&i| (std::cmp::Reverse(weights[i]), i));
+
+    let mut bins: Vec<Vec<usize>> = Vec::new();
+    let mut loads: Vec<u64> = Vec::new();
+    for &i in &order {
+        let w = weights[i];
+        // Best fit: the open bin with least remaining space that still fits.
+        let mut best: Option<(usize, u64)> = None;
+        for (b, &load) in loads.iter().enumerate() {
+            if load + w <= cap {
+                let rem = cap - load - w;
+                if best.map_or(true, |(_, brem)| rem < brem) {
+                    best = Some((b, rem));
+                }
+            }
+        }
+        match best {
+            Some((b, _)) => {
+                bins[b].push(i);
+                loads[b] += w;
+            }
+            None => {
+                if bins.len() == bin_cnt {
+                    return None;
+                }
+                bins.push(vec![i]);
+                loads.push(w);
+            }
+        }
+    }
+    Some(bins)
+}
+
+/// Pack minimizing bin count: sweep BinCnt from the token-sum lower bound
+/// upward (paper Algorithm 1, lines 8-10).
+pub fn binpack_min_bins(weights: &[u64], cap: u64) -> Vec<Vec<usize>> {
+    if weights.is_empty() {
+        return Vec::new();
+    }
+    let total: u64 = weights.iter().sum();
+    let lower = (total.div_ceil(cap) as usize).max(1);
+    for bin_cnt in lower..=weights.len() {
+        if let Some(bins) = fits_in_bins(weights, cap, bin_cnt) {
+            return bins;
+        }
+    }
+    // One bin per item always fits (every item <= cap).
+    fits_in_bins(weights, cap, weights.len()).expect("one bin per item must fit")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, ensure, gen_pair, gen_u64, gen_vec};
+
+    fn validate(bins: &[Vec<usize>], weights: &[u64], cap: u64) {
+        // Partition check.
+        let mut seen = vec![false; weights.len()];
+        for bin in bins {
+            let load: u64 = bin.iter().map(|&i| weights[i]).sum();
+            assert!(load <= cap, "bin over capacity: {load} > {cap}");
+            for &i in bin {
+                assert!(!seen[i], "item {i} duplicated");
+                seen[i] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "all items packed");
+    }
+
+    #[test]
+    fn exact_fit_uses_lower_bound() {
+        // 6 items of 4 into cap 8 => exactly 3 bins.
+        let w = vec![4; 6];
+        let bins = binpack_min_bins(&w, 8);
+        validate(&bins, &w, 8);
+        assert_eq!(bins.len(), 3);
+    }
+
+    #[test]
+    fn classic_ffd_instance() {
+        let w = vec![7, 6, 5, 4, 3, 2, 1]; // total 28, cap 10 => lower 3
+        let bins = binpack_min_bins(&w, 10);
+        validate(&bins, &w, 10);
+        assert_eq!(bins.len(), 3, "7+3, 6+4, 5+2+1 is a 3-bin packing");
+    }
+
+    #[test]
+    fn single_item() {
+        let bins = binpack_min_bins(&[5], 8);
+        assert_eq!(bins, vec![vec![0]]);
+    }
+
+    #[test]
+    fn empty_input() {
+        assert!(binpack_min_bins(&[], 8).is_empty());
+    }
+
+    #[test]
+    fn items_at_capacity() {
+        let w = vec![8, 8, 8];
+        let bins = binpack_min_bins(&w, 8);
+        validate(&bins, &w, 8);
+        assert_eq!(bins.len(), 3);
+    }
+
+    #[test]
+    fn infeasible_bin_count_returns_none() {
+        assert!(fits_in_bins(&[5, 5, 5], 8, 2).is_none());
+        assert!(fits_in_bins(&[5, 5, 5], 8, 3).is_some());
+    }
+
+    #[test]
+    #[should_panic(expected = "item exceeds capacity")]
+    fn oversized_item_panics() {
+        fits_in_bins(&[9], 8, 1);
+    }
+
+    #[test]
+    fn prop_valid_packing_and_near_optimal() {
+        let gen = gen_pair(gen_vec(gen_u64(1, 1000), 1, 60), gen_u64(1000, 4000));
+        check(400, gen, |(weights, cap)| {
+            let bins = binpack_min_bins(weights, *cap);
+            // Validity.
+            let mut seen = vec![false; weights.len()];
+            for bin in &bins {
+                let load: u64 = bin.iter().map(|&i| weights[i]).sum();
+                ensure(load <= *cap, "bin within capacity")?;
+                for &i in bin {
+                    ensure(!seen[i], "no duplicates")?;
+                    seen[i] = true;
+                }
+            }
+            ensure(seen.iter().all(|&s| s), "all packed")?;
+            // FFD quality bound: bins <= 11/9 * OPT + 1, and OPT >= ceil(sum/cap).
+            let total: u64 = weights.iter().sum();
+            let lower = total.div_ceil(*cap) as f64;
+            ensure(
+                (bins.len() as f64) <= (11.0 / 9.0) * lower.max(1.0) + 1.0,
+                "within FFD bound of lower bound",
+            )?;
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_monotone_in_capacity() {
+        // Larger capacity never needs more bins.
+        let gen = gen_vec(gen_u64(1, 500), 1, 40);
+        check(200, gen, |weights| {
+            let b1 = binpack_min_bins(weights, 600).len();
+            let b2 = binpack_min_bins(weights, 1200).len();
+            ensure(b2 <= b1, "doubling capacity cannot increase bins")?;
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,11 @@
+//! Configuration system: model shape specs (Qwen2.5-series plus the small
+//! real-training presets), parallelization strategy, and the top-level train
+//! configuration the launcher consumes (JSON files or CLI flags).
+
+mod model;
+mod parallel;
+mod train;
+
+pub use model::{ModelSpec, PRESETS};
+pub use parallel::{ParallelConfig, RecomputeGranularity};
+pub use train::{ChunkFlowParams, TrainConfig};

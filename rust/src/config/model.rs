@@ -1,0 +1,260 @@
+//! Transformer model shape specifications.
+//!
+//! The analytic memory/compute models (`memory`, `sim`) consume these shape
+//! parameters; the real trainer uses the small presets whose artifacts are
+//! produced by `python/compile/aot.py`. The Qwen2.5-series entries follow
+//! the published architecture configs (Qwen2.5 technical report): GQA
+//! attention, SwiGLU MLP, tied/untied embeddings as released.
+
+use crate::util::json::Json;
+
+/// Shape of a decoder-only transformer.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelSpec {
+    pub name: String,
+    pub hidden_size: u64,
+    pub num_layers: u64,
+    pub num_heads: u64,
+    /// Key/value heads (GQA); equals `num_heads` for MHA.
+    pub num_kv_heads: u64,
+    /// MLP intermediate size (SwiGLU has 3 such matrices).
+    pub intermediate_size: u64,
+    pub vocab_size: u64,
+    /// Whether input/output embeddings share weights.
+    pub tie_embeddings: bool,
+}
+
+impl ModelSpec {
+    pub fn head_dim(&self) -> u64 {
+        self.hidden_size / self.num_heads
+    }
+
+    /// Total parameter count.
+    pub fn param_count(&self) -> u64 {
+        let h = self.hidden_size;
+        let kv = self.num_kv_heads * self.head_dim();
+        // Attention: Q (h*h) + K,V (h*kv each) + O (h*h); Qwen uses QKV bias.
+        let attn = h * h + 2 * h * kv + h * h + (h + 2 * kv);
+        // SwiGLU MLP: gate + up (h*i each) + down (i*h).
+        let mlp = 3 * h * self.intermediate_size;
+        // Two RMSNorm weights per layer plus final norm.
+        let norms = 2 * h * self.num_layers + h;
+        let embed = self.vocab_size * h;
+        let lm_head = if self.tie_embeddings { 0 } else { self.vocab_size * h };
+        (attn + mlp) * self.num_layers + norms + embed + lm_head
+    }
+
+    /// Bytes of one token's KV cache across all layers (bf16 = 2 bytes).
+    pub fn kv_bytes_per_token(&self) -> u64 {
+        // K and V, per layer: num_kv_heads * head_dim each.
+        2 * self.num_kv_heads * self.head_dim() * self.num_layers * 2
+    }
+
+    /// Forward FLOPs for `tokens` new tokens attending to a context that
+    /// ends at `ctx_end` tokens (ctx_end >= tokens). Standard 2*P*T matmul
+    /// term plus the attention score/value term which is quadratic in
+    /// context. Backward is ~2x this (see `sim::cost`).
+    pub fn fwd_flops(&self, tokens: u64, ctx_end: u64) -> f64 {
+        let dense = 2.0 * self.param_count() as f64 * tokens as f64;
+        // Attention scores + weighted values: 2 * 2 * T * ctx_avg * h per layer.
+        let ctx_avg = (ctx_end as f64 + (ctx_end - tokens) as f64) / 2.0;
+        let attn =
+            4.0 * tokens as f64 * ctx_avg * self.hidden_size as f64 * self.num_layers as f64;
+        dense + attn
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("hidden_size", Json::num(self.hidden_size as f64)),
+            ("num_layers", Json::num(self.num_layers as f64)),
+            ("num_heads", Json::num(self.num_heads as f64)),
+            ("num_kv_heads", Json::num(self.num_kv_heads as f64)),
+            ("intermediate_size", Json::num(self.intermediate_size as f64)),
+            ("vocab_size", Json::num(self.vocab_size as f64)),
+            ("tie_embeddings", Json::Bool(self.tie_embeddings)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<ModelSpec> {
+        Ok(ModelSpec {
+            name: j.req_str("name")?.to_string(),
+            hidden_size: j.req_u64("hidden_size")?,
+            num_layers: j.req_u64("num_layers")?,
+            num_heads: j.req_u64("num_heads")?,
+            num_kv_heads: j.req_u64("num_kv_heads")?,
+            intermediate_size: j.req_u64("intermediate_size")?,
+            vocab_size: j.req_u64("vocab_size")?,
+            tie_embeddings: j.opt_bool("tie_embeddings", false),
+        })
+    }
+
+    /// Look up a preset by name (see [`PRESETS`]).
+    pub fn preset(name: &str) -> anyhow::Result<ModelSpec> {
+        PRESETS
+            .iter()
+            .find(|(n, _)| *n == name)
+            .map(|(_, f)| f())
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "unknown model preset `{name}` (have: {})",
+                    PRESETS.iter().map(|(n, _)| *n).collect::<Vec<_>>().join(", ")
+                )
+            })
+    }
+}
+
+/// Known model presets. Qwen2.5 shapes per the technical report; `tiny` and
+/// `gpt-100m` are the real-trainer presets whose AOT artifacts exist.
+pub const PRESETS: &[(&str, fn() -> ModelSpec)] = &[
+    ("qwen2.5-7b", qwen7b),
+    ("qwen2.5-14b", qwen14b),
+    ("qwen2.5-32b", qwen32b),
+    ("qwen2.5-72b", qwen72b),
+    ("gpt-100m", gpt100m),
+    ("tiny", tiny),
+];
+
+fn qwen7b() -> ModelSpec {
+    ModelSpec {
+        name: "qwen2.5-7b".into(),
+        hidden_size: 3584,
+        num_layers: 28,
+        num_heads: 28,
+        num_kv_heads: 4,
+        intermediate_size: 18944,
+        vocab_size: 152064,
+        tie_embeddings: false,
+    }
+}
+
+fn qwen14b() -> ModelSpec {
+    ModelSpec {
+        name: "qwen2.5-14b".into(),
+        hidden_size: 5120,
+        num_layers: 48,
+        num_heads: 40,
+        num_kv_heads: 8,
+        intermediate_size: 13824,
+        vocab_size: 152064,
+        tie_embeddings: false,
+    }
+}
+
+fn qwen32b() -> ModelSpec {
+    ModelSpec {
+        name: "qwen2.5-32b".into(),
+        hidden_size: 5120,
+        num_layers: 64,
+        num_heads: 40,
+        num_kv_heads: 8,
+        intermediate_size: 27648,
+        vocab_size: 152064,
+        tie_embeddings: false,
+    }
+}
+
+fn qwen72b() -> ModelSpec {
+    ModelSpec {
+        name: "qwen2.5-72b".into(),
+        hidden_size: 8192,
+        num_layers: 80,
+        num_heads: 64,
+        num_kv_heads: 8,
+        intermediate_size: 29568,
+        vocab_size: 152064,
+        tie_embeddings: false,
+    }
+}
+
+/// ~100M-parameter byte-level GPT used for the real end-to-end training run
+/// (examples/train_e2e.rs). Must stay in sync with python/compile/model.py.
+fn gpt100m() -> ModelSpec {
+    ModelSpec {
+        name: "gpt-100m".into(),
+        hidden_size: 768,
+        num_layers: 12,
+        num_heads: 12,
+        num_kv_heads: 12,
+        intermediate_size: 2048,
+        vocab_size: 512,
+        tie_embeddings: true,
+    }
+}
+
+/// Minutes-scale preset for tests and the quickstart example.
+fn tiny() -> ModelSpec {
+    ModelSpec {
+        name: "tiny".into(),
+        hidden_size: 128,
+        num_layers: 2,
+        num_heads: 4,
+        num_kv_heads: 4,
+        intermediate_size: 384,
+        vocab_size: 512,
+        tie_embeddings: true,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn qwen_param_counts_near_nominal() {
+        // Within 15% of nameplate size (nameplate rounds aggressively).
+        let cases = [
+            ("qwen2.5-7b", 7.6e9),
+            ("qwen2.5-14b", 14.7e9),
+            ("qwen2.5-32b", 32.5e9),
+            ("qwen2.5-72b", 72.7e9),
+        ];
+        for (name, nominal) in cases {
+            let p = ModelSpec::preset(name).unwrap().param_count() as f64;
+            let rel = (p - nominal).abs() / nominal;
+            assert!(rel < 0.15, "{name}: {p:.3e} vs nominal {nominal:.3e} (rel {rel:.2})");
+        }
+    }
+
+    #[test]
+    fn gpt100m_is_about_100m() {
+        let p = ModelSpec::preset("gpt-100m").unwrap().param_count() as f64;
+        assert!((8.0e7..1.3e8).contains(&p), "gpt-100m has {p:.3e} params");
+    }
+
+    #[test]
+    fn head_dim_divides() {
+        for (name, f) in PRESETS {
+            let m = f();
+            assert_eq!(m.hidden_size % m.num_heads, 0, "{name}");
+            assert_eq!(m.num_heads % m.num_kv_heads, 0, "{name}");
+        }
+    }
+
+    #[test]
+    fn kv_bytes_per_token_7b() {
+        let m = ModelSpec::preset("qwen2.5-7b").unwrap();
+        // 4 kv heads * 128 head_dim * 2 (K+V) * 28 layers * 2 bytes = 57344.
+        assert_eq!(m.kv_bytes_per_token(), 57344);
+    }
+
+    #[test]
+    fn flops_monotone_in_context() {
+        let m = ModelSpec::preset("qwen2.5-7b").unwrap();
+        let near = m.fwd_flops(1024, 1024);
+        let far = m.fwd_flops(1024, 128 * 1024);
+        assert!(far > near);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let m = ModelSpec::preset("qwen2.5-14b").unwrap();
+        let j = m.to_json();
+        assert_eq!(ModelSpec::from_json(&j).unwrap(), m);
+    }
+
+    #[test]
+    fn unknown_preset_is_error() {
+        assert!(ModelSpec::preset("nope").is_err());
+    }
+}

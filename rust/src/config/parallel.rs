@@ -1,0 +1,150 @@
+//! Parallelization strategy configuration: the paper's `<TP, SP, PP,
+//! RecomputeGranularity>` tuples (Table 3) plus data parallelism.
+
+use crate::util::json::Json;
+
+/// Activation recomputation granularity (Megatron terminology).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RecomputeGranularity {
+    /// No recomputation: all activations retained for backward.
+    None,
+    /// Selective: attention score/softmax activations recomputed (cheap,
+    /// removes the O(s^2) and large attention buffers).
+    Selective,
+    /// Full: every layer's activations recomputed from layer-boundary
+    /// checkpoints; backward effectively pays an extra forward.
+    Full,
+}
+
+impl RecomputeGranularity {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "none" => Ok(Self::None),
+            "selective" => Ok(Self::Selective),
+            "full" => Ok(Self::Full),
+            _ => anyhow::bail!("unknown recompute granularity `{s}` (none|selective|full)"),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Self::None => "none",
+            Self::Selective => "selective",
+            Self::Full => "full",
+        }
+    }
+
+    /// Extra forward-compute multiplier paid during the backward pass.
+    /// (Backward base cost is 2x forward; full recompute adds ~1x more.)
+    pub fn backward_extra_fwd(&self) -> f64 {
+        match self {
+            Self::None => 0.0,
+            // Recomputing attention internals is a small slice of total fwd.
+            Self::Selective => 0.15,
+            Self::Full => 1.0,
+        }
+    }
+}
+
+/// `<TP, SP, PP>` + DP + recompute. SP in the paper's tables always equals
+/// TP (Megatron-style sequence parallelism over the TP group), so we keep a
+/// single `tp_sp` degree and a flag.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ParallelConfig {
+    /// Tensor-parallel degree (== sequence-parallel degree when sp enabled).
+    pub tp: u64,
+    /// Sequence parallelism enabled (Megatron SP over the TP group).
+    pub sp: bool,
+    /// Pipeline-parallel degree (number of stages).
+    pub pp: u64,
+    /// Data-parallel degree.
+    pub dp: u64,
+    pub recompute: RecomputeGranularity,
+}
+
+impl ParallelConfig {
+    pub fn new(tp: u64, pp: u64, recompute: RecomputeGranularity) -> Self {
+        Self { tp, sp: true, pp, dp: 1, recompute }
+    }
+
+    /// Total GPUs this strategy occupies.
+    pub fn world_size(&self) -> u64 {
+        self.tp * self.pp * self.dp
+    }
+
+    /// Format like the paper: `<4,4,4,selective>`.
+    pub fn paper_format(&self) -> String {
+        format!("<{},{},{},{}>", self.tp, self.tp, self.pp, self.recompute.as_str())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("tp", Json::num(self.tp as f64)),
+            ("sp", Json::Bool(self.sp)),
+            ("pp", Json::num(self.pp as f64)),
+            ("dp", Json::num(self.dp as f64)),
+            ("recompute", Json::str(self.recompute.as_str())),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<Self> {
+        Ok(Self {
+            tp: j.req_u64("tp")?,
+            sp: j.opt_bool("sp", true),
+            pp: j.req_u64("pp")?,
+            dp: j.opt_u64("dp", 1),
+            recompute: RecomputeGranularity::parse(j.opt_str("recompute", "selective"))?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn world_size() {
+        let mut p = ParallelConfig::new(4, 4, RecomputeGranularity::Selective);
+        assert_eq!(p.world_size(), 16);
+        p.dp = 2;
+        assert_eq!(p.world_size(), 32);
+    }
+
+    #[test]
+    fn paper_format_matches_table3() {
+        let p = ParallelConfig::new(4, 4, RecomputeGranularity::Full);
+        assert_eq!(p.paper_format(), "<4,4,4,full>");
+        let p = ParallelConfig::new(8, 4, RecomputeGranularity::Selective);
+        assert_eq!(p.paper_format(), "<8,8,4,selective>");
+    }
+
+    #[test]
+    fn recompute_parse_roundtrip() {
+        for g in [
+            RecomputeGranularity::None,
+            RecomputeGranularity::Selective,
+            RecomputeGranularity::Full,
+        ] {
+            assert_eq!(RecomputeGranularity::parse(g.as_str()).unwrap(), g);
+        }
+        assert!(RecomputeGranularity::parse("partial").is_err());
+    }
+
+    #[test]
+    fn recompute_cost_ordering() {
+        assert!(
+            RecomputeGranularity::None.backward_extra_fwd()
+                < RecomputeGranularity::Selective.backward_extra_fwd()
+        );
+        assert!(
+            RecomputeGranularity::Selective.backward_extra_fwd()
+                < RecomputeGranularity::Full.backward_extra_fwd()
+        );
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let p = ParallelConfig { tp: 8, sp: true, pp: 4, dp: 2, recompute: RecomputeGranularity::Full };
+        assert_eq!(ParallelConfig::from_json(&p.to_json()).unwrap(), p);
+    }
+}

@@ -1,0 +1,182 @@
+//! Top-level training configuration consumed by the launcher and the real
+//! trainer, loadable from JSON or assembled from CLI flags.
+
+use super::{ModelSpec, ParallelConfig, RecomputeGranularity};
+use crate::util::json::Json;
+
+/// ChunkFlow's two tunables (paper §5): the chunk length limit and the
+/// number of chunks whose activations the scheduler may retain.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ChunkFlowParams {
+    pub chunk_size: u64,
+    pub k: u64,
+}
+
+impl ChunkFlowParams {
+    pub fn new(chunk_size: u64, k: u64) -> Self {
+        assert!(chunk_size > 0 && k > 0);
+        Self { chunk_size, k }
+    }
+
+    /// Format like the paper's Table 4: `(8K, 16)`.
+    pub fn paper_format(&self) -> String {
+        format!("({}, {})", crate::util::format_tokens(self.chunk_size), self.k)
+    }
+}
+
+/// Everything a training run needs.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub model: ModelSpec,
+    pub parallel: ParallelConfig,
+    pub chunkflow: ChunkFlowParams,
+    /// Max sequence length admitted from the dataset (context length).
+    pub context_length: u64,
+    /// Sequences per optimizer step across all DP ranks.
+    pub global_batch_size: u64,
+    /// Sequences per micro-step (baseline path; ChunkFlow packs chunks).
+    pub micro_batch_size: u64,
+    pub steps: u64,
+    pub seed: u64,
+    pub lr: f64,
+    pub adam_beta1: f64,
+    pub adam_beta2: f64,
+    pub adam_eps: f64,
+    pub weight_decay: f64,
+    pub grad_clip: f64,
+    /// Directory of AOT artifacts for the real trainer.
+    pub artifacts_dir: String,
+}
+
+impl TrainConfig {
+    /// Defaults for the small real-training path.
+    pub fn default_for(model: ModelSpec) -> Self {
+        Self {
+            model,
+            parallel: ParallelConfig::new(1, 1, RecomputeGranularity::Selective),
+            chunkflow: ChunkFlowParams::new(512, 1),
+            context_length: 2048,
+            global_batch_size: 8,
+            micro_batch_size: 1,
+            steps: 100,
+            seed: 1234,
+            lr: 3e-4,
+            adam_beta1: 0.9,
+            adam_beta2: 0.95,
+            adam_eps: 1e-8,
+            weight_decay: 0.0,
+            grad_clip: 1.0,
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("model", self.model.to_json()),
+            ("parallel", self.parallel.to_json()),
+            ("chunk_size", Json::num(self.chunkflow.chunk_size as f64)),
+            ("k", Json::num(self.chunkflow.k as f64)),
+            ("context_length", Json::num(self.context_length as f64)),
+            ("global_batch_size", Json::num(self.global_batch_size as f64)),
+            ("micro_batch_size", Json::num(self.micro_batch_size as f64)),
+            ("steps", Json::num(self.steps as f64)),
+            ("seed", Json::num(self.seed as f64)),
+            ("lr", Json::num(self.lr)),
+            ("adam_beta1", Json::num(self.adam_beta1)),
+            ("adam_beta2", Json::num(self.adam_beta2)),
+            ("adam_eps", Json::num(self.adam_eps)),
+            ("weight_decay", Json::num(self.weight_decay)),
+            ("grad_clip", Json::num(self.grad_clip)),
+            ("artifacts_dir", Json::str(self.artifacts_dir.clone())),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<Self> {
+        let model = ModelSpec::from_json(
+            j.get("model").ok_or_else(|| anyhow::anyhow!("missing `model`"))?,
+        )?;
+        let parallel = match j.get("parallel") {
+            Some(p) => ParallelConfig::from_json(p)?,
+            None => ParallelConfig::new(1, 1, RecomputeGranularity::Selective),
+        };
+        let defaults = TrainConfig::default_for(model.clone());
+        Ok(Self {
+            model,
+            parallel,
+            chunkflow: ChunkFlowParams::new(
+                j.opt_u64("chunk_size", defaults.chunkflow.chunk_size),
+                j.opt_u64("k", defaults.chunkflow.k),
+            ),
+            context_length: j.opt_u64("context_length", defaults.context_length),
+            global_batch_size: j.opt_u64("global_batch_size", defaults.global_batch_size),
+            micro_batch_size: j.opt_u64("micro_batch_size", defaults.micro_batch_size),
+            steps: j.opt_u64("steps", defaults.steps),
+            seed: j.opt_u64("seed", defaults.seed),
+            lr: j.opt_f64("lr", defaults.lr),
+            adam_beta1: j.opt_f64("adam_beta1", defaults.adam_beta1),
+            adam_beta2: j.opt_f64("adam_beta2", defaults.adam_beta2),
+            adam_eps: j.opt_f64("adam_eps", defaults.adam_eps),
+            weight_decay: j.opt_f64("weight_decay", defaults.weight_decay),
+            grad_clip: j.opt_f64("grad_clip", defaults.grad_clip),
+            artifacts_dir: j.opt_str("artifacts_dir", &defaults.artifacts_dir).to_string(),
+        })
+    }
+
+    pub fn load(path: &std::path::Path) -> anyhow::Result<Self> {
+        Self::from_json(&Json::parse_file(path)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunkflow_params_format() {
+        assert_eq!(ChunkFlowParams::new(8 * 1024, 16).paper_format(), "(8K, 16)");
+        assert_eq!(ChunkFlowParams::new(32 * 1024, 1).paper_format(), "(32K, 1)");
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_chunk_size_rejected() {
+        ChunkFlowParams::new(0, 1);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut cfg = TrainConfig::default_for(ModelSpec::preset("tiny").unwrap());
+        cfg.chunkflow = ChunkFlowParams::new(1024, 2);
+        cfg.steps = 7;
+        cfg.lr = 1e-3;
+        let j = cfg.to_json();
+        let back = TrainConfig::from_json(&j).unwrap();
+        assert_eq!(back.chunkflow, cfg.chunkflow);
+        assert_eq!(back.steps, 7);
+        assert_eq!(back.lr, 1e-3);
+        assert_eq!(back.model, cfg.model);
+    }
+
+    #[test]
+    fn defaults_fill_missing_fields() {
+        let j = Json::parse(
+            r#"{"model": {"name":"t","hidden_size":64,"num_layers":1,"num_heads":2,
+                "num_kv_heads":2,"intermediate_size":128,"vocab_size":256}}"#,
+        )
+        .unwrap();
+        let cfg = TrainConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.chunkflow.k, 1);
+        assert_eq!(cfg.parallel.pp, 1);
+    }
+
+    #[test]
+    fn load_from_file() {
+        let dir = std::env::temp_dir().join("chunkflow_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cfg.json");
+        let cfg = TrainConfig::default_for(ModelSpec::preset("tiny").unwrap());
+        cfg.to_json().write_file(&path).unwrap();
+        let loaded = TrainConfig::load(&path).unwrap();
+        assert_eq!(loaded.model.name, "tiny");
+    }
+}

@@ -1,0 +1,209 @@
+//! Long-tail sequence-length distributions.
+//!
+//! The paper's observation 1: SFT datasets are extremely long-tailed —
+//! LMSysChat1M has >90% of sequences under 1K tokens but a 303K-token
+//! maximum. We model a length distribution as CDF buckets taken directly
+//! from the paper's tables, sampling a bucket by probability and a length
+//! log-uniformly within the bucket (log-uniform matches the heavy-tail
+//! within-bucket behaviour of the real dataset far better than uniform).
+
+use crate::util::rng::Rng;
+
+/// A half-open length bucket `[lo, hi)` holding `prob` mass.
+#[derive(Clone, Copy, Debug)]
+pub struct LengthBucket {
+    pub lo: u64,
+    pub hi: u64,
+    pub prob: f64,
+}
+
+/// A bucketed sequence-length distribution.
+#[derive(Clone, Debug)]
+pub struct LengthDistribution {
+    pub name: String,
+    pub buckets: Vec<LengthBucket>,
+    /// The single longest sequence the dataset contains (paper's "Longest").
+    pub longest: u64,
+}
+
+const K: u64 = 1024;
+
+impl LengthDistribution {
+    /// Table 1: LMSysChat1M. CDF rows: <1K 90.499%, <4K 99.539%,
+    /// <8K 99.908%, <32K 99.987%, <128K 99.996%, longest 303K.
+    pub fn lmsys_chat_1m() -> Self {
+        Self::from_cdf(
+            "lmsys-chat-1m",
+            &[
+                (1 * K, 0.90499),
+                (4 * K, 0.99539),
+                (8 * K, 0.99908),
+                (32 * K, 0.99987),
+                (128 * K, 0.99996),
+            ],
+            303 * K,
+        )
+    }
+
+    /// Table 2: the paper's constructed evaluation dataset. CDF rows:
+    /// <1K 98.17%, <4K 99.72%, <8K 99.83%, <32K 99.92%, <128K 99.98%,
+    /// longest 256K.
+    pub fn evaluation_dataset() -> Self {
+        Self::from_cdf(
+            "evaluation",
+            &[
+                (1 * K, 0.9817),
+                (4 * K, 0.9972),
+                (8 * K, 0.9983),
+                (32 * K, 0.9992),
+                (128 * K, 0.9998),
+            ],
+            256 * K,
+        )
+    }
+
+    /// Build from cumulative rows `(upper_bound, cdf)`; mass above the last
+    /// row extends to `longest`.
+    pub fn from_cdf(name: &str, rows: &[(u64, f64)], longest: u64) -> Self {
+        let mut buckets = Vec::with_capacity(rows.len() + 1);
+        let mut lo = 1u64;
+        let mut cdf_prev = 0.0;
+        for &(hi, cdf) in rows {
+            assert!(cdf >= cdf_prev && cdf <= 1.0, "CDF must be nondecreasing");
+            buckets.push(LengthBucket { lo, hi, prob: cdf - cdf_prev });
+            lo = hi;
+            cdf_prev = cdf;
+        }
+        assert!(longest >= lo, "longest must exceed last bucket bound");
+        buckets.push(LengthBucket { lo, hi: longest + 1, prob: 1.0 - cdf_prev });
+        Self { name: name.to_string(), buckets, longest }
+    }
+
+    /// Sample one sequence length.
+    pub fn sample(&self, rng: &mut Rng) -> u64 {
+        let weights: Vec<f64> = self.buckets.iter().map(|b| b.prob).collect();
+        let b = &self.buckets[rng.categorical(&weights)];
+        // Log-uniform within the bucket.
+        let (lo, hi) = (b.lo.max(1) as f64, b.hi as f64);
+        let x = (lo.ln() + rng.next_f64() * (hi.ln() - lo.ln())).exp();
+        (x as u64).clamp(b.lo.max(1), b.hi - 1)
+    }
+
+    /// Sample `n` lengths, truncating everything above `context_length`
+    /// to be *excluded* (the paper excludes, not truncates, over-length
+    /// sequences for each experiment) — resample until under the limit.
+    pub fn sample_batch(&self, rng: &mut Rng, n: usize, context_length: u64) -> Vec<u64> {
+        assert!(
+            context_length >= self.buckets[0].hi,
+            "context_length below first bucket would loop forever"
+        );
+        (0..n)
+            .map(|_| loop {
+                let len = self.sample(rng);
+                if len <= context_length {
+                    break len;
+                }
+            })
+            .collect()
+    }
+
+    /// Empirical CDF at `x` from the bucket model (exact at bucket edges).
+    pub fn cdf(&self, x: u64) -> f64 {
+        let mut acc = 0.0;
+        for b in &self.buckets {
+            if x >= b.hi {
+                acc += b.prob;
+            } else if x > b.lo {
+                // Log-linear interpolation inside the bucket.
+                let frac = ((x as f64).ln() - (b.lo.max(1) as f64).ln())
+                    / ((b.hi as f64).ln() - (b.lo.max(1) as f64).ln());
+                acc += b.prob * frac.clamp(0.0, 1.0);
+            }
+        }
+        acc.min(1.0)
+    }
+
+    /// Render the paper-style table rows: proportion under each bound.
+    pub fn table_rows(&self) -> Vec<(String, f64)> {
+        [1 * K, 4 * K, 8 * K, 32 * K, 128 * K]
+            .iter()
+            .map(|&b| (format!("< {}", crate::util::format_tokens(b)), self.cdf(b)))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn probabilities_sum_to_one() {
+        for d in [LengthDistribution::lmsys_chat_1m(), LengthDistribution::evaluation_dataset()] {
+            let total: f64 = d.buckets.iter().map(|b| b.prob).sum();
+            assert!((total - 1.0).abs() < 1e-9, "{}: {total}", d.name);
+        }
+    }
+
+    #[test]
+    fn empirical_matches_table1() {
+        let d = LengthDistribution::lmsys_chat_1m();
+        let mut rng = Rng::new(42);
+        let n = 200_000;
+        let lens: Vec<u64> = (0..n).map(|_| d.sample(&mut rng)).collect();
+        let under = |b: u64| lens.iter().filter(|&&l| l < b).count() as f64 / n as f64;
+        assert!((under(1024) - 0.90499).abs() < 0.005, "<1K: {}", under(1024));
+        assert!((under(4096) - 0.99539).abs() < 0.002, "<4K: {}", under(4096));
+        assert!((under(32 * 1024) - 0.99987).abs() < 0.001);
+        assert!(lens.iter().all(|&l| l >= 1 && l <= 303 * 1024));
+    }
+
+    #[test]
+    fn empirical_matches_table2() {
+        let d = LengthDistribution::evaluation_dataset();
+        let mut rng = Rng::new(7);
+        let n = 200_000;
+        let lens: Vec<u64> = (0..n).map(|_| d.sample(&mut rng)).collect();
+        let under = |b: u64| lens.iter().filter(|&&l| l < b).count() as f64 / n as f64;
+        assert!((under(1024) - 0.9817).abs() < 0.005, "<1K: {}", under(1024));
+        assert!(lens.iter().all(|&l| l <= 256 * 1024));
+    }
+
+    #[test]
+    fn context_length_filter_respected() {
+        let d = LengthDistribution::evaluation_dataset();
+        let mut rng = Rng::new(3);
+        let lens = d.sample_batch(&mut rng, 5_000, 32 * 1024);
+        assert!(lens.iter().all(|&l| l <= 32 * 1024));
+        assert_eq!(lens.len(), 5_000);
+    }
+
+    #[test]
+    fn cdf_is_monotone() {
+        let d = LengthDistribution::lmsys_chat_1m();
+        let mut prev = 0.0;
+        for x in [1, 512, 1024, 2048, 8192, 100_000, 310_000] {
+            let c = d.cdf(x);
+            assert!(c >= prev, "cdf not monotone at {x}");
+            prev = c;
+        }
+        assert!((d.cdf(400_000) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn table_rows_match_source() {
+        let d = LengthDistribution::lmsys_chat_1m();
+        let rows = d.table_rows();
+        assert_eq!(rows[0].0, "< 1K");
+        assert!((rows[0].1 - 0.90499).abs() < 1e-6);
+        assert!((rows[3].1 - 0.99987).abs() < 1e-6);
+    }
+
+    #[test]
+    fn custom_cdf_validation() {
+        // Decreasing CDF must panic.
+        let r = std::panic::catch_unwind(|| {
+            LengthDistribution::from_cdf("bad", &[(1024, 0.9), (2048, 0.5)], 4096)
+        });
+        assert!(r.is_err());
+    }
+}

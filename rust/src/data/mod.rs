@@ -1,0 +1,12 @@
+//! Dataset machinery: the long-tail sequence-length distributions from the
+//! paper's Table 1 (LMSysChat1M) and Table 2 (evaluation dataset), a
+//! synthetic token corpus for the real trainer, batch sampling, and
+//! sequence packing (§2.2).
+
+mod corpus;
+mod longtail;
+mod sampler;
+
+pub use corpus::SyntheticCorpus;
+pub use longtail::{LengthBucket, LengthDistribution};
+pub use sampler::{BatchSampler, Sequence};

@@ -1,0 +1,177 @@
+//! Batch sampling: draws global batches of variable-length sequences from a
+//! length distribution, excluding over-context-length sequences exactly as
+//! the paper's evaluation does, and supports Megatron-style sequence packing
+//! (§2.2) for the baseline.
+
+use super::longtail::LengthDistribution;
+use crate::util::rng::Rng;
+
+/// A training sequence: id + token length. Token *content* is produced
+/// lazily by `SyntheticCorpus` only on the real-training path; schedulers
+/// and simulators operate on lengths alone.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Sequence {
+    pub id: u64,
+    pub len: u64,
+}
+
+/// Draws batches deterministically given a seed.
+#[derive(Clone, Debug)]
+pub struct BatchSampler {
+    dist: LengthDistribution,
+    pub context_length: u64,
+    pub global_batch_size: usize,
+    rng: Rng,
+    next_id: u64,
+}
+
+impl BatchSampler {
+    pub fn new(
+        dist: LengthDistribution,
+        context_length: u64,
+        global_batch_size: usize,
+        seed: u64,
+    ) -> Self {
+        Self { dist, context_length, global_batch_size, rng: Rng::new(seed), next_id: 0 }
+    }
+
+    /// Next global batch of sequences.
+    pub fn next_batch(&mut self) -> Vec<Sequence> {
+        let lens =
+            self.dist
+                .sample_batch(&mut self.rng, self.global_batch_size, self.context_length);
+        lens.into_iter()
+            .map(|len| {
+                let id = self.next_id;
+                self.next_id += 1;
+                Sequence { id, len }
+            })
+            .collect()
+    }
+
+    /// Megatron-style sequence packing (§2.2): greedily concatenate
+    /// sequences into packed buffers of at most `pack_len` tokens,
+    /// preserving arrival order (first-fit into the open buffer, flush when
+    /// the next sequence doesn't fit). Long sequences (> pack_len) get a
+    /// buffer of their own — they are NOT split (that is ChunkFlow's job).
+    pub fn pack(batch: &[Sequence], pack_len: u64) -> Vec<Vec<Sequence>> {
+        let mut packs: Vec<Vec<Sequence>> = Vec::new();
+        let mut open: Vec<Sequence> = Vec::new();
+        let mut open_len = 0u64;
+        for &seq in batch {
+            if seq.len >= pack_len {
+                // Oversized: own pack.
+                packs.push(vec![seq]);
+                continue;
+            }
+            if open_len + seq.len > pack_len && !open.is_empty() {
+                packs.push(std::mem::take(&mut open));
+                open_len = 0;
+            }
+            open_len += seq.len;
+            open.push(seq);
+        }
+        if !open.is_empty() {
+            packs.push(open);
+        }
+        packs
+    }
+
+    /// Partition a batch across `dp` data-parallel ranks round-robin — the
+    /// naive split whose load imbalance the paper's Obs. 3 mentions.
+    pub fn split_dp(batch: &[Sequence], dp: usize) -> Vec<Vec<Sequence>> {
+        let mut out = vec![Vec::new(); dp];
+        for (i, &s) in batch.iter().enumerate() {
+            out[i % dp].push(s);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sampler(ctx: u64, n: usize) -> BatchSampler {
+        BatchSampler::new(LengthDistribution::evaluation_dataset(), ctx, n, 17)
+    }
+
+    #[test]
+    fn batch_has_right_size_and_bounds() {
+        let mut s = sampler(32 * 1024, 256);
+        let b = s.next_batch();
+        assert_eq!(b.len(), 256);
+        assert!(b.iter().all(|s| s.len >= 1 && s.len <= 32 * 1024));
+    }
+
+    #[test]
+    fn ids_are_unique_across_batches() {
+        let mut s = sampler(8192, 64);
+        let b1 = s.next_batch();
+        let b2 = s.next_batch();
+        let mut ids: Vec<u64> = b1.iter().chain(b2.iter()).map(|s| s.id).collect();
+        ids.sort();
+        ids.dedup();
+        assert_eq!(ids.len(), 128);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = sampler(8192, 32);
+        let mut b = sampler(8192, 32);
+        assert_eq!(a.next_batch(), b.next_batch());
+    }
+
+    #[test]
+    fn packing_respects_limit_and_preserves_all() {
+        let mut s = sampler(32 * 1024, 256);
+        let batch = s.next_batch();
+        let packs = BatchSampler::pack(&batch, 4096);
+        // Every sequence appears exactly once.
+        let packed: u64 = packs.iter().flatten().map(|s| s.len).sum();
+        assert_eq!(packed, batch.iter().map(|s| s.len).sum::<u64>());
+        for p in &packs {
+            let total: u64 = p.iter().map(|s| s.len).sum();
+            // Either within limit, or a single oversized sequence.
+            assert!(total <= 4096 || p.len() == 1, "pack of {} seqs, {total} tokens", p.len());
+        }
+    }
+
+    #[test]
+    fn packing_empty_batch() {
+        assert!(BatchSampler::pack(&[], 1024).is_empty());
+    }
+
+    #[test]
+    fn dp_split_round_robin() {
+        let batch: Vec<Sequence> = (0..10).map(|i| Sequence { id: i, len: 100 + i }).collect();
+        let parts = BatchSampler::split_dp(&batch, 4);
+        assert_eq!(parts.len(), 4);
+        assert_eq!(parts[0].len(), 3); // ids 0, 4, 8
+        assert_eq!(parts[1].len(), 3);
+        assert_eq!(parts[2].len(), 2);
+        assert_eq!(parts[3].len(), 2);
+        assert_eq!(parts[0][1].id, 4);
+    }
+
+    #[test]
+    fn dp_imbalance_exists_with_long_tail() {
+        // With a long-tail batch, round-robin DP splits have unequal token
+        // loads — the imbalance Obs. 3 describes.
+        let mut s = sampler(256 * 1024, 256);
+        // Find a batch with at least one long sequence.
+        for _ in 0..50 {
+            let batch = s.next_batch();
+            if batch.iter().any(|q| q.len > 32 * 1024) {
+                let parts = BatchSampler::split_dp(&batch, 4);
+                let loads: Vec<u64> =
+                    parts.iter().map(|p| p.iter().map(|s| s.len).sum()).collect();
+                let max = *loads.iter().max().unwrap() as f64;
+                let min = *loads.iter().min().unwrap() as f64;
+                assert!(max / min > 1.2, "expected imbalance, loads {loads:?}");
+                return;
+            }
+        }
+        panic!("no long sequence drawn in 50 batches");
+    }
+}

@@ -1,0 +1,37 @@
+//! # ChunkFlow
+//!
+//! A full-system reproduction of *"Efficient Long Context Fine-tuning with
+//! Chunk Flow"* (ICML 2025) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! - **Layer 3 (this crate)** — the chunk-centric training coordinator:
+//!   chunk construction ([`chunk`], paper Algorithm 1), state-aware chunk
+//!   scheduling ([`schedule`], Algorithm 2), the StateStore ([`state`]),
+//!   state-aware 1F1B pipeline scheduling and its discrete-event simulator
+//!   ([`pipeline`]), the analytic memory model ([`memory`]), the
+//!   Megatron-LM-like baseline ([`baseline`]), the end-to-end iteration
+//!   simulator ([`sim`]), the (ChunkSize, K) tuner ([`tune`]), the real
+//!   PJRT-backed trainer ([`runtime`], [`train`]) and the paper-artifact
+//!   report generators ([`report`]).
+//! - **Layer 2** — `python/compile/model.py`: the chunked transformer
+//!   forward/backward in JAX, AOT-lowered to HLO text at build time.
+//! - **Layer 1** — `python/compile/kernels/chunk_attn.py`: the chunked
+//!   causal flash-attention Pallas kernel with KV-prefix state.
+//!
+//! Python never runs at training time: `make artifacts` produces
+//! `artifacts/*.hlo.txt` + `manifest.json`, and everything here is
+//! self-contained Rust over the PJRT C API.
+
+pub mod baseline;
+pub mod chunk;
+pub mod config;
+pub mod data;
+pub mod memory;
+pub mod pipeline;
+pub mod report;
+pub mod runtime;
+pub mod schedule;
+pub mod sim;
+pub mod state;
+pub mod train;
+pub mod tune;
+pub mod util;

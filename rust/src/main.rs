@@ -1,0 +1,252 @@
+//! `chunkflow` — launcher CLI for the ChunkFlow reproduction.
+//!
+//! Subcommands:
+//!   train      run the real PJRT-backed trainer (tiny / gpt-100m artifacts)
+//!   report     regenerate paper tables & figures (report <id>|all)
+//!   simulate   one-off pipeline simulation for a model/context
+//!   tune       (ChunkSize, K) grid search (§5)
+//!   data       inspect the synthetic long-tail datasets
+//!   help       this text
+
+use chunkflow::config::{ModelSpec, ParallelConfig, RecomputeGranularity, TrainConfig};
+use chunkflow::data::{BatchSampler, LengthDistribution};
+use chunkflow::sim::{simulate_baseline_iteration, simulate_chunkflow_iteration, CostModel};
+use chunkflow::train::Trainer;
+use chunkflow::tune::GridSearch;
+use chunkflow::util::cli::{flag, render_help, Args, FlagSpec};
+use chunkflow::util::json::Json;
+
+fn flags() -> Vec<FlagSpec> {
+    vec![
+        flag("model", true, "model preset (tiny|gpt-100m|qwen2.5-{7b,14b,32b,72b})"),
+        flag("context", true, "context length, e.g. 32K / 256K"),
+        flag("chunk-size", true, "ChunkSize in tokens (e.g. 8K)"),
+        flag("k", true, "retention budget K"),
+        flag("steps", true, "training steps"),
+        flag("batch", true, "global batch size (sequences)"),
+        flag("lr", true, "learning rate"),
+        flag("seed", true, "random seed"),
+        flag("tp", true, "tensor-parallel degree"),
+        flag("pp", true, "pipeline-parallel degree"),
+        flag("recompute", true, "none|selective|full"),
+        flag("artifacts", true, "artifacts directory"),
+        flag("dataset", true, "lmsys|eval"),
+        flag("iters", true, "simulation iterations to average"),
+        flag("out", true, "output JSON path"),
+        flag("quick", false, "smaller batches for fast reports"),
+        flag("verbose", false, "debug logging"),
+    ]
+}
+
+const SUBCOMMANDS: &[(&str, &str)] = &[
+    ("train", "run the real chunked trainer over PJRT artifacts"),
+    ("report", "regenerate paper tables/figures: report <table1|figure8|...|all>"),
+    ("simulate", "simulate one training iteration (baseline vs chunkflow)"),
+    ("tune", "grid-search (ChunkSize, K) for a configuration"),
+    ("data", "print dataset distribution statistics"),
+];
+
+fn main() {
+    chunkflow::util::log::init();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let spec = flags();
+    let args = match Args::parse(&argv, &spec) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{}", render_help("chunkflow", SUBCOMMANDS, &spec));
+            std::process::exit(2);
+        }
+    };
+    if args.get_bool("verbose") {
+        chunkflow::util::log::set_level(chunkflow::util::log::Level::Debug);
+    }
+    let result = match args.subcommand.as_deref() {
+        Some("train") => cmd_train(&args),
+        Some("report") => cmd_report(&args),
+        Some("simulate") => cmd_simulate(&args),
+        Some("tune") => cmd_tune(&args),
+        Some("data") => cmd_data(&args),
+        _ => {
+            println!("{}", render_help("chunkflow", SUBCOMMANDS, &spec));
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dataset(args: &Args) -> LengthDistribution {
+    match args.get_or("dataset", "eval") {
+        "lmsys" => LengthDistribution::lmsys_chat_1m(),
+        _ => LengthDistribution::evaluation_dataset(),
+    }
+}
+
+fn cmd_train(args: &Args) -> anyhow::Result<()> {
+    let model = ModelSpec::preset(args.get_or("model", "tiny"))?;
+    let mut cfg = TrainConfig::default_for(model);
+    cfg.context_length = args.get_u64("context", 1024)?;
+    cfg.global_batch_size = args.get_u64("batch", 8)?;
+    cfg.steps = args.get_u64("steps", 50)?;
+    cfg.lr = args.get_f64("lr", 3e-4)?;
+    cfg.seed = args.get_u64("seed", 1234)?;
+    cfg.artifacts_dir = args.get_or("artifacts", "artifacts").to_string();
+
+    // Clamp the sampled lengths to artifact coverage via a suitable
+    // distribution: reuse the evaluation shape truncated at the context.
+    let dist = LengthDistribution::from_cdf(
+        "train",
+        &[(256, 0.60), (512, 0.85), (cfg.context_length.max(513), 0.99)],
+        cfg.context_length,
+    );
+    let mut trainer = Trainer::new(cfg, dist)?;
+    trainer.train()?;
+    let out = args.get_or("out", "target/train_history.json");
+    trainer.loss_history_json().write_file(std::path::Path::new(out))?;
+    println!("wrote {out}");
+    Ok(())
+}
+
+fn cmd_report(args: &Args) -> anyhow::Result<()> {
+    use chunkflow::report as R;
+    let quick = args.get_bool("quick");
+    let what = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("all");
+    match what {
+        "table1" => drop(R::table1()),
+        "table2" => drop(R::table2()),
+        "table3" => drop(R::table3()),
+        "table4" => drop(R::table4(quick)),
+        "table5" => drop(R::table5()),
+        "table6" => drop(R::table6()),
+        "figure1" => drop(R::figure1(args.get_u64("seed", 42)?)),
+        "figure2" => drop(R::figure2()),
+        "figure4" => drop(R::figure4()),
+        "figure5" => drop(R::figure5()),
+        "figure6" => drop(R::figure6()),
+        "figure7" => drop(R::figure7()),
+        "figure8" => drop(R::figure8(
+            args.get_usize("iters", if quick { 2 } else { 5 })?,
+            args.get_usize("batch", if quick { 128 } else { 256 })?,
+            args.get_u64("seed", 42)?,
+        )),
+        "all" => R::run_all(quick),
+        other => anyhow::bail!("unknown report `{other}`"),
+    }
+    Ok(())
+}
+
+fn parallel_from(args: &Args) -> anyhow::Result<ParallelConfig> {
+    Ok(ParallelConfig::new(
+        args.get_u64("tp", 4)?,
+        args.get_u64("pp", 4)?,
+        RecomputeGranularity::parse(args.get_or("recompute", "selective"))?,
+    ))
+}
+
+fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
+    let model = ModelSpec::preset(args.get_or("model", "qwen2.5-7b"))?;
+    let ctx = args.get_u64("context", 32 * 1024)?;
+    let chunk = args.get_u64("chunk-size", 8 * 1024)?;
+    let k = args.get_usize("k", 1)?;
+    let iters = args.get_usize("iters", 3)?;
+    let batch_n = args.get_usize("batch", 256)?;
+    let parallel = parallel_from(args)?;
+    let cost = CostModel::new(model.clone(), parallel.clone());
+    let mut cf_parallel = parallel.clone();
+    cf_parallel.recompute = RecomputeGranularity::Selective;
+    let cf_cost = CostModel::new(model, cf_parallel);
+    let mut sampler = BatchSampler::new(dataset(args), ctx, batch_n, args.get_u64("seed", 42)?);
+    let (mut tb, mut tc, mut bb, mut bc) = (0.0, 0.0, 0.0, 0.0);
+    for _ in 0..iters {
+        let b = sampler.next_batch();
+        let rb = simulate_baseline_iteration(&b, &cost)?;
+        let rc = simulate_chunkflow_iteration(&b, &cf_cost, chunk, k)?;
+        tb += rb.iteration_seconds;
+        tc += rc.iteration_seconds;
+        bb += rb.bubble_ratio;
+        bc += rc.bubble_ratio;
+    }
+    let n = iters as f64;
+    println!("config {} ctx {} chunk {} K {k}", parallel.paper_format(),
+             chunkflow::util::format_tokens(ctx), chunkflow::util::format_tokens(chunk));
+    println!("megatron-like : {:.3}s/iter  bubble {:.1}%", tb / n, bb / n * 100.0);
+    println!("chunkflow     : {:.3}s/iter  bubble {:.1}%", tc / n, bc / n * 100.0);
+    println!("speedup       : {:.2}x", tb / tc);
+    Ok(())
+}
+
+fn cmd_tune(args: &Args) -> anyhow::Result<()> {
+    let model = ModelSpec::preset(args.get_or("model", "qwen2.5-7b"))?;
+    let ctx = args.get_u64("context", 256 * 1024)?;
+    let mut gs = GridSearch::standard(model, parallel_from(args)?, ctx);
+    if args.get_bool("quick") {
+        gs.global_batch_size = 64;
+        gs.iters = 1;
+    }
+    let points = gs.run();
+    println!(
+        "{:>10} {:>4} {:>14} {:>10} {:>12} {:>6}",
+        "ChunkSize", "K", "iter seconds", "bubble", "peak mem", "fits"
+    );
+    for p in &points {
+        println!(
+            "{:>10} {:>4} {:>14.3} {:>9.1}% {:>12} {:>6}",
+            chunkflow::util::format_tokens(p.chunk_size),
+            p.k,
+            p.avg_iteration_seconds,
+            p.bubble_ratio * 100.0,
+            chunkflow::util::format_bytes(p.peak_memory_bytes),
+            if p.feasible { "yes" } else { "OOM" }
+        );
+    }
+    if let Some(best) = points.iter().find(|p| p.feasible) {
+        println!(
+            "\nbest: ({}, {})",
+            chunkflow::util::format_tokens(best.chunk_size),
+            best.k
+        );
+    }
+    if let Some(out) = args.get("out") {
+        let j = Json::Arr(
+            points
+                .iter()
+                .map(|p| {
+                    Json::obj(vec![
+                        ("chunk_size", Json::num(p.chunk_size as f64)),
+                        ("k", Json::num(p.k as f64)),
+                        ("seconds", Json::num(p.avg_iteration_seconds)),
+                        ("feasible", Json::Bool(p.feasible)),
+                    ])
+                })
+                .collect(),
+        );
+        j.write_file(std::path::Path::new(out))?;
+    }
+    Ok(())
+}
+
+fn cmd_data(args: &Args) -> anyhow::Result<()> {
+    let dist = dataset(args);
+    println!("dataset: {}", dist.name);
+    for (label, p) in dist.table_rows() {
+        println!("{label:<10} {:>8.3}%", p * 100.0);
+    }
+    let ctx = args.get_u64("context", 256 * 1024)?;
+    let mut sampler = BatchSampler::new(dist, ctx, args.get_usize("batch", 256)?, args.get_u64("seed", 42)?);
+    let batch = sampler.next_batch();
+    let total: u64 = batch.iter().map(|s| s.len).sum();
+    let max = batch.iter().map(|s| s.len).max().unwrap_or(0);
+    println!(
+        "sample batch: {} seqs, {} tokens total, longest {}",
+        batch.len(),
+        total,
+        chunkflow::util::format_tokens(max)
+    );
+    Ok(())
+}

@@ -1,0 +1,129 @@
+//! The artifact manifest written by `python/compile/aot.py`.
+
+use crate::util::json::Json;
+use std::path::Path;
+
+/// One flat parameter's layout.
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<u64>,
+    pub size: usize,
+}
+
+/// Parsed `manifest_<model>.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub model_name: String,
+    pub vocab_size: usize,
+    pub hidden_size: usize,
+    pub num_layers: usize,
+    pub num_heads: usize,
+    pub head_dim: usize,
+    pub model_param_count: u64,
+    pub chunk_size: usize,
+    pub max_chunks: usize,
+    pub kv_buckets: Vec<usize>,
+    pub full_step_lens: Vec<usize>,
+    pub params: Vec<ParamSpec>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> anyhow::Result<Manifest> {
+        let j = Json::parse_file(path)?;
+        Self::from_json(&j)
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<Manifest> {
+        let model = j.get("model").ok_or_else(|| anyhow::anyhow!("missing model"))?;
+        let hidden = model.req_usize("hidden_size")?;
+        let heads = model.req_usize("num_heads")?;
+        let params = j
+            .get("params")
+            .and_then(|p| p.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("missing params"))?
+            .iter()
+            .map(|p| {
+                Ok(ParamSpec {
+                    name: p.req_str("name")?.to_string(),
+                    shape: p
+                        .get("shape")
+                        .and_then(|s| s.as_arr())
+                        .ok_or_else(|| anyhow::anyhow!("param shape"))?
+                        .iter()
+                        .map(|d| d.as_u64().unwrap_or(0))
+                        .collect(),
+                    size: p.req_usize("size")?,
+                })
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let usize_arr = |key: &str| -> anyhow::Result<Vec<usize>> {
+            Ok(j.get(key)
+                .and_then(|b| b.as_arr())
+                .ok_or_else(|| anyhow::anyhow!("missing {key}"))?
+                .iter()
+                .filter_map(|v| v.as_usize())
+                .collect())
+        };
+        Ok(Manifest {
+            model_name: model.req_str("name")?.to_string(),
+            vocab_size: model.req_usize("vocab_size")?,
+            hidden_size: hidden,
+            num_layers: model.req_usize("num_layers")?,
+            num_heads: heads,
+            head_dim: hidden / heads,
+            model_param_count: model.req_u64("param_count")?,
+            chunk_size: j.req_usize("chunk_size")?,
+            max_chunks: j.req_usize("max_chunks")?,
+            kv_buckets: usize_arr("kv_buckets")?,
+            full_step_lens: usize_arr("full_step_lens")?,
+            params,
+        })
+    }
+
+    /// Total parameter element count (sum over flat params).
+    pub fn total_param_elements(&self) -> usize {
+        self.params.iter().map(|p| p.size).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Json {
+        Json::parse(
+            r#"{
+              "model": {"name": "tiny", "vocab_size": 512, "hidden_size": 128,
+                        "num_layers": 2, "num_heads": 4, "intermediate_size": 384,
+                        "rope_theta": 10000.0, "param_count": 492160},
+              "chunk_size": 256, "max_chunks": 4,
+              "kv_buckets": [0, 256, 512, 768],
+              "full_step_lens": [512],
+              "params": [
+                {"name": "embed", "shape": [512, 128], "size": 65536},
+                {"name": "ln_f", "shape": [128], "size": 128}
+              ]
+            }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_fields() {
+        let m = Manifest::from_json(&sample()).unwrap();
+        assert_eq!(m.model_name, "tiny");
+        assert_eq!(m.chunk_size, 256);
+        assert_eq!(m.kv_buckets, vec![0, 256, 512, 768]);
+        assert_eq!(m.head_dim, 32);
+        assert_eq!(m.params.len(), 2);
+        assert_eq!(m.params[0].shape, vec![512, 128]);
+        assert_eq!(m.total_param_elements(), 65664);
+    }
+
+    #[test]
+    fn missing_fields_error() {
+        let j = Json::parse(r#"{"chunk_size": 4}"#).unwrap();
+        assert!(Manifest::from_json(&j).is_err());
+    }
+}

@@ -1,0 +1,344 @@
+//! State-aware chunk scheduling — the paper's Algorithm 2.
+//!
+//! Given the dependent chunks of one long sequence (indexed 0..N-1) and the
+//! retention budget `K`, produce an execution plan whose peak activation
+//! memory is `K * ChunkSize` tokens instead of the full sequence length:
+//!
+//! - `N <= K`: forward 0..N retaining activations, then backward N-1..0.
+//! - `N > K`: forward 0..N, *discarding* activations of the first `N-K`
+//!   chunks (their attention key/value tensors are still written to the
+//!   StateStore, and their losses are recorded); backward the retained last
+//!   `K` chunks in reverse; then for each of the first `N-K` chunks in
+//!   *descending* order, re-run the forward (reading KV from the StateStore
+//!   — the "executed twice" forward of §4.2) and immediately backward.
+//!
+//! Note on the paper's listing: Algorithm 2 lines 24-29 iterate the
+//! recompute pass in ascending index order. Chunk `i`'s backward needs the
+//! KV-gradient contributions of every later chunk `j > i` (the paper's own
+//! §4.2: "preceding chunks rely on the gradients of the key/value tensors
+//! from subsequent chunks"), so the recompute+backward pass must run in
+//! descending order; we implement it that way and treat the listing's loop
+//! header as a typo. Peak retained activations stay ≤ K chunks either way.
+//!
+//! Standalone chunks are the `N = 1` special case: forward retaining, then
+//! backward.
+
+use crate::chunk::ChunkSet;
+
+/// One operation in a chunk execution plan.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ChunkOp {
+    /// Forward pass; `retain` = keep activations for a later backward
+    /// (false = discard, KV still saved — will require a recompute-forward).
+    Forward { chunk: usize, retain: bool },
+    /// Second forward of a discarded chunk, reading KV from the StateStore.
+    RecomputeForward { chunk: usize },
+    /// Backward pass (activations for `chunk` must currently be live).
+    Backward { chunk: usize },
+}
+
+impl ChunkOp {
+    pub fn chunk(&self) -> usize {
+        match *self {
+            ChunkOp::Forward { chunk, .. }
+            | ChunkOp::RecomputeForward { chunk }
+            | ChunkOp::Backward { chunk } => chunk,
+        }
+    }
+}
+
+/// Plan for one dependent-chunk group (or one standalone chunk).
+#[derive(Clone, Debug)]
+pub struct GroupPlan {
+    /// Chunk ids (into the owning ChunkSet) in sequence order.
+    pub chunk_ids: Vec<usize>,
+    pub k: usize,
+    pub ops: Vec<ChunkOp>,
+}
+
+/// Algorithm 2 for one group of `n` dependent chunks. Chunk ids in `ops`
+/// are *positions within the group* (0..n); `GroupPlan::chunk_ids` maps
+/// them back to ChunkSet ids.
+pub fn schedule_group(chunk_ids: &[usize], k: usize) -> GroupPlan {
+    assert!(k >= 1, "K must be >= 1");
+    let n = chunk_ids.len();
+    assert!(n >= 1);
+    let mut ops = Vec::with_capacity(3 * n);
+
+    if n <= k {
+        // Lines 4-11: all activations fit in the budget.
+        for i in 0..n {
+            ops.push(ChunkOp::Forward { chunk: i, retain: true });
+        }
+        for i in (0..n).rev() {
+            ops.push(ChunkOp::Backward { chunk: i });
+        }
+    } else {
+        // Lines 13-20: forward all, retaining only the last K.
+        for i in 0..n {
+            ops.push(ChunkOp::Forward { chunk: i, retain: i >= n - k });
+        }
+        // Lines 21-23: backward the retained chunks in reverse.
+        for i in ((n - k)..n).rev() {
+            ops.push(ChunkOp::Backward { chunk: i });
+        }
+        // Lines 24-29 (order corrected, see module docs): recompute + backward
+        // the discarded chunks in descending order.
+        for i in (0..(n - k)).rev() {
+            ops.push(ChunkOp::RecomputeForward { chunk: i });
+            ops.push(ChunkOp::Backward { chunk: i });
+        }
+    }
+    GroupPlan { chunk_ids: chunk_ids.to_vec(), k, ops }
+}
+
+/// Full-step plan: every dependent group scheduled by Algorithm 2, plus each
+/// standalone chunk as a trivial group. Groups are ordered long-to-short so
+/// pipeline integration (state-aware 1F1B) can interleave standalone chunks
+/// into dependent-chunk stalls.
+#[derive(Clone, Debug)]
+pub struct StepPlan {
+    pub groups: Vec<GroupPlan>,
+}
+
+pub fn schedule_step(set: &ChunkSet, k: usize) -> StepPlan {
+    let mut groups = Vec::new();
+    for group in set.dependent_groups() {
+        let ids: Vec<usize> = group.iter().map(|c| c.id).collect();
+        groups.push(schedule_group(&ids, k));
+    }
+    for c in set.standalone_chunks() {
+        groups.push(schedule_group(&[c.id], k));
+    }
+    StepPlan { groups }
+}
+
+/// Statistics of a plan used by tests, the simulator and EXPERIMENTS.md.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PlanStats {
+    pub n_forward: usize,
+    pub n_recompute: usize,
+    pub n_backward: usize,
+    /// Max number of chunk-activations simultaneously live.
+    pub peak_live_activations: usize,
+}
+
+/// Validate plan legality and compute stats. Checks:
+/// 1. forward order ascending within the group (KV dependency);
+/// 2. every chunk's backward happens exactly once, with activations live;
+/// 3. backward order descending (KV-gradient dependency);
+/// 4. peak live activations <= K.
+pub fn validate_group_plan(plan: &GroupPlan) -> anyhow::Result<PlanStats> {
+    let n = plan.chunk_ids.len();
+    let mut stats = PlanStats::default();
+    let mut fwd_done = vec![false; n];
+    let mut live = vec![false; n];
+    let mut bwd_done = vec![false; n];
+    let mut last_bwd: Option<usize> = None;
+    let mut next_fwd = 0usize;
+    let mut live_count = 0usize;
+
+    for op in &plan.ops {
+        match *op {
+            ChunkOp::Forward { chunk, retain } => {
+                anyhow::ensure!(chunk == next_fwd, "forward out of order: {chunk}");
+                anyhow::ensure!(!fwd_done[chunk], "duplicate forward {chunk}");
+                fwd_done[chunk] = true;
+                next_fwd += 1;
+                stats.n_forward += 1;
+                if retain {
+                    live[chunk] = true;
+                    live_count += 1;
+                }
+            }
+            ChunkOp::RecomputeForward { chunk } => {
+                anyhow::ensure!(fwd_done[chunk], "recompute before first forward {chunk}");
+                anyhow::ensure!(!live[chunk], "recompute of live chunk {chunk}");
+                live[chunk] = true;
+                live_count += 1;
+                stats.n_recompute += 1;
+            }
+            ChunkOp::Backward { chunk } => {
+                anyhow::ensure!(live[chunk], "backward without live activations {chunk}");
+                anyhow::ensure!(!bwd_done[chunk], "duplicate backward {chunk}");
+                if let Some(prev) = last_bwd {
+                    anyhow::ensure!(
+                        chunk < prev,
+                        "backward order must be descending ({prev} then {chunk})"
+                    );
+                }
+                last_bwd = Some(chunk);
+                bwd_done[chunk] = true;
+                live[chunk] = false;
+                live_count -= 1;
+                stats.n_backward += 1;
+            }
+        }
+        stats.peak_live_activations = stats.peak_live_activations.max(live_count);
+    }
+    anyhow::ensure!(bwd_done.iter().all(|&b| b), "every chunk must run backward");
+    anyhow::ensure!(live_count == 0, "activations leaked");
+    Ok(stats)
+}
+
+impl StepPlan {
+    /// Total ops across groups.
+    pub fn total_ops(&self) -> usize {
+        self.groups.iter().map(|g| g.ops.len()).sum()
+    }
+
+    /// Fraction of forward work executed twice (the recompute overhead the
+    /// paper trades for constant memory).
+    pub fn recompute_fraction(&self) -> f64 {
+        let fwd: usize = self.groups.iter().map(|g| {
+            g.ops.iter().filter(|o| matches!(o, ChunkOp::Forward { .. })).count()
+        }).sum();
+        let rec: usize = self.groups.iter().map(|g| {
+            g.ops.iter().filter(|o| matches!(o, ChunkOp::RecomputeForward { .. })).count()
+        }).sum();
+        if fwd == 0 {
+            0.0
+        } else {
+            rec as f64 / fwd as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chunk::construct_chunks;
+    use crate::data::Sequence;
+    use crate::util::prop::{check, ensure, gen_pair, gen_usize};
+
+    #[test]
+    fn small_group_all_retained() {
+        // N=3, K=4: plain forward-then-reverse-backward, no recompute.
+        let plan = schedule_group(&[10, 11, 12], 4);
+        let stats = validate_group_plan(&plan).unwrap();
+        assert_eq!(stats.n_forward, 3);
+        assert_eq!(stats.n_recompute, 0);
+        assert_eq!(stats.n_backward, 3);
+        assert_eq!(stats.peak_live_activations, 3);
+    }
+
+    #[test]
+    fn paper_figure5_k1() {
+        // Figure 5(a): 4 dependent chunks, K=1 — one chunk re-executed per
+        // discarded chunk and at most ONE live activation at any time.
+        let plan = schedule_group(&[0, 1, 2, 3], 1);
+        let stats = validate_group_plan(&plan).unwrap();
+        assert_eq!(stats.n_forward, 4);
+        assert_eq!(stats.n_recompute, 3, "first N-K=3 chunks forwarded twice");
+        assert_eq!(stats.peak_live_activations, 1);
+    }
+
+    #[test]
+    fn paper_figure5_k2() {
+        // Figure 5(b): K=2 — two live activations, fewer recomputes.
+        let plan = schedule_group(&[0, 1, 2, 3], 2);
+        let stats = validate_group_plan(&plan).unwrap();
+        assert_eq!(stats.n_recompute, 2);
+        assert_eq!(stats.peak_live_activations, 2);
+    }
+
+    #[test]
+    fn exact_op_sequence_k1_n3() {
+        let plan = schedule_group(&[0, 1, 2], 1);
+        use ChunkOp::*;
+        assert_eq!(
+            plan.ops,
+            vec![
+                Forward { chunk: 0, retain: false },
+                Forward { chunk: 1, retain: false },
+                Forward { chunk: 2, retain: true },
+                Backward { chunk: 2 },
+                RecomputeForward { chunk: 1 },
+                Backward { chunk: 1 },
+                RecomputeForward { chunk: 0 },
+                Backward { chunk: 0 },
+            ]
+        );
+    }
+
+    #[test]
+    fn standalone_is_trivial_group() {
+        let plan = schedule_group(&[7], 1);
+        let stats = validate_group_plan(&plan).unwrap();
+        assert_eq!(stats.n_forward, 1);
+        assert_eq!(stats.n_recompute, 0);
+        assert_eq!(stats.peak_live_activations, 1);
+    }
+
+    #[test]
+    fn step_plan_covers_all_chunks() {
+        let batch = vec![
+            Sequence { id: 0, len: 10_000 }, // 5 dependent chunks @2048
+            Sequence { id: 1, len: 500 },
+            Sequence { id: 2, len: 600 },
+            Sequence { id: 3, len: 3_000 }, // 2 dependent chunks
+        ];
+        let set = construct_chunks(&batch, 2048);
+        let plan = schedule_step(&set, 2);
+        let mut bwd_chunks: Vec<usize> = Vec::new();
+        for g in &plan.groups {
+            validate_group_plan(g).unwrap();
+            for op in &g.ops {
+                if let ChunkOp::Backward { chunk } = op {
+                    bwd_chunks.push(g.chunk_ids[*chunk]);
+                }
+            }
+        }
+        bwd_chunks.sort();
+        assert_eq!(bwd_chunks, (0..set.chunks.len()).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn recompute_fraction() {
+        let batch = vec![Sequence { id: 0, len: 8192 }];
+        let set = construct_chunks(&batch, 2048); // 4 chunks
+        let plan = schedule_step(&set, 1);
+        assert!((plan.recompute_fraction() - 0.75).abs() < 1e-9);
+        let plan = schedule_step(&set, 4);
+        assert_eq!(plan.recompute_fraction(), 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "K must be >= 1")]
+    fn k_zero_rejected() {
+        schedule_group(&[0], 0);
+    }
+
+    #[test]
+    fn prop_plan_always_valid_and_memory_bounded() {
+        let gen = gen_pair(gen_usize(1, 64), gen_usize(1, 20));
+        check(500, gen, |(n, k)| {
+            let ids: Vec<usize> = (0..*n).collect();
+            let plan = schedule_group(&ids, *k);
+            let stats =
+                validate_group_plan(&plan).map_err(|e| format!("invalid plan: {e}"))?;
+            ensure(stats.peak_live_activations <= *k, "peak live <= K")?;
+            ensure(stats.n_forward == *n, "each chunk forwarded once initially")?;
+            ensure(stats.n_backward == *n, "each chunk backwarded once")?;
+            ensure(
+                stats.n_recompute == n.saturating_sub(*k),
+                "exactly max(N-K,0) recomputes",
+            )?;
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_memory_never_scales_with_sequence_length() {
+        // The paper's core claim: with fixed K, growing N leaves peak
+        // activation memory flat.
+        let gen = gen_usize(1, 200);
+        check(100, gen, |n| {
+            let ids: Vec<usize> = (0..*n).collect();
+            let plan = schedule_group(&ids, 2);
+            let stats = validate_group_plan(&plan).map_err(|e| e.to_string())?;
+            ensure(stats.peak_live_activations <= 2, "peak bounded by K=2 for any N")?;
+            Ok(())
+        });
+    }
+}

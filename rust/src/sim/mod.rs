@@ -1,0 +1,11 @@
+//! End-to-end training-time estimation: the compute cost model (per-chunk /
+//! per-sequence execution times under a GPU-efficiency curve) and the
+//! iteration-time simulator that backs Figure 8 and Table 6.
+
+pub mod cost;
+pub mod dp;
+pub mod e2e;
+
+pub use cost::CostModel;
+pub use dp::{split_dp, DpPolicy, DpSplit};
+pub use e2e::{simulate_baseline_iteration, simulate_chunkflow_iteration, IterationResult};

@@ -1,0 +1,203 @@
+//! StateStore — the shared state that Algorithm 2 threads between chunk
+//! executions: per-sequence key/value tensors from the causal-attention
+//! modules (forward) and the accumulated gradients w.r.t. those tensors
+//! (backward).
+//!
+//! The store is generic over the payload `T`: the real trainer stores host
+//! buffers of KV values (`Vec<f32>`), the simulator stores `()` and only
+//! uses the byte accounting. Byte accounting feeds Table 5 (peak memory vs
+//! ChunkSize) and the Fig. 1 style traces.
+
+pub mod offload;
+
+pub use offload::OffloadStore;
+
+use std::collections::BTreeMap;
+
+/// Key for one chunk's contribution to a sequence's KV state.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct StateKey {
+    pub seq_id: u64,
+    pub chunk_index: usize,
+}
+
+/// One stored entry: payload plus its size in bytes.
+#[derive(Clone, Debug)]
+struct Entry<T> {
+    payload: T,
+    bytes: u64,
+}
+
+/// KV state shared across a chunk group's execution (paper Alg. 2 line 2).
+#[derive(Clone, Debug)]
+pub struct StateStore<T> {
+    entries: BTreeMap<StateKey, Entry<T>>,
+    current_bytes: u64,
+    peak_bytes: u64,
+}
+
+impl<T> Default for StateStore<T> {
+    fn default() -> Self {
+        Self { entries: BTreeMap::new(), current_bytes: 0, peak_bytes: 0 }
+    }
+}
+
+impl<T> StateStore<T> {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Store chunk `chunk_index` of `seq_id`'s KV (or KV-gradient) payload.
+    /// Replacing an existing entry adjusts accounting.
+    pub fn put(&mut self, key: StateKey, payload: T, bytes: u64) {
+        if let Some(old) = self.entries.insert(key, Entry { payload, bytes }) {
+            self.current_bytes -= old.bytes;
+        }
+        self.current_bytes += bytes;
+        self.peak_bytes = self.peak_bytes.max(self.current_bytes);
+    }
+
+    pub fn get(&self, key: &StateKey) -> Option<&T> {
+        self.entries.get(key).map(|e| &e.payload)
+    }
+
+    pub fn get_mut(&mut self, key: &StateKey) -> Option<&mut T> {
+        self.entries.get_mut(key).map(|e| &mut e.payload)
+    }
+
+    pub fn remove(&mut self, key: &StateKey) -> Option<T> {
+        self.entries.remove(key).map(|e| {
+            self.current_bytes -= e.bytes;
+            e.payload
+        })
+    }
+
+    /// All stored chunk indices for a sequence, ascending — the KV prefix a
+    /// dependent chunk's forward consumes.
+    pub fn prefix_of(&self, seq_id: u64, before_index: usize) -> Vec<(&StateKey, &T)> {
+        self.entries
+            .range(
+                StateKey { seq_id, chunk_index: 0 }
+                    ..StateKey { seq_id, chunk_index: before_index },
+            )
+            .map(|(k, e)| (k, &e.payload))
+            .collect()
+    }
+
+    /// Drop every entry belonging to `seq_id` (sequence finished backward).
+    pub fn release_sequence(&mut self, seq_id: u64) -> usize {
+        let keys: Vec<StateKey> = self
+            .entries
+            .range(
+                StateKey { seq_id, chunk_index: 0 }
+                    ..StateKey { seq_id: seq_id + 1, chunk_index: 0 },
+            )
+            .map(|(k, _)| *k)
+            .collect();
+        let n = keys.len();
+        for k in keys {
+            self.remove(&k);
+        }
+        n
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn current_bytes(&self) -> u64 {
+        self.current_bytes
+    }
+
+    pub fn peak_bytes(&self) -> u64 {
+        self.peak_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(seq: u64, idx: usize) -> StateKey {
+        StateKey { seq_id: seq, chunk_index: idx }
+    }
+
+    #[test]
+    fn put_get_remove() {
+        let mut s: StateStore<Vec<f32>> = StateStore::new();
+        s.put(key(1, 0), vec![1.0, 2.0], 8);
+        assert_eq!(s.get(&key(1, 0)).unwrap(), &vec![1.0, 2.0]);
+        assert_eq!(s.current_bytes(), 8);
+        assert_eq!(s.remove(&key(1, 0)).unwrap(), vec![1.0, 2.0]);
+        assert_eq!(s.current_bytes(), 0);
+        assert!(s.get(&key(1, 0)).is_none());
+    }
+
+    #[test]
+    fn peak_tracks_high_water_mark() {
+        let mut s: StateStore<()> = StateStore::new();
+        s.put(key(0, 0), (), 100);
+        s.put(key(0, 1), (), 200);
+        assert_eq!(s.peak_bytes(), 300);
+        s.remove(&key(0, 0));
+        assert_eq!(s.current_bytes(), 200);
+        assert_eq!(s.peak_bytes(), 300, "peak is sticky");
+        s.put(key(0, 2), (), 50);
+        assert_eq!(s.peak_bytes(), 300);
+    }
+
+    #[test]
+    fn replace_adjusts_accounting() {
+        let mut s: StateStore<u32> = StateStore::new();
+        s.put(key(2, 0), 1, 64);
+        s.put(key(2, 0), 2, 32);
+        assert_eq!(s.current_bytes(), 32);
+        assert_eq!(*s.get(&key(2, 0)).unwrap(), 2);
+        assert_eq!(s.len(), 1);
+    }
+
+    #[test]
+    fn prefix_query_is_ordered_and_bounded() {
+        let mut s: StateStore<usize> = StateStore::new();
+        for i in 0..5 {
+            s.put(key(7, i), i, 10);
+        }
+        s.put(key(8, 0), 99, 10); // different sequence must not leak in
+        let prefix = s.prefix_of(7, 3);
+        assert_eq!(prefix.len(), 3);
+        assert_eq!(
+            prefix.iter().map(|(k, _)| k.chunk_index).collect::<Vec<_>>(),
+            vec![0, 1, 2]
+        );
+        assert!(prefix.iter().all(|(k, _)| k.seq_id == 7));
+    }
+
+    #[test]
+    fn release_sequence_clears_only_that_sequence() {
+        let mut s: StateStore<()> = StateStore::new();
+        for i in 0..4 {
+            s.put(key(1, i), (), 25);
+        }
+        s.put(key(2, 0), (), 25);
+        assert_eq!(s.release_sequence(1), 4);
+        assert_eq!(s.len(), 1);
+        assert_eq!(s.current_bytes(), 25);
+        assert!(s.get(&key(2, 0)).is_some());
+    }
+
+    #[test]
+    fn kv_bytes_grow_linearly_with_stored_chunks() {
+        // Matches the paper's Table 5 note: KV state is the component that
+        // grows with context length (no offloading in v1).
+        let mut s: StateStore<()> = StateStore::new();
+        let per_chunk = 1024;
+        for i in 0..32 {
+            s.put(key(0, i), (), per_chunk);
+        }
+        assert_eq!(s.current_bytes(), 32 * per_chunk);
+    }
+}

@@ -1,0 +1,249 @@
+//! Tiered StateStore with host-memory budget and disk spill — the paper's
+//! explicitly-deferred optimization (§6.3.1: "we directly save all key/value
+//! tensors in memory without further offloading optimizations. We leave this
+//! optimization for future work.").
+//!
+//! `OffloadStore` keeps the most recently used KV buffers resident up to a
+//! byte budget and spills the excess to a temp file; `get` transparently
+//! reloads (and re-evicts something else if needed). For ChunkFlow's access
+//! pattern — ascending-forward then descending-backward over a sequence's
+//! chunks — LRU is within one fetch of optimal on the backward sweep.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::PathBuf;
+
+use super::StateKey;
+
+struct Resident {
+    data: Vec<f32>,
+    /// Monotone access stamp for LRU.
+    stamp: u64,
+}
+
+struct Spilled {
+    offset: u64,
+    len: usize,
+}
+
+/// KV store with bounded residency.
+pub struct OffloadStore {
+    budget_bytes: u64,
+    resident: BTreeMap<StateKey, Resident>,
+    spilled: BTreeMap<StateKey, Spilled>,
+    file: std::fs::File,
+    path: PathBuf,
+    file_len: u64,
+    clock: u64,
+    resident_bytes: u64,
+    pub spill_count: u64,
+    pub fetch_count: u64,
+}
+
+impl OffloadStore {
+    /// Create with a residency budget (bytes). Spill file lives in the OS
+    /// temp dir and is removed on drop.
+    pub fn new(budget_bytes: u64) -> anyhow::Result<Self> {
+        let path = std::env::temp_dir().join(format!(
+            "chunkflow-kv-spill-{}-{:x}.bin",
+            std::process::id(),
+            &budget_bytes ^ 0x5eed
+        ));
+        let file = std::fs::OpenOptions::new()
+            .create(true)
+            .truncate(true)
+            .read(true)
+            .write(true)
+            .open(&path)?;
+        Ok(Self {
+            budget_bytes,
+            resident: BTreeMap::new(),
+            spilled: BTreeMap::new(),
+            file,
+            path,
+            file_len: 0,
+            clock: 0,
+            resident_bytes: 0,
+            spill_count: 0,
+            fetch_count: 0,
+        })
+    }
+
+    fn tick(&mut self) -> u64 {
+        self.clock += 1;
+        self.clock
+    }
+
+    /// Insert a KV buffer (takes ownership; may evict older buffers).
+    pub fn put(&mut self, key: StateKey, data: Vec<f32>) -> anyhow::Result<()> {
+        let bytes = (data.len() * 4) as u64;
+        let stamp = self.tick();
+        self.resident.insert(key, Resident { data, stamp });
+        self.resident_bytes += bytes;
+        self.spilled.remove(&key);
+        self.enforce_budget(Some(key))?;
+        Ok(())
+    }
+
+    /// Fetch a buffer (reloading from disk if spilled). Returns a clone of
+    /// the data (callers assemble prefixes from several entries anyway).
+    pub fn get(&mut self, key: &StateKey) -> anyhow::Result<Option<Vec<f32>>> {
+        let stamp = self.tick();
+        if let Some(r) = self.resident.get_mut(key) {
+            r.stamp = stamp;
+            return Ok(Some(r.data.clone()));
+        }
+        let Some(sp) = self.spilled.get(key) else {
+            return Ok(None);
+        };
+        self.fetch_count += 1;
+        let mut buf = vec![0u8; sp.len * 4];
+        self.file.seek(SeekFrom::Start(sp.offset))?;
+        self.file.read_exact(&mut buf)?;
+        let data: Vec<f32> = buf
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect();
+        let key = *key;
+        self.spilled.remove(&key);
+        self.resident_bytes += (data.len() * 4) as u64;
+        self.resident.insert(key, Resident { data: data.clone(), stamp });
+        self.enforce_budget(Some(key))?;
+        Ok(Some(data))
+    }
+
+    /// Remove an entry entirely (sequence finished backward).
+    pub fn remove(&mut self, key: &StateKey) {
+        if let Some(r) = self.resident.remove(key) {
+            self.resident_bytes -= (r.data.len() * 4) as u64;
+        }
+        self.spilled.remove(key);
+    }
+
+    /// Spill least-recently-used residents until within budget, never
+    /// evicting `protect`.
+    fn enforce_budget(&mut self, protect: Option<StateKey>) -> anyhow::Result<()> {
+        while self.resident_bytes > self.budget_bytes && self.resident.len() > 1 {
+            let victim = self
+                .resident
+                .iter()
+                .filter(|(k, _)| Some(**k) != protect)
+                .min_by_key(|(_, r)| r.stamp)
+                .map(|(k, _)| *k);
+            let Some(victim) = victim else { break };
+            let r = self.resident.remove(&victim).unwrap();
+            self.resident_bytes -= (r.data.len() * 4) as u64;
+            // Append to spill file.
+            let mut bytes = Vec::with_capacity(r.data.len() * 4);
+            for v in &r.data {
+                bytes.extend_from_slice(&v.to_le_bytes());
+            }
+            self.file.seek(SeekFrom::Start(self.file_len))?;
+            self.file.write_all(&bytes)?;
+            self.spilled
+                .insert(victim, Spilled { offset: self.file_len, len: r.data.len() });
+            self.file_len += bytes.len() as u64;
+            self.spill_count += 1;
+        }
+        Ok(())
+    }
+
+    pub fn resident_bytes(&self) -> u64 {
+        self.resident_bytes
+    }
+
+    pub fn len(&self) -> usize {
+        self.resident.len() + self.spilled.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl Drop for OffloadStore {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.path);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(i: usize) -> StateKey {
+        StateKey { seq_id: 0, chunk_index: i }
+    }
+
+    fn payload(i: usize, n: usize) -> Vec<f32> {
+        (0..n).map(|j| (i * 1000 + j) as f32).collect()
+    }
+
+    #[test]
+    fn within_budget_no_spill() {
+        let mut s = OffloadStore::new(10_000).unwrap();
+        for i in 0..4 {
+            s.put(key(i), payload(i, 100)).unwrap(); // 400 B each
+        }
+        assert_eq!(s.spill_count, 0);
+        for i in 0..4 {
+            assert_eq!(s.get(&key(i)).unwrap().unwrap(), payload(i, 100));
+        }
+        assert_eq!(s.fetch_count, 0);
+    }
+
+    #[test]
+    fn spills_and_reloads_exactly() {
+        // Budget fits 2 buffers of 1000 floats (4000 B each).
+        let mut s = OffloadStore::new(9_000).unwrap();
+        for i in 0..6 {
+            s.put(key(i), payload(i, 1000)).unwrap();
+        }
+        assert!(s.spill_count >= 4, "spilled {}", s.spill_count);
+        assert!(s.resident_bytes() <= 9_000);
+        // All data still retrievable, bit-exact.
+        for i in 0..6 {
+            assert_eq!(s.get(&key(i)).unwrap().unwrap(), payload(i, 1000), "chunk {i}");
+        }
+        assert!(s.fetch_count >= 4);
+    }
+
+    #[test]
+    fn backward_sweep_access_pattern() {
+        // Forward puts 0..8, backward gets 7..0 — the Alg. 2 pattern.
+        let mut s = OffloadStore::new(8_200).unwrap(); // ~2 buffers resident
+        for i in 0..8 {
+            s.put(key(i), payload(i, 1000)).unwrap();
+        }
+        for i in (0..8).rev() {
+            assert_eq!(s.get(&key(i)).unwrap().unwrap(), payload(i, 1000));
+            s.remove(&key(i));
+        }
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn missing_key_is_none() {
+        let mut s = OffloadStore::new(1000).unwrap();
+        assert!(s.get(&key(9)).unwrap().is_none());
+    }
+
+    #[test]
+    fn remove_frees_residency() {
+        let mut s = OffloadStore::new(100_000).unwrap();
+        s.put(key(0), payload(0, 1000)).unwrap();
+        assert_eq!(s.resident_bytes(), 4000);
+        s.remove(&key(0));
+        assert_eq!(s.resident_bytes(), 0);
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn overwrite_same_key() {
+        let mut s = OffloadStore::new(100_000).unwrap();
+        s.put(key(1), payload(1, 10)).unwrap();
+        s.put(key(1), payload(2, 20)).unwrap();
+        assert_eq!(s.get(&key(1)).unwrap().unwrap(), payload(2, 20));
+        assert_eq!(s.len(), 1);
+    }
+}

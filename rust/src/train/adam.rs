@@ -1,0 +1,158 @@
+//! Adam optimizer over flat f32 parameter buffers (runs in Rust; no AOT
+//! program needed — the update is memory-bound host work).
+
+/// Adam with optional decoupled weight decay and global-norm clipping.
+#[derive(Clone, Debug)]
+pub struct Adam {
+    pub lr: f64,
+    pub beta1: f64,
+    pub beta2: f64,
+    pub eps: f64,
+    pub weight_decay: f64,
+    m: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+    t: u64,
+}
+
+impl Adam {
+    pub fn new(lr: f64, beta1: f64, beta2: f64, eps: f64, weight_decay: f64,
+               shapes: &[usize]) -> Self {
+        Self {
+            lr,
+            beta1,
+            beta2,
+            eps,
+            weight_decay,
+            m: shapes.iter().map(|&n| vec![0.0; n]).collect(),
+            v: shapes.iter().map(|&n| vec![0.0; n]).collect(),
+            t: 0,
+        }
+    }
+
+    pub fn step_count(&self) -> u64 {
+        self.t
+    }
+
+    /// Global L2 norm of the gradient set.
+    pub fn global_norm(grads: &[Vec<f32>]) -> f64 {
+        grads
+            .iter()
+            .flat_map(|g| g.iter())
+            .map(|&x| (x as f64) * (x as f64))
+            .sum::<f64>()
+            .sqrt()
+    }
+
+    /// Clip gradients to `max_norm` in place; returns the pre-clip norm.
+    pub fn clip_global_norm(grads: &mut [Vec<f32>], max_norm: f64) -> f64 {
+        let norm = Self::global_norm(grads);
+        if norm > max_norm && norm > 0.0 {
+            let scale = (max_norm / norm) as f32;
+            for g in grads.iter_mut() {
+                for x in g.iter_mut() {
+                    *x *= scale;
+                }
+            }
+        }
+        norm
+    }
+
+    /// One update: params <- params - lr * m_hat / (sqrt(v_hat) + eps).
+    pub fn update(&mut self, params: &mut [Vec<f32>], grads: &[Vec<f32>]) {
+        assert_eq!(params.len(), grads.len());
+        self.t += 1;
+        let b1 = self.beta1;
+        let b2 = self.beta2;
+        let bc1 = 1.0 - b1.powi(self.t as i32);
+        let bc2 = 1.0 - b2.powi(self.t as i32);
+        for ((p, g), (m, v)) in params
+            .iter_mut()
+            .zip(grads)
+            .zip(self.m.iter_mut().zip(self.v.iter_mut()))
+        {
+            assert_eq!(p.len(), g.len());
+            for i in 0..p.len() {
+                let gi = g[i] as f64;
+                m[i] = (b1 * m[i] as f64 + (1.0 - b1) * gi) as f32;
+                v[i] = (b2 * v[i] as f64 + (1.0 - b2) * gi * gi) as f32;
+                let m_hat = m[i] as f64 / bc1;
+                let v_hat = v[i] as f64 / bc2;
+                let mut upd = m_hat / (v_hat.sqrt() + self.eps);
+                if self.weight_decay > 0.0 {
+                    upd += self.weight_decay * p[i] as f64;
+                }
+                p[i] = (p[i] as f64 - self.lr * upd) as f32;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quad_grad(params: &[Vec<f32>]) -> Vec<Vec<f32>> {
+        // f = sum((p - 3)^2) => grad = 2 (p - 3)
+        params
+            .iter()
+            .map(|p| p.iter().map(|&x| 2.0 * (x - 3.0)).collect())
+            .collect()
+    }
+
+    #[test]
+    fn converges_on_quadratic() {
+        let mut params = vec![vec![0.0f32; 8], vec![10.0f32; 4]];
+        let mut adam = Adam::new(0.1, 0.9, 0.999, 1e-8, 0.0, &[8, 4]);
+        for _ in 0..500 {
+            let g = quad_grad(&params);
+            adam.update(&mut params, &g);
+        }
+        for p in params.iter().flat_map(|v| v.iter()) {
+            assert!((p - 3.0).abs() < 0.05, "param {p}");
+        }
+    }
+
+    #[test]
+    fn first_step_moves_by_about_lr() {
+        // Adam's bias correction makes the first step ~= lr * sign(grad).
+        let mut params = vec![vec![1.0f32]];
+        let mut adam = Adam::new(0.01, 0.9, 0.999, 1e-8, 0.0, &[1]);
+        adam.update(&mut params, &[vec![5.0]]);
+        assert!((params[0][0] - (1.0 - 0.01)).abs() < 1e-4);
+    }
+
+    #[test]
+    fn weight_decay_shrinks_params() {
+        let mut a = vec![vec![1.0f32]];
+        let mut b = vec![vec![1.0f32]];
+        let zero_grad = vec![vec![0.0f32]];
+        let mut adam_wd = Adam::new(0.1, 0.9, 0.999, 1e-8, 0.1, &[1]);
+        let mut adam_no = Adam::new(0.1, 0.9, 0.999, 1e-8, 0.0, &[1]);
+        adam_wd.update(&mut a, &zero_grad);
+        adam_no.update(&mut b, &zero_grad);
+        assert!(a[0][0] < b[0][0]);
+    }
+
+    #[test]
+    fn clipping() {
+        let mut g = vec![vec![3.0f32, 4.0]];
+        let norm = Adam::clip_global_norm(&mut g, 1.0);
+        assert!((norm - 5.0).abs() < 1e-6);
+        let new_norm = Adam::global_norm(&g);
+        assert!((new_norm - 1.0).abs() < 1e-6);
+        // Under the limit: untouched.
+        let mut g2 = vec![vec![0.3f32, 0.4]];
+        Adam::clip_global_norm(&mut g2, 1.0);
+        assert_eq!(g2[0], vec![0.3, 0.4]);
+    }
+
+    #[test]
+    fn step_counter() {
+        let mut adam = Adam::new(0.1, 0.9, 0.999, 1e-8, 0.0, &[1]);
+        let mut p = vec![vec![0.0f32]];
+        assert_eq!(adam.step_count(), 0);
+        adam.update(&mut p, &[vec![1.0]]);
+        adam.update(&mut p, &[vec![1.0]]);
+        assert_eq!(adam.step_count(), 2);
+    }
+}

@@ -1,0 +1,122 @@
+//! Parameter/optimizer checkpointing: a simple versioned binary format
+//! (header JSON + raw little-endian f32 payloads) so long fine-tuning runs
+//! can resume — standard launcher functionality.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use crate::runtime::FlatParams;
+use crate::util::json::Json;
+
+const MAGIC: &[u8; 8] = b"CHKFLOW1";
+
+/// Write params (+ step counter) to `path` atomically (tmp + rename).
+pub fn save(path: &Path, params: &FlatParams, step: u64) -> anyhow::Result<()> {
+    let header = Json::obj(vec![
+        ("step", Json::num(step as f64)),
+        (
+            "param_sizes",
+            Json::Arr(params.0.iter().map(|p| Json::num(p.len() as f64)).collect()),
+        ),
+    ])
+    .dump();
+    let tmp = path.with_extension("tmp");
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(&tmp)?);
+        f.write_all(MAGIC)?;
+        f.write_all(&(header.len() as u64).to_le_bytes())?;
+        f.write_all(header.as_bytes())?;
+        for p in &params.0 {
+            for v in p {
+                f.write_all(&v.to_le_bytes())?;
+            }
+        }
+        f.flush()?;
+    }
+    std::fs::rename(&tmp, path)?;
+    Ok(())
+}
+
+/// Load a checkpoint; returns (params, step).
+pub fn load(path: &Path) -> anyhow::Result<(FlatParams, u64)> {
+    let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    anyhow::ensure!(&magic == MAGIC, "not a chunkflow checkpoint");
+    let mut len8 = [0u8; 8];
+    f.read_exact(&mut len8)?;
+    let hlen = u64::from_le_bytes(len8) as usize;
+    anyhow::ensure!(hlen < 1 << 20, "header too large");
+    let mut hbuf = vec![0u8; hlen];
+    f.read_exact(&mut hbuf)?;
+    let header = Json::parse(std::str::from_utf8(&hbuf)?)
+        .map_err(|e| anyhow::anyhow!("checkpoint header: {e}"))?;
+    let step = header.req_u64("step")?;
+    let sizes: Vec<usize> = header
+        .get("param_sizes")
+        .and_then(|s| s.as_arr())
+        .ok_or_else(|| anyhow::anyhow!("missing param_sizes"))?
+        .iter()
+        .filter_map(|v| v.as_usize())
+        .collect();
+    let mut params = Vec::with_capacity(sizes.len());
+    for n in sizes {
+        let mut bytes = vec![0u8; n * 4];
+        f.read_exact(&mut bytes)?;
+        params.push(
+            bytes
+                .chunks_exact(4)
+                .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                .collect(),
+        );
+    }
+    Ok((FlatParams(params), step))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params() -> FlatParams {
+        FlatParams(vec![
+            (0..100).map(|i| i as f32 * 0.5).collect(),
+            vec![-1.25; 7],
+        ])
+    }
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("chunkflow_ckpt_test");
+        let path = dir.join("a.ckpt");
+        let p = params();
+        save(&path, &p, 42).unwrap();
+        let (q, step) = load(&path).unwrap();
+        assert_eq!(step, 42);
+        assert_eq!(p.0, q.0);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let dir = std::env::temp_dir().join("chunkflow_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.ckpt");
+        std::fs::write(&path, b"definitely not a checkpoint").unwrap();
+        assert!(load(&path).is_err());
+    }
+
+    #[test]
+    fn overwrite_is_atomic_and_latest_wins() {
+        let dir = std::env::temp_dir().join("chunkflow_ckpt_test");
+        let path = dir.join("c.ckpt");
+        save(&path, &params(), 1).unwrap();
+        let mut p2 = params();
+        p2.0[0][0] = 999.0;
+        save(&path, &p2, 2).unwrap();
+        let (q, step) = load(&path).unwrap();
+        assert_eq!(step, 2);
+        assert_eq!(q.0[0][0], 999.0);
+    }
+}

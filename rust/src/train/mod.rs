@@ -1,0 +1,515 @@
+//! The real ChunkFlow trainer: Algorithm 2 executed over AOT-compiled PJRT
+//! programs, end to end in Rust.
+//!
+//! One optimizer step:
+//! 1. sample a global batch of variable-length sequences (long-tail);
+//! 2. Algorithm 1: reorganize into chunks (`chunk::construct_chunks`);
+//! 3. for each dependent-chunk group, run Algorithm 2 with the explicit KV
+//!    chain rule (DESIGN.md §Chunked-Backward):
+//!    - pass 1 ascending: `fwd_kv` per chunk, KV into the StateStore
+//!      (activations are discarded by construction — each call retains
+//!      nothing), losses recorded;
+//!    - pass 2 descending: `chunk_vjp` per chunk (recomputes the forward:
+//!      "executed twice"), parameter grads accumulated, `d_kv_in` scattered
+//!      into the pending `g_kv` of earlier chunks;
+//! 4. standalone chunks run a single `chunk_vjp` with an empty prefix;
+//! 5. grads scaled by 1/total_tokens, clipped, Adam update, params re-sent.
+//!
+//! Peak memory is `O(ChunkSize)` activations inside one PJRT call plus the
+//! `O(context)` KV StateStore — exactly the paper's Table 5 shape.
+
+mod adam;
+pub mod checkpoint;
+
+pub use adam::Adam;
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::time::Instant;
+
+use crate::chunk::{construct_chunks, Chunk, ChunkKind};
+use crate::config::TrainConfig;
+use crate::data::{BatchSampler, LengthDistribution, SyntheticCorpus};
+use crate::runtime::{ChunkInputs, FlatParams, Runtime};
+use crate::state::{StateKey, StateStore};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Per-step metrics.
+#[derive(Clone, Debug)]
+pub struct StepMetrics {
+    pub step: u64,
+    pub loss_per_token: f64,
+    pub tokens: u64,
+    pub chunks: usize,
+    pub pjrt_calls: u64,
+    pub seconds: f64,
+    pub grad_norm: f64,
+    /// Peak StateStore bytes during the step (KV state).
+    pub kv_peak_bytes: u64,
+}
+
+/// The trainer owns the runtime, parameters, optimizer and data pipeline.
+pub struct Trainer {
+    pub runtime: Runtime,
+    pub params: FlatParams,
+    pub adam: Adam,
+    pub config: TrainConfig,
+    sampler: BatchSampler,
+    corpus: SyntheticCorpus,
+    step: u64,
+    pub history: Vec<StepMetrics>,
+}
+
+impl Trainer {
+    pub fn new(config: TrainConfig, dist: LengthDistribution) -> anyhow::Result<Self> {
+        let mut runtime = Runtime::load(Path::new(&config.artifacts_dir), &config.model.name)?;
+        let c = runtime.manifest.chunk_size as u64;
+        let max_ctx = c * runtime.manifest.max_chunks as u64;
+        anyhow::ensure!(
+            config.context_length <= max_ctx,
+            "context {} exceeds artifact coverage {max_ctx}",
+            config.context_length
+        );
+        let params = init_params(&runtime.manifest, config.seed);
+        runtime.set_params(&params)?;
+        let adam = Adam::new(
+            config.lr,
+            config.adam_beta1,
+            config.adam_beta2,
+            config.adam_eps,
+            config.weight_decay,
+            &runtime.manifest.params.iter().map(|p| p.size).collect::<Vec<_>>(),
+        );
+        let sampler = BatchSampler::new(
+            dist,
+            config.context_length,
+            config.global_batch_size as usize,
+            config.seed,
+        );
+        let corpus =
+            SyntheticCorpus::new(runtime.manifest.vocab_size as u32, config.seed ^ 0xDA7A);
+        Ok(Self { runtime, params, adam, config, sampler, corpus, step: 0, history: Vec::new() })
+    }
+
+    /// Gradient accumulation over one batch: Algorithm 1 + Algorithm 2 over
+    /// the PJRT programs. Returns (loss_sum, token_count, summed grads,
+    /// chunk count, peak KV bytes). Public so integration tests can compare
+    /// against the AOT full-sequence oracle.
+    pub fn compute_gradients(
+        &self,
+        batch: &[crate::data::Sequence],
+    ) -> anyhow::Result<(f64, f64, Vec<Vec<f32>>, usize, u64)> {
+        let set = construct_chunks(batch, self.runtime.manifest.chunk_size as u64);
+
+        // Token cache for this step's sequences.
+        let mut tokens: BTreeMap<u64, Vec<u32>> = BTreeMap::new();
+        for s in batch {
+            tokens.insert(s.id, self.corpus.generate(s.id, s.len));
+        }
+        let seq_len: BTreeMap<u64, u64> = batch.iter().map(|s| (s.id, s.len)).collect();
+
+        let mut grads: Vec<Vec<f32>> =
+            self.runtime.manifest.params.iter().map(|p| vec![0.0; p.size]).collect();
+        let mut loss_sum = 0.0f64;
+        let mut tok_sum = 0.0f64;
+        let mut kv_peak = 0u64;
+
+        // Dependent groups: Algorithm 2.
+        for group in set.dependent_groups() {
+            let (l, t) = self.run_group(&group, &tokens, &seq_len, &mut grads, &mut kv_peak)?;
+            loss_sum += l;
+            tok_sum += t;
+        }
+        // Standalone chunks: single vjp with empty prefix.
+        let c = self.runtime.manifest.chunk_size;
+        let g_zero = vec![0.0f32; self.runtime.kv_elements(c)];
+        for chunk in set.standalone_chunks() {
+            let inputs = self.chunk_inputs(chunk, &tokens, &seq_len, 0);
+            let out = self.runtime.chunk_vjp(&inputs, &g_zero)?;
+            accumulate(&mut grads, &out.d_params);
+            loss_sum += out.loss_sum as f64;
+            tok_sum += out.n_tok as f64;
+        }
+        Ok((loss_sum, tok_sum, grads, set.chunks.len(), kv_peak))
+    }
+
+    /// Token ids the trainer will use for a sequence (exposed for the
+    /// oracle comparison in integration tests).
+    pub fn sequence_tokens(&self, seq: &crate::data::Sequence) -> Vec<u32> {
+        self.corpus.generate(seq.id, seq.len)
+    }
+
+    /// Run one optimizer step; returns its metrics.
+    pub fn train_step(&mut self) -> anyhow::Result<StepMetrics> {
+        let t0 = Instant::now();
+        let calls0 = self.runtime.calls.get();
+        let batch = self.sampler.next_batch();
+        let (loss_sum, tok_sum, mut grads, n_chunks, kv_peak) =
+            self.compute_gradients(&batch)?;
+
+        anyhow::ensure!(tok_sum > 0.0, "no trainable tokens in batch");
+        // Mean-token loss: scale the summed grads.
+        let inv = (1.0 / tok_sum) as f32;
+        for g in grads.iter_mut() {
+            for x in g.iter_mut() {
+                *x *= inv;
+            }
+        }
+        let grad_norm = Adam::clip_global_norm(&mut grads, self.config.grad_clip);
+        self.adam.update(&mut self.params.0, &grads);
+        self.runtime.set_params(&self.params)?;
+
+        self.step += 1;
+        let metrics = StepMetrics {
+            step: self.step,
+            loss_per_token: loss_sum / tok_sum,
+            tokens: tok_sum as u64,
+            chunks: n_chunks,
+            pjrt_calls: self.runtime.calls.get() - calls0,
+            seconds: t0.elapsed().as_secs_f64(),
+            grad_norm,
+            kv_peak_bytes: kv_peak,
+        };
+        crate::info!(
+            "step {:>4} | loss/tok {:.4} | tokens {:>6} | chunks {:>3} | {:>5.2}s | gnorm {:.3}",
+            metrics.step,
+            metrics.loss_per_token,
+            metrics.tokens,
+            metrics.chunks,
+            metrics.seconds,
+            metrics.grad_norm
+        );
+        self.history.push(metrics.clone());
+        Ok(metrics)
+    }
+
+    /// Algorithm 2 over one dependent-chunk group (K=1 semantics across the
+    /// AOT boundary; see DESIGN.md §Chunked-Backward).
+    fn run_group(
+        &self,
+        group: &[&Chunk],
+        tokens: &BTreeMap<u64, Vec<u32>>,
+        seq_len: &BTreeMap<u64, u64>,
+        grads: &mut [Vec<f32>],
+        kv_peak: &mut u64,
+    ) -> anyhow::Result<(f64, f64)> {
+        let c = self.runtime.manifest.chunk_size;
+        let kv_unit_bytes = (self.runtime.kv_elements(c) * 4) as u64;
+        let n = group.len();
+        let seq_id = match group[0].kind {
+            ChunkKind::Dependent { seq_id, .. } => seq_id,
+            _ => anyhow::bail!("not a dependent group"),
+        };
+
+        // Pass 1 (ascending): state-only forwards.
+        let mut store: StateStore<Vec<f32>> = StateStore::new();
+        for (i, chunk) in group.iter().enumerate() {
+            let prefix = i * c;
+            let kv_in = self.prefix_kv(&store, seq_id, i);
+            let inputs = self.chunk_inputs(chunk, tokens, seq_len, prefix);
+            let inputs = ChunkInputs { kv_in, ..inputs };
+            let out = self.runtime.fwd_kv(&inputs)?;
+            store.put(
+                StateKey { seq_id, chunk_index: i },
+                out.kv_own,
+                kv_unit_bytes,
+            );
+            *kv_peak = (*kv_peak).max(store.peak_bytes());
+        }
+
+        // Pass 2 (descending): vjp with KV-gradient chaining.
+        let kv_elems = self.runtime.kv_elements(c);
+        let mut g_kv: Vec<Vec<f32>> = (0..n).map(|_| vec![0.0f32; kv_elems]).collect();
+        let mut loss = 0.0f64;
+        let mut toks = 0.0f64;
+        for i in (0..n).rev() {
+            let prefix = i * c;
+            let kv_in = self.prefix_kv(&store, seq_id, i);
+            let inputs = self.chunk_inputs(group[i], tokens, seq_len, prefix);
+            let inputs = ChunkInputs { kv_in, ..inputs };
+            let out = self.runtime.chunk_vjp(&inputs, &g_kv[i])?;
+            accumulate(grads, &out.d_params);
+            loss += out.loss_sum as f64;
+            toks += out.n_tok as f64;
+            // Scatter d_kv_in ([L, 2, prefix, H, D]) into earlier chunks'
+            // pending gradients ([L, 2, C, H, D] each).
+            scatter_kv_grad(
+                &out.d_kv_in,
+                &mut g_kv[..i],
+                self.runtime.manifest.num_layers,
+                prefix,
+                c,
+                self.runtime.manifest.num_heads * self.runtime.manifest.head_dim,
+            );
+        }
+        Ok((loss, toks))
+    }
+
+    /// Assemble the KV prefix for chunk `upto` of `seq_id` from the
+    /// StateStore ([L, 2, upto*C, H, D], interleaved from per-chunk blocks).
+    fn prefix_kv(&self, store: &StateStore<Vec<f32>>, seq_id: u64, upto: usize) -> Vec<f32> {
+        let parts: Vec<&Vec<f32>> = store
+            .prefix_of(seq_id, upto)
+            .into_iter()
+            .map(|(_, v)| v)
+            .collect();
+        assert_eq!(parts.len(), upto, "missing KV state");
+        concat_prefix_with(
+            &parts,
+            self.runtime.manifest.num_layers,
+            self.runtime.manifest.chunk_size,
+            self.runtime.manifest.num_heads * self.runtime.manifest.head_dim,
+        )
+    }
+
+    /// Build fixed-shape chunk inputs from a chunk's segments (L3 input
+    /// conventions documented in python/compile/model.py).
+    fn chunk_inputs(
+        &self,
+        chunk: &Chunk,
+        tokens: &BTreeMap<u64, Vec<u32>>,
+        seq_len: &BTreeMap<u64, u64>,
+        prefix: usize,
+    ) -> ChunkInputs {
+        let c = self.runtime.manifest.chunk_size;
+        let mut toks = vec![0i32; c];
+        let mut targets = vec![-1i32; c];
+        let mut pos = vec![0i32; c];
+        let mut seg = vec![-1i32; c];
+        let mut slot = 0usize;
+        for (seg_idx, s) in chunk.segments.iter().enumerate() {
+            let data = &tokens[&s.seq_id];
+            let total = seq_len[&s.seq_id] as usize;
+            for j in 0..s.len as usize {
+                let gp = s.offset as usize + j;
+                toks[slot] = data[gp] as i32;
+                targets[slot] = if gp + 1 < total { data[gp + 1] as i32 } else { -1 };
+                pos[slot] = gp as i32;
+                seg[slot] = seg_idx as i32;
+                slot += 1;
+            }
+        }
+        // Padding convention: unique large positions, segment -1.
+        for (i, sl) in (slot..c).enumerate() {
+            pos[sl] = 1_000_000 + i as i32;
+        }
+        ChunkInputs { tokens: toks, targets, pos, seg, kv_in: Vec::new(), prefix_len: prefix }
+    }
+
+    /// Run the configured number of steps.
+    pub fn train(&mut self) -> anyhow::Result<()> {
+        for _ in 0..self.config.steps {
+            self.train_step()?;
+        }
+        Ok(())
+    }
+
+    /// Save parameters + step counter.
+    pub fn save_checkpoint(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        checkpoint::save(path, &self.params, self.step)
+    }
+
+    /// Restore parameters + step counter (optimizer moments restart).
+    pub fn load_checkpoint(&mut self, path: &std::path::Path) -> anyhow::Result<()> {
+        let (params, step) = checkpoint::load(path)?;
+        anyhow::ensure!(
+            params.0.len() == self.params.0.len(),
+            "checkpoint param arity mismatch"
+        );
+        self.params = params;
+        self.step = step;
+        self.runtime.set_params(&self.params)
+    }
+
+    pub fn loss_history_json(&self) -> Json {
+        Json::Arr(
+            self.history
+                .iter()
+                .map(|m| {
+                    Json::obj(vec![
+                        ("step", Json::num(m.step as f64)),
+                        ("loss_per_token", Json::num(m.loss_per_token)),
+                        ("tokens", Json::num(m.tokens as f64)),
+                        ("chunks", Json::num(m.chunks as f64)),
+                        ("seconds", Json::num(m.seconds)),
+                        ("grad_norm", Json::num(m.grad_norm)),
+                        ("kv_peak_bytes", Json::num(m.kv_peak_bytes as f64)),
+                    ])
+                })
+                .collect(),
+        )
+    }
+}
+
+/// Deterministic parameter init mirroring python's scheme closely enough for
+/// training from scratch (scaled normals; ones for norm weights).
+pub fn init_params(manifest: &crate::runtime::Manifest, seed: u64) -> FlatParams {
+    let mut rng = Rng::new(seed ^ 0x1217);
+    let mut out = Vec::with_capacity(manifest.params.len());
+    for spec in &manifest.params {
+        let is_norm = spec.name.starts_with("norm") || spec.name == "ln_f";
+        let v: Vec<f32> = if is_norm {
+            vec![1.0; spec.size]
+        } else if spec.name == "embed" {
+            (0..spec.size).map(|_| 0.02 * rng.next_normal() as f32).collect()
+        } else {
+            let fan_in = spec.shape[spec.shape.len() - 2] as f64;
+            let scale = 1.0 / fan_in.sqrt();
+            (0..spec.size).map(|_| (scale * rng.next_normal()) as f32).collect()
+        };
+        out.push(v);
+    }
+    FlatParams(out)
+}
+
+fn accumulate(acc: &mut [Vec<f32>], delta: &[Vec<f32>]) {
+    for (a, d) in acc.iter_mut().zip(delta) {
+        for (x, y) in a.iter_mut().zip(d) {
+            *x += *y;
+        }
+    }
+}
+
+/// Layout-aware prefix concat: interleaves per-chunk [L, 2, C, H, D] blocks
+/// into [L, 2, upto*C, H, D].
+pub fn concat_prefix_with(
+    parts: &[&Vec<f32>],
+    num_layers: usize,
+    chunk: usize,
+    hd: usize,
+) -> Vec<f32> {
+    let upto = parts.len();
+    if upto == 0 {
+        return Vec::new();
+    }
+    let block = chunk * hd; // C*H*D elements per (layer, k/v) pair
+    let l2 = num_layers * 2;
+    debug_assert!(parts.iter().all(|p| p.len() == l2 * block));
+    let mut out = vec![0.0f32; l2 * upto * block];
+    for (ci, part) in parts.iter().enumerate() {
+        for b in 0..l2 {
+            let src = &part[b * block..(b + 1) * block];
+            let dst_off = (b * upto + ci) * block;
+            out[dst_off..dst_off + block].copy_from_slice(src);
+        }
+    }
+    out
+}
+
+/// Scatter `d_kv_in` ([L, 2, prefix, H, D]) into per-chunk pending gradients
+/// ([L, 2, C, H, D] each, chunks 0..prefix/C).
+pub fn scatter_kv_grad(
+    d_kv_in: &[f32],
+    g_kv: &mut [Vec<f32>],
+    num_layers: usize,
+    prefix: usize,
+    chunk: usize,
+    hd: usize,
+) {
+    if prefix == 0 {
+        return;
+    }
+    let n_prev = prefix / chunk;
+    debug_assert_eq!(n_prev, g_kv.len());
+    let block = chunk * hd;
+    let l2 = num_layers * 2;
+    debug_assert_eq!(d_kv_in.len(), l2 * n_prev * block);
+    for b in 0..l2 {
+        for ci in 0..n_prev {
+            let src_off = (b * n_prev + ci) * block;
+            let dst_off = b * block;
+            let dst = &mut g_kv[ci][dst_off..dst_off + block];
+            let src = &d_kv_in[src_off..src_off + block];
+            for (x, y) in dst.iter_mut().zip(src) {
+                *x += *y;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn concat_prefix_interleaves_blocks() {
+        // 1 layer, C=2, H*D=1: per-chunk = [L2=2][C*HD=2] = 4 elems.
+        // part A = [a0 a1 | a2 a3] (K block | V block), part B likewise.
+        let a = vec![1.0, 2.0, 3.0, 4.0];
+        let b = vec![5.0, 6.0, 7.0, 8.0];
+        let out = concat_prefix_with(&[&a, &b], 1, 2, 1);
+        // Expected [L,2,4,1,1]: K = a0 a1 b0 b1, V = a2 a3 b2 b3.
+        assert_eq!(out, vec![1.0, 2.0, 5.0, 6.0, 3.0, 4.0, 7.0, 8.0]);
+    }
+
+    #[test]
+    fn concat_prefix_empty() {
+        assert!(concat_prefix_with(&[], 2, 4, 8).is_empty());
+    }
+
+    #[test]
+    fn scatter_is_inverse_of_concat() {
+        // Scattering a gradient laid out like the concat result must route
+        // each block back to its chunk.
+        let d_kv: Vec<f32> = (0..8).map(|x| x as f32).collect(); // [1,2,4,1,1]
+        let mut g = vec![vec![0.0f32; 4], vec![0.0f32; 4]];
+        scatter_kv_grad(&d_kv, &mut g, 1, 4, 2, 1);
+        assert_eq!(g[0], vec![0.0, 1.0, 4.0, 5.0]); // K a-slots + V a-slots
+        assert_eq!(g[1], vec![2.0, 3.0, 6.0, 7.0]);
+    }
+
+    #[test]
+    fn scatter_accumulates() {
+        let d_kv = vec![1.0f32; 4]; // [1,2,2,1,1], one previous chunk (C=2)
+        let mut g = vec![vec![1.0f32; 4]];
+        scatter_kv_grad(&d_kv, &mut g, 1, 2, 2, 1);
+        assert_eq!(g[0], vec![2.0; 4]);
+        scatter_kv_grad(&d_kv, &mut g, 1, 2, 2, 1);
+        assert_eq!(g[0], vec![3.0; 4]);
+    }
+
+    #[test]
+    fn scatter_empty_prefix_noop() {
+        let mut g: Vec<Vec<f32>> = vec![];
+        scatter_kv_grad(&[], &mut g, 2, 0, 4, 8);
+    }
+
+    #[test]
+    fn accumulate_adds_elementwise() {
+        let mut acc = vec![vec![1.0f32, 2.0], vec![3.0f32]];
+        accumulate(&mut acc, &[vec![0.5, 0.5], vec![-3.0]]);
+        assert_eq!(acc, vec![vec![1.5, 2.5], vec![0.0]]);
+    }
+
+    #[test]
+    fn init_params_deterministic_and_scaled() {
+        use crate::runtime::{Manifest, ParamSpec};
+        let man = Manifest {
+            model_name: "t".into(),
+            vocab_size: 16,
+            hidden_size: 8,
+            num_layers: 1,
+            num_heads: 2,
+            head_dim: 4,
+            model_param_count: 0,
+            chunk_size: 4,
+            max_chunks: 1,
+            kv_buckets: vec![0],
+            full_step_lens: vec![],
+            params: vec![
+                ParamSpec { name: "embed".into(), shape: vec![16, 8], size: 128 },
+                ParamSpec { name: "norm1".into(), shape: vec![1, 8], size: 8 },
+                ParamSpec { name: "wq".into(), shape: vec![1, 8, 8], size: 64 },
+            ],
+        };
+        let a = init_params(&man, 7);
+        let b = init_params(&man, 7);
+        for (x, y) in a.0.iter().zip(&b.0) {
+            assert_eq!(x, y);
+        }
+        assert!(a.0[1].iter().all(|&v| v == 1.0), "norms init to one");
+        let std: f32 = (a.0[2].iter().map(|v| v * v).sum::<f32>() / 64.0).sqrt();
+        assert!((std - 1.0 / (8f32).sqrt()).abs() < 0.15, "wq std {std}");
+    }
+}

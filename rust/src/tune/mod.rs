@@ -1,0 +1,193 @@
+//! (ChunkSize, K) grid search — the paper's §5 tuning procedure.
+//!
+//! For a training configuration, sweep the 2D grid of candidate ChunkSizes
+//! and retention budgets K, simulate the average iteration time over a few
+//! sampled batches, reject memory-infeasible points via the memory model,
+//! and return the ranked feasible grid (Table 4 / Table 6 generators).
+
+use crate::config::ModelSpec;
+use crate::config::ParallelConfig;
+use crate::data::{BatchSampler, LengthDistribution};
+use crate::memory::{MemoryModel, GPU_CAPACITY};
+use crate::sim::{simulate_chunkflow_iteration, CostModel};
+use crate::util::pool::ThreadPool;
+
+/// One evaluated grid point.
+#[derive(Clone, Debug)]
+pub struct GridPoint {
+    pub chunk_size: u64,
+    pub k: u64,
+    pub avg_iteration_seconds: f64,
+    pub bubble_ratio: f64,
+    pub peak_memory_bytes: u64,
+    pub feasible: bool,
+}
+
+/// Grid-search configuration.
+#[derive(Clone, Debug)]
+pub struct GridSearch {
+    pub model: ModelSpec,
+    pub parallel: ParallelConfig,
+    pub context_length: u64,
+    pub global_batch_size: usize,
+    /// Batches averaged per grid point.
+    pub iters: usize,
+    pub seed: u64,
+    pub chunk_sizes: Vec<u64>,
+    pub ks: Vec<u64>,
+}
+
+impl GridSearch {
+    pub fn standard(
+        model: ModelSpec,
+        parallel: ParallelConfig,
+        context_length: u64,
+    ) -> Self {
+        let k = 1024;
+        Self {
+            model,
+            parallel,
+            context_length,
+            global_batch_size: 256,
+            iters: 3,
+            seed: 20250710,
+            chunk_sizes: vec![2 * k, 4 * k, 8 * k, 16 * k, 32 * k],
+            ks: vec![1, 2, 4, 6, 8, 16],
+        }
+    }
+
+    /// Evaluate every grid point (in parallel) and return them sorted by
+    /// iteration time, infeasible points last.
+    pub fn run(&self) -> Vec<GridPoint> {
+        let mut points: Vec<(u64, u64)> = Vec::new();
+        for &c in &self.chunk_sizes {
+            for &k in &self.ks {
+                points.push((c, k));
+            }
+        }
+        let pool = ThreadPool::with_default_size();
+        let cfg = self.clone();
+        let mut results = pool.map(points, move |(chunk_size, k)| {
+            cfg.evaluate(chunk_size, k)
+        });
+        results.sort_by(|a, b| {
+            (!a.feasible, a.avg_iteration_seconds)
+                .partial_cmp(&(!b.feasible, b.avg_iteration_seconds))
+                .unwrap()
+        });
+        results
+    }
+
+    /// Evaluate a single (ChunkSize, K) point.
+    pub fn evaluate(&self, chunk_size: u64, k: u64) -> GridPoint {
+        let mm = MemoryModel::new(self.model.clone(), self.parallel.clone());
+        let peak = mm.chunkflow_peak(chunk_size, k, self.context_length);
+        let feasible = peak <= GPU_CAPACITY;
+        let cost = CostModel::new(self.model.clone(), self.parallel.clone());
+        let mut sampler = BatchSampler::new(
+            LengthDistribution::evaluation_dataset(),
+            self.context_length,
+            self.global_batch_size,
+            self.seed,
+        );
+        let mut total = 0.0;
+        let mut bubbles = 0.0;
+        for _ in 0..self.iters {
+            let batch = sampler.next_batch();
+            let r = simulate_chunkflow_iteration(&batch, &cost, chunk_size, k as usize)
+                .expect("simulation cannot fail on valid chunk sets");
+            total += r.iteration_seconds;
+            bubbles += r.bubble_ratio;
+        }
+        GridPoint {
+            chunk_size,
+            k,
+            avg_iteration_seconds: total / self.iters as f64,
+            bubble_ratio: bubbles / self.iters as f64,
+            peak_memory_bytes: peak,
+            feasible,
+        }
+    }
+
+    /// Best feasible point.
+    pub fn best(&self) -> Option<GridPoint> {
+        self.run().into_iter().find(|p| p.feasible)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::RecomputeGranularity;
+
+    fn search() -> GridSearch {
+        let mut g = GridSearch::standard(
+            ModelSpec::preset("qwen2.5-7b").unwrap(),
+            ParallelConfig::new(4, 4, RecomputeGranularity::Selective),
+            256 * 1024,
+        );
+        // Keep the test fast.
+        g.global_batch_size = 64;
+        g.iters = 1;
+        g.chunk_sizes = vec![2048, 8192, 32 * 1024];
+        g.ks = vec![1, 4, 16];
+        g
+    }
+
+    #[test]
+    fn grid_evaluates_all_points_sorted() {
+        let g = search();
+        let pts = g.run();
+        assert_eq!(pts.len(), 9);
+        // Feasible points sorted ascending by time.
+        let feas: Vec<&GridPoint> = pts.iter().filter(|p| p.feasible).collect();
+        for w in feas.windows(2) {
+            assert!(w[0].avg_iteration_seconds <= w[1].avg_iteration_seconds);
+        }
+        assert!(!feas.is_empty(), "some point must be feasible");
+    }
+
+    #[test]
+    fn infeasible_points_flagged_by_memory() {
+        let g = search();
+        // Huge ChunkSize x K blows the activation budget.
+        let p = g.evaluate(32 * 1024, 16);
+        assert!(!p.feasible, "32K x K=16 must exceed 80 GiB");
+        let q = g.evaluate(2048, 1);
+        assert!(q.feasible);
+    }
+
+    #[test]
+    fn best_is_feasible() {
+        let g = search();
+        let best = g.best().unwrap();
+        assert!(best.feasible);
+        assert!(best.avg_iteration_seconds > 0.0);
+    }
+
+    #[test]
+    fn table6_shape_middle_chunk_wins() {
+        // Paper Table 6 (7B, 256K, <4,4,4,selective>, ChunkSize*K = 32K):
+        // (8K,4) beats both (2K,16) and (32K,1).
+        let g = GridSearch {
+            global_batch_size: 128,
+            iters: 2,
+            ..search()
+        };
+        let p_2k = g.evaluate(2048, 16);
+        let p_8k = g.evaluate(8192, 4);
+        let p_32k = g.evaluate(32 * 1024, 1);
+        assert!(
+            p_8k.avg_iteration_seconds < p_2k.avg_iteration_seconds,
+            "(8K,4) {} vs (2K,16) {}",
+            p_8k.avg_iteration_seconds,
+            p_2k.avg_iteration_seconds
+        );
+        assert!(
+            p_8k.avg_iteration_seconds < p_32k.avg_iteration_seconds,
+            "(8K,4) {} vs (32K,1) {}",
+            p_8k.avg_iteration_seconds,
+            p_32k.avg_iteration_seconds
+        );
+    }
+}

@@ -1,0 +1,201 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! `cargo bench` uses `harness = false` with `rust/benches/bench_main.rs` as
+//! the entrypoint; that binary drives suites built on this module. The
+//! harness does warmup, adaptive iteration-count calibration toward a target
+//! measurement time, and reports mean / p50 / p95 / min plus throughput.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement summary.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+    /// Optional items-per-iteration for throughput reporting.
+    pub items_per_iter: Option<f64>,
+}
+
+impl BenchResult {
+    pub fn throughput(&self) -> Option<f64> {
+        self.items_per_iter
+            .map(|n| n / self.mean.as_secs_f64())
+    }
+}
+
+/// Benchmark runner configuration.
+#[derive(Clone, Debug)]
+pub struct Bencher {
+    pub warmup: Duration,
+    pub measure: Duration,
+    /// Max samples collected (each sample may batch several iterations).
+    pub max_samples: usize,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self {
+            warmup: Duration::from_millis(300),
+            measure: Duration::from_secs(1),
+            max_samples: 200,
+            results: Vec::new(),
+        }
+    }
+}
+
+/// Prevent the optimizer from deleting a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+impl Bencher {
+    pub fn new(warmup_ms: u64, measure_ms: u64) -> Self {
+        Self {
+            warmup: Duration::from_millis(warmup_ms),
+            measure: Duration::from_millis(measure_ms),
+            ..Default::default()
+        }
+    }
+
+    /// Run a benchmark; `f` is one iteration.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, f: F) -> BenchResult {
+        self.bench_items(name, None, f)
+    }
+
+    /// Run a benchmark where each iteration processes `items` units
+    /// (tokens, chunks, events, …) for throughput reporting.
+    pub fn bench_items<F: FnMut()>(
+        &mut self,
+        name: &str,
+        items: Option<f64>,
+        mut f: F,
+    ) -> BenchResult {
+        // Warmup and single-shot calibration.
+        let cal_start = Instant::now();
+        let mut warm_iters = 0u64;
+        while cal_start.elapsed() < self.warmup {
+            f();
+            warm_iters += 1;
+        }
+        let per_iter = cal_start.elapsed().as_secs_f64() / warm_iters.max(1) as f64;
+
+        // Choose a batch size so each sample is ≥ ~100µs (clock noise floor).
+        let batch = ((100e-6 / per_iter).ceil() as u64).max(1);
+        let target_samples = ((self.measure.as_secs_f64() / (per_iter * batch as f64)).ceil()
+            as usize)
+            .clamp(5, self.max_samples);
+
+        let mut samples: Vec<Duration> = Vec::with_capacity(target_samples);
+        let mut total_iters = 0u64;
+        for _ in 0..target_samples {
+            let t = Instant::now();
+            for _ in 0..batch {
+                f();
+            }
+            samples.push(t.elapsed() / batch as u32);
+            total_iters += batch;
+        }
+        samples.sort();
+
+        let mean_nanos =
+            samples.iter().map(|d| d.as_nanos()).sum::<u128>() / samples.len() as u128;
+        let result = BenchResult {
+            name: name.to_string(),
+            iters: total_iters,
+            mean: Duration::from_nanos(mean_nanos as u64),
+            p50: samples[samples.len() / 2],
+            p95: samples[(samples.len() * 95 / 100).min(samples.len() - 1)],
+            min: samples[0],
+            items_per_iter: items,
+        };
+        self.report(&result);
+        self.results.push(result.clone());
+        result
+    }
+
+    fn report(&self, r: &BenchResult) {
+        let tput = match r.throughput() {
+            Some(t) if t >= 1e9 => format!("  {:8.2} Gitem/s", t / 1e9),
+            Some(t) if t >= 1e6 => format!("  {:8.2} Mitem/s", t / 1e6),
+            Some(t) if t >= 1e3 => format!("  {:8.2} Kitem/s", t / 1e3),
+            Some(t) => format!("  {t:8.2} item/s"),
+            None => String::new(),
+        };
+        println!(
+            "{:<52} mean {:>12?}  p50 {:>12?}  p95 {:>12?}  min {:>12?}{}",
+            r.name, r.mean, r.p50, r.p95, r.min, tput
+        );
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Dump all results as JSON (used by `cargo bench` to leave a record
+    /// under target/ for EXPERIMENTS.md).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::Arr(
+            self.results
+                .iter()
+                .map(|r| {
+                    Json::obj(vec![
+                        ("name", Json::str(r.name.clone())),
+                        ("mean_ns", Json::num(r.mean.as_nanos() as f64)),
+                        ("p50_ns", Json::num(r.p50.as_nanos() as f64)),
+                        ("p95_ns", Json::num(r.p95.as_nanos() as f64)),
+                        ("min_ns", Json::num(r.min.as_nanos() as f64)),
+                        (
+                            "throughput_items_per_s",
+                            r.throughput().map(Json::num).unwrap_or(Json::Null),
+                        ),
+                    ])
+                })
+                .collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        let mut b = Bencher::new(10, 50);
+        let r = b.bench("noop-ish", || {
+            black_box((0..100u64).sum::<u64>());
+        });
+        assert!(r.iters > 0);
+        assert!(r.min <= r.p50 && r.p50 <= r.p95);
+        assert!(r.mean.as_nanos() > 0);
+    }
+
+    #[test]
+    fn throughput_reported() {
+        let mut b = Bencher::new(10, 30);
+        let r = b.bench_items("items", Some(1000.0), || {
+            black_box((0..1000u64).sum::<u64>());
+        });
+        assert!(r.throughput().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn json_dump_has_all_results() {
+        let mut b = Bencher::new(5, 20);
+        b.bench("a", || {
+            black_box(1 + 1);
+        });
+        b.bench("b", || {
+            black_box(2 + 2);
+        });
+        let j = b.to_json();
+        assert_eq!(j.as_arr().unwrap().len(), 2);
+    }
+}

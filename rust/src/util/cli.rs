@@ -1,0 +1,217 @@
+//! Tiny command-line argument parser (clap is unavailable offline).
+//!
+//! Supports the launcher's needs: a subcommand word followed by
+//! `--flag value`, `--flag=value`, boolean `--flag`, and positional args.
+//! Unknown flags are an error so typos fail fast.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: subcommand, flags, positionals.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    flags: BTreeMap<String, String>,
+    bools: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+/// Declarative spec of accepted flags, for validation + help text.
+#[derive(Clone, Debug)]
+pub struct FlagSpec {
+    pub name: &'static str,
+    pub takes_value: bool,
+    pub help: &'static str,
+}
+
+pub const fn flag(name: &'static str, takes_value: bool, help: &'static str) -> FlagSpec {
+    FlagSpec { name, takes_value, help }
+}
+
+impl Args {
+    /// Parse raw argv (without the program name) against a flag spec.
+    /// The first non-flag token becomes the subcommand; later non-flag
+    /// tokens are positional.
+    pub fn parse(argv: &[String], spec: &[FlagSpec]) -> anyhow::Result<Args> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if let Some(stripped) = tok.strip_prefix("--") {
+                let (name, inline_val) = match stripped.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let fs = spec
+                    .iter()
+                    .find(|f| f.name == name)
+                    .ok_or_else(|| anyhow::anyhow!("unknown flag --{name}"))?;
+                if fs.takes_value {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| anyhow::anyhow!("--{name} requires a value"))?
+                        }
+                    };
+                    out.flags.insert(name, val);
+                } else {
+                    if inline_val.is_some() {
+                        anyhow::bail!("--{name} does not take a value");
+                    }
+                    out.bools.push(name);
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(tok.clone());
+            } else {
+                out.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> anyhow::Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => parse_size(s)
+                .ok_or_else(|| anyhow::anyhow!("--{name}: invalid integer `{s}`")),
+        }
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> anyhow::Result<usize> {
+        Ok(self.get_u64(name, default as u64)? as usize)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> anyhow::Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name}: invalid number `{s}`")),
+        }
+    }
+
+    pub fn get_bool(&self, name: &str) -> bool {
+        self.bools.iter().any(|b| b == name)
+    }
+}
+
+/// Parse integers with optional K/M/G suffix (binary-ish, 1K = 1024) —
+/// sequence lengths like `32K`, `256K` read exactly as the paper writes them.
+pub fn parse_size(s: &str) -> Option<u64> {
+    let s = s.trim();
+    let (digits, mult) = match s.chars().last()? {
+        'k' | 'K' => (&s[..s.len() - 1], 1024),
+        'm' | 'M' => (&s[..s.len() - 1], 1024 * 1024),
+        'g' | 'G' => (&s[..s.len() - 1], 1024 * 1024 * 1024),
+        _ => (s, 1),
+    };
+    digits.trim().parse::<u64>().ok().map(|v| v * mult)
+}
+
+/// Render help text from a flag spec.
+pub fn render_help(prog: &str, subcommands: &[(&str, &str)], spec: &[FlagSpec]) -> String {
+    let mut out = format!("usage: {prog} <subcommand> [flags]\n\nsubcommands:\n");
+    for (name, help) in subcommands {
+        out.push_str(&format!("  {name:<14} {help}\n"));
+    }
+    out.push_str("\nflags:\n");
+    for f in spec {
+        let val = if f.takes_value { " <value>" } else { "" };
+        out.push_str(&format!("  --{}{val:<10} {}\n", f.name, f.help));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> Vec<FlagSpec> {
+        vec![
+            flag("chunk-size", true, "chunk size in tokens"),
+            flag("k", true, "retained chunks"),
+            flag("verbose", false, "verbose output"),
+            flag("model", true, "model name"),
+        ]
+    }
+
+    fn parse(toks: &[&str]) -> anyhow::Result<Args> {
+        let argv: Vec<String> = toks.iter().map(|s| s.to_string()).collect();
+        Args::parse(&argv, &spec())
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse(&["train", "--chunk-size", "8192", "--verbose"]).unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.get_u64("chunk-size", 0).unwrap(), 8192);
+        assert!(a.get_bool("verbose"));
+        assert!(!a.get_bool("missing-doesnt-panic"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse(&["sim", "--k=4", "--model=qwen-7b"]).unwrap();
+        assert_eq!(a.get_u64("k", 1).unwrap(), 4);
+        assert_eq!(a.get("model"), Some("qwen-7b"));
+    }
+
+    #[test]
+    fn size_suffixes() {
+        assert_eq!(parse_size("32K"), Some(32 * 1024));
+        assert_eq!(parse_size("256k"), Some(256 * 1024));
+        assert_eq!(parse_size("2M"), Some(2 * 1024 * 1024));
+        assert_eq!(parse_size("17"), Some(17));
+        assert_eq!(parse_size("x"), None);
+        let a = parse(&["train", "--chunk-size", "8K"]).unwrap();
+        assert_eq!(a.get_u64("chunk-size", 0).unwrap(), 8192);
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        assert!(parse(&["train", "--nope"]).is_err());
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(parse(&["train", "--chunk-size"]).is_err());
+    }
+
+    #[test]
+    fn bool_with_value_rejected() {
+        assert!(parse(&["train", "--verbose=yes"]).is_err());
+    }
+
+    #[test]
+    fn positionals_collected() {
+        let a = parse(&["report", "table5", "figure8"]).unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("report"));
+        assert_eq!(a.positional, vec!["table5", "figure8"]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&["train"]).unwrap();
+        assert_eq!(a.get_u64("k", 1).unwrap(), 1);
+        assert_eq!(a.get_or("model", "tiny"), "tiny");
+        assert_eq!(a.get_f64("chunk-size", 2.5).unwrap(), 2.5);
+    }
+
+    #[test]
+    fn help_renders() {
+        let h = render_help("chunkflow", &[("train", "run training")], &spec());
+        assert!(h.contains("chunk-size"));
+        assert!(h.contains("train"));
+    }
+}

@@ -1,0 +1,58 @@
+//! Infrastructure substrates built in-tree because the crates.io registry is
+//! unavailable in this environment: JSON, CLI parsing, PRNG + distributions,
+//! property testing, micro-benchmarking, logging, and a thread pool.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod log;
+pub mod pool;
+pub mod prop;
+pub mod rng;
+
+/// Format a byte count with binary units, e.g. "45.6 GiB".
+pub fn format_bytes(bytes: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut val = bytes as f64;
+    let mut unit = 0;
+    while val >= 1024.0 && unit < UNITS.len() - 1 {
+        val /= 1024.0;
+        unit += 1;
+    }
+    if unit == 0 {
+        format!("{bytes} B")
+    } else {
+        format!("{val:.1} {}", UNITS[unit])
+    }
+}
+
+/// Format a token count the way the paper writes lengths, e.g. "32K", "1M".
+pub fn format_tokens(tokens: u64) -> String {
+    if tokens >= 1024 * 1024 && tokens % (1024 * 1024) == 0 {
+        format!("{}M", tokens / (1024 * 1024))
+    } else if tokens >= 1024 && tokens % 1024 == 0 {
+        format!("{}K", tokens / 1024)
+    } else {
+        format!("{tokens}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_formatting() {
+        assert_eq!(format_bytes(512), "512 B");
+        assert_eq!(format_bytes(2048), "2.0 KiB");
+        assert_eq!(format_bytes(45_600_000_000), "42.5 GiB");
+    }
+
+    #[test]
+    fn token_formatting() {
+        assert_eq!(format_tokens(32 * 1024), "32K");
+        assert_eq!(format_tokens(256 * 1024), "256K");
+        assert_eq!(format_tokens(1024 * 1024), "1M");
+        assert_eq!(format_tokens(1000), "1000");
+    }
+}

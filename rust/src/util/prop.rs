@@ -1,0 +1,292 @@
+//! A small property-based testing harness (proptest is unavailable offline).
+//!
+//! Provides seeded random-input generation, a configurable number of cases,
+//! and greedy input shrinking on failure. Property tests across the crate
+//! (`chunk`, `schedule`, `pipeline`, `memory`, …) are built on this.
+//!
+//! Usage:
+//! ```ignore
+//! check(200, gen_vec(gen_u64(1, 100_000), 0, 64), |lens| {
+//!     let chunks = construct(lens, 8192)?;
+//!     ensure(total(&chunks) == lens.iter().sum(), "tokens preserved")
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+
+/// Outcome of a single property evaluation.
+pub type PropResult = Result<(), String>;
+
+/// Assert helper for property bodies.
+pub fn ensure(cond: bool, msg: &str) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.to_string())
+    }
+}
+
+/// A generator produces a value from the RNG and knows how to shrink it.
+pub trait Gen {
+    type Value: Clone + std::fmt::Debug;
+    fn generate(&self, rng: &mut Rng) -> Self::Value;
+    /// Candidate smaller versions of `v`, in decreasing aggressiveness.
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let _ = v;
+        Vec::new()
+    }
+}
+
+/// Run `cases` random cases of `prop` over inputs from `gen`. On failure,
+/// greedily shrink the counterexample and panic with both the original and
+/// the minimized input. Seed is fixed (env `CHUNKFLOW_PROP_SEED` overrides)
+/// so CI is deterministic.
+pub fn check<G: Gen>(cases: usize, gen: G, prop: impl Fn(&G::Value) -> PropResult) {
+    let seed = std::env::var("CHUNKFLOW_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE_u64);
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let input = gen.generate(&mut rng);
+        if let Err(msg) = prop(&input) {
+            let minimized = shrink_loop(&gen, &prop, input.clone());
+            panic!(
+                "property failed (case {case}/{cases}, seed {seed}): {msg}\n\
+                 original input: {input:?}\n\
+                 minimized input: {minimized:?}"
+            );
+        }
+    }
+}
+
+fn shrink_loop<G: Gen>(
+    gen: &G,
+    prop: &impl Fn(&G::Value) -> PropResult,
+    mut current: G::Value,
+) -> G::Value {
+    // Bounded greedy shrink: accept the first failing candidate each round.
+    for _ in 0..1000 {
+        let mut advanced = false;
+        for cand in gen.shrink(&current) {
+            if prop(&cand).is_err() {
+                current = cand;
+                advanced = true;
+                break;
+            }
+        }
+        if !advanced {
+            break;
+        }
+    }
+    current
+}
+
+// ----- concrete generators --------------------------------------------------
+
+/// Uniform u64 in [lo, hi].
+pub struct GenU64 {
+    pub lo: u64,
+    pub hi: u64,
+}
+
+pub fn gen_u64(lo: u64, hi: u64) -> GenU64 {
+    GenU64 { lo, hi }
+}
+
+impl Gen for GenU64 {
+    type Value = u64;
+    fn generate(&self, rng: &mut Rng) -> u64 {
+        rng.gen_range_inclusive(self.lo, self.hi)
+    }
+    fn shrink(&self, v: &u64) -> Vec<u64> {
+        let mut out = Vec::new();
+        if *v > self.lo {
+            out.push(self.lo);
+            out.push(self.lo + (*v - self.lo) / 2);
+            out.push(*v - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+/// Uniform usize in [lo, hi].
+pub struct GenUsize {
+    pub lo: usize,
+    pub hi: usize,
+}
+
+pub fn gen_usize(lo: usize, hi: usize) -> GenUsize {
+    GenUsize { lo, hi }
+}
+
+impl Gen for GenUsize {
+    type Value = usize;
+    fn generate(&self, rng: &mut Rng) -> usize {
+        rng.gen_range_inclusive(self.lo as u64, self.hi as u64) as usize
+    }
+    fn shrink(&self, v: &usize) -> Vec<usize> {
+        GenU64 { lo: self.lo as u64, hi: self.hi as u64 }
+            .shrink(&(*v as u64))
+            .into_iter()
+            .map(|x| x as usize)
+            .collect()
+    }
+}
+
+/// Vec of inner-generated values with length in [min_len, max_len].
+pub struct GenVec<G> {
+    pub inner: G,
+    pub min_len: usize,
+    pub max_len: usize,
+}
+
+pub fn gen_vec<G: Gen>(inner: G, min_len: usize, max_len: usize) -> GenVec<G> {
+    GenVec { inner, min_len, max_len }
+}
+
+impl<G: Gen> Gen for GenVec<G> {
+    type Value = Vec<G::Value>;
+    fn generate(&self, rng: &mut Rng) -> Vec<G::Value> {
+        let len = rng.gen_range_inclusive(self.min_len as u64, self.max_len as u64) as usize;
+        (0..len).map(|_| self.inner.generate(rng)).collect()
+    }
+    fn shrink(&self, v: &Vec<G::Value>) -> Vec<Vec<G::Value>> {
+        let mut out = Vec::new();
+        // Remove halves, then single elements, then shrink elements.
+        if v.len() > self.min_len {
+            let half = (v.len() / 2).max(self.min_len);
+            out.push(v[..half].to_vec());
+            for i in 0..v.len().min(8) {
+                let mut smaller = v.clone();
+                smaller.remove(i);
+                if smaller.len() >= self.min_len {
+                    out.push(smaller);
+                }
+            }
+        }
+        for i in 0..v.len().min(8) {
+            for cand in self.inner.shrink(&v[i]) {
+                let mut next = v.clone();
+                next[i] = cand;
+                out.push(next);
+            }
+        }
+        out
+    }
+}
+
+/// Pair generator.
+pub struct GenPair<A, B> {
+    pub a: A,
+    pub b: B,
+}
+
+pub fn gen_pair<A: Gen, B: Gen>(a: A, b: B) -> GenPair<A, B> {
+    GenPair { a, b }
+}
+
+impl<A: Gen, B: Gen> Gen for GenPair<A, B> {
+    type Value = (A::Value, B::Value);
+    fn generate(&self, rng: &mut Rng) -> Self::Value {
+        (self.a.generate(rng), self.b.generate(rng))
+    }
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out: Vec<Self::Value> = self
+            .a
+            .shrink(&v.0)
+            .into_iter()
+            .map(|a| (a, v.1.clone()))
+            .collect();
+        out.extend(self.b.shrink(&v.1).into_iter().map(|b| (v.0.clone(), b)));
+        out
+    }
+}
+
+/// Mixture generator for long-tail-like inputs: with probability `p_long`
+/// draw from the `long` generator, else from `short`. Mirrors the SFT
+/// dataset shape and gives property tests realistic skew.
+pub struct GenMix<G> {
+    pub short: G,
+    pub long: G,
+    pub p_long: f64,
+}
+
+pub fn gen_mix<G: Gen>(short: G, long: G, p_long: f64) -> GenMix<G> {
+    GenMix { short, long, p_long }
+}
+
+impl<G: Gen> Gen for GenMix<G> {
+    type Value = G::Value;
+    fn generate(&self, rng: &mut Rng) -> G::Value {
+        if rng.gen_bool(self.p_long) {
+            self.long.generate(rng)
+        } else {
+            self.short.generate(rng)
+        }
+    }
+    fn shrink(&self, v: &G::Value) -> Vec<G::Value> {
+        self.short.shrink(v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0usize;
+        let counter = std::cell::RefCell::new(&mut count);
+        check(50, gen_u64(0, 10), |v| {
+            **counter.borrow_mut() += 1;
+            ensure(*v <= 10, "bound")
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics() {
+        check(100, gen_u64(0, 1000), |v| ensure(*v < 500, "v < 500"));
+    }
+
+    #[test]
+    fn shrinking_minimizes_scalar() {
+        // Shrink v>=500 counterexample toward 500 via the shrink loop directly.
+        let gen = gen_u64(0, 1000);
+        let prop = |v: &u64| ensure(*v < 500, "v < 500");
+        let minimized = shrink_loop(&gen, &prop, 999);
+        assert_eq!(minimized, 500);
+    }
+
+    #[test]
+    fn vec_generator_respects_length_bounds() {
+        let mut rng = Rng::new(5);
+        let gen = gen_vec(gen_u64(1, 9), 2, 6);
+        for _ in 0..200 {
+            let v = gen.generate(&mut rng);
+            assert!((2..=6).contains(&v.len()));
+            assert!(v.iter().all(|&x| (1..=9).contains(&x)));
+        }
+    }
+
+    #[test]
+    fn vec_shrink_keeps_min_len() {
+        let gen = gen_vec(gen_u64(0, 10), 2, 8);
+        let v = vec![5, 6, 7, 8];
+        for cand in gen.shrink(&v) {
+            assert!(cand.len() >= 2);
+        }
+    }
+
+    #[test]
+    fn mix_generator_draws_from_both() {
+        let mut rng = Rng::new(3);
+        let gen = gen_mix(gen_u64(0, 10), gen_u64(1000, 2000), 0.3);
+        let vals: Vec<u64> = (0..500).map(|_| gen.generate(&mut rng)).collect();
+        assert!(vals.iter().any(|&v| v <= 10));
+        assert!(vals.iter().any(|&v| v >= 1000));
+    }
+}

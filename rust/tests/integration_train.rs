@@ -1,0 +1,157 @@
+//! Integration tests over the real PJRT runtime + trainer (Layer 3 against
+//! the AOT artifacts of Layers 1-2).
+//!
+//! Requires `make artifacts` (tiny model) to have run; tests skip with a
+//! notice when artifacts are absent so bare `cargo test` stays green.
+
+use std::path::Path;
+
+use chunkflow::config::{ModelSpec, TrainConfig};
+use chunkflow::data::{LengthDistribution, Sequence};
+use chunkflow::train::Trainer;
+
+const K: u64 = 1024;
+
+fn artifacts_ready() -> bool {
+    Path::new("artifacts/manifest_tiny.json").exists()
+}
+
+fn tiny_config() -> TrainConfig {
+    let mut cfg = TrainConfig::default_for(ModelSpec::preset("tiny").unwrap());
+    cfg.context_length = 1024; // = chunk_size(256) * max_chunks(4)
+    cfg.global_batch_size = 4;
+    cfg.steps = 3;
+    cfg.lr = 1e-3;
+    cfg.artifacts_dir = "artifacts".into();
+    cfg
+}
+
+/// Short-sequence distribution so tiny tests stay fast.
+fn tiny_dist() -> LengthDistribution {
+    LengthDistribution::from_cdf("tiny-test", &[(256, 0.6), (512, 0.9)], 1024)
+}
+
+#[test]
+fn trainer_matches_full_sequence_oracle() {
+    if !artifacts_ready() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    }
+    let trainer = Trainer::new(tiny_config(), tiny_dist()).expect("trainer");
+    // One sequence of exactly 512 tokens = 2 chunks of 256: exercises the
+    // dependent-group path (fwd_kv + chunk_vjp chaining).
+    let seq = Sequence { id: 77, len: 512 };
+    let (loss_c, ntok_c, grads_c, n_chunks, _kv) =
+        trainer.compute_gradients(&[seq]).expect("chunked grads");
+    assert_eq!(n_chunks, 2);
+
+    // Oracle: the AOT full-sequence program over the same tokens.
+    let tokens = trainer.sequence_tokens(&seq);
+    let toks: Vec<i32> = tokens.iter().map(|&t| t as i32).collect();
+    let mut targets: Vec<i32> = toks[1..].to_vec();
+    targets.push(-1);
+    let pos: Vec<i32> = (0..512).collect();
+    let seg = vec![0i32; 512];
+    let oracle = trainer
+        .runtime
+        .full_step(512, &toks, &targets, &pos, &seg)
+        .expect("oracle step");
+
+    assert!((loss_c as f32 - oracle.loss_sum).abs() / oracle.loss_sum < 1e-5,
+        "loss {loss_c} vs oracle {}", oracle.loss_sum);
+    assert_eq!(ntok_c as f32, oracle.n_tok);
+    for (i, (gc, go)) in grads_c.iter().zip(&oracle.d_params).enumerate() {
+        let max_ref = go.iter().fold(0f32, |a, &b| a.max(b.abs())).max(1e-6);
+        let max_err = gc
+            .iter()
+            .zip(go)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0f32, f32::max);
+        assert!(
+            max_err / max_ref < 1e-3,
+            "param {i}: chunked-vs-oracle rel err {}",
+            max_err / max_ref
+        );
+    }
+}
+
+#[test]
+fn training_reduces_loss_on_fixed_batch() {
+    if !artifacts_ready() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    }
+    // Overfit one fixed batch: descent must be unambiguous.
+    let mut cfg = tiny_config();
+    cfg.lr = 1e-2;
+    let mut trainer = Trainer::new(cfg, tiny_dist()).expect("trainer");
+    let batch = vec![
+        Sequence { id: 5, len: 300 },
+        Sequence { id: 6, len: 120 },
+        Sequence { id: 7, len: 512 }, // dependent group too
+    ];
+    let mut losses = Vec::new();
+    for _ in 0..12 {
+        let (loss, ntok, mut grads, _c, _kv) =
+            trainer.compute_gradients(&batch).expect("grads");
+        losses.push(loss / ntok);
+        let inv = (1.0 / ntok) as f32;
+        for g in grads.iter_mut() {
+            for x in g.iter_mut() {
+                *x *= inv;
+            }
+        }
+        chunkflow::train::Adam::clip_global_norm(&mut grads, 1.0);
+        trainer.adam.update(&mut trainer.params.0, &grads);
+        let params = trainer.params.clone();
+        trainer.runtime.set_params(&params).unwrap();
+    }
+    let first = losses[0];
+    let last = *losses.last().unwrap();
+    // Fresh init predicts ~uniform(512) = 6.24 nats.
+    assert!(first > 5.0, "initial loss {first}");
+    assert!(
+        last < first - 0.3,
+        "overfitting a fixed batch must descend: {first:.3} -> {last:.3} ({losses:?})"
+    );
+}
+
+#[test]
+fn packed_chunk_standalone_path_runs() {
+    if !artifacts_ready() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    }
+    let trainer = Trainer::new(tiny_config(), tiny_dist()).expect("trainer");
+    // Several short sequences packed into standalone chunks only.
+    let batch: Vec<Sequence> =
+        (0..6).map(|i| Sequence { id: 100 + i, len: 80 + 10 * i }).collect();
+    let (loss, ntok, _grads, n_chunks, kv_peak) =
+        trainer.compute_gradients(&batch).expect("grads");
+    // 6 sequences of ~80-130 tokens pack into 3 chunks of 256.
+    assert!(n_chunks <= 3, "packed into {n_chunks} chunks");
+    assert_eq!(kv_peak, 0, "no dependent chunks => empty state store");
+    let per_tok = loss / ntok;
+    assert!((4.0..8.0).contains(&per_tok), "loss/token {per_tok}");
+}
+
+#[test]
+fn kv_state_peak_tracks_context() {
+    if !artifacts_ready() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    }
+    let trainer = Trainer::new(tiny_config(), tiny_dist()).expect("trainer");
+    let (_l, _t, _g, chunks_short, kv_short) = trainer
+        .compute_gradients(&[Sequence { id: 1, len: 512 }])
+        .unwrap();
+    let (_l2, _t2, _g2, chunks_long, kv_long) = trainer
+        .compute_gradients(&[Sequence { id: 2, len: 1024 }])
+        .unwrap();
+    assert_eq!(chunks_short, 2);
+    assert_eq!(chunks_long, 4);
+    // Table 5's KV slope: state grows with context length...
+    assert!(kv_long > kv_short);
+    // ...while activations stay bounded inside single chunk-sized PJRT calls
+    // (not directly observable here; asserted by the memory model tests).
+}
