@@ -4,6 +4,12 @@
 //! mean/p50/p95/min, throughput) and writes machine-readable results to
 //! `target/bench_results.json`.
 //!
+//! It also runs the sweep engine's smoke scenarios and emits the same
+//! schema-versioned `BENCH_chunkflow.json` (micro-benchmark rows embedded
+//! under `micro_benchmarks`) as `chunkflow sweep`, so `cargo bench` leaves
+//! the full perf-trajectory artifact CI archives. Override the output path
+//! with `CHUNKFLOW_BENCH_OUT`.
+//!
 //! Suites (DESIGN.md §4 experiment index):
 //!   construction  — Algorithm 1 over evaluation batches (hot path)
 //!   scheduling    — Algorithm 2 plan generation + validation
@@ -22,6 +28,7 @@ use chunkflow::memory::MemoryModel;
 use chunkflow::pipeline::onef1b;
 use chunkflow::schedule::{schedule_step, validate_group_plan};
 use chunkflow::sim::{simulate_baseline_iteration, simulate_chunkflow_iteration, CostModel};
+use chunkflow::sweep::{self, Scenario, SweepEngine};
 use chunkflow::util::bench::{black_box, Bencher};
 
 const K: u64 = 1024;
@@ -185,6 +192,39 @@ fn bench_runtime(b: &mut Bencher) {
     });
 }
 
+/// Run the sweep engine's smoke scenarios and write the perf-trajectory
+/// artifact with the micro-benchmark rows embedded.
+fn emit_bench_json(b: &Bencher) {
+    println!("\n-- suite: scenario sweep (smoke) --");
+    let out = std::env::var("CHUNKFLOW_BENCH_OUT")
+        .unwrap_or_else(|_| sweep::DEFAULT_BENCH_PATH.to_string());
+    match SweepEngine::auto().run(&Scenario::smoke()) {
+        Ok(results) => {
+            for r in &results {
+                println!(
+                    "{:<28} baseline {:>8.3}s  best {:>8.3}s  speedup {:>5.2}x",
+                    r.scenario.name,
+                    r.baseline.iteration_seconds,
+                    r.best().map(|c| c.metrics.iteration_seconds).unwrap_or(f64::NAN),
+                    r.speedup().unwrap_or(f64::NAN)
+                );
+            }
+            let path = std::path::Path::new(&out);
+            if let Err(e) = sweep::write_bench_json(path, &results, Some(b.to_json())) {
+                eprintln!("could not write {out}: {e}");
+            } else {
+                println!(
+                    "wrote {out} ({} scenarios + {} micro rows, schema v{})",
+                    results.len(),
+                    b.results().len(),
+                    sweep::SCHEMA_VERSION
+                );
+            }
+        }
+        Err(e) => eprintln!("sweep smoke failed: {e:#}"),
+    }
+}
+
 fn main() {
     println!("chunkflow benchmark harness (paper-artifact suites)\n");
     let mut b = Bencher::new(200, 800);
@@ -201,4 +241,5 @@ fn main() {
     } else {
         println!("\nwrote target/bench_results.json ({} entries)", b.results().len());
     }
+    emit_bench_json(&b);
 }

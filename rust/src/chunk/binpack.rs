@@ -121,6 +121,20 @@ mod tests {
     }
 
     #[test]
+    fn deterministic_across_repeated_runs() {
+        // BFD with the stable index tiebreak must be a pure function of its
+        // input: repeated runs (and equal-weight permutation ties) yield
+        // identical bins — the property the parallel sweep's bit-identical
+        // JSON guarantee rests on.
+        let w = vec![7, 3, 7, 3, 5, 5, 1, 9, 2, 8];
+        let first = binpack_min_bins(&w, 10);
+        for _ in 0..10 {
+            assert_eq!(binpack_min_bins(&w, 10), first);
+        }
+        validate(&first, &w, 10);
+    }
+
+    #[test]
     fn infeasible_bin_count_returns_none() {
         assert!(fits_in_bins(&[5, 5, 5], 8, 2).is_none());
         assert!(fits_in_bins(&[5, 5, 5], 8, 3).is_some());

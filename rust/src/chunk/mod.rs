@@ -222,6 +222,63 @@ mod tests {
     }
 
     #[test]
+    fn single_sequence_much_longer_than_chunk_size() {
+        // One 1M-token sequence at ChunkSize 2K: 512 dependent chunks, no
+        // standalone chunks, contiguous full coverage.
+        let k = 1024;
+        let set = construct_chunks(&seqs(&[1024 * k]), 2 * k);
+        assert_eq!(set.chunks.len(), 512);
+        assert!(set.standalone_chunks().is_empty());
+        assert!(set.chunks.iter().all(|c| c.is_dependent()));
+        assert!(set.chunks.iter().all(|c| c.total_len() == 2 * k));
+        assert_eq!(set.total_tokens(), 1024 * k);
+        let groups = set.dependent_groups();
+        assert_eq!(groups.len(), 1);
+        assert_eq!(groups[0].last().unwrap().prefix_len(), 1022 * k);
+    }
+
+    #[test]
+    fn all_sequences_exactly_chunk_size() {
+        // Sequences of exactly ChunkSize are standalone (not split) and
+        // each fills one chunk completely.
+        let lens = vec![2048u64; 7];
+        let set = construct_chunks(&seqs(&lens), 2048);
+        assert_eq!(set.chunks.len(), 7);
+        assert!(set.chunks.iter().all(|c| !c.is_dependent()));
+        assert!(set.chunks.iter().all(|c| c.total_len() == 2048));
+        assert!(set.chunks.iter().all(|c| c.segments.len() == 1));
+    }
+
+    #[test]
+    fn construction_is_deterministic_under_fixed_seed() {
+        use crate::data::{BatchSampler, LengthDistribution};
+        let draw = || {
+            let mut s = BatchSampler::new(
+                LengthDistribution::evaluation_dataset(),
+                256 * 1024,
+                128,
+                99,
+            );
+            construct_chunks(&s.next_batch(), 8 * 1024)
+        };
+        let a = draw();
+        let b = draw();
+        assert_eq!(a.chunks, b.chunks, "same seed must give identical chunk sets");
+        // And re-running Algorithm 1 on the same batch is pure.
+        let mut s = BatchSampler::new(
+            LengthDistribution::evaluation_dataset(),
+            256 * 1024,
+            128,
+            99,
+        );
+        let batch = s.next_batch();
+        assert_eq!(
+            construct_chunks(&batch, 8 * 1024).chunks,
+            construct_chunks(&batch, 8 * 1024).chunks
+        );
+    }
+
+    #[test]
     fn prefix_len_matches_offset() {
         let set = construct_chunks(&seqs(&[5000]), 2000);
         let g = &set.dependent_groups()[0];

@@ -62,6 +62,65 @@ impl LengthDistribution {
         )
     }
 
+    /// Long-tail supervised fine-tuning workload: the LMSysChat1M shape,
+    /// which is the paper's motivating SFT dataset (Table 1). First-class
+    /// sweep scenario name: `longtail-sft`.
+    pub fn longtail_sft() -> Self {
+        let mut d = Self::lmsys_chat_1m();
+        d.name = "longtail-sft".to_string();
+        d
+    }
+
+    /// Continual pre-training workload: documents concentrated toward the
+    /// context limit rather than long-tailed — most mass sits in the
+    /// 16K-128K range (FlexSP-style "homogeneous long" regime).
+    pub fn continual_pretraining() -> Self {
+        Self::from_cdf(
+            "continual-pretrain",
+            &[
+                (4 * K, 0.05),
+                (16 * K, 0.30),
+                (32 * K, 0.65),
+                (64 * K, 0.90),
+            ],
+            128 * K,
+        )
+    }
+
+    /// Degenerate uniform-length workload: every sequence has exactly `len`
+    /// tokens (the classic fixed-shape pre-training batch; the baseline's
+    /// best case, so speedups here lower-bound ChunkFlow's advantage).
+    pub fn uniform_length(len: u64) -> Self {
+        assert!(len >= 1, "uniform length must be positive");
+        Self {
+            name: format!("uniform-{}", crate::util::format_tokens(len)),
+            buckets: vec![LengthBucket { lo: len, hi: len + 1, prob: 1.0 }],
+            longest: len,
+        }
+    }
+
+    /// Look up a distribution by scenario-registry name.
+    pub fn by_name(name: &str) -> anyhow::Result<Self> {
+        match name {
+            "lmsys" | "lmsys-chat-1m" => Ok(Self::lmsys_chat_1m()),
+            "eval" | "evaluation" => Ok(Self::evaluation_dataset()),
+            "longtail-sft" => Ok(Self::longtail_sft()),
+            "continual-pretrain" => Ok(Self::continual_pretraining()),
+            other => {
+                if let Some(size) = other
+                    .strip_prefix("uniform-")
+                    .and_then(crate::util::cli::parse_size)
+                {
+                    return Ok(Self::uniform_length(size));
+                }
+                anyhow::bail!(
+                    "unknown length distribution `{other}` (have: lmsys, eval, \
+                     longtail-sft, continual-pretrain, uniform-<len>)"
+                )
+            }
+        }
+    }
+
     /// Build from cumulative rows `(upper_bound, cdf)`; mass above the last
     /// row extends to `longest`.
     pub fn from_cdf(name: &str, rows: &[(u64, f64)], longest: u64) -> Self {
@@ -196,6 +255,40 @@ mod tests {
         assert_eq!(rows[0].0, "< 1K");
         assert!((rows[0].1 - 0.90499).abs() < 1e-6);
         assert!((rows[3].1 - 0.99987).abs() < 1e-6);
+    }
+
+    #[test]
+    fn uniform_length_yields_constant_lengths() {
+        let d = LengthDistribution::uniform_length(8 * K);
+        let mut rng = Rng::new(11);
+        for _ in 0..1000 {
+            assert_eq!(d.sample(&mut rng), 8 * K);
+        }
+        let total: f64 = d.buckets.iter().map(|b| b.prob).sum();
+        assert!((total - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn continual_pretraining_is_heavier_than_sft() {
+        let cp = LengthDistribution::continual_pretraining();
+        let sft = LengthDistribution::longtail_sft();
+        let total: f64 = cp.buckets.iter().map(|b| b.prob).sum();
+        assert!((total - 1.0).abs() < 1e-9);
+        // Continual pre-training has far more mass above 16K than SFT.
+        assert!(1.0 - cp.cdf(16 * K) > 10.0 * (1.0 - sft.cdf(16 * K)));
+    }
+
+    #[test]
+    fn by_name_resolves_all_registry_names() {
+        for name in ["lmsys", "eval", "longtail-sft", "continual-pretrain", "uniform-8K"] {
+            let d = LengthDistribution::by_name(name).unwrap();
+            assert!(!d.buckets.is_empty(), "{name}");
+        }
+        assert_eq!(
+            LengthDistribution::by_name("uniform-8K").unwrap().longest,
+            8 * K
+        );
+        assert!(LengthDistribution::by_name("nope").is_err());
     }
 
     #[test]

@@ -49,6 +49,30 @@ impl BatchSampler {
             .collect()
     }
 
+    /// Draw batches until one contains a sequence of at least `min_len`
+    /// tokens. Fully deterministic given the sampler seed; returns an error
+    /// (with actionable context) after `max_batches` draws instead of
+    /// panicking, so callers — tests, CI smoke runs — fail loudly rather
+    /// than flake on an opaque panic.
+    pub fn next_batch_with_min_len(
+        &mut self,
+        min_len: u64,
+        max_batches: usize,
+    ) -> anyhow::Result<Vec<Sequence>> {
+        for _ in 0..max_batches {
+            let batch = self.next_batch();
+            if batch.iter().any(|s| s.len >= min_len) {
+                return Ok(batch);
+            }
+        }
+        anyhow::bail!(
+            "no sequence >= {min_len} tokens in {max_batches} batches of {} from `{}` \
+             (deterministic for this seed; raise max_batches or pick a heavier tail)",
+            self.global_batch_size,
+            self.dist.name
+        )
+    }
+
     /// Megatron-style sequence packing (§2.2): greedily concatenate
     /// sequences into packed buffers of at most `pack_len` tokens,
     /// preserving arrival order (first-fit into the open buffer, flush when
@@ -155,23 +179,31 @@ mod tests {
     }
 
     #[test]
-    fn dp_imbalance_exists_with_long_tail() {
+    fn dp_imbalance_exists_with_long_tail() -> anyhow::Result<()> {
         // With a long-tail batch, round-robin DP splits have unequal token
-        // loads — the imbalance Obs. 3 describes.
+        // loads — the imbalance Obs. 3 describes. The helper is
+        // deterministic for the fixed seed, so this cannot flake.
         let mut s = sampler(256 * 1024, 256);
-        // Find a batch with at least one long sequence.
-        for _ in 0..50 {
-            let batch = s.next_batch();
-            if batch.iter().any(|q| q.len > 32 * 1024) {
-                let parts = BatchSampler::split_dp(&batch, 4);
-                let loads: Vec<u64> =
-                    parts.iter().map(|p| p.iter().map(|s| s.len).sum()).collect();
-                let max = *loads.iter().max().unwrap() as f64;
-                let min = *loads.iter().min().unwrap() as f64;
-                assert!(max / min > 1.2, "expected imbalance, loads {loads:?}");
-                return;
-            }
-        }
-        panic!("no long sequence drawn in 50 batches");
+        let batch = s.next_batch_with_min_len(32 * 1024 + 1, 200)?;
+        let parts = BatchSampler::split_dp(&batch, 4);
+        let loads: Vec<u64> = parts.iter().map(|p| p.iter().map(|s| s.len).sum()).collect();
+        let max = *loads.iter().max().unwrap() as f64;
+        let min = *loads.iter().min().unwrap() as f64;
+        assert!(max / min > 1.2, "expected imbalance, loads {loads:?}");
+        Ok(())
+    }
+
+    #[test]
+    fn min_len_search_is_deterministic_and_errors_cleanly() {
+        let batch_a = sampler(256 * 1024, 64)
+            .next_batch_with_min_len(64 * 1024, 500)
+            .unwrap();
+        let batch_b = sampler(256 * 1024, 64)
+            .next_batch_with_min_len(64 * 1024, 500)
+            .unwrap();
+        assert_eq!(batch_a, batch_b, "same seed must yield the same batch");
+        // An impossible request errors instead of panicking.
+        let err = sampler(8192, 8).next_batch_with_min_len(100_000, 3).unwrap_err();
+        assert!(err.to_string().contains("3 batches"), "{err}");
     }
 }

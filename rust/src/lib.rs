@@ -9,9 +9,10 @@
 //!   state-aware 1F1B pipeline scheduling and its discrete-event simulator
 //!   ([`pipeline`]), the analytic memory model ([`memory`]), the
 //!   Megatron-LM-like baseline ([`baseline`]), the end-to-end iteration
-//!   simulator ([`sim`]), the (ChunkSize, K) tuner ([`tune`]), the real
-//!   PJRT-backed trainer ([`runtime`], [`train`]) and the paper-artifact
-//!   report generators ([`report`]).
+//!   simulator ([`sim`]), the (ChunkSize, K) tuner ([`tune`]), the parallel
+//!   scenario-sweep engine and its `BENCH_chunkflow.json` perf-trajectory
+//!   artifact ([`sweep`]), the real PJRT-backed trainer ([`runtime`],
+//!   [`train`]) and the paper-artifact report generators ([`report`]).
 //! - **Layer 2** — `python/compile/model.py`: the chunked transformer
 //!   forward/backward in JAX, AOT-lowered to HLO text at build time.
 //! - **Layer 1** — `python/compile/kernels/chunk_attn.py`: the chunked
@@ -20,6 +21,9 @@
 //! Python never runs at training time: `make artifacts` produces
 //! `artifacts/*.hlo.txt` + `manifest.json`, and everything here is
 //! self-contained Rust over the PJRT C API.
+
+// Paper-notation literals like `1 * K` / `2 * K` mirror the tables verbatim.
+#![allow(clippy::identity_op)]
 
 pub mod baseline;
 pub mod chunk;
@@ -32,6 +36,7 @@ pub mod runtime;
 pub mod schedule;
 pub mod sim;
 pub mod state;
+pub mod sweep;
 pub mod train;
 pub mod tune;
 pub mod util;

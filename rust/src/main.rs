@@ -4,6 +4,7 @@
 //!   train      run the real PJRT-backed trainer (tiny / gpt-100m artifacts)
 //!   report     regenerate paper tables & figures (report <id>|all)
 //!   simulate   one-off pipeline simulation for a model/context
+//!   sweep      parallel scenario sweep -> BENCH_chunkflow.json
 //!   tune       (ChunkSize, K) grid search (§5)
 //!   data       inspect the synthetic long-tail datasets
 //!   help       this text
@@ -11,6 +12,7 @@
 use chunkflow::config::{ModelSpec, ParallelConfig, RecomputeGranularity, TrainConfig};
 use chunkflow::data::{BatchSampler, LengthDistribution};
 use chunkflow::sim::{simulate_baseline_iteration, simulate_chunkflow_iteration, CostModel};
+use chunkflow::sweep::{self, Scenario, SweepEngine};
 use chunkflow::train::Trainer;
 use chunkflow::tune::GridSearch;
 use chunkflow::util::cli::{flag, render_help, Args, FlagSpec};
@@ -33,6 +35,10 @@ fn flags() -> Vec<FlagSpec> {
         flag("dataset", true, "lmsys|eval"),
         flag("iters", true, "simulation iterations to average"),
         flag("out", true, "output JSON path"),
+        flag("scenario", true, "sweep scenarios: smoke|paper|<name>[,<name>...]"),
+        flag("serial", false, "run the sweep serially (reference order)"),
+        flag("threads", true, "sweep worker threads (default: all cores)"),
+        flag("list", false, "list registered sweep scenarios and exit"),
         flag("quick", false, "smaller batches for fast reports"),
         flag("verbose", false, "debug logging"),
     ]
@@ -42,6 +48,7 @@ const SUBCOMMANDS: &[(&str, &str)] = &[
     ("train", "run the real chunked trainer over PJRT artifacts"),
     ("report", "regenerate paper tables/figures: report <table1|figure8|...|all>"),
     ("simulate", "simulate one training iteration (baseline vs chunkflow)"),
+    ("sweep", "parallel scenario sweep writing BENCH_chunkflow.json"),
     ("tune", "grid-search (ChunkSize, K) for a configuration"),
     ("data", "print dataset distribution statistics"),
 ];
@@ -64,6 +71,7 @@ fn main() {
         Some("train") => cmd_train(&args),
         Some("report") => cmd_report(&args),
         Some("simulate") => cmd_simulate(&args),
+        Some("sweep") => cmd_sweep(&args),
         Some("tune") => cmd_tune(&args),
         Some("data") => cmd_data(&args),
         _ => {
@@ -178,6 +186,75 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     println!("megatron-like : {:.3}s/iter  bubble {:.1}%", tb / n, bb / n * 100.0);
     println!("chunkflow     : {:.3}s/iter  bubble {:.1}%", tc / n, bc / n * 100.0);
     println!("speedup       : {:.2}x", tb / tc);
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
+    if args.get_bool("list") {
+        println!("registered scenarios (`--scenario <name>[,<name>...]` | smoke | paper):");
+        for s in Scenario::registry().iter().chain(Scenario::smoke().iter()) {
+            println!(
+                "  {:<28} {} @ {} · {} · batch {} x {} iters · {} candidates",
+                s.name,
+                s.model.name,
+                chunkflow::util::format_tokens(s.context_length),
+                s.distribution,
+                s.global_batch_size,
+                s.iters,
+                s.candidates.len()
+            );
+        }
+        return Ok(());
+    }
+    let mut scenarios = Scenario::select(args.get_or("scenario", "smoke"))?;
+    let seed = args.get_u64("seed", chunkflow::sweep::scenario::DEFAULT_SEED)?;
+    for s in &mut scenarios {
+        s.seed = seed;
+    }
+    let engine = if args.get_bool("serial") {
+        SweepEngine::serial()
+    } else if let Some(n) = args.get("threads") {
+        SweepEngine::with_threads(
+            n.parse().map_err(|_| anyhow::anyhow!("--threads: invalid integer `{n}`"))?,
+        )
+    } else {
+        SweepEngine::auto()
+    };
+    let units: usize = scenarios.iter().map(|s| s.candidates.len() + 1).sum();
+    println!(
+        "sweeping {} scenario(s), {units} work units ({:?})\n",
+        scenarios.len(),
+        engine.parallelism
+    );
+    let results = engine.run(&scenarios)?;
+    println!(
+        "{:<28} {:>12} {:>14} {:>12} {:>9}",
+        "scenario", "baseline s", "best (CS,K)", "chunkflow s", "speedup"
+    );
+    for r in &results {
+        let (best_label, best_secs) = match r.best() {
+            Some(b) => (
+                format!("({},{})", chunkflow::util::format_tokens(b.chunk_size), b.k),
+                format!("{:.3}", b.metrics.iteration_seconds),
+            ),
+            None => ("-".into(), "-".into()),
+        };
+        println!(
+            "{:<28} {:>12.3} {:>14} {:>12} {:>8}",
+            r.scenario.name,
+            r.baseline.iteration_seconds,
+            best_label,
+            best_secs,
+            r.speedup().map(|s| format!("{s:.2}x")).unwrap_or_else(|| "-".into())
+        );
+    }
+    let out = args.get_or("out", sweep::DEFAULT_BENCH_PATH);
+    let path = std::path::Path::new(out);
+    sweep::write_bench_json(path, &results, None)?;
+    // Self-check the artifact against the schema contract before declaring
+    // success — CI consumes this file.
+    let n = sweep::validate(&Json::parse_file(path)?)?;
+    println!("\nwrote {out} ({n} scenarios, schema v{})", sweep::SCHEMA_VERSION);
     Ok(())
 }
 

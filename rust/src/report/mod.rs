@@ -7,7 +7,7 @@ use crate::config::{ModelSpec, ParallelConfig, RecomputeGranularity};
 use crate::data::{BatchSampler, LengthDistribution, Sequence};
 use crate::memory::MemoryModel;
 use crate::pipeline::onef1b::{self, PipelineItem};
-use crate::sim::{simulate_baseline_iteration, simulate_chunkflow_iteration, CostModel};
+use crate::sweep::{Scenario, SweepEngine};
 use crate::tune::GridSearch;
 use crate::util::json::Json;
 
@@ -423,56 +423,55 @@ pub fn table6() -> Json {
 }
 
 /// Figure 8: end-to-end ChunkFlow vs Megatron-LM across models and contexts.
+/// Each (model, context) cell is one sweep-engine scenario with the paper's
+/// tuned (ChunkSize, K) as its single candidate, so all cells evaluate in
+/// parallel on the shared engine.
 pub fn figure8(iters: usize, batch: usize, seed: u64) -> Json {
     println!("\n== figure8: end-to-end speedup (normalized iteration time) ==");
     println!(
         "{:<14} {:>6} {:>12} {:>12} {:>9}",
         "model", "ctx", "megatron s", "chunkflow s", "speedup"
     );
-    let mut rows = Vec::new();
-    let mut max_speedup: f64 = 0.0;
+    let mut scenarios = Vec::new();
     for m in ["qwen2.5-7b", "qwen2.5-14b", "qwen2.5-32b", "qwen2.5-72b"] {
         for ctx in [32 * 1024u64, 256 * 1024] {
-            let spec = ModelSpec::preset(m).unwrap();
-            let base_cfg = paper_table3(m, ctx).unwrap();
-            let (cs, k) = paper_table4(m, ctx).unwrap();
-            let mut cf_cfg = base_cfg.clone();
-            cf_cfg.recompute = RecomputeGranularity::Selective;
-            let base_cost = CostModel::new(spec.clone(), base_cfg);
-            let cf_cost = CostModel::new(spec, cf_cfg);
-            let mut sampler = BatchSampler::new(
-                LengthDistribution::evaluation_dataset(),
-                ctx,
-                batch,
+            scenarios.push(Scenario {
+                name: format!("figure8-{m}-{}", crate::util::format_tokens(ctx)),
+                model: ModelSpec::preset(m).unwrap(),
+                parallel: paper_table3(m, ctx).unwrap(),
+                context_length: ctx,
+                distribution: "eval".to_string(),
+                global_batch_size: batch,
+                iters,
                 seed,
-            );
-            let (mut tb, mut tc) = (0.0, 0.0);
-            for _ in 0..iters {
-                let b = sampler.next_batch();
-                tb += simulate_baseline_iteration(&b, &base_cost)
-                    .unwrap()
-                    .iteration_seconds;
-                tc += simulate_chunkflow_iteration(&b, &cf_cost, cs, k as usize)
-                    .unwrap()
-                    .iteration_seconds;
-            }
-            let speedup = tb / tc;
-            max_speedup = max_speedup.max(speedup);
-            println!(
-                "{m:<14} {:>5}K {:>12.2} {:>12.2} {:>8.2}x",
-                ctx / 1024,
-                tb / iters as f64,
-                tc / iters as f64,
-                speedup
-            );
-            rows.push(Json::obj(vec![
-                ("model", Json::str(m)),
-                ("context", Json::num(ctx as f64)),
-                ("megatron_seconds", Json::num(tb / iters as f64)),
-                ("chunkflow_seconds", Json::num(tc / iters as f64)),
-                ("speedup", Json::num(speedup)),
-            ]));
+                candidates: vec![paper_table4(m, ctx).unwrap()],
+            });
         }
+    }
+    let results = SweepEngine::auto()
+        .run(&scenarios)
+        .expect("figure8 sweep cannot fail on registry scenarios");
+    let mut rows = Vec::new();
+    let mut max_speedup: f64 = 0.0;
+    for r in &results {
+        let cf = &r.candidates[0].metrics;
+        let speedup = r.baseline.iteration_seconds / cf.iteration_seconds;
+        max_speedup = max_speedup.max(speedup);
+        println!(
+            "{:<14} {:>5}K {:>12.2} {:>12.2} {:>8.2}x",
+            r.scenario.model.name,
+            r.scenario.context_length / 1024,
+            r.baseline.iteration_seconds,
+            cf.iteration_seconds,
+            speedup
+        );
+        rows.push(Json::obj(vec![
+            ("model", Json::str(r.scenario.model.name.clone())),
+            ("context", Json::num(r.scenario.context_length as f64)),
+            ("megatron_seconds", Json::num(r.baseline.iteration_seconds)),
+            ("chunkflow_seconds", Json::num(cf.iteration_seconds)),
+            ("speedup", Json::num(speedup)),
+        ]));
     }
     println!("paper: up to 4.53x; ours: up to {max_speedup:.2}x (same winner everywhere)");
     let j = Json::Arr(rows);

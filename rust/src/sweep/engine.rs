@@ -1,0 +1,306 @@
+//! The parallel scenario-sweep engine.
+//!
+//! Unifies the previously siloed evaluation paths — `tune`'s grid search,
+//! `sim::e2e`'s baseline-vs-ChunkFlow comparison and the `report` table
+//! generators — behind one fan-out primitive built on
+//! [`crate::util::pool::ThreadPool`].
+//!
+//! Determinism contract: every work unit derives all of its inputs from the
+//! immutable [`Scenario`] description (each unit constructs its own
+//! `BatchSampler` from the scenario seed), and [`SweepEngine::map`]
+//! preserves input order, so a parallel sweep produces *bit-identical*
+//! results — and therefore bit-identical `BENCH_*.json` bytes — to a serial
+//! sweep under the same seed. A regression test asserts this.
+
+use std::sync::Arc;
+
+use crate::data::BatchSampler;
+use crate::memory::{MemoryModel, GPU_CAPACITY};
+use crate::sim::{simulate_baseline_iteration, simulate_chunkflow_iteration, CostModel};
+use crate::util::pool::ThreadPool;
+
+use super::scenario::Scenario;
+
+/// How the engine fans work units out.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Parallelism {
+    /// Evaluate in the calling thread, in order (reference behaviour).
+    Serial,
+    /// Fixed-size worker pool.
+    Threads(usize),
+    /// Pool sized to `std::thread::available_parallelism`.
+    Auto,
+}
+
+/// Metrics for one evaluated execution model (baseline or one ChunkFlow
+/// candidate) on one scenario.
+#[derive(Clone, Debug, PartialEq)]
+pub struct UnitMetrics {
+    /// Mean iteration wall-clock seconds over the scenario's batches.
+    pub iteration_seconds: f64,
+    /// Mean pipeline bubble ratio.
+    pub bubble_ratio: f64,
+    /// Mean micro-batches (sequences or chunks) per iteration.
+    pub num_microbatches: f64,
+    /// Modelled per-GPU peak memory in bytes.
+    pub peak_memory_bytes: u64,
+}
+
+/// One `(ChunkSize, K)` candidate's result.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CandidateResult {
+    pub chunk_size: u64,
+    pub k: u64,
+    pub metrics: UnitMetrics,
+    /// Fits in [`GPU_CAPACITY`] under the memory model.
+    pub feasible: bool,
+}
+
+/// Everything measured for one scenario.
+#[derive(Clone, Debug)]
+pub struct ScenarioResult {
+    pub scenario: Scenario,
+    pub baseline: UnitMetrics,
+    pub candidates: Vec<CandidateResult>,
+}
+
+impl ScenarioResult {
+    /// Fastest feasible candidate.
+    pub fn best(&self) -> Option<&CandidateResult> {
+        self.candidates
+            .iter()
+            .filter(|c| c.feasible)
+            .min_by(|a, b| {
+                a.metrics
+                    .iteration_seconds
+                    .partial_cmp(&b.metrics.iteration_seconds)
+                    .unwrap()
+            })
+    }
+
+    /// Baseline-vs-best-candidate speedup (the paper's headline metric).
+    pub fn speedup(&self) -> Option<f64> {
+        self.best()
+            .map(|b| self.baseline.iteration_seconds / b.metrics.iteration_seconds)
+    }
+}
+
+/// The engine itself: a fan-out policy.
+#[derive(Clone, Copy, Debug)]
+pub struct SweepEngine {
+    pub parallelism: Parallelism,
+}
+
+impl Default for SweepEngine {
+    fn default() -> Self {
+        Self::auto()
+    }
+}
+
+impl SweepEngine {
+    pub fn auto() -> Self {
+        Self { parallelism: Parallelism::Auto }
+    }
+
+    pub fn serial() -> Self {
+        Self { parallelism: Parallelism::Serial }
+    }
+
+    pub fn with_threads(n: usize) -> Self {
+        Self { parallelism: Parallelism::Threads(n.max(1)) }
+    }
+
+    /// Order-preserving map over independent work items — the fan-out
+    /// primitive every sweep consumer (grid search, scenario sweeps, report
+    /// generators) runs on.
+    pub fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send + 'static,
+        R: Send + 'static,
+        F: Fn(T) -> R + Send + Sync + 'static,
+    {
+        match self.parallelism {
+            Parallelism::Serial => items.into_iter().map(f).collect(),
+            Parallelism::Threads(n) => ThreadPool::new(n).map(items, f),
+            Parallelism::Auto => ThreadPool::with_default_size().map(items, f),
+        }
+    }
+
+    /// Evaluate every scenario: the baseline and every `(ChunkSize, K)`
+    /// candidate become independent work units fanned out across the pool,
+    /// then reassembled in registry order.
+    pub fn run(&self, scenarios: &[Scenario]) -> anyhow::Result<Vec<ScenarioResult>> {
+        // (scenario index, None = baseline | Some candidate) work units.
+        let mut units: Vec<(usize, Option<(u64, u64)>)> = Vec::new();
+        for (i, s) in scenarios.iter().enumerate() {
+            units.push((i, None));
+            for &cand in &s.candidates {
+                units.push((i, Some(cand)));
+            }
+        }
+        let shared: Arc<Vec<Scenario>> = Arc::new(scenarios.to_vec());
+        let evaluated = self.map(units, move |(i, cand)| {
+            let s = &shared[i];
+            let r = match cand {
+                None => evaluate_baseline(s),
+                Some((cs, k)) => evaluate_candidate(s, cs, k).map(|c| c.metrics),
+            };
+            (i, cand, r)
+        });
+
+        // Reassemble preserving scenario order; `map` preserved unit order.
+        let mut results: Vec<ScenarioResult> = Vec::with_capacity(scenarios.len());
+        for (i, cand, r) in evaluated {
+            let metrics = r.map_err(|e| {
+                e.context(format!("scenario `{}` unit {cand:?}", scenarios[i].name))
+            })?;
+            match cand {
+                None => results.push(ScenarioResult {
+                    scenario: scenarios[i].clone(),
+                    baseline: metrics,
+                    candidates: Vec::new(),
+                }),
+                Some((cs, k)) => {
+                    // The candidate's peak_memory_bytes IS the modelled
+                    // ChunkFlow peak, so feasibility needs no recompute.
+                    let feasible = metrics.peak_memory_bytes <= GPU_CAPACITY;
+                    results
+                        .last_mut()
+                        .expect("baseline unit precedes its candidates")
+                        .candidates
+                        .push(CandidateResult { chunk_size: cs, k, metrics, feasible });
+                }
+            }
+        }
+        Ok(results)
+    }
+}
+
+fn chunkflow_peak(s: &Scenario, chunk_size: u64, k: u64) -> u64 {
+    MemoryModel::new(s.model.clone(), s.chunkflow_parallel())
+        .chunkflow_peak(chunk_size, k, s.context_length)
+}
+
+/// Evaluate the Megatron-like baseline on one scenario.
+fn evaluate_baseline(s: &Scenario) -> anyhow::Result<UnitMetrics> {
+    let cost = CostModel::new(s.model.clone(), s.parallel.clone());
+    let mm = MemoryModel::new(s.model.clone(), s.parallel.clone());
+    let mut sampler = BatchSampler::new(
+        s.dist()?,
+        s.context_length,
+        s.global_batch_size,
+        s.seed,
+    );
+    let (mut secs, mut bubbles, mut items) = (0.0, 0.0, 0.0);
+    let mut peak = 0u64;
+    for _ in 0..s.iters {
+        let batch = sampler.next_batch();
+        let r = simulate_baseline_iteration(&batch, &cost)?;
+        secs += r.iteration_seconds;
+        bubbles += r.bubble_ratio;
+        items += r.num_items as f64;
+        // 1F1B in-flight set at stage 0: the longest sequence plus (PP-1)
+        // typical short ones (same accounting as `derive_baseline_config`).
+        let longest = batch.iter().map(|q| q.len).max().unwrap_or(0);
+        let mut in_flight = vec![longest];
+        in_flight.extend(std::iter::repeat(1024).take(s.parallel.pp as usize - 1));
+        peak = peak.max(mm.baseline_pipeline_peak(&in_flight));
+    }
+    let n = s.iters as f64;
+    Ok(UnitMetrics {
+        iteration_seconds: secs / n,
+        bubble_ratio: bubbles / n,
+        num_microbatches: items / n,
+        peak_memory_bytes: peak,
+    })
+}
+
+/// Evaluate one ChunkFlow `(ChunkSize, K)` candidate on one scenario.
+fn evaluate_candidate(s: &Scenario, chunk_size: u64, k: u64) -> anyhow::Result<CandidateResult> {
+    let cost = CostModel::new(s.model.clone(), s.chunkflow_parallel());
+    let peak = chunkflow_peak(s, chunk_size, k);
+    let mut sampler = BatchSampler::new(
+        s.dist()?,
+        s.context_length,
+        s.global_batch_size,
+        s.seed,
+    );
+    let (mut secs, mut bubbles, mut items) = (0.0, 0.0, 0.0);
+    for _ in 0..s.iters {
+        let batch = sampler.next_batch();
+        let r = simulate_chunkflow_iteration(&batch, &cost, chunk_size, k as usize)?;
+        secs += r.iteration_seconds;
+        bubbles += r.bubble_ratio;
+        items += r.num_items as f64;
+    }
+    let n = s.iters as f64;
+    Ok(CandidateResult {
+        chunk_size,
+        k,
+        metrics: UnitMetrics {
+            iteration_seconds: secs / n,
+            bubble_ratio: bubbles / n,
+            num_microbatches: items / n,
+            peak_memory_bytes: peak,
+        },
+        feasible: peak <= GPU_CAPACITY,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_scenarios() -> Vec<Scenario> {
+        Scenario::smoke()
+    }
+
+    #[test]
+    fn run_evaluates_all_units() {
+        let scenarios = tiny_scenarios();
+        let results = SweepEngine::serial().run(&scenarios).unwrap();
+        assert_eq!(results.len(), scenarios.len());
+        for (s, r) in scenarios.iter().zip(&results) {
+            assert_eq!(r.candidates.len(), s.candidates.len());
+            assert!(r.baseline.iteration_seconds > 0.0);
+            assert!(r.best().is_some(), "{}: some candidate must be feasible", s.name);
+        }
+    }
+
+    #[test]
+    fn chunkflow_wins_on_longtail_scenarios() {
+        let scenarios = tiny_scenarios();
+        let results = SweepEngine::auto().run(&scenarios).unwrap();
+        for r in &results {
+            if r.scenario.distribution.starts_with("uniform") {
+                continue; // the baseline's best case; no win guaranteed
+            }
+            let speedup = r.speedup().unwrap();
+            assert!(speedup > 1.0, "{}: speedup {speedup:.2}", r.scenario.name);
+        }
+    }
+
+    #[test]
+    fn parallel_matches_serial_exactly() {
+        let scenarios = tiny_scenarios();
+        let serial = SweepEngine::serial().run(&scenarios).unwrap();
+        let parallel = SweepEngine::with_threads(8).run(&scenarios).unwrap();
+        for (a, b) in serial.iter().zip(&parallel) {
+            assert_eq!(a.baseline, b.baseline, "{}", a.scenario.name);
+            assert_eq!(a.candidates, b.candidates, "{}", a.scenario.name);
+        }
+    }
+
+    #[test]
+    fn map_preserves_order_under_all_policies() {
+        let input: Vec<u64> = (0..64).collect();
+        for engine in [
+            SweepEngine::serial(),
+            SweepEngine::with_threads(4),
+            SweepEngine::auto(),
+        ] {
+            let out = engine.map(input.clone(), |x| x * 3);
+            assert_eq!(out, input.iter().map(|x| x * 3).collect::<Vec<_>>());
+        }
+    }
+}

@@ -1,0 +1,23 @@
+//! The scenario-sweep subsystem: the measurement backbone of the repo.
+//!
+//! Three pieces:
+//! - [`scenario`] — the registry of named workloads (paper Table 6 model ×
+//!   context matrix plus long-tail SFT / continual pre-training /
+//!   uniform-length distributions);
+//! - [`engine`] — the parallel fan-out engine over
+//!   [`crate::util::pool::ThreadPool`] that evaluates baselines and
+//!   `(ChunkSize, K)` candidates as independent, deterministic work units
+//!   (the same primitive `tune::GridSearch` and the `report` generators run
+//!   on);
+//! - [`output`] — deterministic, schema-versioned `BENCH_chunkflow.json`
+//!   emission, the machine-readable perf trajectory CI archives.
+//!
+//! `cargo run --release -- sweep --scenario smoke` is the CI entrypoint.
+
+pub mod engine;
+pub mod output;
+pub mod scenario;
+
+pub use engine::{CandidateResult, Parallelism, ScenarioResult, SweepEngine, UnitMetrics};
+pub use output::{to_json, validate, write_bench_json, DEFAULT_BENCH_PATH, SCHEMA_VERSION};
+pub use scenario::Scenario;

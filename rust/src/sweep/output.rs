@@ -1,0 +1,192 @@
+//! Schema-versioned `BENCH_*.json` emission — the machine-readable perf
+//! trajectory CI archives from every run.
+//!
+//! The schema is a contract (see ROADMAP.md "Open items"): bump
+//! [`SCHEMA_VERSION`] on any breaking change so downstream tooling that
+//! diffs trajectories across commits can detect incompatibility instead of
+//! misreading fields. Serialization is deterministic: object keys are
+//! sorted (`Json::Obj` is a BTreeMap), floats use Rust's shortest
+//! round-trip formatting, and no timestamps or host identifiers are
+//! embedded, so identical runs produce identical bytes.
+
+use std::path::Path;
+
+use crate::util::json::Json;
+
+use super::engine::{ScenarioResult, UnitMetrics};
+
+/// Version of the `BENCH_chunkflow.json` schema.
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// Default artifact filename.
+pub const DEFAULT_BENCH_PATH: &str = "BENCH_chunkflow.json";
+
+fn metrics_json(m: &UnitMetrics) -> Json {
+    Json::obj(vec![
+        ("iteration_seconds", Json::num(m.iteration_seconds)),
+        ("bubble_ratio", Json::num(m.bubble_ratio)),
+        ("num_microbatches", Json::num(m.num_microbatches)),
+        ("peak_memory_bytes", Json::num(m.peak_memory_bytes as f64)),
+    ])
+}
+
+/// Render sweep results (plus optional micro-benchmark rows from
+/// [`crate::util::bench::Bencher::to_json`]) as the versioned document.
+pub fn to_json(results: &[ScenarioResult], micro_benchmarks: Option<Json>) -> Json {
+    let scenarios = results
+        .iter()
+        .map(|r| {
+            let s = &r.scenario;
+            let candidates: Vec<Json> = r
+                .candidates
+                .iter()
+                .map(|c| {
+                    Json::obj(vec![
+                        ("chunk_size", Json::num(c.chunk_size as f64)),
+                        ("k", Json::num(c.k as f64)),
+                        ("feasible", Json::Bool(c.feasible)),
+                        ("metrics", metrics_json(&c.metrics)),
+                    ])
+                })
+                .collect();
+            let best = r
+                .best()
+                .map(|b| {
+                    Json::obj(vec![
+                        ("chunk_size", Json::num(b.chunk_size as f64)),
+                        ("k", Json::num(b.k as f64)),
+                        ("iteration_seconds", Json::num(b.metrics.iteration_seconds)),
+                    ])
+                })
+                .unwrap_or(Json::Null);
+            Json::obj(vec![
+                ("name", Json::str(s.name.clone())),
+                ("model", Json::str(s.model.name.clone())),
+                ("parallel", Json::str(s.parallel.paper_format())),
+                ("context_length", Json::num(s.context_length as f64)),
+                ("distribution", Json::str(s.distribution.clone())),
+                ("global_batch_size", Json::num(s.global_batch_size as f64)),
+                ("iters", Json::num(s.iters as f64)),
+                ("seed", Json::num(s.seed as f64)),
+                ("baseline", metrics_json(&r.baseline)),
+                ("candidates", Json::Arr(candidates)),
+                ("best", best),
+                (
+                    "speedup",
+                    r.speedup().map(Json::num).unwrap_or(Json::Null),
+                ),
+            ])
+        })
+        .collect();
+    let mut fields = vec![
+        ("schema_version", Json::num(SCHEMA_VERSION as f64)),
+        ("generator", Json::str("chunkflow-sweep")),
+        ("scenarios", Json::Arr(scenarios)),
+    ];
+    if let Some(micro) = micro_benchmarks {
+        fields.push(("micro_benchmarks", micro));
+    }
+    Json::obj(fields)
+}
+
+/// Write the versioned document to `path`.
+pub fn write_bench_json(
+    path: &Path,
+    results: &[ScenarioResult],
+    micro_benchmarks: Option<Json>,
+) -> anyhow::Result<()> {
+    to_json(results, micro_benchmarks).write_file(path)
+}
+
+/// Validate a parsed `BENCH_chunkflow.json` against the contract this
+/// module emits; returns the scenario count. Used by CI smoke and tests.
+pub fn validate(doc: &Json) -> anyhow::Result<usize> {
+    let version = doc.req_u64("schema_version")?;
+    anyhow::ensure!(
+        version == SCHEMA_VERSION,
+        "schema_version {version} != supported {SCHEMA_VERSION}"
+    );
+    let scenarios = doc
+        .get("scenarios")
+        .and_then(|s| s.as_arr())
+        .ok_or_else(|| anyhow::anyhow!("missing `scenarios` array"))?;
+    for s in scenarios {
+        let name = s.req_str("name")?;
+        let baseline = s
+            .get("baseline")
+            .ok_or_else(|| anyhow::anyhow!("{name}: missing baseline"))?;
+        anyhow::ensure!(
+            baseline.req_f64("iteration_seconds")? > 0.0,
+            "{name}: baseline iteration_seconds must be positive"
+        );
+        let cands = s
+            .get("candidates")
+            .and_then(|c| c.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("{name}: missing candidates"))?;
+        anyhow::ensure!(!cands.is_empty(), "{name}: no candidates");
+        for c in cands {
+            c.req_u64("chunk_size")?;
+            c.req_u64("k")?;
+            let m = c
+                .get("metrics")
+                .ok_or_else(|| anyhow::anyhow!("{name}: candidate missing metrics"))?;
+            anyhow::ensure!(
+                m.req_f64("iteration_seconds")? > 0.0,
+                "{name}: candidate iteration_seconds must be positive"
+            );
+        }
+    }
+    Ok(scenarios.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sweep::{Scenario, SweepEngine};
+
+    #[test]
+    fn emitted_json_validates_and_roundtrips() {
+        let results = SweepEngine::serial().run(&Scenario::smoke()).unwrap();
+        let j = to_json(&results, None);
+        assert_eq!(validate(&j).unwrap(), results.len());
+        assert!(validate(&j).unwrap() >= 3, "smoke must cover >= 3 scenarios");
+        // Byte-exact roundtrip through the parser.
+        let reparsed = Json::parse(&j.pretty()).unwrap();
+        assert_eq!(reparsed, j);
+        assert_eq!(validate(&reparsed).unwrap(), results.len());
+    }
+
+    #[test]
+    fn parallel_sweep_produces_bit_identical_json() {
+        let scenarios = Scenario::smoke();
+        let serial = SweepEngine::serial().run(&scenarios).unwrap();
+        let parallel = SweepEngine::with_threads(6).run(&scenarios).unwrap();
+        assert_eq!(
+            to_json(&serial, None).pretty(),
+            to_json(&parallel, None).pretty(),
+            "parallel sweep must be bit-identical to serial"
+        );
+    }
+
+    #[test]
+    fn validate_rejects_wrong_version() {
+        let mut doc = to_json(&[], None);
+        if let Json::Obj(o) = &mut doc {
+            o.insert("schema_version".into(), Json::num(99.0));
+        }
+        assert!(validate(&doc).is_err());
+    }
+
+    #[test]
+    fn write_creates_parent_dirs_and_file() {
+        let results = SweepEngine::serial()
+            .run(&Scenario::smoke()[..1].to_vec())
+            .unwrap();
+        let dir = std::env::temp_dir().join("chunkflow_sweep_test");
+        let path = dir.join("BENCH_chunkflow.json");
+        write_bench_json(&path, &results, None).unwrap();
+        let doc = Json::parse_file(&path).unwrap();
+        assert_eq!(validate(&doc).unwrap(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

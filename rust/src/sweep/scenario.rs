@@ -1,0 +1,227 @@
+//! Scenario registry for the sweep engine.
+//!
+//! A [`Scenario`] is one named workload the perf trajectory tracks: a model,
+//! a parallel strategy, a context length, a sequence-length distribution and
+//! a grid of `(ChunkSize, K)` candidates. The registry covers the paper's
+//! Table 6 / Figure 8 configurations (7B/14B-class models at 32K/128K/256K
+//! context) plus the workload-shape scenarios that related systems (Skrull's
+//! dynamic data scheduling, FlexSP's workload-adaptive sequence parallelism)
+//! evaluate: long-tail SFT, continual pre-training and uniform lengths.
+
+use crate::baseline::{paper_table3, paper_table4};
+use crate::config::{ModelSpec, ParallelConfig, RecomputeGranularity};
+use crate::data::LengthDistribution;
+
+const K: u64 = 1024;
+
+/// One named sweep workload. Everything needed to evaluate it is derivable
+/// deterministically from this description (no hidden state), which is what
+/// makes parallel and serial sweeps bit-identical.
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    pub name: String,
+    pub model: ModelSpec,
+    /// Baseline (Megatron-like) parallel strategy; ChunkFlow candidates run
+    /// the same `<TP, PP>` with selective recompute (the paper's setup).
+    pub parallel: ParallelConfig,
+    pub context_length: u64,
+    /// Registry name of the length distribution (see
+    /// [`LengthDistribution::by_name`]).
+    pub distribution: String,
+    pub global_batch_size: usize,
+    /// Batches averaged per evaluation.
+    pub iters: usize,
+    pub seed: u64,
+    /// `(ChunkSize, K)` grid evaluated for this scenario.
+    pub candidates: Vec<(u64, u64)>,
+}
+
+impl Scenario {
+    /// Resolve this scenario's length distribution.
+    pub fn dist(&self) -> anyhow::Result<LengthDistribution> {
+        LengthDistribution::by_name(&self.distribution)
+    }
+
+    /// ChunkFlow always runs selective recompute (peak memory is bounded by
+    /// ChunkSize, so full recompute is never needed).
+    pub fn chunkflow_parallel(&self) -> ParallelConfig {
+        let mut p = self.parallel.clone();
+        p.recompute = RecomputeGranularity::Selective;
+        p
+    }
+
+    fn paper(
+        model: &str,
+        ctx: u64,
+        dist: &str,
+        batch: usize,
+        iters: usize,
+        candidates: Vec<(u64, u64)>,
+    ) -> Scenario {
+        let spec = ModelSpec::preset(model).expect("registry model preset");
+        let parallel = paper_table3(model, ctx).expect("registry table3 config");
+        Scenario {
+            name: format!(
+                "{}-{}-{dist}",
+                model.trim_start_matches("qwen2.5-"),
+                crate::util::format_tokens(ctx)
+            ),
+            model: spec,
+            parallel,
+            context_length: ctx,
+            distribution: dist.to_string(),
+            global_batch_size: batch,
+            iters,
+            seed: DEFAULT_SEED,
+            candidates,
+        }
+    }
+
+    /// The default candidate grid around the paper's tuned point: the tuned
+    /// `(ChunkSize, K)` itself plus the constant-`ChunkSize*K` extremes of
+    /// Table 6, deduplicated.
+    fn default_candidates(model: &str, ctx: u64) -> Vec<(u64, u64)> {
+        let (cs, k) = paper_table4(model, ctx).expect("registry table4 point");
+        let mut grid = vec![(cs, k), (2 * K, 16), (8 * K, 4), (32 * K, 1)];
+        grid.sort();
+        grid.dedup();
+        grid
+    }
+
+    /// Full registry: paper Table 6 model/context matrix on the evaluation
+    /// distribution, plus the three workload-shape scenarios.
+    pub fn registry() -> Vec<Scenario> {
+        let mut out = Vec::new();
+        for model in ["qwen2.5-7b", "qwen2.5-14b"] {
+            for ctx in [32 * K, 128 * K, 256 * K] {
+                out.push(Self::paper(
+                    model,
+                    ctx,
+                    "eval",
+                    128,
+                    2,
+                    Self::default_candidates(model, ctx),
+                ));
+            }
+        }
+        // Workload-shape scenarios (7B @ 32K so they stay minutes-fast).
+        out.push(Self::paper(
+            "qwen2.5-7b",
+            32 * K,
+            "longtail-sft",
+            128,
+            2,
+            Self::default_candidates("qwen2.5-7b", 32 * K),
+        ));
+        out.push(Self::paper(
+            "qwen2.5-7b",
+            32 * K,
+            "continual-pretrain",
+            64,
+            2,
+            Self::default_candidates("qwen2.5-7b", 32 * K),
+        ));
+        out.push(Self::paper(
+            "qwen2.5-7b",
+            32 * K,
+            "uniform-8K",
+            128,
+            2,
+            Self::default_candidates("qwen2.5-7b", 32 * K),
+        ));
+        out
+    }
+
+    /// CI smoke set: three small scenarios (seconds, not minutes) spanning
+    /// the three distribution families.
+    pub fn smoke() -> Vec<Scenario> {
+        let shrink = |mut s: Scenario| {
+            s.name = format!("smoke-{}", s.name);
+            s.global_batch_size = 32;
+            s.iters = 1;
+            s.candidates = vec![(8 * K, 1), (8 * K, 4)];
+            s
+        };
+        vec![
+            shrink(Self::paper("qwen2.5-7b", 32 * K, "eval", 32, 1, vec![])),
+            shrink(Self::paper("qwen2.5-7b", 32 * K, "longtail-sft", 32, 1, vec![])),
+            shrink(Self::paper("qwen2.5-7b", 32 * K, "uniform-8K", 32, 1, vec![])),
+        ]
+    }
+
+    /// Resolve a `--scenario` argument: `smoke`, `paper`/`all`, or a
+    /// comma-separated list of registry names.
+    pub fn select(which: &str) -> anyhow::Result<Vec<Scenario>> {
+        match which {
+            "smoke" => Ok(Self::smoke()),
+            "paper" | "all" | "full" => Ok(Self::registry()),
+            names => {
+                let known: Vec<Scenario> =
+                    Self::registry().into_iter().chain(Self::smoke()).collect();
+                let mut picked = Vec::new();
+                for name in names.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+                    let s = known.iter().find(|s| s.name == name).ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "unknown scenario `{name}` (try `smoke`, `paper`, or one of: {})",
+                            known.iter().map(|s| s.name.as_str()).collect::<Vec<_>>().join(", ")
+                        )
+                    })?;
+                    picked.push(s.clone());
+                }
+                anyhow::ensure!(!picked.is_empty(), "no scenarios selected");
+                Ok(picked)
+            }
+        }
+    }
+}
+
+/// Fixed default seed: the perf trajectory compares like against like.
+pub const DEFAULT_SEED: u64 = 20250710;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_is_well_formed() {
+        let all = Scenario::registry();
+        assert!(all.len() >= 9, "expected >=9 scenarios, got {}", all.len());
+        let mut names = std::collections::BTreeSet::new();
+        for s in &all {
+            assert!(names.insert(s.name.clone()), "duplicate scenario {}", s.name);
+            assert!(!s.candidates.is_empty());
+            s.dist().expect("distribution resolves");
+            // Uniform scenarios must sample below the context limit.
+            assert!(s.context_length > 0 && s.global_batch_size > 0 && s.iters > 0);
+        }
+    }
+
+    #[test]
+    fn smoke_has_at_least_three_scenarios() {
+        let smoke = Scenario::smoke();
+        assert!(smoke.len() >= 3);
+        for s in &smoke {
+            assert!(s.name.starts_with("smoke-"));
+            assert!(s.global_batch_size <= 64, "smoke must stay fast");
+        }
+    }
+
+    #[test]
+    fn select_resolves_names_and_rejects_unknown() {
+        assert_eq!(Scenario::select("smoke").unwrap().len(), 3);
+        assert!(Scenario::select("paper").unwrap().len() >= 9);
+        let one = Scenario::select("7b-32K-eval").unwrap();
+        assert_eq!(one.len(), 1);
+        assert!(Scenario::select("not-a-scenario").is_err());
+    }
+
+    #[test]
+    fn chunkflow_parallel_is_always_selective() {
+        for s in Scenario::registry() {
+            assert_eq!(
+                s.chunkflow_parallel().recompute,
+                RecomputeGranularity::Selective
+            );
+        }
+    }
+}

@@ -10,7 +10,7 @@ use crate::config::ParallelConfig;
 use crate::data::{BatchSampler, LengthDistribution};
 use crate::memory::{MemoryModel, GPU_CAPACITY};
 use crate::sim::{simulate_chunkflow_iteration, CostModel};
-use crate::util::pool::ThreadPool;
+use crate::sweep::SweepEngine;
 
 /// One evaluated grid point.
 #[derive(Clone, Debug)]
@@ -56,18 +56,23 @@ impl GridSearch {
         }
     }
 
-    /// Evaluate every grid point (in parallel) and return them sorted by
-    /// iteration time, infeasible points last.
+    /// Evaluate every grid point (in parallel, on the default sweep engine)
+    /// and return them sorted by iteration time, infeasible points last.
     pub fn run(&self) -> Vec<GridPoint> {
+        self.run_on(&SweepEngine::auto())
+    }
+
+    /// Evaluate the grid on a specific [`SweepEngine`] (serial engines give
+    /// bit-identical results to parallel ones; see `sweep::engine`).
+    pub fn run_on(&self, engine: &SweepEngine) -> Vec<GridPoint> {
         let mut points: Vec<(u64, u64)> = Vec::new();
         for &c in &self.chunk_sizes {
             for &k in &self.ks {
                 points.push((c, k));
             }
         }
-        let pool = ThreadPool::with_default_size();
         let cfg = self.clone();
-        let mut results = pool.map(points, move |(chunk_size, k)| {
+        let mut results = engine.map(points, move |(chunk_size, k)| {
             cfg.evaluate(chunk_size, k)
         });
         results.sort_by(|a, b| {
@@ -155,6 +160,20 @@ mod tests {
         assert!(!p.feasible, "32K x K=16 must exceed 80 GiB");
         let q = g.evaluate(2048, 1);
         assert!(q.feasible);
+    }
+
+    #[test]
+    fn serial_and_parallel_grids_are_identical() {
+        let g = search();
+        let serial = g.run_on(&SweepEngine::serial());
+        let parallel = g.run_on(&SweepEngine::with_threads(4));
+        assert_eq!(serial.len(), parallel.len());
+        for (a, b) in serial.iter().zip(&parallel) {
+            assert_eq!(a.chunk_size, b.chunk_size);
+            assert_eq!(a.k, b.k);
+            assert_eq!(a.avg_iteration_seconds, b.avg_iteration_seconds);
+            assert_eq!(a.peak_memory_bytes, b.peak_memory_bytes);
+        }
     }
 
     #[test]
