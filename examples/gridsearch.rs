@@ -1,6 +1,10 @@
 //! §5 tuning demo: grid-search (ChunkSize, K) for a model/context pair and
 //! print the ranked feasible grid (Table 4 / Table 6 machinery).
 //!
+//! The search is memoized: batches are sampled once, Algorithm 1 runs once
+//! per (batch, ChunkSize), and each chunk set is shared across all K
+//! candidates — the elapsed time printed at the end covers the whole grid.
+//!
 //! ```bash
 //! cargo run --release --example gridsearch [-- <model> <ctx>]
 //! ```
@@ -32,7 +36,10 @@ fn main() -> anyhow::Result<()> {
         "{:>10} {:>4} {:>14} {:>10} {:>12} {:>6}",
         "ChunkSize", "K", "iter seconds", "bubble", "peak mem", "fits"
     );
-    for p in gs.run() {
+    let t0 = std::time::Instant::now();
+    let points = gs.run();
+    let elapsed = t0.elapsed();
+    for p in &points {
         println!(
             "{:>10} {:>4} {:>14.3} {:>9.1}% {:>12} {:>6}",
             chunkflow::util::format_tokens(p.chunk_size),
@@ -43,11 +50,16 @@ fn main() -> anyhow::Result<()> {
             if p.feasible { "yes" } else { "OOM" }
         );
     }
-    let best = gs.best().unwrap();
+    let best = points.iter().find(|p| p.feasible).expect("some feasible point");
     println!(
         "\nbest feasible: ({}, {}) — compare paper Table 4",
         chunkflow::util::format_tokens(best.chunk_size),
         best.k
+    );
+    println!(
+        "evaluated {} grid points in {elapsed:.2?} (memoized: {} Algorithm-1 runs)",
+        points.len(),
+        gs.chunk_sizes.len() * gs.iters
     );
     Ok(())
 }

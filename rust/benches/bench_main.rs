@@ -12,6 +12,11 @@
 //!
 //! Suites (DESIGN.md §4 experiment index):
 //!   construction  — Algorithm 1 over evaluation batches (hot path)
+//!   hotpath       — tuning hot-path micro-benchmarks (binpack vs the
+//!                   bounded-sweep oracle, construct_chunks, split_dp,
+//!                   simulate_chunkflow_iteration)
+//!   grid          — full (ChunkSize, K) grid evaluation, memoized engine
+//!                   vs the per-point reference path
 //!   scheduling    — Algorithm 2 plan generation + validation
 //!   pipeline      — discrete-event simulator throughput (Figures 2/6/7)
 //!   e2e           — per-iteration simulation, baseline vs ChunkFlow across
@@ -21,14 +26,17 @@
 //!   runtime       — PJRT chunk-step latency (requires `make artifacts`)
 
 use chunkflow::baseline::{paper_table3, paper_table4};
-use chunkflow::chunk::construct_chunks;
+use chunkflow::chunk::{binpack_min_bins, binpack_min_bins_bounded, construct_chunks};
 use chunkflow::config::{ModelSpec, ParallelConfig, RecomputeGranularity};
 use chunkflow::data::{BatchSampler, LengthDistribution, Sequence};
 use chunkflow::memory::MemoryModel;
 use chunkflow::pipeline::onef1b;
 use chunkflow::schedule::{schedule_step, validate_group_plan};
-use chunkflow::sim::{simulate_baseline_iteration, simulate_chunkflow_iteration, CostModel};
+use chunkflow::sim::{
+    simulate_baseline_iteration, simulate_chunkflow_iteration, split_dp, CostModel, DpPolicy,
+};
 use chunkflow::sweep::{self, Scenario, SweepEngine};
+use chunkflow::tune::GridSearch;
 use chunkflow::util::bench::{black_box, Bencher};
 
 const K: u64 = 1024;
@@ -49,6 +57,75 @@ fn bench_construction(b: &mut Bencher) {
             },
         );
     }
+}
+
+/// Tuning hot-path micro-benchmarks: the functions the (ChunkSize, K) sweep
+/// spends its cycles in, each measured in isolation. The bounded-sweep
+/// binpack oracle rides along so the single-pass win stays visible in the
+/// perf trajectory.
+fn bench_hotpath(b: &mut Bencher) {
+    println!("\n-- suite: tuning hot-path micro-benchmarks --");
+    let batch = eval_batch(256 * K, 512, 11);
+    let weights: Vec<u64> =
+        batch.iter().filter(|s| s.len <= 8 * K).map(|s| s.len).collect();
+    b.bench_items(
+        &format!("hotpath/binpack_min_bins/{}items", weights.len()),
+        Some(weights.len() as f64),
+        || {
+            black_box(binpack_min_bins(black_box(&weights), 8 * K));
+        },
+    );
+    b.bench_items(
+        &format!("hotpath/binpack_bounded_oracle/{}items", weights.len()),
+        Some(weights.len() as f64),
+        || {
+            black_box(binpack_min_bins_bounded(black_box(&weights), 8 * K));
+        },
+    );
+    b.bench_items("hotpath/construct_chunks/512seq", Some(512.0), || {
+        black_box(construct_chunks(black_box(&batch), 8 * K));
+    });
+    b.bench_items("hotpath/split_dp_chunk_balanced/512seq_dp8", Some(512.0), || {
+        black_box(split_dp(black_box(&batch), 8, DpPolicy::ChunkBalanced, 8 * K));
+    });
+    let cost = CostModel::new(
+        ModelSpec::preset("qwen2.5-7b").unwrap(),
+        ParallelConfig::new(4, 4, RecomputeGranularity::Selective),
+    );
+    b.bench("hotpath/simulate_chunkflow_iteration/512seq", || {
+        black_box(
+            simulate_chunkflow_iteration(black_box(&batch), &cost, 8 * K, 4).unwrap(),
+        );
+    });
+}
+
+/// Grid evaluation end to end: the memoized engine (batches sampled once,
+/// chunk sets shared across K) against the per-point reference that
+/// re-samples and re-runs Algorithm 1 per (ChunkSize, K) — the acceptance
+/// comparison for the memoization PR.
+fn bench_grid(b: &mut Bencher) {
+    println!("\n-- suite: (ChunkSize, K) grid evaluation, memoized vs per-point --");
+    let mut gs = GridSearch::standard(
+        ModelSpec::preset("qwen2.5-7b").unwrap(),
+        ParallelConfig::new(4, 4, RecomputeGranularity::Selective),
+        256 * K,
+    );
+    // Standard grid shape (5 ChunkSizes × 6 Ks), batch shrunk so the
+    // per-point reference stays benchable in CI.
+    gs.global_batch_size = 128;
+    gs.iters = 2;
+    let points = gs.chunk_sizes.len() * gs.ks.len();
+    let serial = SweepEngine::serial();
+    b.bench(&format!("grid/memoized_serial/{points}pts"), || {
+        black_box(gs.run_on(&serial));
+    });
+    b.bench(&format!("grid/per_point_reference/{points}pts"), || {
+        for &cs in &gs.chunk_sizes {
+            for &k in &gs.ks {
+                black_box(gs.evaluate(cs, k));
+            }
+        }
+    });
 }
 
 fn bench_scheduling(b: &mut Bencher) {
@@ -229,6 +306,8 @@ fn main() {
     println!("chunkflow benchmark harness (paper-artifact suites)\n");
     let mut b = Bencher::new(200, 800);
     bench_construction(&mut b);
+    bench_hotpath(&mut b);
+    bench_grid(&mut b);
     bench_scheduling(&mut b);
     bench_pipeline(&mut b);
     bench_e2e(&mut b);

@@ -7,16 +7,18 @@
 //!   of at most `ChunkSize` total tokens, minimizing the number of bins
 //!   (chunks) to maximize per-chunk GPU efficiency.
 //!
-//! Bin-count minimization follows the paper: try `BinCnt = 1, 2, …` and take
-//! the first feasible packing. Feasibility for a given `BinCnt` is decided
-//! by best-fit-decreasing, which is exact for the "does it fit in n bins"
-//! question often enough in practice; because we increment `BinCnt` until
-//! success, the result is always *valid*, and never worse than first-fit's
-//! bin count.
+//! Bin-count minimization runs a single unbounded best-fit-decreasing pass
+//! in O(n log n) (see [`binpack`]): it returns exactly the packing the
+//! paper's literal `BinCnt = 1, 2, …` sweep over bounded BFD would accept
+//! first, without the sweep. The result is always a *valid* packing; no
+//! optimality theorem is claimed for this BFD variant — the property tests
+//! pin validity, the token-sum lower bound, and bin-for-bin identity with
+//! the retained bounded-sweep reference oracle
+//! ([`binpack_min_bins_bounded`]).
 
-mod binpack;
+pub mod binpack;
 
-pub use binpack::{binpack_min_bins, fits_in_bins};
+pub use binpack::{binpack_min_bins, binpack_min_bins_bounded, fits_in_bins};
 
 use crate::data::Sequence;
 
@@ -105,14 +107,34 @@ impl ChunkSet {
 }
 
 /// Algorithm 1: reorganize `batch` into chunks of at most `chunk_size`.
+///
+/// The chunk vector is sized exactly up front (dependent-chunk count is
+/// computable from the lengths alone, standalone count comes from the
+/// packer), so the hot tuning loop does a single chunk-list allocation per
+/// call instead of amortized-doubling growth.
 pub fn construct_chunks(batch: &[Sequence], chunk_size: u64) -> ChunkSet {
     assert!(chunk_size > 0, "chunk_size must be positive");
-    let mut chunks: Vec<Chunk> = Vec::new();
 
-    // Lines 3-7: split long sequences.
-    let (long, short): (Vec<&Sequence>, Vec<&Sequence>) =
-        batch.iter().partition(|s| s.len > chunk_size);
-    for seq in &long {
+    // One partition pass: count the dependent chunks the long sequences will
+    // produce and collect the short ones for packing.
+    let mut short: Vec<&Sequence> = Vec::with_capacity(batch.len());
+    let mut n_dependent = 0usize;
+    for s in batch {
+        if s.len > chunk_size {
+            n_dependent += s.len.div_ceil(chunk_size) as usize;
+        } else {
+            short.push(s);
+        }
+    }
+
+    // Lines 8-13: bin-pack the short sequences minimizing bin count.
+    let weights: Vec<u64> = short.iter().map(|s| s.len).collect();
+    let bins = binpack_min_bins(&weights, chunk_size);
+
+    let mut chunks: Vec<Chunk> = Vec::with_capacity(n_dependent + bins.len());
+
+    // Lines 3-7: split long sequences (batch order, as before).
+    for seq in batch.iter().filter(|s| s.len > chunk_size) {
         let num_chunks = seq.len.div_ceil(chunk_size) as usize;
         for index in 0..num_chunks {
             let offset = index as u64 * chunk_size;
@@ -125,9 +147,6 @@ pub fn construct_chunks(batch: &[Sequence], chunk_size: u64) -> ChunkSet {
         }
     }
 
-    // Lines 8-13: bin-pack the short sequences minimizing bin count.
-    let weights: Vec<u64> = short.iter().map(|s| s.len).collect();
-    let bins = binpack_min_bins(&weights, chunk_size);
     for bin in bins {
         let segments = bin
             .into_iter()

@@ -5,6 +5,7 @@
 //!   report     regenerate paper tables & figures (report <id>|all)
 //!   simulate   one-off pipeline simulation for a model/context
 //!   sweep      parallel scenario sweep -> BENCH_chunkflow.json
+//!   benchdiff  compare two BENCH_chunkflow.json artifacts for metric drift
 //!   tune       (ChunkSize, K) grid search (§5)
 //!   data       inspect the synthetic long-tail datasets
 //!   help       this text
@@ -49,6 +50,7 @@ const SUBCOMMANDS: &[(&str, &str)] = &[
     ("report", "regenerate paper tables/figures: report <table1|figure8|...|all>"),
     ("simulate", "simulate one training iteration (baseline vs chunkflow)"),
     ("sweep", "parallel scenario sweep writing BENCH_chunkflow.json"),
+    ("benchdiff", "compare two BENCH_chunkflow.json artifacts: benchdiff <old> <new>"),
     ("tune", "grid-search (ChunkSize, K) for a configuration"),
     ("data", "print dataset distribution statistics"),
 ];
@@ -72,6 +74,7 @@ fn main() {
         Some("report") => cmd_report(&args),
         Some("simulate") => cmd_simulate(&args),
         Some("sweep") => cmd_sweep(&args),
+        Some("benchdiff") => cmd_benchdiff(&args),
         Some("tune") => cmd_tune(&args),
         Some("data") => cmd_data(&args),
         _ => {
@@ -255,6 +258,28 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
     // success — CI consumes this file.
     let n = sweep::validate(&Json::parse_file(path)?)?;
     println!("\nwrote {out} ({n} scenarios, schema v{})", sweep::SCHEMA_VERSION);
+    Ok(())
+}
+
+fn cmd_benchdiff(args: &Args) -> anyhow::Result<()> {
+    let (old, new) = match (args.positional.first(), args.positional.get(1)) {
+        (Some(old), Some(new)) => (old, new),
+        _ => anyhow::bail!("usage: chunkflow benchdiff <old.json> <new.json>"),
+    };
+    let old_doc = Json::parse_file(std::path::Path::new(old))?;
+    let new_doc = Json::parse_file(std::path::Path::new(new))?;
+    // The new artifact must satisfy the current schema contract; the old one
+    // may predate it (a schema bump compares zero scenarios).
+    sweep::validate(&new_doc)?;
+    let n = sweep::compare_scenarios(&old_doc, &new_doc)?;
+    if n == 0 {
+        println!(
+            "OK: nothing to compare between {old} and {new} \
+             (schema version changed, or the old artifact has no scenarios)"
+        );
+    } else {
+        println!("OK: {n} scenario(s) compared, no baseline/best/speedup drift");
+    }
     Ok(())
 }
 

@@ -28,8 +28,6 @@ pub use interleaved::simulate_interleaved;
 
 pub use onef1b::{standard_1f1b_agendas, state_aware_1f1b_agendas, PipelineItem};
 
-use std::collections::BTreeMap;
-
 /// Operation kinds on the pipeline.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
 pub enum OpKind {
@@ -134,9 +132,27 @@ impl Timeline {
 /// `before` has completed on that same stage.
 pub type ExtraEdges = Vec<(Op, Op)>;
 
+/// Dense index of an op kind (completion-table stride).
+#[inline]
+fn kind_idx(k: OpKind) -> usize {
+    match k {
+        OpKind::Fwd => 0,
+        OpKind::RecomputeFwd => 1,
+        OpKind::Bwd => 2,
+    }
+}
+
 /// Simulate per-stage agendas. `costs[i]` gives item i's per-stage fwd/bwd
 /// cost (uniform across stages — layers are split evenly). Returns an error
-/// on deadlock (malformed agendas).
+/// on deadlock (malformed agendas) or on an op referencing an item without
+/// costs.
+///
+/// The completion table is a dense `Vec<f64>` indexed by
+/// `(stage, op kind, item)` with NaN as the not-done sentinel: the inner
+/// scheduling loop probes it for every dependency check, and the flat
+/// lookups replace the previous `BTreeMap<(Op, usize), f64>` — the sweep's
+/// single hottest data structure — while visiting ops in exactly the same
+/// order, so timelines are bit-identical.
 pub fn simulate(
     agendas: &[Vec<Op>],
     costs: &[OpCosts],
@@ -144,20 +160,38 @@ pub fn simulate(
 ) -> anyhow::Result<Timeline> {
     let p = agendas.len();
     anyhow::ensure!(p >= 1, "need at least one stage");
+    let n = costs.len();
+    for op in agendas.iter().flatten() {
+        anyhow::ensure!(
+            op.item < n,
+            "agenda op {op:?} references item {} but only {n} costs were given",
+            op.item
+        );
+    }
+    for (before, after) in extra_edges {
+        for op in [before, after] {
+            anyhow::ensure!(
+                op.item < n,
+                "edge op {op:?} references item {} but only {n} costs were given",
+                op.item
+            );
+        }
+    }
+    let slot = |op: Op, s: usize| -> usize { (s * 3 + kind_idx(op.kind)) * n + op.item };
 
-    // completion[(op, stage)] = end time.
-    let mut done: BTreeMap<(Op, usize), f64> = BTreeMap::new();
+    // completion[slot(op, stage)] = end time; NaN = not executed yet.
+    let mut done: Vec<f64> = vec![f64::NAN; p * 3 * n];
     let mut cursor = vec![0usize; p]; // next agenda index per stage
     let mut stage_free = vec![0.0f64; p];
-    let mut ops_out: Vec<ScheduledOp> = Vec::new();
+    let total_ops: usize = agendas.iter().map(|a| a.len()).sum();
+    let mut ops_out: Vec<ScheduledOp> = Vec::with_capacity(total_ops);
 
-    // Edges indexed by the dependent op for O(1) lookup.
-    let mut edges_by_after: BTreeMap<Op, Vec<Op>> = BTreeMap::new();
+    // Edges indexed by the dependent op (stage-independent) for O(1) lookup.
+    let mut edges_by_after: Vec<Vec<Op>> = vec![Vec::new(); 3 * n];
     for (before, after) in extra_edges {
-        edges_by_after.entry(*after).or_default().push(*before);
+        edges_by_after[kind_idx(after.kind) * n + after.item].push(*before);
     }
 
-    let total_ops: usize = agendas.iter().map(|a| a.len()).sum();
     while ops_out.len() < total_ops {
         let mut progressed = false;
         for s in 0..p {
@@ -170,32 +204,28 @@ pub fn simulate(
                         if s == 0 {
                             Some(0.0)
                         } else {
-                            done.get(&(op, s - 1)).copied()
+                            not_nan(done[slot(op, s - 1)])
                         }
                     }
                     OpKind::Bwd => {
                         if s == p - 1 {
                             // Needs the (latest) forward of this item here.
-                            let f = done.get(&(Op::rfwd(op.item), s)).copied().or_else(|| {
-                                done.get(&(Op::fwd(op.item), s)).copied()
-                            });
-                            f
+                            not_nan(done[slot(Op::rfwd(op.item), s)])
+                                .or_else(|| not_nan(done[slot(Op::fwd(op.item), s)]))
                         } else {
-                            done.get(&(op, s + 1)).copied()
+                            not_nan(done[slot(op, s + 1)])
                         }
                     }
                 };
                 let Some(mut ready) = dep_ready else { break };
                 // Policy edges (same-stage).
                 let mut blocked = false;
-                if let Some(befores) = edges_by_after.get(&op) {
-                    for b in befores {
-                        match done.get(&(*b, s)) {
-                            Some(&t) => ready = ready.max(t),
-                            None => {
-                                blocked = true;
-                                break;
-                            }
+                for b in &edges_by_after[kind_idx(op.kind) * n + op.item] {
+                    match not_nan(done[slot(*b, s)]) {
+                        Some(t) => ready = ready.max(t),
+                        None => {
+                            blocked = true;
+                            break;
                         }
                     }
                 }
@@ -209,7 +239,7 @@ pub fn simulate(
                 };
                 let end = start + cost;
                 stage_free[s] = end;
-                done.insert((op, s), end);
+                done[slot(op, s)] = end;
                 ops_out.push(ScheduledOp { op, stage: s, start, end });
                 cursor[s] += 1;
                 progressed = true;
@@ -221,6 +251,16 @@ pub fn simulate(
     let makespan = ops_out.iter().map(|o| o.end).fold(0.0, f64::max);
     let busy = ops_out.iter().map(|o| o.end - o.start).sum();
     Ok(Timeline { num_stages: p, ops: ops_out, makespan, busy })
+}
+
+/// NaN-sentinel read: `Some(t)` iff the op has completed.
+#[inline]
+fn not_nan(t: f64) -> Option<f64> {
+    if t.is_nan() {
+        None
+    } else {
+        Some(t)
+    }
 }
 
 #[cfg(test)]

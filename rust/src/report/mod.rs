@@ -424,8 +424,10 @@ pub fn table6() -> Json {
 
 /// Figure 8: end-to-end ChunkFlow vs Megatron-LM across models and contexts.
 /// Each (model, context) cell is one sweep-engine scenario with the paper's
-/// tuned (ChunkSize, K) as its single candidate, so all cells evaluate in
-/// parallel on the shared engine.
+/// tuned (ChunkSize, K) as its single candidate; the engine fans the cells
+/// out at (scenario × batch × unit) granularity — every sampled batch of
+/// every cell is its own work unit — so the figure saturates the pool even
+/// though each cell has a single candidate.
 pub fn figure8(iters: usize, batch: usize, seed: u64) -> Json {
     println!("\n== figure8: end-to-end speedup (normalized iteration time) ==");
     println!(

@@ -11,6 +11,9 @@
 //! - `ChunkBalanced` — ChunkFlow-style: because chunks are near-uniform,
 //!   dealing *chunks* instead of sequences is balanced by construction.
 
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
 use crate::chunk::construct_chunks;
 use crate::data::Sequence;
 
@@ -63,24 +66,32 @@ pub fn split_dp(
         DpPolicy::SmartBatching => {
             // Greedy LPT: longest job to least-loaded rank.
             let mut sorted: Vec<&Sequence> = batch.iter().collect();
-            sorted.sort_by_key(|s| std::cmp::Reverse(s.len));
-            for s in sorted {
-                let r = (0..dp).min_by_key(|&r| loads[r]).unwrap();
-                loads[r] += s.len;
-            }
+            sorted.sort_by_key(|s| Reverse(s.len));
+            lpt_assign(&mut loads, sorted.into_iter().map(|s| s.len));
         }
         DpPolicy::ChunkBalanced => {
             // Chunks are ≤ chunk_size and mostly full: LPT over chunks.
             let set = construct_chunks(batch, chunk_size);
             let mut lens: Vec<u64> = set.chunks.iter().map(|c| c.total_len()).collect();
-            lens.sort_by_key(|&l| std::cmp::Reverse(l));
-            for l in lens {
-                let r = (0..dp).min_by_key(|&r| loads[r]).unwrap();
-                loads[r] += l;
-            }
+            lens.sort_by_key(|&l| Reverse(l));
+            lpt_assign(&mut loads, lens.into_iter());
         }
     }
     DpSplit { loads, policy }
+}
+
+/// Greedy LPT inner loop: each job goes to the currently-least-loaded rank.
+/// A min-heap on `(load, rank)` makes it O(n log dp) instead of the old
+/// O(n·dp) `min_by_key` scan, with the identical tiebreak (equal loads pick
+/// the lowest rank, exactly what the first-minimum scan did).
+fn lpt_assign(loads: &mut [u64], jobs: impl Iterator<Item = u64>) {
+    let mut heap: BinaryHeap<Reverse<(u64, usize)>> =
+        (0..loads.len()).map(|r| Reverse((loads[r], r))).collect();
+    for job in jobs {
+        let Reverse((load, r)) = heap.pop().expect("at least one rank");
+        heap.push(Reverse((load + job, r)));
+        loads[r] = load + job;
+    }
 }
 
 #[cfg(test)]
@@ -129,6 +140,35 @@ mod tests {
         assert!(cb.imbalance() < 1.15, "chunk-balanced imbalance {:.3}", cb.imbalance());
         let smart = split_dp(&batch, 8, DpPolicy::SmartBatching, 8192);
         assert!(cb.imbalance() <= smart.imbalance() + 0.05);
+        Ok(())
+    }
+
+    #[test]
+    fn heap_lpt_matches_linear_scan_reference() -> anyhow::Result<()> {
+        // The heap-based LPT must reproduce the old first-minimum
+        // `min_by_key` scan load-for-load (same lowest-rank tiebreak).
+        let batch = longtail_batch()?;
+        for dp in [1usize, 3, 8] {
+            for policy in [DpPolicy::SmartBatching, DpPolicy::ChunkBalanced] {
+                let fast = split_dp(&batch, dp, policy, 8192);
+                let mut lens: Vec<u64> = match policy {
+                    DpPolicy::SmartBatching => batch.iter().map(|s| s.len).collect(),
+                    DpPolicy::ChunkBalanced => construct_chunks(&batch, 8192)
+                        .chunks
+                        .iter()
+                        .map(|c| c.total_len())
+                        .collect(),
+                    DpPolicy::RoundRobin => unreachable!(),
+                };
+                lens.sort_by_key(|&l| Reverse(l));
+                let mut loads = vec![0u64; dp];
+                for l in lens {
+                    let r = (0..dp).min_by_key(|&r| loads[r]).unwrap();
+                    loads[r] += l;
+                }
+                assert_eq!(fast.loads, loads, "{policy:?} dp={dp}");
+            }
+        }
         Ok(())
     }
 

@@ -8,4 +8,7 @@ pub mod e2e;
 
 pub use cost::CostModel;
 pub use dp::{split_dp, DpPolicy, DpSplit};
-pub use e2e::{simulate_baseline_iteration, simulate_chunkflow_iteration, IterationResult};
+pub use e2e::{
+    simulate_baseline_iteration, simulate_chunkflow_iteration, simulate_chunkset,
+    IterationResult,
+};

@@ -5,18 +5,28 @@
 //! generators — behind one fan-out primitive built on
 //! [`crate::util::pool::ThreadPool`].
 //!
-//! Determinism contract: every work unit derives all of its inputs from the
-//! immutable [`Scenario`] description (each unit constructs its own
-//! `BatchSampler` from the scenario seed), and [`SweepEngine::map`]
-//! preserves input order, so a parallel sweep produces *bit-identical*
-//! results — and therefore bit-identical `BENCH_*.json` bytes — to a serial
-//! sweep under the same seed. A regression test asserts this.
+//! Determinism contract: each scenario's batches are sampled exactly once
+//! (serially, from the scenario seed) before the fan-out; every work unit is
+//! a pure function of the immutable [`Scenario`] description plus those
+//! shared batches; [`SweepEngine::map`] preserves input order; and the
+//! reduction accumulates per-batch results in batch order. So a parallel
+//! sweep produces *bit-identical* results — and therefore bit-identical
+//! `BENCH_*.json` bytes — to a serial sweep under the same seed, and both
+//! are bit-identical to the pre-memoization per-candidate evaluation (a
+//! regression test asserts each equality).
+//!
+//! Fan-out granularity is (scenario × batch × unit), where a unit is either
+//! the baseline or one ChunkSize *group* of candidates: Algorithm 1 runs
+//! once per (batch, ChunkSize) and the resulting `ChunkSet` is shared across
+//! all of that group's K values via [`simulate_chunkset`] — chunk
+//! construction does not depend on K.
 
 use std::sync::Arc;
 
-use crate::data::BatchSampler;
+use crate::chunk::construct_chunks;
+use crate::data::{BatchSampler, Sequence};
 use crate::memory::{MemoryModel, GPU_CAPACITY};
-use crate::sim::{simulate_baseline_iteration, simulate_chunkflow_iteration, CostModel};
+use crate::sim::{simulate_baseline_iteration, simulate_chunkset, CostModel, IterationResult};
 use crate::util::pool::ThreadPool;
 
 use super::scenario::Scenario;
@@ -126,53 +136,162 @@ impl SweepEngine {
         }
     }
 
-    /// Evaluate every scenario: the baseline and every `(ChunkSize, K)`
-    /// candidate become independent work units fanned out across the pool,
-    /// then reassembled in registry order.
+    /// Evaluate every scenario, fanning out at (scenario × batch × unit)
+    /// granularity — a unit being the baseline or one ChunkSize group of
+    /// candidates — and reassembling in registry order.
     pub fn run(&self, scenarios: &[Scenario]) -> anyhow::Result<Vec<ScenarioResult>> {
-        // (scenario index, None = baseline | Some candidate) work units.
-        let mut units: Vec<(usize, Option<(u64, u64)>)> = Vec::new();
-        for (i, s) in scenarios.iter().enumerate() {
-            units.push((i, None));
-            for &cand in &s.candidates {
-                units.push((i, Some(cand)));
-            }
+        // Sample every scenario's batches once, serially and up front: work
+        // units share them instead of each re-deriving the identical
+        // sampler stream from the scenario seed.
+        let mut batches: Vec<Vec<Vec<Sequence>>> = Vec::with_capacity(scenarios.len());
+        for s in scenarios {
+            let mut sampler =
+                BatchSampler::new(s.dist()?, s.context_length, s.global_batch_size, s.seed);
+            batches.push((0..s.iters).map(|_| sampler.next_batch()).collect());
         }
-        let shared: Arc<Vec<Scenario>> = Arc::new(scenarios.to_vec());
-        let evaluated = self.map(units, move |(i, cand)| {
-            let s = &shared[i];
-            let r = match cand {
-                None => evaluate_baseline(s),
-                Some((cs, k)) => evaluate_candidate(s, cs, k).map(|c| c.metrics),
-            };
-            (i, cand, r)
-        });
 
-        // Reassemble preserving scenario order; `map` preserved unit order.
-        let mut results: Vec<ScenarioResult> = Vec::with_capacity(scenarios.len());
-        for (i, cand, r) in evaluated {
-            let metrics = r.map_err(|e| {
-                e.context(format!("scenario `{}` unit {cand:?}", scenarios[i].name))
-            })?;
-            match cand {
-                None => results.push(ScenarioResult {
-                    scenario: scenarios[i].clone(),
-                    baseline: metrics,
-                    candidates: Vec::new(),
-                }),
-                Some((cs, k)) => {
-                    // The candidate's peak_memory_bytes IS the modelled
-                    // ChunkFlow peak, so feasibility needs no recompute.
-                    let feasible = metrics.peak_memory_bytes <= GPU_CAPACITY;
-                    results
-                        .last_mut()
-                        .expect("baseline unit precedes its candidates")
-                        .candidates
-                        .push(CandidateResult { chunk_size: cs, k, metrics, feasible });
+        // Group each scenario's candidates by ChunkSize: Algorithm 1 runs
+        // once per (batch, ChunkSize) and its ChunkSet is shared across the
+        // group's K values. slots[i][j] locates candidate j as
+        // (group index, position within the group's K list).
+        let mut groups: Vec<Vec<(u64, Vec<u64>)>> = Vec::with_capacity(scenarios.len());
+        let mut slots: Vec<Vec<(usize, usize)>> = Vec::with_capacity(scenarios.len());
+        for s in scenarios {
+            let mut g: Vec<(u64, Vec<u64>)> = Vec::new();
+            let mut slot = Vec::with_capacity(s.candidates.len());
+            for &(cs, k) in &s.candidates {
+                let gi = match g.iter().position(|(c, _)| *c == cs) {
+                    Some(gi) => gi,
+                    None => {
+                        g.push((cs, Vec::new()));
+                        g.len() - 1
+                    }
+                };
+                g[gi].1.push(k);
+                slot.push((gi, g[gi].1.len() - 1));
+            }
+            groups.push(g);
+            slots.push(slot);
+        }
+
+        let mut units: Vec<(usize, usize, UnitKind)> = Vec::new();
+        for (i, s) in scenarios.iter().enumerate() {
+            for b in 0..s.iters {
+                units.push((i, b, UnitKind::Baseline));
+                for gi in 0..groups[i].len() {
+                    units.push((i, b, UnitKind::Group(gi)));
                 }
             }
         }
+        let shared = Arc::new((scenarios.to_vec(), batches, groups.clone()));
+        let evaluated = self.map(units, move |(i, b, kind)| {
+            let (scenarios, batches, groups) = &*shared;
+            let s = &scenarios[i];
+            let batch = &batches[i][b];
+            let out = match kind {
+                UnitKind::Baseline => evaluate_baseline_batch(s, batch),
+                UnitKind::Group(gi) => {
+                    let (cs, ks) = &groups[i][gi];
+                    evaluate_group_batch(s, batch, *cs, ks)
+                }
+            };
+            (i, kind, out)
+        });
+
+        // Reduce in unit order (batch index ascending within each scenario),
+        // so float accumulation matches the pre-memoization per-candidate
+        // loop exactly.
+        let mut base_acc: Vec<BatchAcc> = scenarios.iter().map(|_| BatchAcc::default()).collect();
+        let mut base_peak: Vec<u64> = vec![0; scenarios.len()];
+        let mut cand_acc: Vec<Vec<Vec<BatchAcc>>> = groups
+            .iter()
+            .map(|g| g.iter().map(|(_, ks)| vec![BatchAcc::default(); ks.len()]).collect())
+            .collect();
+        for (i, kind, out) in evaluated {
+            let out = out.map_err(|e| {
+                let unit = match kind {
+                    UnitKind::Baseline => "baseline".to_string(),
+                    UnitKind::Group(gi) => format!(
+                        "ChunkSize {} (Ks {:?})",
+                        groups[i][gi].0, groups[i][gi].1
+                    ),
+                };
+                e.context(format!("scenario `{}` unit {unit}", scenarios[i].name))
+            })?;
+            match (kind, out) {
+                (UnitKind::Baseline, UnitOut::Baseline(r, peak)) => {
+                    base_acc[i].add(&r);
+                    base_peak[i] = base_peak[i].max(peak);
+                }
+                (UnitKind::Group(gi), UnitOut::Group(rs)) => {
+                    for (pos, r) in rs.iter().enumerate() {
+                        cand_acc[i][gi][pos].add(r);
+                    }
+                }
+                _ => unreachable!("unit kind and output variant always agree"),
+            }
+        }
+
+        // Assemble per scenario in registry order; candidate peaks come from
+        // the (batch-independent) memory model.
+        let mut results: Vec<ScenarioResult> = Vec::with_capacity(scenarios.len());
+        for (i, s) in scenarios.iter().enumerate() {
+            let n = s.iters as f64;
+            let baseline = base_acc[i].metrics(n, base_peak[i]);
+            let mut candidates = Vec::with_capacity(s.candidates.len());
+            for (j, &(cs, k)) in s.candidates.iter().enumerate() {
+                let (gi, pos) = slots[i][j];
+                let peak = chunkflow_peak(s, cs, k);
+                candidates.push(CandidateResult {
+                    chunk_size: cs,
+                    k,
+                    metrics: cand_acc[i][gi][pos].metrics(n, peak),
+                    feasible: peak <= GPU_CAPACITY,
+                });
+            }
+            results.push(ScenarioResult { scenario: s.clone(), baseline, candidates });
+        }
         Ok(results)
+    }
+}
+
+/// What one fan-out unit evaluates on one (scenario, batch) pair.
+#[derive(Clone, Copy, Debug)]
+enum UnitKind {
+    Baseline,
+    /// Index into the scenario's ChunkSize groups.
+    Group(usize),
+}
+
+/// A unit's result: one baseline iteration (plus its modelled in-flight
+/// peak), or one iteration per K of a ChunkSize group.
+enum UnitOut {
+    Baseline(IterationResult, u64),
+    Group(Vec<IterationResult>),
+}
+
+/// Per-batch accumulator whose addition order mirrors the old serial loop.
+#[derive(Clone, Copy, Debug, Default)]
+struct BatchAcc {
+    secs: f64,
+    bubbles: f64,
+    items: f64,
+}
+
+impl BatchAcc {
+    fn add(&mut self, r: &IterationResult) {
+        self.secs += r.iteration_seconds;
+        self.bubbles += r.bubble_ratio;
+        self.items += r.num_items as f64;
+    }
+
+    fn metrics(&self, n: f64, peak: u64) -> UnitMetrics {
+        UnitMetrics {
+            iteration_seconds: self.secs / n,
+            bubble_ratio: self.bubbles / n,
+            num_microbatches: self.items / n,
+            peak_memory_bytes: peak,
+        }
     }
 }
 
@@ -181,8 +300,42 @@ fn chunkflow_peak(s: &Scenario, chunk_size: u64, k: u64) -> u64 {
         .chunkflow_peak(chunk_size, k, s.context_length)
 }
 
-/// Evaluate the Megatron-like baseline on one scenario.
-fn evaluate_baseline(s: &Scenario) -> anyhow::Result<UnitMetrics> {
+/// One baseline work unit: simulate one batch and report its in-flight peak.
+fn evaluate_baseline_batch(s: &Scenario, batch: &[Sequence]) -> anyhow::Result<UnitOut> {
+    let cost = CostModel::new(s.model.clone(), s.parallel.clone());
+    let mm = MemoryModel::new(s.model.clone(), s.parallel.clone());
+    let r = simulate_baseline_iteration(batch, &cost)?;
+    // 1F1B in-flight set at stage 0: the longest sequence plus (PP-1)
+    // typical short ones (same accounting as `derive_baseline_config`).
+    let longest = batch.iter().map(|q| q.len).max().unwrap_or(0);
+    let mut in_flight = vec![longest];
+    in_flight.extend(std::iter::repeat(1024).take(s.parallel.pp as usize - 1));
+    let peak = mm.baseline_pipeline_peak(&in_flight);
+    Ok(UnitOut::Baseline(r, peak))
+}
+
+/// One ChunkFlow work unit: Algorithm 1 once for (batch, ChunkSize), then
+/// one state-aware simulation per K on the shared chunk set.
+fn evaluate_group_batch(
+    s: &Scenario,
+    batch: &[Sequence],
+    chunk_size: u64,
+    ks: &[u64],
+) -> anyhow::Result<UnitOut> {
+    let cost = CostModel::new(s.model.clone(), s.chunkflow_parallel());
+    let set = construct_chunks(batch, chunk_size);
+    let mut out = Vec::with_capacity(ks.len());
+    for &k in ks {
+        out.push(simulate_chunkset(&set, &cost, k as usize)?);
+    }
+    Ok(UnitOut::Group(out))
+}
+
+/// Pre-memoization reference: evaluate the baseline with a per-unit sampler
+/// stream — the shape of the code before the per-batch fan-out. Kept under
+/// `#[cfg(test)]` purely as the bit-identity oracle.
+#[cfg(test)]
+fn evaluate_baseline_reference(s: &Scenario) -> anyhow::Result<UnitMetrics> {
     let cost = CostModel::new(s.model.clone(), s.parallel.clone());
     let mm = MemoryModel::new(s.model.clone(), s.parallel.clone());
     let mut sampler = BatchSampler::new(
@@ -199,8 +352,6 @@ fn evaluate_baseline(s: &Scenario) -> anyhow::Result<UnitMetrics> {
         secs += r.iteration_seconds;
         bubbles += r.bubble_ratio;
         items += r.num_items as f64;
-        // 1F1B in-flight set at stage 0: the longest sequence plus (PP-1)
-        // typical short ones (same accounting as `derive_baseline_config`).
         let longest = batch.iter().map(|q| q.len).max().unwrap_or(0);
         let mut in_flight = vec![longest];
         in_flight.extend(std::iter::repeat(1024).take(s.parallel.pp as usize - 1));
@@ -215,8 +366,14 @@ fn evaluate_baseline(s: &Scenario) -> anyhow::Result<UnitMetrics> {
     })
 }
 
-/// Evaluate one ChunkFlow `(ChunkSize, K)` candidate on one scenario.
-fn evaluate_candidate(s: &Scenario, chunk_size: u64, k: u64) -> anyhow::Result<CandidateResult> {
+/// Pre-memoization reference: one ChunkFlow candidate, re-sampling batches
+/// and re-running Algorithm 1 per candidate. Bit-identity oracle for tests.
+#[cfg(test)]
+fn evaluate_candidate_reference(
+    s: &Scenario,
+    chunk_size: u64,
+    k: u64,
+) -> anyhow::Result<CandidateResult> {
     let cost = CostModel::new(s.model.clone(), s.chunkflow_parallel());
     let peak = chunkflow_peak(s, chunk_size, k);
     let mut sampler = BatchSampler::new(
@@ -228,7 +385,8 @@ fn evaluate_candidate(s: &Scenario, chunk_size: u64, k: u64) -> anyhow::Result<C
     let (mut secs, mut bubbles, mut items) = (0.0, 0.0, 0.0);
     for _ in 0..s.iters {
         let batch = sampler.next_batch();
-        let r = simulate_chunkflow_iteration(&batch, &cost, chunk_size, k as usize)?;
+        let r =
+            crate::sim::simulate_chunkflow_iteration(&batch, &cost, chunk_size, k as usize)?;
         secs += r.iteration_seconds;
         bubbles += r.bubble_ratio;
         items += r.num_items as f64;
@@ -277,6 +435,36 @@ mod tests {
             }
             let speedup = r.speedup().unwrap();
             assert!(speedup > 1.0, "{}: speedup {speedup:.2}", r.scenario.name);
+        }
+    }
+
+    #[test]
+    fn memoized_run_matches_per_candidate_reference_bit_identically() {
+        // The memoized per-batch fan-out must reproduce the old
+        // one-sampler-per-unit evaluation exactly: same batches (sampled
+        // once instead of once per unit), same float accumulation order.
+        let scenarios = tiny_scenarios();
+        let results = SweepEngine::serial().run(&scenarios).unwrap();
+        for (s, r) in scenarios.iter().zip(&results) {
+            let base = evaluate_baseline_reference(s).unwrap();
+            assert_eq!(r.baseline, base, "{}: baseline drifted", s.name);
+            for (c, &(cs, k)) in r.candidates.iter().zip(&s.candidates) {
+                let reference = evaluate_candidate_reference(s, cs, k).unwrap();
+                assert_eq!(c, &reference, "{}: candidate ({cs}, {k}) drifted", s.name);
+            }
+        }
+    }
+
+    #[test]
+    fn candidates_sharing_a_chunk_size_group_keep_their_order() {
+        // Two candidates with equal ChunkSize share one work unit; their
+        // results must still come back in candidate-list order.
+        let scenarios = tiny_scenarios();
+        let results = SweepEngine::with_threads(4).run(&scenarios).unwrap();
+        for (s, r) in scenarios.iter().zip(&results) {
+            let got: Vec<(u64, u64)> =
+                r.candidates.iter().map(|c| (c.chunk_size, c.k)).collect();
+            assert_eq!(got, s.candidates, "{}", s.name);
         }
     }
 

@@ -19,5 +19,7 @@ pub mod output;
 pub mod scenario;
 
 pub use engine::{CandidateResult, Parallelism, ScenarioResult, SweepEngine, UnitMetrics};
-pub use output::{to_json, validate, write_bench_json, DEFAULT_BENCH_PATH, SCHEMA_VERSION};
+pub use output::{
+    compare_scenarios, to_json, validate, write_bench_json, DEFAULT_BENCH_PATH, SCHEMA_VERSION,
+};
 pub use scenario::Scenario;

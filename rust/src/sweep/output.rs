@@ -136,7 +136,75 @@ pub fn validate(doc: &Json) -> anyhow::Result<usize> {
             );
         }
     }
+    // `micro_benchmarks` is optional, but when present it must hold the
+    // `util::bench` row shape schema v1 reserves for it.
+    if let Some(micro) = doc.get("micro_benchmarks") {
+        let rows = micro
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("`micro_benchmarks` must be an array"))?;
+        for row in rows {
+            let name = row.req_str("name")?;
+            // Zero is legal: sub-nanosecond iterations truncate to 0 ns in
+            // `util::bench` — only negatives and non-numbers are malformed.
+            for field in ["mean_ns", "p50_ns", "p95_ns", "min_ns"] {
+                anyhow::ensure!(
+                    row.req_f64(field)? >= 0.0,
+                    "micro-benchmark `{name}`: {field} must be non-negative"
+                );
+            }
+        }
+    }
     Ok(scenarios.len())
+}
+
+/// Compare two artifacts' scenario metrics for drift. Under the same
+/// `schema_version`, every scenario of the *old* artifact must still exist
+/// in the new one and agree exactly on `baseline`, `best` and `speedup`:
+/// the sweep is deterministic (fixed seeds, sorted-key serialization), so
+/// any metric difference — or a scenario silently disappearing — is a
+/// correctness bug, not noise. Scenarios that only exist in the new
+/// artifact are fine (additions). Returns the number of scenarios compared.
+/// Both documents must carry a `schema_version` (a corrupt artifact fails
+/// loudly instead of silently disabling the guard); *different* versions
+/// compare zero scenarios, so CI survives intentional schema bumps.
+pub fn compare_scenarios(old: &Json, new: &Json) -> anyhow::Result<usize> {
+    let old_version = old.req_u64("schema_version")?;
+    if old_version != new.req_u64("schema_version")? {
+        return Ok(0);
+    }
+    let scenario_map = |doc: &Json| -> Vec<(String, Json)> {
+        doc.get("scenarios")
+            .and_then(|s| s.as_arr())
+            .map(|arr| {
+                arr.iter()
+                    .filter_map(|s| {
+                        s.req_str("name").ok().map(|n| (n.to_string(), s.clone()))
+                    })
+                    .collect()
+            })
+            .unwrap_or_default()
+    };
+    let new_scenarios = scenario_map(new);
+    let mut compared = 0usize;
+    for (name, old_s) in scenario_map(old) {
+        let Some((_, new_s)) = new_scenarios.iter().find(|(n, _)| *n == name) else {
+            anyhow::bail!(
+                "scenario `{name}` present in the old artifact is missing from the new one \
+                 (dropped or renamed scenarios count as drift)"
+            );
+        };
+        for field in ["baseline", "best", "speedup"] {
+            let (o, w) = (old_s.get(field), new_s.get(field));
+            anyhow::ensure!(
+                o == w,
+                "scenario `{name}`: `{field}` drifted\n  old: {}\n  new: {}",
+                o.map(|j| j.dump()).unwrap_or_else(|| "<missing>".into()),
+                w.map(|j| j.dump()).unwrap_or_else(|| "<missing>".into()),
+            );
+        }
+        compared += 1;
+    }
+    Ok(compared)
 }
 
 #[cfg(test)]
@@ -166,6 +234,65 @@ mod tests {
             to_json(&parallel, None).pretty(),
             "parallel sweep must be bit-identical to serial"
         );
+    }
+
+    #[test]
+    fn validate_checks_micro_benchmark_rows() {
+        let results = SweepEngine::serial()
+            .run(&Scenario::smoke()[..1].to_vec())
+            .unwrap();
+        // Well-formed rows (the util::bench shape) validate.
+        let mut b = crate::util::bench::Bencher::new(5, 20);
+        b.bench("row", || {
+            crate::util::bench::black_box(1 + 1);
+        });
+        let j = to_json(&results, Some(b.to_json()));
+        assert_eq!(validate(&j).unwrap(), 1);
+        // Malformed rows are rejected.
+        let bad = to_json(&results, Some(Json::Arr(vec![Json::obj(vec![(
+            "name",
+            Json::str("no-mean"),
+        )])])));
+        let err = validate(&bad).unwrap_err().to_string();
+        assert!(err.contains("mean_ns"), "{err}");
+        // A non-array field is rejected.
+        let not_arr = to_json(&results, Some(Json::str("oops")));
+        assert!(validate(&not_arr).is_err());
+    }
+
+    #[test]
+    fn compare_scenarios_accepts_identical_and_rejects_drift() {
+        let results = SweepEngine::serial().run(&Scenario::smoke()).unwrap();
+        let a = to_json(&results, None);
+        let b = to_json(&results, None);
+        assert_eq!(compare_scenarios(&a, &b).unwrap(), results.len());
+
+        // Perturb one scenario's speedup: must be flagged as drift.
+        let mut drifted = b.clone();
+        if let Json::Obj(o) = &mut drifted {
+            if let Some(Json::Arr(scenarios)) = o.get_mut("scenarios") {
+                if let Some(Json::Obj(s0)) = scenarios.first_mut() {
+                    s0.insert("speedup".into(), Json::num(999.0));
+                }
+            }
+        }
+        let err = compare_scenarios(&a, &drifted).unwrap_err().to_string();
+        assert!(err.contains("speedup"), "{err}");
+
+        // A schema bump compares zero scenarios; a new artifact that only
+        // *adds* scenarios is fine.
+        let mut bumped = b.clone();
+        if let Json::Obj(o) = &mut bumped {
+            o.insert("schema_version".into(), Json::num(99.0));
+        }
+        assert_eq!(compare_scenarios(&bumped, &a).unwrap(), 0);
+        assert_eq!(compare_scenarios(&to_json(&[], None), &a).unwrap(), 0);
+
+        // But a scenario disappearing from the new artifact is drift.
+        let err = compare_scenarios(&a, &to_json(&[], None))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("missing"), "{err}");
     }
 
     #[test]

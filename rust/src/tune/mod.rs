@@ -4,12 +4,23 @@
 //! and retention budgets K, simulate the average iteration time over a few
 //! sampled batches, reject memory-infeasible points via the memory model,
 //! and return the ranked feasible grid (Table 4 / Table 6 generators).
+//!
+//! The sweep is memoized: batches are sampled once per search (not once per
+//! grid point), Algorithm 1 runs once per (batch, ChunkSize) work unit, and
+//! each resulting [`ChunkSet`](crate::chunk::ChunkSet) is shared across all
+//! K candidates via [`simulate_chunkset`] — chunk construction is
+//! independent of K. On the standard grid (5 ChunkSizes × 6 Ks) this cuts
+//! Algorithm-1 invocations 6×. Results are bit-identical to evaluating each
+//! point in isolation with [`GridSearch::evaluate`]; a test asserts it.
 
+use std::sync::Arc;
+
+use crate::chunk::construct_chunks;
 use crate::config::ModelSpec;
 use crate::config::ParallelConfig;
-use crate::data::{BatchSampler, LengthDistribution};
+use crate::data::{BatchSampler, LengthDistribution, Sequence};
 use crate::memory::{MemoryModel, GPU_CAPACITY};
-use crate::sim::{simulate_chunkflow_iteration, CostModel};
+use crate::sim::{simulate_chunkflow_iteration, simulate_chunkset, CostModel, IterationResult};
 use crate::sweep::SweepEngine;
 
 /// One evaluated grid point.
@@ -64,17 +75,65 @@ impl GridSearch {
 
     /// Evaluate the grid on a specific [`SweepEngine`] (serial engines give
     /// bit-identical results to parallel ones; see `sweep::engine`).
+    ///
+    /// Work units are (batch, ChunkSize) pairs — finer than a grid point in
+    /// the batch dimension, coarser in K: each unit runs Algorithm 1 once
+    /// and simulates every K on the shared chunk set.
     pub fn run_on(&self, engine: &SweepEngine) -> Vec<GridPoint> {
-        let mut points: Vec<(u64, u64)> = Vec::new();
-        for &c in &self.chunk_sizes {
-            for &k in &self.ks {
-                points.push((c, k));
+        // Sample the batches once. Every per-point sampler used to be seeded
+        // identically, so all grid points saw the same batch stream anyway.
+        let mut sampler = BatchSampler::new(
+            LengthDistribution::evaluation_dataset(),
+            self.context_length,
+            self.global_batch_size,
+            self.seed,
+        );
+        let batches: Arc<Vec<Vec<Sequence>>> =
+            Arc::new((0..self.iters).map(|_| sampler.next_batch()).collect());
+        let cost = Arc::new(CostModel::new(self.model.clone(), self.parallel.clone()));
+        let ks = Arc::new(self.ks.clone());
+
+        let mut units: Vec<(usize, u64)> =
+            Vec::with_capacity(self.chunk_sizes.len() * self.iters);
+        for &cs in &self.chunk_sizes {
+            for b in 0..self.iters {
+                units.push((b, cs));
             }
         }
-        let cfg = self.clone();
-        let mut results = engine.map(points, move |(chunk_size, k)| {
-            cfg.evaluate(chunk_size, k)
+        let per_unit: Vec<Vec<IterationResult>> = engine.map(units, move |(b, chunk_size)| {
+            let set = construct_chunks(&batches[b], chunk_size);
+            ks.iter()
+                .map(|&k| {
+                    simulate_chunkset(&set, &cost, k as usize)
+                        .expect("simulation cannot fail on valid chunk sets")
+                })
+                .collect()
         });
+
+        // Reduce per grid point, accumulating over batches in sample order
+        // so the averages are bit-identical to the per-point path.
+        let mm = MemoryModel::new(self.model.clone(), self.parallel.clone());
+        let mut results: Vec<GridPoint> =
+            Vec::with_capacity(self.chunk_sizes.len() * self.ks.len());
+        for (ci, &chunk_size) in self.chunk_sizes.iter().enumerate() {
+            for (ki, &k) in self.ks.iter().enumerate() {
+                let peak = mm.chunkflow_peak(chunk_size, k, self.context_length);
+                let (mut total, mut bubbles) = (0.0, 0.0);
+                for b in 0..self.iters {
+                    let r = &per_unit[ci * self.iters + b][ki];
+                    total += r.iteration_seconds;
+                    bubbles += r.bubble_ratio;
+                }
+                results.push(GridPoint {
+                    chunk_size,
+                    k,
+                    avg_iteration_seconds: total / self.iters as f64,
+                    bubble_ratio: bubbles / self.iters as f64,
+                    peak_memory_bytes: peak,
+                    feasible: peak <= GPU_CAPACITY,
+                });
+            }
+        }
         results.sort_by(|a, b| {
             (!a.feasible, a.avg_iteration_seconds)
                 .partial_cmp(&(!b.feasible, b.avg_iteration_seconds))
@@ -83,7 +142,13 @@ impl GridSearch {
         results
     }
 
-    /// Evaluate a single (ChunkSize, K) point.
+    /// Evaluate a single (ChunkSize, K) point in isolation.
+    ///
+    /// This is the un-memoized reference path: it re-samples the batch
+    /// stream and re-runs Algorithm 1 itself. [`GridSearch::run_on`] must
+    /// produce bit-identical numbers for every grid point (asserted by
+    /// `memoized_grid_matches_per_point_evaluate`); benchmarks loop this to
+    /// measure the memoization win.
     pub fn evaluate(&self, chunk_size: u64, k: u64) -> GridPoint {
         let mm = MemoryModel::new(self.model.clone(), self.parallel.clone());
         let peak = mm.chunkflow_peak(chunk_size, k, self.context_length);
@@ -173,6 +238,27 @@ mod tests {
             assert_eq!(a.k, b.k);
             assert_eq!(a.avg_iteration_seconds, b.avg_iteration_seconds);
             assert_eq!(a.peak_memory_bytes, b.peak_memory_bytes);
+        }
+    }
+
+    #[test]
+    fn memoized_grid_matches_per_point_evaluate() {
+        // The memoization contract: sampling batches once and sharing each
+        // (batch, ChunkSize) chunk set across every K must be *bit-identical*
+        // to evaluating each grid point in isolation.
+        let g = GridSearch { iters: 2, ..search() };
+        let pts = g.run_on(&SweepEngine::serial());
+        assert_eq!(pts.len(), g.chunk_sizes.len() * g.ks.len());
+        for p in &pts {
+            let q = g.evaluate(p.chunk_size, p.k);
+            assert_eq!(
+                p.avg_iteration_seconds, q.avg_iteration_seconds,
+                "({}, {}) seconds drifted",
+                p.chunk_size, p.k
+            );
+            assert_eq!(p.bubble_ratio, q.bubble_ratio);
+            assert_eq!(p.peak_memory_bytes, q.peak_memory_bytes);
+            assert_eq!(p.feasible, q.feasible);
         }
     }
 
