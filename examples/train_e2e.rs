@@ -9,7 +9,7 @@
 //! cargo run --release --example train_e2e [-- <steps> <batch> <model>]
 //! ```
 
-use chunkflow::config::{ModelSpec, TrainConfig};
+use chunkflow::config::{ChunkFlowParams, ModelSpec, TrainConfig};
 use chunkflow::data::LengthDistribution;
 use chunkflow::train::Trainer;
 use chunkflow::util::json::Json;
@@ -34,6 +34,8 @@ fn main() -> anyhow::Result<()> {
     cfg.context_length = 2048; // chunk 512 x 4 buckets
     cfg.lr = 1e-3;
     cfg.seed = 20250710;
+    // Must match the AOT artifacts' compiled chunk shape (tiny: 256).
+    cfg.chunkflow = ChunkFlowParams::new(if model == "tiny" { 256 } else { 512 }, 1);
 
     // Long-tail length mix scaled into artifact coverage: mostly short
     // sequences, a tail reaching the full context (mirrors Table 2's shape
@@ -61,13 +63,13 @@ fn main() -> anyhow::Result<()> {
         .sum::<f64>()
         / window as f64;
     let total_tokens: u64 = hist.iter().map(|m| m.tokens).sum();
-    let total_calls: u64 = hist.iter().map(|m| m.pjrt_calls).sum();
+    let total_calls: u64 = hist.iter().map(|m| m.backend_calls).sum();
 
     println!("\n=== e2e summary ===");
     println!("steps:            {}", hist.len());
     println!("wall time:        {wall:.1}s ({:.2}s/step)", wall / hist.len() as f64);
     println!("tokens trained:   {total_tokens}");
-    println!("pjrt chunk calls: {total_calls}");
+    println!("chunk calls:      {total_calls}");
     println!("loss/token:       first {:.4} -> last {:.4}", first.loss_per_token, last.loss_per_token);
     println!("loss/token avg:   first-{window} {head_avg:.4} -> last-{window} {tail_avg:.4}");
     println!("uniform baseline: ln(512) = {:.4}", (512f64).ln());

@@ -11,8 +11,9 @@
 //!   Megatron-LM-like baseline ([`baseline`]), the end-to-end iteration
 //!   simulator ([`sim`]), the (ChunkSize, K) tuner ([`tune`]), the parallel
 //!   scenario-sweep engine and its `BENCH_chunkflow.json` perf-trajectory
-//!   artifact ([`sweep`]), the real PJRT-backed trainer ([`runtime`],
-//!   [`train`]) and the paper-artifact report generators ([`report`]).
+//!   artifact ([`sweep`]), the trainer over pluggable execution backends
+//!   ([`runtime`] — the PJRT runtime and the pure-Rust reference backend —
+//!   and [`train`]) and the paper-artifact report generators ([`report`]).
 //! - **Layer 2** — `python/compile/model.py`: the chunked transformer
 //!   forward/backward in JAX, AOT-lowered to HLO text at build time.
 //! - **Layer 1** — `python/compile/kernels/chunk_attn.py`: the chunked

@@ -10,8 +10,11 @@
 //!   data       inspect the synthetic long-tail datasets
 //!   help       this text
 
-use chunkflow::config::{ModelSpec, ParallelConfig, RecomputeGranularity, TrainConfig};
+use chunkflow::config::{
+    ChunkFlowParams, ModelSpec, ParallelConfig, RecomputeGranularity, TrainConfig,
+};
 use chunkflow::data::{BatchSampler, LengthDistribution};
+use chunkflow::runtime::{Backend, Manifest, ReferenceBackend};
 use chunkflow::sim::{simulate_baseline_iteration, simulate_chunkflow_iteration, CostModel};
 use chunkflow::sweep::{self, Scenario, SweepEngine};
 use chunkflow::train::Trainer;
@@ -22,6 +25,7 @@ use chunkflow::util::json::Json;
 fn flags() -> Vec<FlagSpec> {
     vec![
         flag("model", true, "model preset (tiny|gpt-100m|qwen2.5-{7b,14b,32b,72b})"),
+        flag("backend", true, "train backend: reference (pure Rust, default) | pjrt"),
         flag("context", true, "context length, e.g. 32K / 256K"),
         flag("chunk-size", true, "ChunkSize in tokens (e.g. 8K)"),
         flag("k", true, "retention budget K"),
@@ -46,7 +50,7 @@ fn flags() -> Vec<FlagSpec> {
 }
 
 const SUBCOMMANDS: &[(&str, &str)] = &[
-    ("train", "run the real chunked trainer over PJRT artifacts"),
+    ("train", "run the real chunked trainer (reference backend or PJRT artifacts)"),
     ("report", "regenerate paper tables/figures: report <table1|figure8|...|all>"),
     ("simulate", "simulate one training iteration (baseline vs chunkflow)"),
     ("sweep", "parallel scenario sweep writing BENCH_chunkflow.json"),
@@ -104,15 +108,45 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     cfg.lr = args.get_f64("lr", 3e-4)?;
     cfg.seed = args.get_u64("seed", 1234)?;
     cfg.artifacts_dir = args.get_or("artifacts", "artifacts").to_string();
+    let k = args.get_u64("k", 1)?;
+    anyhow::ensure!(k >= 1, "--k must be >= 1");
 
-    // Clamp the sampled lengths to artifact coverage via a suitable
+    // Clamp the sampled lengths to backend coverage via a suitable
     // distribution: reuse the evaluation shape truncated at the context.
     let dist = LengthDistribution::from_cdf(
         "train",
         &[(256, 0.60), (512, 0.85), (cfg.context_length.max(513), 0.99)],
         cfg.context_length,
     );
-    let mut trainer = Trainer::new(cfg, dist)?;
+    match args.get_or("backend", "reference") {
+        "reference" => {
+            // The reference backend compiles nothing, so --chunk-size is free
+            // to choose; the in-memory manifest's buckets cover the context.
+            let chunk_size = args.get_u64("chunk-size", 256)?;
+            anyhow::ensure!(chunk_size >= 1, "--chunk-size must be >= 1");
+            cfg.chunkflow = ChunkFlowParams::new(chunk_size, k);
+            let max_chunks = cfg.context_length.div_ceil(chunk_size) as usize;
+            let manifest = Manifest::for_reference(&cfg.model, chunk_size as usize, max_chunks)?;
+            let backend = ReferenceBackend::new(manifest)?;
+            run_training(Trainer::with_backend(backend, cfg, dist)?, args)
+        }
+        "pjrt" => {
+            // The AOT artifacts own the compiled chunk shape: default
+            // --chunk-size to it; an explicit contradicting flag errors in
+            // Trainer::with_backend.
+            let runtime = chunkflow::runtime::Runtime::load(
+                std::path::Path::new(&cfg.artifacts_dir),
+                &cfg.model.name,
+            )?;
+            let chunk_size = args.get_u64("chunk-size", runtime.manifest.chunk_size as u64)?;
+            cfg.chunkflow = ChunkFlowParams::new(chunk_size, k);
+            run_training(Trainer::with_backend(runtime, cfg, dist)?, args)
+        }
+        other => anyhow::bail!("unknown backend `{other}` (have: reference, pjrt)"),
+    }
+}
+
+fn run_training<B: Backend>(mut trainer: Trainer<B>, args: &Args) -> anyhow::Result<()> {
     trainer.train()?;
     let out = args.get_or("out", "target/train_history.json");
     trainer.loss_history_json().write_file(std::path::Path::new(out))?;

@@ -85,6 +85,74 @@ impl Manifest {
     pub fn total_param_elements(&self) -> usize {
         self.params.iter().map(|p| p.size).sum()
     }
+
+    /// Assemble an in-memory manifest for the pure-Rust reference backend —
+    /// no artifact directory involved. Parameter specs follow the flat
+    /// `PARAM_ORDER` of `python/compile/model.py` exactly (the reference
+    /// backend and the AOT programs share one parameter layout), KV buckets
+    /// are every chunk-aligned prefix below `max_chunks`, and
+    /// `full_step_lens` covers every whole-chunk sequence length (the
+    /// reference oracle actually accepts any length; the list documents the
+    /// coverage PJRT would export).
+    pub fn for_reference(
+        model: &crate::config::ModelSpec,
+        chunk_size: usize,
+        max_chunks: usize,
+    ) -> anyhow::Result<Manifest> {
+        anyhow::ensure!(chunk_size > 0, "chunk_size must be positive");
+        anyhow::ensure!(max_chunks > 0, "max_chunks must be positive");
+        anyhow::ensure!(
+            model.num_kv_heads == model.num_heads,
+            "reference backend is MHA-only: model `{}` has {} kv heads != {} heads",
+            model.name,
+            model.num_kv_heads,
+            model.num_heads
+        );
+        anyhow::ensure!(
+            model.hidden_size % model.num_heads == 0,
+            "hidden_size {} not divisible by num_heads {}",
+            model.hidden_size,
+            model.num_heads
+        );
+        let v = model.vocab_size;
+        let h = model.hidden_size;
+        let l = model.num_layers;
+        let i = model.intermediate_size;
+        let spec = |name: &str, shape: Vec<u64>| ParamSpec {
+            name: name.to_string(),
+            size: shape.iter().product::<u64>() as usize,
+            shape,
+        };
+        // PARAM_ORDER from python/compile/model.py.
+        let params = vec![
+            spec("embed", vec![v, h]),
+            spec("ln_f", vec![h]),
+            spec("wq", vec![l, h, h]),
+            spec("wk", vec![l, h, h]),
+            spec("wv", vec![l, h, h]),
+            spec("wo", vec![l, h, h]),
+            spec("w_gate", vec![l, h, i]),
+            spec("w_up", vec![l, h, i]),
+            spec("w_down", vec![l, i, h]),
+            spec("norm1", vec![l, h]),
+            spec("norm2", vec![l, h]),
+        ];
+        let total: usize = params.iter().map(|p| p.size).sum();
+        Ok(Manifest {
+            model_name: model.name.clone(),
+            vocab_size: v as usize,
+            hidden_size: h as usize,
+            num_layers: l as usize,
+            num_heads: model.num_heads as usize,
+            head_dim: (h / model.num_heads) as usize,
+            model_param_count: total as u64,
+            chunk_size,
+            max_chunks,
+            kv_buckets: (0..max_chunks).map(|c| c * chunk_size).collect(),
+            full_step_lens: (1..=max_chunks).map(|c| c * chunk_size).collect(),
+            params,
+        })
+    }
 }
 
 #[cfg(test)]
@@ -125,5 +193,37 @@ mod tests {
     fn missing_fields_error() {
         let j = Json::parse(r#"{"chunk_size": 4}"#).unwrap();
         assert!(Manifest::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn reference_manifest_matches_python_param_layout() {
+        let model = crate::config::ModelSpec::preset("tiny").unwrap();
+        let m = Manifest::for_reference(&model, 256, 4).unwrap();
+        assert_eq!(m.chunk_size, 256);
+        assert_eq!(m.max_chunks, 4);
+        assert_eq!(m.kv_buckets, vec![0, 256, 512, 768]);
+        assert_eq!(m.full_step_lens, vec![256, 512, 768, 1024]);
+        assert_eq!(m.head_dim, 32);
+        let names: Vec<&str> = m.params.iter().map(|p| p.name.as_str()).collect();
+        assert_eq!(
+            names,
+            vec![
+                "embed", "ln_f", "wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down", "norm1",
+                "norm2"
+            ]
+        );
+        // tiny: v=512 h=128 l=2 i=384. embed 65536; ln_f 128; 4x wqkv/o of
+        // 2*128*128 = 32768; gate/up 2*128*384 = 98304 each; down the same;
+        // norms 256 each.
+        assert_eq!(m.params[0].size, 65536);
+        assert_eq!(m.params[2].shape, vec![2, 128, 128]);
+        assert_eq!(m.params[6].size, 2 * 128 * 384);
+        assert_eq!(m.model_param_count, m.total_param_elements() as u64);
+    }
+
+    #[test]
+    fn reference_manifest_rejects_gqa() {
+        let model = crate::config::ModelSpec::preset("qwen2.5-7b").unwrap();
+        assert!(Manifest::for_reference(&model, 1024, 2).is_err());
     }
 }

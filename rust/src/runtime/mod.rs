@@ -1,31 +1,85 @@
-//! PJRT runtime: loads the AOT artifacts produced by `python/compile/aot.py`
-//! and executes them from the training hot path. Python is never involved —
-//! the HLO text is parsed and compiled by the XLA runtime linked into this
-//! binary (`xla` crate over the PJRT C API).
+//! Execution backends for the trainer.
 //!
-//! The XLA-backed implementation lives in [`pjrt`] and is compiled only with
-//! the `pjrt` cargo feature (the `xla` crate is not available in the offline
-//! registry). Without the feature, [`Runtime::load`] returns a descriptive
-//! error and everything that does not execute real chunks — the simulators,
-//! memory model, sweep engine and report generators — works unchanged.
+//! `train::Trainer` consumes exactly three programs per model — the
+//! three-program contract captured by the [`Backend`] trait:
 //!
-//! Artifact set per model (see `manifest_<model>.json`):
+//! - `fwd_kv`    — state-only forward for one chunk over a KV-prefix bucket
+//!   (Algorithm 2 pass 1: activations discarded, KV + loss returned);
+//! - `chunk_vjp` — forward + backward for one chunk with the explicit KV
+//!   chain rule (recomputes the forward internally: the AOT realization of
+//!   Algorithm 2's "forward executed twice");
+//! - `full_step` — unchunked forward + backward over a whole sequence (the
+//!   oracle the gradient-equivalence tests compare against).
+//!
+//! Two implementors exist:
+//!
+//! - [`Runtime`] — the XLA/PJRT runtime over the AOT artifacts produced by
+//!   `python/compile/aot.py` (HLO text compiled by the XLA runtime linked
+//!   into this binary via the `xla` crate over the PJRT C API). Compiled
+//!   only with the `pjrt` cargo feature; without it, [`Runtime::load`]
+//!   returns a descriptive error and everything that does not execute real
+//!   chunks works unchanged.
+//! - [`ReferenceBackend`] — a pure-Rust, dependency-free, deterministic
+//!   implementation of the same transformer (`runtime/reference.rs`) with
+//!   exact analytic gradients in f64, so `chunkflow train --backend
+//!   reference` runs a full Algorithm-2 optimizer step on any machine and
+//!   CI can enforce the paper's gradient-equivalence and memory claims.
+//!
+//! The KV/gradient element type is an associated type of the backend
+//! ([`Backend::Elem`]): f32 on PJRT (device buffers), f64 on the reference
+//! backend (so chunked-vs-unchunked comparisons are exact to rounding noise
+//! far below the 1e-6 test tolerance).
+//!
+//! Artifact set per PJRT model (see `manifest_<model>.json`):
 //! - `fwd_kv_p{P}.hlo.txt` — state-only forward for KV-prefix bucket `P`;
 //! - `chunk_vjp_p{P}.hlo.txt` — forward+backward with explicit KV chain rule;
 //! - `full_step_s{S}.hlo.txt` — unchunked oracle (integration tests only).
-//!
-//! Executables are compiled once per bucket and cached. Parameters are
-//! uploaded once per optimizer step as device buffers and reused across
-//! chunk calls (`execute_b`), so per-chunk overhead is only the small chunk
-//! inputs.
 
 mod manifest;
 #[cfg(feature = "pjrt")]
 mod pjrt;
+mod reference;
 
 pub use manifest::{Manifest, ParamSpec};
 #[cfg(feature = "pjrt")]
 pub use pjrt::Runtime;
+pub use reference::ReferenceBackend;
+
+/// Element type of KV-state and gradient buffers: f32 on the PJRT runtime,
+/// f64 on the reference backend.
+pub trait Scalar:
+    Copy
+    + Clone
+    + Default
+    + PartialEq
+    + std::fmt::Debug
+    + std::ops::AddAssign
+    + Send
+    + Sync
+    + 'static
+{
+    const ZERO: Self;
+    /// Bytes per element (StateStore accounting).
+    const BYTES: u64;
+    /// Narrow to f32 (the optimizer state is f32 on every backend).
+    fn to_f32(self) -> f32;
+}
+
+impl Scalar for f32 {
+    const ZERO: f32 = 0.0;
+    const BYTES: u64 = 4;
+    fn to_f32(self) -> f32 {
+        self
+    }
+}
+
+impl Scalar for f64 {
+    const ZERO: f64 = 0.0;
+    const BYTES: u64 = 8;
+    fn to_f32(self) -> f32 {
+        self as f32
+    }
+}
 
 /// Flat parameter buffers in `PARAM_ORDER` (host side).
 #[derive(Clone, Debug)]
@@ -43,42 +97,85 @@ impl FlatParams {
 
 /// Inputs for one chunk execution (vector lengths == manifest.chunk_size).
 #[derive(Clone, Debug)]
-pub struct ChunkInputs {
+pub struct ChunkInputs<E = f32> {
     pub tokens: Vec<i32>,
     pub targets: Vec<i32>,
     pub pos: Vec<i32>,
     pub seg: Vec<i32>,
     /// Flattened [L, 2, P, H, D]; P = `prefix_len` must be a bucket.
-    pub kv_in: Vec<f32>,
+    pub kv_in: Vec<E>,
     pub prefix_len: usize,
 }
 
 /// Output of a fwd_kv call.
 #[derive(Debug)]
-pub struct FwdKvOut {
-    pub loss_sum: f32,
-    pub n_tok: f32,
+pub struct FwdKvOut<E = f32> {
+    pub loss_sum: f64,
+    pub n_tok: f64,
     /// Flattened [L, 2, C, H, D].
-    pub kv_own: Vec<f32>,
+    pub kv_own: Vec<E>,
 }
 
 /// Output of a chunk_vjp call.
 #[derive(Debug)]
-pub struct ChunkVjpOut {
-    pub loss_sum: f32,
-    pub n_tok: f32,
-    pub kv_own: Vec<f32>,
-    pub d_params: Vec<Vec<f32>>,
+pub struct ChunkVjpOut<E = f32> {
+    pub loss_sum: f64,
+    pub n_tok: f64,
+    pub kv_own: Vec<E>,
+    pub d_params: Vec<Vec<E>>,
     /// Flattened [L, 2, P, H, D].
-    pub d_kv_in: Vec<f32>,
+    pub d_kv_in: Vec<E>,
 }
 
 /// Output of the full-sequence oracle.
 #[derive(Debug)]
-pub struct FullStepOut {
-    pub loss_sum: f32,
-    pub n_tok: f32,
-    pub d_params: Vec<Vec<f32>>,
+pub struct FullStepOut<E = f32> {
+    pub loss_sum: f64,
+    pub n_tok: f64,
+    pub d_params: Vec<Vec<E>>,
+}
+
+/// The three-program contract `train::Trainer` consumes. See the module
+/// docs for the program semantics; all buffer layouts are row-major
+/// flattenings of the shapes documented on the IO structs.
+pub trait Backend {
+    /// Element type of KV-state and gradient buffers.
+    type Elem: Scalar;
+
+    fn manifest(&self) -> &Manifest;
+
+    /// Set current parameters (call after every optimizer update).
+    fn set_params(&mut self, params: &FlatParams) -> anyhow::Result<()>;
+
+    /// Algorithm 2's first-pass forward: discard activations, keep KV.
+    fn fwd_kv(&self, inputs: &ChunkInputs<Self::Elem>) -> anyhow::Result<FwdKvOut<Self::Elem>>;
+
+    /// Forward + backward for one chunk (recomputes the forward internally —
+    /// the realization of Alg. 2's "forward executed twice").
+    fn chunk_vjp(
+        &self,
+        inputs: &ChunkInputs<Self::Elem>,
+        g_kv_own: &[Self::Elem],
+    ) -> anyhow::Result<ChunkVjpOut<Self::Elem>>;
+
+    /// Unchunked oracle step over a full sequence of length `s`.
+    fn full_step(
+        &self,
+        s: usize,
+        tokens: &[i32],
+        targets: &[i32],
+        pos: &[i32],
+        seg: &[i32],
+    ) -> anyhow::Result<FullStepOut<Self::Elem>>;
+
+    /// Program executions since start (metrics).
+    fn calls(&self) -> u64;
+
+    /// Size in elements of a KV buffer for prefix `p`.
+    fn kv_elements(&self, p: usize) -> usize {
+        let m = self.manifest();
+        m.num_layers * 2 * p * m.num_heads * m.head_dim
+    }
 }
 
 /// Offline stand-in for the PJRT runtime, compiled when the `pjrt` feature
@@ -99,31 +196,36 @@ impl Runtime {
             "PJRT runtime is unavailable: this binary was built without the \
              `pjrt` cargo feature (the `xla` crate is not vendored offline). \
              Rebuild with `--features pjrt` after adding the xla dependency \
-             to rust/Cargo.toml."
+             to rust/Cargo.toml, or use `--backend reference`."
         )
     }
 
     fn unavailable<T>(&self) -> anyhow::Result<T> {
         anyhow::bail!("PJRT runtime unavailable (built without the `pjrt` feature)")
     }
+}
 
-    pub fn set_params(&mut self, _params: &FlatParams) -> anyhow::Result<()> {
+#[cfg(not(feature = "pjrt"))]
+impl Backend for Runtime {
+    type Elem = f32;
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn set_params(&mut self, _params: &FlatParams) -> anyhow::Result<()> {
         self.unavailable()
     }
 
-    pub fn fwd_kv(&self, _inputs: &ChunkInputs) -> anyhow::Result<FwdKvOut> {
+    fn fwd_kv(&self, _inputs: &ChunkInputs) -> anyhow::Result<FwdKvOut> {
         self.unavailable()
     }
 
-    pub fn chunk_vjp(
-        &self,
-        _inputs: &ChunkInputs,
-        _g_kv_own: &[f32],
-    ) -> anyhow::Result<ChunkVjpOut> {
+    fn chunk_vjp(&self, _inputs: &ChunkInputs, _g_kv_own: &[f32]) -> anyhow::Result<ChunkVjpOut> {
         self.unavailable()
     }
 
-    pub fn full_step(
+    fn full_step(
         &self,
         _s: usize,
         _tokens: &[i32],
@@ -134,9 +236,30 @@ impl Runtime {
         self.unavailable()
     }
 
-    /// Size in f32 elements of a KV buffer for prefix `p`.
-    pub fn kv_elements(&self, p: usize) -> usize {
-        let m = &self.manifest;
-        m.num_layers * 2 * p * m.num_heads * m.head_dim
+    fn calls(&self) -> u64 {
+        self.calls.get()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_contract() {
+        assert_eq!(Scalar::to_f32(1.5f64), 1.5f32);
+        assert_eq!(Scalar::to_f32(2.5f32), 2.5f32);
+        assert_eq!(<f32 as Scalar>::ZERO, 0.0);
+        assert_eq!(<f64 as Scalar>::BYTES, 8);
+        assert_eq!(<f32 as Scalar>::BYTES, 4);
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_runtime_load_errors_with_guidance() {
+        let err = Runtime::load(std::path::Path::new("artifacts"), "tiny").unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("pjrt"), "{msg}");
+        assert!(msg.contains("--backend reference"), "{msg}");
     }
 }

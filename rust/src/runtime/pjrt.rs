@@ -5,7 +5,7 @@
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
-use super::{ChunkInputs, ChunkVjpOut, FlatParams, FullStepOut, FwdKvOut, Manifest};
+use super::{Backend, ChunkInputs, ChunkVjpOut, FlatParams, FullStepOut, FwdKvOut, Manifest};
 
 pub struct Runtime {
     client: xla::PjRtClient,
@@ -66,29 +66,6 @@ impl Runtime {
         self.client
             .compile(&comp)
             .map_err(|e| anyhow::anyhow!("compiling {name}: {e:?}"))
-    }
-
-    /// Set current parameters (call after every optimizer update).
-    pub fn set_params(&mut self, params: &FlatParams) -> anyhow::Result<()> {
-        anyhow::ensure!(params.0.len() == self.manifest.params.len(), "param arity");
-        let mut lits = Vec::with_capacity(params.0.len());
-        for (spec, host) in self.manifest.params.iter().zip(&params.0) {
-            anyhow::ensure!(
-                host.len() == spec.size,
-                "param {} size {} != {}",
-                spec.name,
-                host.len(),
-                spec.size
-            );
-            let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
-            lits.push(
-                xla::Literal::vec1(host)
-                    .reshape(&dims)
-                    .map_err(|e| anyhow::anyhow!("param {}: {e:?}", spec.name))?,
-            );
-        }
-        self.params = Some(lits);
-        Ok(())
     }
 
     fn kv_dims(&self, p: usize) -> Vec<i64> {
@@ -164,9 +141,40 @@ impl Runtime {
     fn vec_f32(lit: &xla::Literal) -> anyhow::Result<Vec<f32>> {
         lit.to_vec::<f32>().map_err(|e| anyhow::anyhow!("tensor: {e:?}"))
     }
+}
+
+impl Backend for Runtime {
+    type Elem = f32;
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Set current parameters (call after every optimizer update).
+    fn set_params(&mut self, params: &FlatParams) -> anyhow::Result<()> {
+        anyhow::ensure!(params.0.len() == self.manifest.params.len(), "param arity");
+        let mut lits = Vec::with_capacity(params.0.len());
+        for (spec, host) in self.manifest.params.iter().zip(&params.0) {
+            anyhow::ensure!(
+                host.len() == spec.size,
+                "param {} size {} != {}",
+                spec.name,
+                host.len(),
+                spec.size
+            );
+            let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+            lits.push(
+                xla::Literal::vec1(host)
+                    .reshape(&dims)
+                    .map_err(|e| anyhow::anyhow!("param {}: {e:?}", spec.name))?,
+            );
+        }
+        self.params = Some(lits);
+        Ok(())
+    }
 
     /// Algorithm 2's first-pass forward: discard activations, keep KV.
-    pub fn fwd_kv(&self, inputs: &ChunkInputs) -> anyhow::Result<FwdKvOut> {
+    fn fwd_kv(&self, inputs: &ChunkInputs) -> anyhow::Result<FwdKvOut> {
         let exe = self
             .fwd_kv
             .get(&inputs.prefix_len)
@@ -175,19 +183,15 @@ impl Runtime {
         let out = self.run(exe, lits)?;
         anyhow::ensure!(out.len() == 3, "fwd_kv arity {}", out.len());
         Ok(FwdKvOut {
-            loss_sum: Self::scalar_f32(&out[0])?,
-            n_tok: Self::scalar_f32(&out[1])?,
+            loss_sum: Self::scalar_f32(&out[0])? as f64,
+            n_tok: Self::scalar_f32(&out[1])? as f64,
             kv_own: Self::vec_f32(&out[2])?,
         })
     }
 
     /// Forward + backward for one chunk (recomputes the forward internally —
     /// the AOT realization of Alg. 2's "forward executed twice").
-    pub fn chunk_vjp(
-        &self,
-        inputs: &ChunkInputs,
-        g_kv_own: &[f32],
-    ) -> anyhow::Result<ChunkVjpOut> {
+    fn chunk_vjp(&self, inputs: &ChunkInputs, g_kv_own: &[f32]) -> anyhow::Result<ChunkVjpOut> {
         let exe = self
             .chunk_vjp
             .get(&inputs.prefix_len)
@@ -201,8 +205,8 @@ impl Runtime {
             d_params.push(Self::vec_f32(lit)?);
         }
         Ok(ChunkVjpOut {
-            loss_sum: Self::scalar_f32(&out[0])?,
-            n_tok: Self::scalar_f32(&out[1])?,
+            loss_sum: Self::scalar_f32(&out[0])? as f64,
+            n_tok: Self::scalar_f32(&out[1])? as f64,
             kv_own: Self::vec_f32(&out[2])?,
             d_params,
             d_kv_in: Self::vec_f32(&out[3 + np])?,
@@ -210,7 +214,7 @@ impl Runtime {
     }
 
     /// Unchunked oracle step over a full sequence of exported length `s`.
-    pub fn full_step(
+    fn full_step(
         &self,
         s: usize,
         tokens: &[i32],
@@ -236,15 +240,13 @@ impl Runtime {
             d_params.push(Self::vec_f32(lit)?);
         }
         Ok(FullStepOut {
-            loss_sum: Self::scalar_f32(&out[0])?,
-            n_tok: Self::scalar_f32(&out[1])?,
+            loss_sum: Self::scalar_f32(&out[0])? as f64,
+            n_tok: Self::scalar_f32(&out[1])? as f64,
             d_params,
         })
     }
 
-    /// Size in f32 elements of a KV buffer for prefix `p`.
-    pub fn kv_elements(&self, p: usize) -> usize {
-        let m = &self.manifest;
-        m.num_layers * 2 * p * m.num_heads * m.head_dim
+    fn calls(&self) -> u64 {
+        self.calls.get()
     }
 }

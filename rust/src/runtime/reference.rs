@@ -1,0 +1,1156 @@
+//! Pure-Rust reference backend: the same chunked transformer as
+//! `python/compile/model.py`, with exact analytic gradients in f64.
+//!
+//! Architecture (must stay in sync with the python model): GPT-style
+//! decoder — pre-RMSNorm (eps 1e-6), RoPE (theta 10000) on Q/K, causal MHA
+//! with segment masking and KV-prefix state, SwiGLU MLP, tied input/output
+//! embeddings, summed next-token cross-entropy over targets >= 0.
+//!
+//! The three programs of the [`Backend`](super::Backend) contract are
+//! implemented directly:
+//!
+//! - `fwd_kv`:    forward only; returns loss, token count and this chunk's
+//!   post-RoPE K / V tensors ([L, 2, C, H, D]);
+//! - `chunk_vjp`: forward + hand-derived reverse pass; cotangents are
+//!   d(loss_sum) = 1 plus `g_kv_own` flowing into this chunk's KV output —
+//!   the explicit chain rule that replaces framework autograd across the
+//!   program boundary. Returns parameter grads and `d_kv_in`;
+//! - `full_step`: the unchunked oracle over a whole sequence (any length).
+//!
+//! Everything runs in f64 end to end (parameters are widened once per
+//! `set_params`), so the chunked-vs-unchunked gradient-equivalence suite
+//! observes only op-reordering noise (~1e-12 relative), far below its 1e-6
+//! gate. Execution is single-threaded, allocation-order deterministic, and
+//! bitwise reproducible for identical inputs.
+//!
+//! Masking, per the Layer-1 kernel (`python/compile/kernels/chunk_attn.py`):
+//! key `j` is visible to query `i` iff `kpos <= qpos` (causal) AND
+//! (`qseg == kseg && qseg >= 0` (same segment) OR `qpos == kpos && qseg ==
+//! kseg` (self-token, which keeps padding rows well-defined)). Prefix keys
+//! carry positions `0..P` and segment 0 — dependent chunks are
+//! single-segment by construction.
+
+#![allow(clippy::too_many_arguments, clippy::needless_range_loop)]
+
+use std::cell::Cell;
+
+use super::{Backend, ChunkInputs, ChunkVjpOut, FlatParams, FullStepOut, FwdKvOut, Manifest};
+
+const ROPE_THETA: f64 = 10000.0;
+const RMS_EPS: f64 = 1e-6;
+
+// Flat parameter indices (PARAM_ORDER of python/compile/model.py).
+const P_EMBED: usize = 0;
+const P_LN_F: usize = 1;
+const P_WQ: usize = 2;
+const P_WK: usize = 3;
+const P_WV: usize = 4;
+const P_WO: usize = 5;
+const P_W_GATE: usize = 6;
+const P_W_UP: usize = 7;
+const P_W_DOWN: usize = 8;
+const P_NORM1: usize = 9;
+const P_NORM2: usize = 10;
+
+const PARAM_ORDER: [&str; 11] = [
+    "embed", "ln_f", "wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down", "norm1", "norm2",
+];
+
+/// Model dimensions derived from the manifest once at construction.
+#[derive(Clone, Copy, Debug)]
+struct Dims {
+    /// Layers.
+    l: usize,
+    /// Attention heads.
+    heads: usize,
+    /// Head dimension.
+    d: usize,
+    /// Hidden size (heads * d).
+    hh: usize,
+    /// MLP intermediate size.
+    ii: usize,
+    /// Vocabulary size.
+    v: usize,
+}
+
+/// Deterministic in-process backend (see module docs).
+pub struct ReferenceBackend {
+    pub manifest: Manifest,
+    dims: Dims,
+    /// Current parameters, widened to f64 (set via `set_params`).
+    params: Option<Vec<Vec<f64>>>,
+    calls: Cell<u64>,
+}
+
+/// Per-layer forward caches consumed by the reverse pass.
+struct LayerCache {
+    /// [T, hh] layer input (pre-norm1).
+    x_in: Vec<f64>,
+    /// [T, hh] norm1 output.
+    xn1: Vec<f64>,
+    /// [T] norm1 rsqrt factors.
+    inv1: Vec<f64>,
+    /// [H, T, D] post-RoPE queries.
+    q: Vec<f64>,
+    /// [H, S, D] prefix + own keys (post-RoPE).
+    k_full: Vec<f64>,
+    /// [H, S, D] prefix + own values.
+    v_full: Vec<f64>,
+    /// [H, T, S] attention probabilities (masked entries exactly 0).
+    probs: Vec<f64>,
+    /// [T, hh] heads concatenated, pre-wo.
+    attn_flat: Vec<f64>,
+    /// [T, hh] after attention residual.
+    x_mid: Vec<f64>,
+    /// [T, hh] norm2 output.
+    xn2: Vec<f64>,
+    /// [T] norm2 rsqrt factors.
+    inv2: Vec<f64>,
+    /// [T, ii] gate pre-activation.
+    gate: Vec<f64>,
+    /// [T, ii] up projection.
+    up: Vec<f64>,
+    /// [T, ii] silu(gate) * up.
+    act: Vec<f64>,
+}
+
+/// Whole-forward cache.
+struct Cache {
+    layers: Vec<LayerCache>,
+    /// [T, hh] final hidden states (input to ln_f).
+    x_out: Vec<f64>,
+    /// [T, hh] ln_f output.
+    xf: Vec<f64>,
+    /// [T] ln_f rsqrt factors.
+    inv_f: Vec<f64>,
+    /// [T, V] vocab softmax per row.
+    probs_v: Vec<f64>,
+}
+
+impl ReferenceBackend {
+    /// Build a backend over an in-memory manifest (see
+    /// [`Manifest::for_reference`]). Call `set_params` before executing.
+    pub fn new(manifest: Manifest) -> anyhow::Result<Self> {
+        anyhow::ensure!(
+            manifest.params.len() == PARAM_ORDER.len(),
+            "manifest has {} params, reference model needs {}",
+            manifest.params.len(),
+            PARAM_ORDER.len()
+        );
+        for (spec, want) in manifest.params.iter().zip(PARAM_ORDER.iter()) {
+            anyhow::ensure!(
+                spec.name == *want,
+                "manifest param `{}` where reference model expects `{want}` \
+                 (PARAM_ORDER mismatch)",
+                spec.name
+            );
+        }
+        let hh = manifest.hidden_size;
+        let heads = manifest.num_heads;
+        let d = manifest.head_dim;
+        anyhow::ensure!(heads * d == hh, "heads*head_dim {} != hidden {hh}", heads * d);
+        let gate_shape = &manifest.params[P_W_GATE].shape;
+        anyhow::ensure!(gate_shape.len() == 3, "w_gate must be [L, h, i]");
+        let ii = gate_shape[2] as usize;
+        let dims = Dims { l: manifest.num_layers, heads, d, hh, ii, v: manifest.vocab_size };
+        let expect: [(usize, Vec<usize>); 11] = [
+            (P_EMBED, vec![dims.v, hh]),
+            (P_LN_F, vec![hh]),
+            (P_WQ, vec![dims.l, hh, hh]),
+            (P_WK, vec![dims.l, hh, hh]),
+            (P_WV, vec![dims.l, hh, hh]),
+            (P_WO, vec![dims.l, hh, hh]),
+            (P_W_GATE, vec![dims.l, hh, ii]),
+            (P_W_UP, vec![dims.l, hh, ii]),
+            (P_W_DOWN, vec![dims.l, ii, hh]),
+            (P_NORM1, vec![dims.l, hh]),
+            (P_NORM2, vec![dims.l, hh]),
+        ];
+        for (idx, shape) in expect.iter() {
+            let got: Vec<usize> = manifest.params[*idx].shape.iter().map(|&x| x as usize).collect();
+            anyhow::ensure!(
+                got == *shape,
+                "param `{}` shape {:?} != expected {:?}",
+                manifest.params[*idx].name,
+                got,
+                shape
+            );
+            anyhow::ensure!(
+                manifest.params[*idx].size == shape.iter().product::<usize>(),
+                "param `{}` size mismatch",
+                manifest.params[*idx].name
+            );
+        }
+        Ok(Self { manifest, dims, params: None, calls: Cell::new(0) })
+    }
+
+    fn params_ref(&self) -> anyhow::Result<&Vec<Vec<f64>>> {
+        self.params.as_ref().ok_or_else(|| anyhow::anyhow!("set_params not called"))
+    }
+
+    /// Validate a chunk call against the manifest contract (fixed chunk
+    /// shape, bucketed prefix) — the same checks the PJRT runtime performs.
+    fn check_chunk(&self, inputs: &ChunkInputs<f64>) -> anyhow::Result<()> {
+        let c = self.manifest.chunk_size;
+        anyhow::ensure!(inputs.tokens.len() == c, "tokens len {} != {c}", inputs.tokens.len());
+        anyhow::ensure!(inputs.targets.len() == c, "targets len {} != {c}", inputs.targets.len());
+        anyhow::ensure!(inputs.pos.len() == c, "pos len {} != {c}", inputs.pos.len());
+        anyhow::ensure!(inputs.seg.len() == c, "seg len {} != {c}", inputs.seg.len());
+        anyhow::ensure!(
+            self.manifest.kv_buckets.contains(&inputs.prefix_len),
+            "prefix {} is not an exported bucket",
+            inputs.prefix_len
+        );
+        anyhow::ensure!(
+            inputs.kv_in.len() == self.kv_elements(inputs.prefix_len),
+            "kv_in len {} != {} for prefix {}",
+            inputs.kv_in.len(),
+            self.kv_elements(inputs.prefix_len),
+            inputs.prefix_len
+        );
+        Ok(())
+    }
+
+    /// Forward over `t` tokens with a `p`-token KV prefix. Returns
+    /// (loss_sum, n_tok, kv_own [L, 2, T, H, D], caches).
+    fn forward(
+        &self,
+        tokens: &[i32],
+        targets: &[i32],
+        pos: &[i32],
+        seg: &[i32],
+        kv_in: &[f64],
+        p: usize,
+    ) -> anyhow::Result<(f64, f64, Vec<f64>, Cache)> {
+        let params = self.params_ref()?;
+        let Dims { l, heads, d, hh, ii, v } = self.dims;
+        let t = tokens.len();
+        let s_len = p + t;
+        let scale = 1.0 / (d as f64).sqrt();
+        anyhow::ensure!(kv_in.len() == l * 2 * p * heads * d, "kv_in len");
+        for &tok in tokens {
+            anyhow::ensure!(tok >= 0 && (tok as usize) < v, "token {tok} out of vocab {v}");
+        }
+        for &tg in targets {
+            anyhow::ensure!(tg < v as i32, "target {tg} out of vocab {v}");
+        }
+
+        // Key metadata: prefix tokens are positions 0..P of segment 0.
+        let mut k_pos = Vec::with_capacity(s_len);
+        let mut k_seg = Vec::with_capacity(s_len);
+        for j in 0..p {
+            k_pos.push(j as i32);
+            k_seg.push(0i32);
+        }
+        k_pos.extend_from_slice(pos);
+        k_seg.extend_from_slice(seg);
+
+        // Embedding lookup.
+        let embed = &params[P_EMBED];
+        let mut x = vec![0.0f64; t * hh];
+        for i in 0..t {
+            let row = &embed[tokens[i] as usize * hh..(tokens[i] as usize + 1) * hh];
+            x[i * hh..(i + 1) * hh].copy_from_slice(row);
+        }
+
+        let mut layers = Vec::with_capacity(l);
+        let mut s_buf = vec![0.0f64; s_len];
+        for li in 0..l {
+            let x_in = x.clone();
+            let norm1 = &params[P_NORM1][li * hh..(li + 1) * hh];
+            let (xn1, inv1) = rmsnorm_fwd(&x_in, norm1, t, hh);
+
+            let wq = &params[P_WQ][li * hh * hh..(li + 1) * hh * hh];
+            let wk = &params[P_WK][li * hh * hh..(li + 1) * hh * hh];
+            let wv = &params[P_WV][li * hh * hh..(li + 1) * hh * hh];
+            let qmat = matmul(&xn1, wq, t, hh, hh);
+            let kmat = matmul(&xn1, wk, t, hh, hh);
+            let vmat = matmul(&xn1, wv, t, hh, hh);
+
+            // [T, hh] -> [H, T, D], RoPE on q and k.
+            let mut q = heads_of(&qmat, heads, t, d);
+            let mut k_own = heads_of(&kmat, heads, t, d);
+            let v_own = heads_of(&vmat, heads, t, d);
+            rope_apply(&mut q, pos, heads, t, d, false);
+            rope_apply(&mut k_own, pos, heads, t, d, false);
+
+            // Full K/V = stored prefix + own.
+            let mut k_full = vec![0.0f64; heads * s_len * d];
+            let mut v_full = vec![0.0f64; heads * s_len * d];
+            for h in 0..heads {
+                for j in 0..p {
+                    for dd in 0..d {
+                        let kidx = (((li * 2) * p + j) * heads + h) * d + dd;
+                        let vidx = (((li * 2 + 1) * p + j) * heads + h) * d + dd;
+                        k_full[(h * s_len + j) * d + dd] = kv_in[kidx];
+                        v_full[(h * s_len + j) * d + dd] = kv_in[vidx];
+                    }
+                }
+                for i in 0..t {
+                    let src = (h * t + i) * d;
+                    let dst = (h * s_len + p + i) * d;
+                    k_full[dst..dst + d].copy_from_slice(&k_own[src..src + d]);
+                    v_full[dst..dst + d].copy_from_slice(&v_own[src..src + d]);
+                }
+            }
+
+            // Masked softmax attention with exact-zero masked probabilities.
+            let mut probs = vec![0.0f64; heads * t * s_len];
+            let mut attn_flat = vec![0.0f64; t * hh];
+            for h in 0..heads {
+                for i in 0..t {
+                    let qrow = &q[(h * t + i) * d..(h * t + i + 1) * d];
+                    let mut mx = f64::NEG_INFINITY;
+                    for j in 0..s_len {
+                        if !attend(pos[i], seg[i], k_pos[j], k_seg[j]) {
+                            s_buf[j] = f64::NEG_INFINITY;
+                            continue;
+                        }
+                        let krow = &k_full[(h * s_len + j) * d..(h * s_len + j + 1) * d];
+                        let mut dot = 0.0;
+                        for dd in 0..d {
+                            dot += qrow[dd] * krow[dd];
+                        }
+                        s_buf[j] = dot * scale;
+                        if s_buf[j] > mx {
+                            mx = s_buf[j];
+                        }
+                    }
+                    let prow = &mut probs[(h * t + i) * s_len..(h * t + i + 1) * s_len];
+                    if mx == f64::NEG_INFINITY {
+                        continue; // fully masked row: zero probs, zero output
+                    }
+                    let mut sum = 0.0;
+                    for j in 0..s_len {
+                        if s_buf[j] == f64::NEG_INFINITY {
+                            prow[j] = 0.0;
+                        } else {
+                            let e = (s_buf[j] - mx).exp();
+                            prow[j] = e;
+                            sum += e;
+                        }
+                    }
+                    let out = &mut attn_flat[i * hh + h * d..i * hh + (h + 1) * d];
+                    for j in 0..s_len {
+                        if prow[j] == 0.0 {
+                            continue;
+                        }
+                        prow[j] /= sum;
+                        let vrow = &v_full[(h * s_len + j) * d..(h * s_len + j + 1) * d];
+                        for dd in 0..d {
+                            out[dd] += prow[j] * vrow[dd];
+                        }
+                    }
+                }
+            }
+
+            let wo = &params[P_WO][li * hh * hh..(li + 1) * hh * hh];
+            let attn_proj = matmul(&attn_flat, wo, t, hh, hh);
+            let mut x_mid = x_in.clone();
+            for (xm, ap) in x_mid.iter_mut().zip(&attn_proj) {
+                *xm += *ap;
+            }
+
+            let norm2 = &params[P_NORM2][li * hh..(li + 1) * hh];
+            let (xn2, inv2) = rmsnorm_fwd(&x_mid, norm2, t, hh);
+            let w_gate = &params[P_W_GATE][li * hh * ii..(li + 1) * hh * ii];
+            let w_up = &params[P_W_UP][li * hh * ii..(li + 1) * hh * ii];
+            let w_down = &params[P_W_DOWN][li * ii * hh..(li + 1) * ii * hh];
+            let gate = matmul(&xn2, w_gate, t, hh, ii);
+            let up = matmul(&xn2, w_up, t, hh, ii);
+            let mut act = vec![0.0f64; t * ii];
+            for idx in 0..t * ii {
+                act[idx] = silu(gate[idx]) * up[idx];
+            }
+            let mlp = matmul(&act, w_down, t, ii, hh);
+            let mut x_out = x_mid.clone();
+            for (xo, mv) in x_out.iter_mut().zip(&mlp) {
+                *xo += *mv;
+            }
+
+            layers.push(LayerCache {
+                x_in,
+                xn1,
+                inv1,
+                q,
+                k_full,
+                v_full,
+                probs,
+                attn_flat,
+                x_mid,
+                xn2,
+                inv2,
+                gate,
+                up,
+                act,
+            });
+            x = x_out;
+        }
+
+        // Final norm + tied logits + summed cross-entropy.
+        let x_out = x;
+        let (xf, inv_f) = rmsnorm_fwd(&x_out, &params[P_LN_F], t, hh);
+        let mut probs_v = vec![0.0f64; t * v];
+        let mut logits = vec![0.0f64; v];
+        let mut loss_sum = 0.0f64;
+        let mut n_tok = 0.0f64;
+        for i in 0..t {
+            let xfr = &xf[i * hh..(i + 1) * hh];
+            let mut mx = f64::NEG_INFINITY;
+            for j in 0..v {
+                let erow = &embed[j * hh..(j + 1) * hh];
+                let mut dot = 0.0;
+                for c in 0..hh {
+                    dot += xfr[c] * erow[c];
+                }
+                logits[j] = dot;
+                if dot > mx {
+                    mx = dot;
+                }
+            }
+            let mut sum = 0.0;
+            let prow = &mut probs_v[i * v..(i + 1) * v];
+            for j in 0..v {
+                let e = (logits[j] - mx).exp();
+                prow[j] = e;
+                sum += e;
+            }
+            for pv in prow.iter_mut() {
+                *pv /= sum;
+            }
+            if targets[i] >= 0 {
+                let lse = mx + sum.ln();
+                loss_sum += lse - logits[targets[i] as usize];
+                n_tok += 1.0;
+            }
+        }
+
+        // Own KV contribution [L, 2, T, H, D] from the per-layer full K/V.
+        let mut kv_own = vec![0.0f64; l * 2 * t * heads * d];
+        for (li, lc) in layers.iter().enumerate() {
+            for i in 0..t {
+                for h in 0..heads {
+                    let src = (h * s_len + p + i) * d;
+                    let kdst = (((li * 2) * t + i) * heads + h) * d;
+                    let vdst = (((li * 2 + 1) * t + i) * heads + h) * d;
+                    kv_own[kdst..kdst + d].copy_from_slice(&lc.k_full[src..src + d]);
+                    kv_own[vdst..vdst + d].copy_from_slice(&lc.v_full[src..src + d]);
+                }
+            }
+        }
+
+        Ok((loss_sum, n_tok, kv_own, Cache { layers, x_out, xf, inv_f, probs_v }))
+    }
+
+    /// Reverse pass. Cotangents: d(loss_sum) = 1, d(n_tok) = 0, and
+    /// `g_kv_own` on this chunk's KV output (None for the full oracle).
+    /// Returns (d_params, d_kv_in [L, 2, P, H, D]). Segment ids are not
+    /// needed here: the mask lives implicitly in the cached probabilities
+    /// (masked entries are exactly zero).
+    fn backward(
+        &self,
+        tokens: &[i32],
+        targets: &[i32],
+        pos: &[i32],
+        p: usize,
+        cache: &Cache,
+        g_kv_own: Option<&[f64]>,
+    ) -> (Vec<Vec<f64>>, Vec<f64>) {
+        let params = self.params.as_ref().expect("backward after forward");
+        let Dims { l, heads, d, hh, ii, v } = self.dims;
+        let t = tokens.len();
+        let s_len = p + t;
+        let scale = 1.0 / (d as f64).sqrt();
+
+        let mut d_params: Vec<Vec<f64>> =
+            self.manifest.params.iter().map(|spec| vec![0.0f64; spec.size]).collect();
+        let mut d_kv_in = vec![0.0f64; l * 2 * p * heads * d];
+
+        // Loss -> logits -> (xf, embed). Tied head: logits = xf @ embed^T.
+        let embed = &params[P_EMBED];
+        let mut d_xf = vec![0.0f64; t * hh];
+        for i in 0..t {
+            if targets[i] < 0 {
+                continue;
+            }
+            let tgt = targets[i] as usize;
+            let prow = &cache.probs_v[i * v..(i + 1) * v];
+            let xfr = &cache.xf[i * hh..(i + 1) * hh];
+            let dxfr = &mut d_xf[i * hh..(i + 1) * hh];
+            for j in 0..v {
+                let dl = prow[j] - if j == tgt { 1.0 } else { 0.0 };
+                let erow = &embed[j * hh..(j + 1) * hh];
+                let derow = &mut d_params[P_EMBED][j * hh..(j + 1) * hh];
+                for c in 0..hh {
+                    dxfr[c] += dl * erow[c];
+                    derow[c] += dl * xfr[c];
+                }
+            }
+        }
+
+        // ln_f backward. (No key-metadata rebuild is needed anywhere below:
+        // the mask is implicit in the cached probs — masked entries are 0.)
+        let mut d_x = vec![0.0f64; t * hh];
+        rmsnorm_bwd(
+            &cache.x_out,
+            &params[P_LN_F],
+            &cache.inv_f,
+            &d_xf,
+            t,
+            hh,
+            &mut d_x,
+            &mut d_params[P_LN_F],
+        );
+
+        let mut d_p_buf = vec![0.0f64; s_len];
+        for li in (0..l).rev() {
+            let lc = &cache.layers[li];
+            let w_down = &params[P_W_DOWN][li * ii * hh..(li + 1) * ii * hh];
+            let w_gate = &params[P_W_GATE][li * hh * ii..(li + 1) * hh * ii];
+            let w_up = &params[P_W_UP][li * hh * ii..(li + 1) * hh * ii];
+            let wo = &params[P_WO][li * hh * hh..(li + 1) * hh * hh];
+            let wq = &params[P_WQ][li * hh * hh..(li + 1) * hh * hh];
+            let wk = &params[P_WK][li * hh * hh..(li + 1) * hh * hh];
+            let wv = &params[P_WV][li * hh * hh..(li + 1) * hh * hh];
+
+            // MLP backward: x_out = x_mid + act @ w_down.
+            let mut d_x_mid = d_x.clone(); // residual branch
+            let d_act = matmul_nt(&d_x, w_down, t, ii, hh);
+            accum_tn(&lc.act, &d_x, t, ii, hh, &mut d_params[P_W_DOWN][li * ii * hh..]);
+            let mut d_gate = vec![0.0f64; t * ii];
+            let mut d_up = vec![0.0f64; t * ii];
+            for idx in 0..t * ii {
+                let g = lc.gate[idx];
+                let sg = sigmoid(g);
+                d_gate[idx] = d_act[idx] * lc.up[idx] * (sg * (1.0 + g * (1.0 - sg)));
+                d_up[idx] = d_act[idx] * (g * sg);
+            }
+            let mut d_xn2 = matmul_nt(&d_gate, w_gate, t, hh, ii);
+            let d_xn2_up = matmul_nt(&d_up, w_up, t, hh, ii);
+            for (a, b) in d_xn2.iter_mut().zip(&d_xn2_up) {
+                *a += *b;
+            }
+            accum_tn(&lc.xn2, &d_gate, t, hh, ii, &mut d_params[P_W_GATE][li * hh * ii..]);
+            accum_tn(&lc.xn2, &d_up, t, hh, ii, &mut d_params[P_W_UP][li * hh * ii..]);
+            rmsnorm_bwd(
+                &lc.x_mid,
+                &params[P_NORM2][li * hh..(li + 1) * hh],
+                &lc.inv2,
+                &d_xn2,
+                t,
+                hh,
+                &mut d_x_mid,
+                &mut d_params[P_NORM2][li * hh..(li + 1) * hh],
+            );
+
+            // Attention output projection: x_mid = x_in + attn_flat @ wo.
+            let mut d_x_in = d_x_mid.clone(); // residual branch
+            let d_attn_flat = matmul_nt(&d_x_mid, wo, t, hh, hh);
+            accum_tn(&lc.attn_flat, &d_x_mid, t, hh, hh, &mut d_params[P_WO][li * hh * hh..]);
+
+            // Attention core backward (probs cached; masked entries are 0).
+            let mut d_q = vec![0.0f64; heads * t * d];
+            let mut d_k_full = vec![0.0f64; heads * s_len * d];
+            let mut d_v_full = vec![0.0f64; heads * s_len * d];
+            for h in 0..heads {
+                for i in 0..t {
+                    let d_out = &d_attn_flat[i * hh + h * d..i * hh + (h + 1) * d];
+                    let prow = &lc.probs[(h * t + i) * s_len..(h * t + i + 1) * s_len];
+                    let mut rowdot = 0.0f64;
+                    for j in 0..s_len {
+                        if prow[j] == 0.0 {
+                            d_p_buf[j] = 0.0;
+                            continue;
+                        }
+                        let vrow = &lc.v_full[(h * s_len + j) * d..(h * s_len + j + 1) * d];
+                        let mut acc = 0.0;
+                        for dd in 0..d {
+                            acc += d_out[dd] * vrow[dd];
+                        }
+                        d_p_buf[j] = acc;
+                        rowdot += prow[j] * acc;
+                        let dvrow = &mut d_v_full[(h * s_len + j) * d..(h * s_len + j + 1) * d];
+                        for dd in 0..d {
+                            dvrow[dd] += prow[j] * d_out[dd];
+                        }
+                    }
+                    let qrow = &lc.q[(h * t + i) * d..(h * t + i + 1) * d];
+                    for j in 0..s_len {
+                        if prow[j] == 0.0 {
+                            continue;
+                        }
+                        let ds = prow[j] * (d_p_buf[j] - rowdot) * scale;
+                        let krow = &lc.k_full[(h * s_len + j) * d..(h * s_len + j + 1) * d];
+                        let dqrow = &mut d_q[(h * t + i) * d..(h * t + i + 1) * d];
+                        for dd in 0..d {
+                            dqrow[dd] += ds * krow[dd];
+                        }
+                        let dkrow = &mut d_k_full[(h * s_len + j) * d..(h * s_len + j + 1) * d];
+                        for dd in 0..d {
+                            dkrow[dd] += ds * qrow[dd];
+                        }
+                    }
+                }
+            }
+
+            // Cotangent from later chunks on this chunk's KV output.
+            if let Some(g) = g_kv_own {
+                for i in 0..t {
+                    for h in 0..heads {
+                        let kidx = (((li * 2) * t + i) * heads + h) * d;
+                        let vidx = (((li * 2 + 1) * t + i) * heads + h) * d;
+                        let kdst = (h * s_len + p + i) * d;
+                        for dd in 0..d {
+                            d_k_full[kdst + dd] += g[kidx + dd];
+                            d_v_full[kdst + dd] += g[vidx + dd];
+                        }
+                    }
+                }
+            }
+
+            // Split the K/V gradients: prefix slots flow out as d_kv_in,
+            // own slots continue through RoPE and the projections.
+            for j in 0..p {
+                for h in 0..heads {
+                    let ksrc = (h * s_len + j) * d;
+                    let kdst = (((li * 2) * p + j) * heads + h) * d;
+                    let vdst = (((li * 2 + 1) * p + j) * heads + h) * d;
+                    for dd in 0..d {
+                        d_kv_in[kdst + dd] += d_k_full[ksrc + dd];
+                        d_kv_in[vdst + dd] += d_v_full[ksrc + dd];
+                    }
+                }
+            }
+            let mut d_k_own = vec![0.0f64; heads * t * d];
+            let mut d_v_own = vec![0.0f64; heads * t * d];
+            for h in 0..heads {
+                for i in 0..t {
+                    let src = (h * s_len + p + i) * d;
+                    let dst = (h * t + i) * d;
+                    d_k_own[dst..dst + d].copy_from_slice(&d_k_full[src..src + d]);
+                    d_v_own[dst..dst + d].copy_from_slice(&d_v_full[src..src + d]);
+                }
+            }
+
+            // RoPE is an orthogonal rotation: pull cotangents back with the
+            // inverse rotation, then undo the [T, hh] -> [H, T, D] reshape.
+            rope_apply(&mut d_q, pos, heads, t, d, true);
+            rope_apply(&mut d_k_own, pos, heads, t, d, true);
+            let d_qmat = heads_to(&d_q, heads, t, d);
+            let d_kmat = heads_to(&d_k_own, heads, t, d);
+            let d_vmat = heads_to(&d_v_own, heads, t, d);
+
+            let mut d_xn1 = matmul_nt(&d_qmat, wq, t, hh, hh);
+            let d_xn1_k = matmul_nt(&d_kmat, wk, t, hh, hh);
+            let d_xn1_v = matmul_nt(&d_vmat, wv, t, hh, hh);
+            for idx in 0..t * hh {
+                d_xn1[idx] += d_xn1_k[idx] + d_xn1_v[idx];
+            }
+            accum_tn(&lc.xn1, &d_qmat, t, hh, hh, &mut d_params[P_WQ][li * hh * hh..]);
+            accum_tn(&lc.xn1, &d_kmat, t, hh, hh, &mut d_params[P_WK][li * hh * hh..]);
+            accum_tn(&lc.xn1, &d_vmat, t, hh, hh, &mut d_params[P_WV][li * hh * hh..]);
+            rmsnorm_bwd(
+                &lc.x_in,
+                &params[P_NORM1][li * hh..(li + 1) * hh],
+                &lc.inv1,
+                &d_xn1,
+                t,
+                hh,
+                &mut d_x_in,
+                &mut d_params[P_NORM1][li * hh..(li + 1) * hh],
+            );
+            d_x = d_x_in;
+        }
+
+        // Embedding lookup backward.
+        for i in 0..t {
+            let tok = tokens[i] as usize;
+            let drow = &mut d_params[P_EMBED][tok * hh..(tok + 1) * hh];
+            let dxr = &d_x[i * hh..(i + 1) * hh];
+            for c in 0..hh {
+                drow[c] += dxr[c];
+            }
+        }
+
+        (d_params, d_kv_in)
+    }
+}
+
+impl Backend for ReferenceBackend {
+    type Elem = f64;
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn set_params(&mut self, params: &FlatParams) -> anyhow::Result<()> {
+        anyhow::ensure!(params.0.len() == self.manifest.params.len(), "param arity");
+        for (spec, host) in self.manifest.params.iter().zip(&params.0) {
+            anyhow::ensure!(
+                host.len() == spec.size,
+                "param {} size {} != {}",
+                spec.name,
+                host.len(),
+                spec.size
+            );
+        }
+        self.params =
+            Some(params.0.iter().map(|p| p.iter().map(|&x| x as f64).collect()).collect());
+        Ok(())
+    }
+
+    fn fwd_kv(&self, inputs: &ChunkInputs<f64>) -> anyhow::Result<FwdKvOut<f64>> {
+        self.check_chunk(inputs)?;
+        self.calls.set(self.calls.get() + 1);
+        let (loss_sum, n_tok, kv_own, _cache) = self.forward(
+            &inputs.tokens,
+            &inputs.targets,
+            &inputs.pos,
+            &inputs.seg,
+            &inputs.kv_in,
+            inputs.prefix_len,
+        )?;
+        Ok(FwdKvOut { loss_sum, n_tok, kv_own })
+    }
+
+    fn chunk_vjp(
+        &self,
+        inputs: &ChunkInputs<f64>,
+        g_kv_own: &[f64],
+    ) -> anyhow::Result<ChunkVjpOut<f64>> {
+        self.check_chunk(inputs)?;
+        let c = self.manifest.chunk_size;
+        anyhow::ensure!(
+            g_kv_own.len() == self.kv_elements(c),
+            "g_kv_own len {} != {}",
+            g_kv_own.len(),
+            self.kv_elements(c)
+        );
+        self.calls.set(self.calls.get() + 1);
+        let (loss_sum, n_tok, kv_own, cache) = self.forward(
+            &inputs.tokens,
+            &inputs.targets,
+            &inputs.pos,
+            &inputs.seg,
+            &inputs.kv_in,
+            inputs.prefix_len,
+        )?;
+        let (d_params, d_kv_in) = self.backward(
+            &inputs.tokens,
+            &inputs.targets,
+            &inputs.pos,
+            inputs.prefix_len,
+            &cache,
+            Some(g_kv_own),
+        );
+        Ok(ChunkVjpOut { loss_sum, n_tok, kv_own, d_params, d_kv_in })
+    }
+
+    fn full_step(
+        &self,
+        s: usize,
+        tokens: &[i32],
+        targets: &[i32],
+        pos: &[i32],
+        seg: &[i32],
+    ) -> anyhow::Result<FullStepOut<f64>> {
+        anyhow::ensure!(s > 0, "full_step needs at least one token");
+        anyhow::ensure!(tokens.len() == s, "tokens len {} != {s}", tokens.len());
+        anyhow::ensure!(targets.len() == s, "targets len {} != {s}", targets.len());
+        anyhow::ensure!(pos.len() == s, "pos len {} != {s}", pos.len());
+        anyhow::ensure!(seg.len() == s, "seg len {} != {s}", seg.len());
+        self.calls.set(self.calls.get() + 1);
+        let (loss_sum, n_tok, _kv_own, cache) =
+            self.forward(tokens, targets, pos, seg, &[], 0)?;
+        let (d_params, _d_kv_in) = self.backward(tokens, targets, pos, 0, &cache, None);
+        Ok(FullStepOut { loss_sum, n_tok, d_params })
+    }
+
+    fn calls(&self) -> u64 {
+        self.calls.get()
+    }
+}
+
+// ----- math helpers ---------------------------------------------------------
+
+/// Visibility of key (kpos, kseg) to query (qpos, qseg) — the Layer-1
+/// kernel's mask: causal AND (same live segment OR self-token).
+fn attend(qpos: i32, qseg: i32, kpos: i32, kseg: i32) -> bool {
+    let causal = kpos <= qpos;
+    let same_seg = qseg == kseg && qseg >= 0;
+    let self_tok = qpos == kpos && qseg == kseg;
+    causal && (same_seg || self_tok)
+}
+
+fn sigmoid(x: f64) -> f64 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+fn silu(x: f64) -> f64 {
+    x * sigmoid(x)
+}
+
+/// RMSNorm forward over [T, N]: returns (x * rsqrt(mean(x^2) + eps) * w,
+/// per-row rsqrt factors).
+fn rmsnorm_fwd(x: &[f64], w: &[f64], t: usize, n: usize) -> (Vec<f64>, Vec<f64>) {
+    let mut out = vec![0.0f64; t * n];
+    let mut inv = vec![0.0f64; t];
+    for i in 0..t {
+        let xr = &x[i * n..(i + 1) * n];
+        let mut ms = 0.0;
+        for &xv in xr {
+            ms += xv * xv;
+        }
+        ms /= n as f64;
+        let iv = 1.0 / (ms + RMS_EPS).sqrt();
+        inv[i] = iv;
+        let orow = &mut out[i * n..(i + 1) * n];
+        for c in 0..n {
+            orow[c] = xr[c] * iv * w[c];
+        }
+    }
+    (out, inv)
+}
+
+/// RMSNorm backward: accumulates into `dx` ([T, N]) and `dw` ([N]).
+fn rmsnorm_bwd(
+    x: &[f64],
+    w: &[f64],
+    inv: &[f64],
+    dy: &[f64],
+    t: usize,
+    n: usize,
+    dx: &mut [f64],
+    dw: &mut [f64],
+) {
+    for i in 0..t {
+        let xr = &x[i * n..(i + 1) * n];
+        let dyr = &dy[i * n..(i + 1) * n];
+        let iv = inv[i];
+        let mut dot = 0.0;
+        for c in 0..n {
+            dot += dyr[c] * xr[c] * w[c];
+        }
+        let coef = iv * iv * iv * dot / n as f64;
+        let dxr = &mut dx[i * n..(i + 1) * n];
+        for c in 0..n {
+            dxr[c] += dyr[c] * w[c] * iv - coef * xr[c];
+            dw[c] += dyr[c] * xr[c] * iv;
+        }
+    }
+}
+
+/// Rotary embedding over [H, T, D] in place; `inverse` applies the
+/// transpose rotation (exact cotangent pullback — rotations are orthogonal).
+fn rope_apply(xs: &mut [f64], pos: &[i32], heads: usize, t: usize, d: usize, inverse: bool) {
+    let half = d / 2;
+    for i in 0..t {
+        let pf = pos[i] as f64;
+        for j in 0..half {
+            let freq = ROPE_THETA.powf(-(j as f64) / half as f64);
+            let angle = pf * freq;
+            let (mut sin, cos) = angle.sin_cos();
+            if inverse {
+                sin = -sin;
+            }
+            for h in 0..heads {
+                let base = (h * t + i) * d;
+                let x1 = xs[base + j];
+                let x2 = xs[base + half + j];
+                xs[base + j] = x1 * cos - x2 * sin;
+                xs[base + half + j] = x1 * sin + x2 * cos;
+            }
+        }
+    }
+}
+
+/// [T, heads*d] -> [H, T, D].
+fn heads_of(mat: &[f64], heads: usize, t: usize, d: usize) -> Vec<f64> {
+    let hh = heads * d;
+    let mut out = vec![0.0f64; heads * t * d];
+    for h in 0..heads {
+        for i in 0..t {
+            let dst = (h * t + i) * d;
+            let src = i * hh + h * d;
+            out[dst..dst + d].copy_from_slice(&mat[src..src + d]);
+        }
+    }
+    out
+}
+
+/// [H, T, D] -> [T, heads*d].
+fn heads_to(hm: &[f64], heads: usize, t: usize, d: usize) -> Vec<f64> {
+    let hh = heads * d;
+    let mut out = vec![0.0f64; t * hh];
+    for h in 0..heads {
+        for i in 0..t {
+            let src = (h * t + i) * d;
+            let dst = i * hh + h * d;
+            out[dst..dst + d].copy_from_slice(&hm[src..src + d]);
+        }
+    }
+    out
+}
+
+/// [T, A] @ [A, B] -> [T, B].
+fn matmul(x: &[f64], w: &[f64], t: usize, a: usize, b: usize) -> Vec<f64> {
+    debug_assert_eq!(x.len(), t * a);
+    debug_assert!(w.len() >= a * b);
+    let mut out = vec![0.0f64; t * b];
+    for i in 0..t {
+        let xrow = &x[i * a..(i + 1) * a];
+        let orow = &mut out[i * b..(i + 1) * b];
+        for (r, &xv) in xrow.iter().enumerate() {
+            let wrow = &w[r * b..(r + 1) * b];
+            for (ov, &wv) in orow.iter_mut().zip(wrow) {
+                *ov += xv * wv;
+            }
+        }
+    }
+    out
+}
+
+/// dy [T, B] @ w[A, B]^T -> [T, A] (gradient through `x @ w`).
+fn matmul_nt(dy: &[f64], w: &[f64], t: usize, a: usize, b: usize) -> Vec<f64> {
+    debug_assert_eq!(dy.len(), t * b);
+    debug_assert!(w.len() >= a * b);
+    let mut out = vec![0.0f64; t * a];
+    for i in 0..t {
+        let dyr = &dy[i * b..(i + 1) * b];
+        let orow = &mut out[i * a..(i + 1) * a];
+        for r in 0..a {
+            let wrow = &w[r * b..(r + 1) * b];
+            let mut acc = 0.0;
+            for (dv, wv) in dyr.iter().zip(wrow) {
+                acc += dv * wv;
+            }
+            orow[r] = acc;
+        }
+    }
+    out
+}
+
+/// dw[A, B] += x[T, A]^T @ dy[T, B] (weight gradient through `x @ w`); `dw`
+/// may be a leading slice of a larger stacked buffer.
+fn accum_tn(x: &[f64], dy: &[f64], t: usize, a: usize, b: usize, dw: &mut [f64]) {
+    debug_assert_eq!(x.len(), t * a);
+    debug_assert_eq!(dy.len(), t * b);
+    debug_assert!(dw.len() >= a * b);
+    for i in 0..t {
+        let xrow = &x[i * a..(i + 1) * a];
+        let dyr = &dy[i * b..(i + 1) * b];
+        for (r, &xv) in xrow.iter().enumerate() {
+            let dwrow = &mut dw[r * b..(r + 1) * b];
+            for (dwv, &dv) in dwrow.iter_mut().zip(dyr) {
+                *dwv += xv * dv;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelSpec;
+    use crate::train::init_params;
+
+    fn mini_spec() -> ModelSpec {
+        ModelSpec {
+            name: "ref-mini".into(),
+            hidden_size: 32,
+            num_layers: 2,
+            num_heads: 2,
+            num_kv_heads: 2,
+            intermediate_size: 48,
+            vocab_size: 64,
+            tie_embeddings: true,
+        }
+    }
+
+    fn backend(chunk: usize, max_chunks: usize) -> ReferenceBackend {
+        let manifest = Manifest::for_reference(&mini_spec(), chunk, max_chunks).unwrap();
+        let mut b = ReferenceBackend::new(manifest).unwrap();
+        let params = init_params(&b.manifest, 42);
+        b.set_params(&params).unwrap();
+        b
+    }
+
+    /// Full-sequence inputs for `len` deterministic tokens.
+    fn seq_inputs(len: usize, seed: u64) -> (Vec<i32>, Vec<i32>, Vec<i32>, Vec<i32>) {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let tokens: Vec<i32> = (0..len).map(|_| rng.gen_range(64) as i32).collect();
+        let mut targets: Vec<i32> = tokens[1..].to_vec();
+        targets.push(-1);
+        let pos: Vec<i32> = (0..len as i32).collect();
+        let seg = vec![0i32; len];
+        (tokens, targets, pos, seg)
+    }
+
+    /// One standalone chunk holding a complete `len`-token sequence, padded
+    /// to the chunk size with the trainer's padding convention.
+    fn standalone_chunk(b: &ReferenceBackend, len: usize, seed: u64) -> ChunkInputs<f64> {
+        let c = b.manifest.chunk_size;
+        assert!(len <= c);
+        let (toks, tgts, _pos, _seg) = seq_inputs(len, seed);
+        let mut tokens = vec![0i32; c];
+        let mut targets = vec![-1i32; c];
+        let mut pos = vec![0i32; c];
+        let mut seg = vec![-1i32; c];
+        for i in 0..len {
+            tokens[i] = toks[i];
+            targets[i] = tgts[i];
+            pos[i] = i as i32;
+            seg[i] = 0;
+        }
+        for (i, sl) in (len..c).enumerate() {
+            pos[sl] = 1_000_000 + i as i32;
+        }
+        ChunkInputs { tokens, targets, pos, seg, kv_in: Vec::new(), prefix_len: 0 }
+    }
+
+    #[test]
+    fn loss_near_uniform_at_init_and_deterministic() {
+        let b = backend(16, 2);
+        let (tokens, targets, pos, seg) = seq_inputs(16, 7);
+        let a = b.full_step(16, &tokens, &targets, &pos, &seg).unwrap();
+        let c = b.full_step(16, &tokens, &targets, &pos, &seg).unwrap();
+        assert_eq!(a.n_tok, 15.0);
+        let per_tok = a.loss_sum / a.n_tok;
+        // Fresh init predicts ~uniform(64) = 4.16 nats.
+        assert!((3.0..5.5).contains(&per_tok), "loss/token {per_tok}");
+        assert_eq!(a.loss_sum.to_bits(), c.loss_sum.to_bits(), "bitwise deterministic");
+        for (x, y) in a.d_params.iter().zip(&c.d_params) {
+            assert_eq!(x, y);
+        }
+        assert_eq!(b.calls(), 2);
+    }
+
+    #[test]
+    fn padded_standalone_chunk_matches_unpadded_oracle() {
+        // Padding slots must contribute nothing: a 10-token sequence inside
+        // a 16-token chunk gives the same loss and grads as the raw
+        // 10-token full_step.
+        let b = backend(16, 2);
+        let inputs = standalone_chunk(&b, 10, 3);
+        let g_zero = vec![0.0f64; b.kv_elements(16)];
+        let chunked = b.chunk_vjp(&inputs, &g_zero).unwrap();
+        let (tokens, targets, pos, seg) = seq_inputs(10, 3);
+        let oracle = b.full_step(10, &tokens, &targets, &pos, &seg).unwrap();
+        assert_eq!(chunked.n_tok, oracle.n_tok);
+        assert!(
+            (chunked.loss_sum - oracle.loss_sum).abs() < 1e-9,
+            "{} vs {}",
+            chunked.loss_sum,
+            oracle.loss_sum
+        );
+        for (pi, (gc, go)) in chunked.d_params.iter().zip(&oracle.d_params).enumerate() {
+            let max_ref = go.iter().fold(0f64, |a, &x| a.max(x.abs())).max(1e-12);
+            let max_err =
+                gc.iter().zip(go).map(|(a, b)| (a - b).abs()).fold(0f64, f64::max);
+            assert!(max_err / max_ref < 1e-9, "param {pi} rel err {}", max_err / max_ref);
+        }
+    }
+
+    #[test]
+    fn fwd_kv_agrees_with_chunk_vjp_forward() {
+        let b = backend(16, 2);
+        let inputs = standalone_chunk(&b, 16, 9);
+        let f = b.fwd_kv(&inputs).unwrap();
+        let g_zero = vec![0.0f64; b.kv_elements(16)];
+        let v = b.chunk_vjp(&inputs, &g_zero).unwrap();
+        assert_eq!(f.loss_sum.to_bits(), v.loss_sum.to_bits());
+        assert_eq!(f.n_tok, v.n_tok);
+        assert_eq!(f.kv_own, v.kv_own);
+    }
+
+    #[test]
+    fn full_step_grads_match_finite_differences() {
+        let b = backend(8, 2);
+        let (tokens, targets, pos, seg) = seq_inputs(8, 11);
+        let analytic = b.full_step(8, &tokens, &targets, &pos, &seg).unwrap();
+        let base_params = init_params(&b.manifest, 42);
+        // Spot-check one coordinate per parameter tensor.
+        let eps = 1e-5f64;
+        for pi in 0..base_params.0.len() {
+            let coord = base_params.0[pi].len() / 3;
+            let probe = |delta: f32| -> f64 {
+                let mut p = base_params.clone();
+                p.0[pi][coord] += delta;
+                let manifest = Manifest::for_reference(&mini_spec(), 8, 2).unwrap();
+                let mut b2 = ReferenceBackend::new(manifest).unwrap();
+                b2.set_params(&p).unwrap();
+                b2.full_step(8, &tokens, &targets, &pos, &seg).unwrap().loss_sum
+            };
+            let up = probe(eps as f32);
+            let down = probe(-(eps as f32));
+            let fd = (up - down) / (2.0 * eps);
+            let an = analytic.d_params[pi][coord];
+            let denom = an.abs().max(fd.abs()).max(1e-4);
+            assert!(
+                (fd - an).abs() / denom < 1e-2,
+                "param {pi} coord {coord}: fd {fd} vs analytic {an}"
+            );
+        }
+    }
+
+    #[test]
+    fn bucket_and_shape_contract_enforced() {
+        let b = backend(16, 4);
+        let mut inputs = standalone_chunk(&b, 16, 1);
+        // Non-bucket prefix.
+        inputs.prefix_len = 7;
+        inputs.kv_in = vec![0.0; b.kv_elements(7)];
+        assert!(b.fwd_kv(&inputs).is_err());
+        // Bucketed prefix but wrong buffer length.
+        inputs.prefix_len = 16;
+        inputs.kv_in = vec![0.0; 3];
+        assert!(b.fwd_kv(&inputs).is_err());
+        // Wrong chunk length.
+        let mut short = standalone_chunk(&b, 16, 1);
+        short.tokens.pop();
+        assert!(b.fwd_kv(&short).is_err());
+    }
+
+    #[test]
+    fn set_params_required_and_validated() {
+        let manifest = Manifest::for_reference(&mini_spec(), 8, 1).unwrap();
+        let b = ReferenceBackend::new(manifest.clone()).unwrap();
+        let inputs = ChunkInputs::<f64> {
+            tokens: vec![0; 8],
+            targets: vec![-1; 8],
+            pos: (0..8).collect(),
+            seg: vec![0; 8],
+            kv_in: Vec::new(),
+            prefix_len: 0,
+        };
+        assert!(b.fwd_kv(&inputs).unwrap_err().to_string().contains("set_params"));
+        let mut b2 = ReferenceBackend::new(manifest).unwrap();
+        let bad = FlatParams(vec![vec![0.0; 3]]);
+        assert!(b2.set_params(&bad).is_err());
+    }
+
+    #[test]
+    fn attend_mask_matches_kernel_semantics() {
+        // Causal within a live segment.
+        assert!(attend(5, 0, 3, 0));
+        assert!(!attend(3, 0, 5, 0));
+        // No cross-segment attention.
+        assert!(!attend(5, 1, 3, 0));
+        // Padding (seg -1) self-attends only.
+        assert!(attend(1_000_000, -1, 1_000_000, -1));
+        assert!(!attend(1_000_001, -1, 1_000_000, -1));
+        assert!(!attend(5, 0, 1_000_000, -1));
+    }
+
+    #[test]
+    fn rope_inverse_is_exact() {
+        let mut xs: Vec<f64> = (0..2 * 3 * 4).map(|i| (i as f64) * 0.37 - 2.0).collect();
+        let orig = xs.clone();
+        let pos = vec![0, 17, 91234];
+        rope_apply(&mut xs, &pos, 2, 3, 4, false);
+        rope_apply(&mut xs, &pos, 2, 3, 4, true);
+        for (a, b) in xs.iter().zip(&orig) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+}

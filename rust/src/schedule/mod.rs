@@ -329,6 +329,58 @@ mod tests {
     }
 
     #[test]
+    fn prop_schedule_conformance_pins_descending_recompute() {
+        // Pins the documented Algorithm-2 line 24-29 typo fix: the
+        // recompute+backward pass over the discarded chunks must run in
+        // strictly DESCENDING index order (chunk i's backward needs the
+        // KV-gradients of every later chunk), each recompute is immediately
+        // consumed by its own backward, and initial forwards stay strictly
+        // ascending. N up to 64, any K.
+        let gen = gen_pair(gen_usize(1, 64), gen_usize(1, 64));
+        check(500, gen, |(n, k)| {
+            let ids: Vec<usize> = (0..*n).collect();
+            let plan = schedule_group(&ids, *k);
+            validate_group_plan(&plan).map_err(|e| format!("invalid plan: {e}"))?;
+            let fwd: Vec<usize> = plan
+                .ops
+                .iter()
+                .filter_map(|o| match o {
+                    ChunkOp::Forward { chunk, .. } => Some(*chunk),
+                    _ => None,
+                })
+                .collect();
+            ensure(fwd.windows(2).all(|w| w[0] < w[1]), "forwards strictly ascending")?;
+            let rec: Vec<usize> = plan
+                .ops
+                .iter()
+                .filter_map(|o| match o {
+                    ChunkOp::RecomputeForward { chunk } => Some(*chunk),
+                    _ => None,
+                })
+                .collect();
+            ensure(
+                rec.windows(2).all(|w| w[0] > w[1]),
+                "recompute pass strictly descending (Alg. 2 line 24-29 fix)",
+            )?;
+            ensure(
+                rec == (0..n.saturating_sub(*k)).rev().collect::<Vec<_>>(),
+                "recompute covers exactly the discarded chunks, high to low",
+            )?;
+            // Every recompute is immediately followed by that chunk's
+            // backward: recomputed activations never accumulate.
+            for (idx, op) in plan.ops.iter().enumerate() {
+                if let ChunkOp::RecomputeForward { chunk } = op {
+                    let next = plan.ops.get(idx + 1);
+                    let consumed =
+                        matches!(next, Some(ChunkOp::Backward { chunk: b }) if b == chunk);
+                    ensure(consumed, "recompute immediately consumed by its backward")?;
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
     fn prop_memory_never_scales_with_sequence_length() {
         // The paper's core claim: with fixed K, growing N leaves peak
         // activation memory flat.

@@ -1,23 +1,87 @@
 //! Parameter/optimizer checkpointing: a simple versioned binary format
 //! (header JSON + raw little-endian f32 payloads) so long fine-tuning runs
 //! can resume — standard launcher functionality.
+//!
+//! Format v2 (current): header carries `version: 2` and `adam_t`, and the
+//! payload is params followed by the Adam first and second moments (same
+//! sizes as the params), so a restored run continues the exact optimizer
+//! trajectory. v1 files (params only) still load — the optimizer restarts.
 
 use std::io::{Read, Write};
 use std::path::Path;
 
+use super::adam::AdamState;
 use crate::runtime::FlatParams;
 use crate::util::json::Json;
 
 const MAGIC: &[u8; 8] = b"CHKFLOW1";
+const VERSION: u64 = 2;
 
-/// Write params (+ step counter) to `path` atomically (tmp + rename).
-pub fn save(path: &Path, params: &FlatParams, step: u64) -> anyhow::Result<()> {
+/// Everything a checkpoint restores.
+#[derive(Clone, Debug)]
+pub struct TrainState {
+    pub params: FlatParams,
+    pub step: u64,
+    /// Present on v2 checkpoints saved with optimizer state.
+    pub adam: Option<AdamState>,
+}
+
+fn write_bufs(f: &mut impl Write, bufs: &[Vec<f32>]) -> anyhow::Result<()> {
+    for p in bufs {
+        for v in p {
+            f.write_all(&v.to_le_bytes())?;
+        }
+    }
+    Ok(())
+}
+
+fn read_bufs(f: &mut impl Read, sizes: &[usize]) -> anyhow::Result<Vec<Vec<f32>>> {
+    let mut out = Vec::with_capacity(sizes.len());
+    for &n in sizes {
+        let mut bytes = vec![0u8; n * 4];
+        f.read_exact(&mut bytes)?;
+        out.push(
+            bytes
+                .chunks_exact(4)
+                .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                .collect(),
+        );
+    }
+    Ok(out)
+}
+
+/// Write params (+ step counter + optional Adam state) to `path` atomically
+/// (tmp + rename).
+pub fn save(
+    path: &Path,
+    params: &FlatParams,
+    step: u64,
+    adam: Option<&AdamState>,
+) -> anyhow::Result<()> {
+    if let Some(st) = adam {
+        anyhow::ensure!(
+            st.m.len() == params.0.len() && st.v.len() == params.0.len(),
+            "Adam state arity {} / {} != param arity {}",
+            st.m.len(),
+            st.v.len(),
+            params.0.len()
+        );
+        for ((m, v), p) in st.m.iter().zip(&st.v).zip(&params.0) {
+            anyhow::ensure!(
+                m.len() == p.len() && v.len() == p.len(),
+                "Adam moment sizes must match param sizes"
+            );
+        }
+    }
     let header = Json::obj(vec![
+        ("version", Json::num(VERSION as f64)),
         ("step", Json::num(step as f64)),
         (
             "param_sizes",
             Json::Arr(params.0.iter().map(|p| Json::num(p.len() as f64)).collect()),
         ),
+        ("has_adam", Json::Bool(adam.is_some())),
+        ("adam_t", Json::num(adam.map(|a| a.t).unwrap_or(0) as f64)),
     ])
     .dump();
     let tmp = path.with_extension("tmp");
@@ -29,10 +93,10 @@ pub fn save(path: &Path, params: &FlatParams, step: u64) -> anyhow::Result<()> {
         f.write_all(MAGIC)?;
         f.write_all(&(header.len() as u64).to_le_bytes())?;
         f.write_all(header.as_bytes())?;
-        for p in &params.0 {
-            for v in p {
-                f.write_all(&v.to_le_bytes())?;
-            }
+        write_bufs(&mut f, &params.0)?;
+        if let Some(st) = adam {
+            write_bufs(&mut f, &st.m)?;
+            write_bufs(&mut f, &st.v)?;
         }
         f.flush()?;
     }
@@ -40,8 +104,8 @@ pub fn save(path: &Path, params: &FlatParams, step: u64) -> anyhow::Result<()> {
     Ok(())
 }
 
-/// Load a checkpoint; returns (params, step).
-pub fn load(path: &Path) -> anyhow::Result<(FlatParams, u64)> {
+/// Load a checkpoint (v1 or v2).
+pub fn load(path: &Path) -> anyhow::Result<TrainState> {
     let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
     let mut magic = [0u8; 8];
     f.read_exact(&mut magic)?;
@@ -54,6 +118,11 @@ pub fn load(path: &Path) -> anyhow::Result<(FlatParams, u64)> {
     f.read_exact(&mut hbuf)?;
     let header = Json::parse(std::str::from_utf8(&hbuf)?)
         .map_err(|e| anyhow::anyhow!("checkpoint header: {e}"))?;
+    let version = header.opt_u64("version", 1);
+    anyhow::ensure!(
+        version <= VERSION,
+        "checkpoint version {version} is newer than supported {VERSION}"
+    );
     let step = header.req_u64("step")?;
     let sizes: Vec<usize> = header
         .get("param_sizes")
@@ -62,18 +131,15 @@ pub fn load(path: &Path) -> anyhow::Result<(FlatParams, u64)> {
         .iter()
         .filter_map(|v| v.as_usize())
         .collect();
-    let mut params = Vec::with_capacity(sizes.len());
-    for n in sizes {
-        let mut bytes = vec![0u8; n * 4];
-        f.read_exact(&mut bytes)?;
-        params.push(
-            bytes
-                .chunks_exact(4)
-                .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
-                .collect(),
-        );
-    }
-    Ok((FlatParams(params), step))
+    let params = FlatParams(read_bufs(&mut f, &sizes)?);
+    let adam = if header.opt_bool("has_adam", false) {
+        let m = read_bufs(&mut f, &sizes)?;
+        let v = read_bufs(&mut f, &sizes)?;
+        Some(AdamState { m, v, t: header.opt_u64("adam_t", 0) })
+    } else {
+        None
+    };
+    Ok(TrainState { params, step, adam })
 }
 
 #[cfg(test)]
@@ -87,15 +153,66 @@ mod tests {
         ])
     }
 
+    fn adam_state() -> AdamState {
+        AdamState {
+            m: vec![(0..100).map(|i| i as f32 * -0.01).collect(), vec![0.5; 7]],
+            v: vec![(0..100).map(|i| i as f32 * 0.001).collect(), vec![0.25; 7]],
+            t: 17,
+        }
+    }
+
     #[test]
-    fn roundtrip() {
+    fn roundtrip_params_only() {
         let dir = std::env::temp_dir().join("chunkflow_ckpt_test");
         let path = dir.join("a.ckpt");
         let p = params();
-        save(&path, &p, 42).unwrap();
-        let (q, step) = load(&path).unwrap();
-        assert_eq!(step, 42);
-        assert_eq!(p.0, q.0);
+        save(&path, &p, 42, None).unwrap();
+        let state = load(&path).unwrap();
+        assert_eq!(state.step, 42);
+        assert_eq!(p.0, state.params.0);
+        assert!(state.adam.is_none());
+    }
+
+    #[test]
+    fn roundtrip_with_adam_state() {
+        let dir = std::env::temp_dir().join("chunkflow_ckpt_test");
+        let path = dir.join("b.ckpt");
+        let p = params();
+        let st = adam_state();
+        save(&path, &p, 7, Some(&st)).unwrap();
+        let state = load(&path).unwrap();
+        assert_eq!(state.step, 7);
+        assert_eq!(p.0, state.params.0);
+        let restored = state.adam.expect("adam state");
+        assert_eq!(restored, st);
+    }
+
+    #[test]
+    fn v1_files_load_without_adam() {
+        // A v1 checkpoint: same magic + header without version/has_adam.
+        let dir = std::env::temp_dir().join("chunkflow_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("v1.ckpt");
+        let p = params();
+        let header = Json::obj(vec![
+            ("step", Json::num(3.0)),
+            (
+                "param_sizes",
+                Json::Arr(p.0.iter().map(|q| Json::num(q.len() as f64)).collect()),
+            ),
+        ])
+        .dump();
+        let mut f = std::io::BufWriter::new(std::fs::File::create(&path).unwrap());
+        f.write_all(MAGIC).unwrap();
+        f.write_all(&(header.len() as u64).to_le_bytes()).unwrap();
+        f.write_all(header.as_bytes()).unwrap();
+        write_bufs(&mut f, &p.0).unwrap();
+        f.flush().unwrap();
+        drop(f);
+        let state = load(&path).unwrap();
+        assert_eq!(state.step, 3);
+        assert_eq!(state.params.0, p.0);
+        assert!(state.adam.is_none(), "v1 checkpoints restart the optimizer");
     }
 
     #[test]
@@ -108,15 +225,47 @@ mod tests {
     }
 
     #[test]
+    fn rejects_future_version() {
+        let dir = std::env::temp_dir().join("chunkflow_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("future.ckpt");
+        let header = Json::obj(vec![
+            ("version", Json::num(99.0)),
+            ("step", Json::num(0.0)),
+            ("param_sizes", Json::Arr(vec![])),
+        ])
+        .dump();
+        let mut f = std::io::BufWriter::new(std::fs::File::create(&path).unwrap());
+        f.write_all(MAGIC).unwrap();
+        f.write_all(&(header.len() as u64).to_le_bytes()).unwrap();
+        f.write_all(header.as_bytes()).unwrap();
+        f.flush().unwrap();
+        drop(f);
+        let err = load(&path).unwrap_err().to_string();
+        assert!(err.contains("version"), "{err}");
+    }
+
+    #[test]
+    fn mismatched_adam_state_rejected_at_save() {
+        let dir = std::env::temp_dir().join("chunkflow_ckpt_test");
+        let path = dir.join("mismatch.ckpt");
+        let p = params();
+        let mut st = adam_state();
+        st.m.pop();
+        assert!(save(&path, &p, 1, Some(&st)).is_err());
+    }
+
+    #[test]
     fn overwrite_is_atomic_and_latest_wins() {
         let dir = std::env::temp_dir().join("chunkflow_ckpt_test");
         let path = dir.join("c.ckpt");
-        save(&path, &params(), 1).unwrap();
+        save(&path, &params(), 1, None).unwrap();
         let mut p2 = params();
         p2.0[0][0] = 999.0;
-        save(&path, &p2, 2).unwrap();
-        let (q, step) = load(&path).unwrap();
-        assert_eq!(step, 2);
-        assert_eq!(q.0[0][0], 999.0);
+        save(&path, &p2, 2, Some(&adam_state())).unwrap();
+        let state = load(&path).unwrap();
+        assert_eq!(state.step, 2);
+        assert_eq!(state.params.0[0][0], 999.0);
+        assert!(state.adam.is_some());
     }
 }

@@ -1,27 +1,40 @@
-//! The real ChunkFlow trainer: Algorithm 2 executed over AOT-compiled PJRT
-//! programs, end to end in Rust.
+//! The real ChunkFlow trainer: Algorithm 2 executed over any [`Backend`]
+//! implementation, end to end in Rust.
+//!
+//! The trainer is generic over the three-program contract
+//! (`runtime::Backend`): the PJRT runtime executes AOT-compiled XLA
+//! programs, the pure-Rust [`ReferenceBackend`](crate::runtime::ReferenceBackend)
+//! executes the same transformer with exact f64 gradients so training runs
+//! (and is tested) on any machine.
 //!
 //! One optimizer step:
 //! 1. sample a global batch of variable-length sequences (long-tail);
 //! 2. Algorithm 1: reorganize into chunks (`chunk::construct_chunks`);
-//! 3. for each dependent-chunk group, run Algorithm 2 with the explicit KV
-//!    chain rule (DESIGN.md §Chunked-Backward):
-//!    - pass 1 ascending: `fwd_kv` per chunk, KV into the StateStore
+//! 3. for each dependent-chunk group, build the Algorithm-2 plan
+//!    (`schedule::schedule_group` with the configured retention budget `K`)
+//!    and execute it:
+//!    - `Forward` ops run `fwd_kv` ascending, KV into the StateStore
 //!      (activations are discarded by construction — each call retains
 //!      nothing), losses recorded;
-//!    - pass 2 descending: `chunk_vjp` per chunk (recomputes the forward:
-//!      "executed twice"), parameter grads accumulated, `d_kv_in` scattered
-//!      into the pending `g_kv` of earlier chunks;
+//!    - `Backward` ops run `chunk_vjp` descending (the program recomputes
+//!      the forward internally — the realization of Alg. 2's "executed
+//!      twice", so `RecomputeForward` ops carry no separate call);
+//!      parameter grads accumulate, `d_kv_in` scatters into the pending
+//!      `g_kv` of earlier chunks;
+//!    the plan's peak live-activation count (`<= K` by construction,
+//!    re-validated every step) is surfaced as `act_peak_chunks`;
 //! 4. standalone chunks run a single `chunk_vjp` with an empty prefix;
 //! 5. grads scaled by 1/total_tokens, clipped, Adam update, params re-sent.
 //!
-//! Peak memory is `O(ChunkSize)` activations inside one PJRT call plus the
-//! `O(context)` KV StateStore — exactly the paper's Table 5 shape.
+//! Peak memory is `O(K * ChunkSize)` activations inside the backend plus
+//! the `O(context)` KV StateStore — exactly the paper's Table 5 shape; both
+//! components are reported per step and CI-asserted by the integration
+//! suites.
 
 mod adam;
 pub mod checkpoint;
 
-pub use adam::Adam;
+pub use adam::{Adam, AdamState};
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -30,7 +43,8 @@ use std::time::Instant;
 use crate::chunk::{construct_chunks, Chunk, ChunkKind};
 use crate::config::TrainConfig;
 use crate::data::{BatchSampler, LengthDistribution, SyntheticCorpus};
-use crate::runtime::{ChunkInputs, FlatParams, Runtime};
+use crate::runtime::{Backend, ChunkInputs, FlatParams, Runtime, Scalar};
+use crate::schedule::{schedule_group, validate_group_plan, ChunkOp};
 use crate::state::{StateKey, StateStore};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
@@ -42,65 +56,106 @@ pub struct StepMetrics {
     pub loss_per_token: f64,
     pub tokens: u64,
     pub chunks: usize,
-    pub pjrt_calls: u64,
+    /// Backend program executions during the step.
+    pub backend_calls: u64,
     pub seconds: f64,
     pub grad_norm: f64,
     /// Peak StateStore bytes during the step (KV state).
     pub kv_peak_bytes: u64,
+    /// Peak retained-activation budget used across all Algorithm-2 plans
+    /// this step, in chunks (never exceeds the configured K).
+    pub act_peak_chunks: usize,
 }
 
-/// The trainer owns the runtime, parameters, optimizer and data pipeline.
-pub struct Trainer {
-    pub runtime: Runtime,
+/// Result of gradient accumulation over one batch (`compute_gradients`).
+#[derive(Clone, Debug)]
+pub struct GradAccum<E> {
+    pub loss_sum: f64,
+    pub tok_sum: f64,
+    /// Summed (unscaled) parameter gradients in the backend element type.
+    pub grads: Vec<Vec<E>>,
+    pub chunks: usize,
+    /// Peak KV StateStore bytes across the batch's chunk groups.
+    pub kv_peak_bytes: u64,
+    /// Peak live-activation count across all group plans (<= K).
+    pub act_peak_chunks: usize,
+}
+
+/// The trainer owns the backend, parameters, optimizer and data pipeline.
+pub struct Trainer<B: Backend = Runtime> {
+    pub backend: B,
     pub params: FlatParams,
     pub adam: Adam,
     pub config: TrainConfig,
+    dist: LengthDistribution,
     sampler: BatchSampler,
     corpus: SyntheticCorpus,
     step: u64,
     pub history: Vec<StepMetrics>,
 }
 
-impl Trainer {
+impl Trainer<Runtime> {
+    /// Load the PJRT runtime from `config.artifacts_dir` (requires the
+    /// `pjrt` cargo feature; use [`Trainer::with_backend`] with a
+    /// [`crate::runtime::ReferenceBackend`] otherwise).
     pub fn new(config: TrainConfig, dist: LengthDistribution) -> anyhow::Result<Self> {
-        let mut runtime = Runtime::load(Path::new(&config.artifacts_dir), &config.model.name)?;
-        let c = runtime.manifest.chunk_size as u64;
-        let max_ctx = c * runtime.manifest.max_chunks as u64;
+        let runtime = Runtime::load(Path::new(&config.artifacts_dir), &config.model.name)?;
+        Self::with_backend(runtime, config, dist)
+    }
+}
+
+impl<B: Backend> Trainer<B> {
+    /// Build a trainer over an already-constructed backend.
+    pub fn with_backend(
+        mut backend: B,
+        config: TrainConfig,
+        dist: LengthDistribution,
+    ) -> anyhow::Result<Self> {
+        let c = backend.manifest().chunk_size as u64;
+        let max_ctx = c * backend.manifest().max_chunks as u64;
         anyhow::ensure!(
             config.context_length <= max_ctx,
-            "context {} exceeds artifact coverage {max_ctx}",
+            "context {} exceeds backend coverage {max_ctx}",
             config.context_length
         );
-        let params = init_params(&runtime.manifest, config.seed);
-        runtime.set_params(&params)?;
-        let adam = Adam::new(
-            config.lr,
-            config.adam_beta1,
-            config.adam_beta2,
-            config.adam_eps,
-            config.weight_decay,
-            &runtime.manifest.params.iter().map(|p| p.size).collect::<Vec<_>>(),
+        anyhow::ensure!(
+            config.chunkflow.chunk_size == c,
+            "configured ChunkSize {} != backend chunk size {c} (the backend's \
+             compiled chunk shape is authoritative)",
+            config.chunkflow.chunk_size
         );
+        let params = init_params(backend.manifest(), config.seed);
+        backend.set_params(&params)?;
+        let adam = fresh_adam(&config, backend.manifest());
         let sampler = BatchSampler::new(
-            dist,
+            dist.clone(),
             config.context_length,
             config.global_batch_size as usize,
             config.seed,
         );
         let corpus =
-            SyntheticCorpus::new(runtime.manifest.vocab_size as u32, config.seed ^ 0xDA7A);
-        Ok(Self { runtime, params, adam, config, sampler, corpus, step: 0, history: Vec::new() })
+            SyntheticCorpus::new(backend.manifest().vocab_size as u32, config.seed ^ 0xDA7A);
+        Ok(Self {
+            backend,
+            params,
+            adam,
+            config,
+            dist,
+            sampler,
+            corpus,
+            step: 0,
+            history: Vec::new(),
+        })
     }
 
     /// Gradient accumulation over one batch: Algorithm 1 + Algorithm 2 over
-    /// the PJRT programs. Returns (loss_sum, token_count, summed grads,
-    /// chunk count, peak KV bytes). Public so integration tests can compare
-    /// against the AOT full-sequence oracle.
+    /// the backend programs. Public so integration tests can compare
+    /// against the unchunked `full_step` oracle.
     pub fn compute_gradients(
         &self,
         batch: &[crate::data::Sequence],
-    ) -> anyhow::Result<(f64, f64, Vec<Vec<f32>>, usize, u64)> {
-        let set = construct_chunks(batch, self.runtime.manifest.chunk_size as u64);
+    ) -> anyhow::Result<GradAccum<B::Elem>> {
+        let set = construct_chunks(batch, self.backend.manifest().chunk_size as u64);
 
         // Token cache for this step's sequences.
         let mut tokens: BTreeMap<u64, Vec<u32>> = BTreeMap::new();
@@ -109,29 +164,45 @@ impl Trainer {
         }
         let seq_len: BTreeMap<u64, u64> = batch.iter().map(|s| (s.id, s.len)).collect();
 
-        let mut grads: Vec<Vec<f32>> =
-            self.runtime.manifest.params.iter().map(|p| vec![0.0; p.size]).collect();
+        let mut grads: Vec<Vec<B::Elem>> = self
+            .backend
+            .manifest()
+            .params
+            .iter()
+            .map(|p| vec![B::Elem::ZERO; p.size])
+            .collect();
         let mut loss_sum = 0.0f64;
         let mut tok_sum = 0.0f64;
         let mut kv_peak = 0u64;
+        let mut act_peak = 0usize;
 
-        // Dependent groups: Algorithm 2.
+        // Dependent groups: Algorithm 2 under the configured K budget.
         for group in set.dependent_groups() {
-            let (l, t) = self.run_group(&group, &tokens, &seq_len, &mut grads, &mut kv_peak)?;
+            let (l, t) =
+                self.run_group(&group, &tokens, &seq_len, &mut grads, &mut kv_peak, &mut act_peak)?;
             loss_sum += l;
             tok_sum += t;
         }
-        // Standalone chunks: single vjp with empty prefix.
-        let c = self.runtime.manifest.chunk_size;
-        let g_zero = vec![0.0f32; self.runtime.kv_elements(c)];
+        // Standalone chunks: the N = 1 plan degenerates to a single vjp
+        // with an empty prefix (one retained activation).
+        let c = self.backend.manifest().chunk_size;
+        let g_zero = vec![B::Elem::ZERO; self.backend.kv_elements(c)];
         for chunk in set.standalone_chunks() {
             let inputs = self.chunk_inputs(chunk, &tokens, &seq_len, 0);
-            let out = self.runtime.chunk_vjp(&inputs, &g_zero)?;
+            let out = self.backend.chunk_vjp(&inputs, &g_zero)?;
             accumulate(&mut grads, &out.d_params);
-            loss_sum += out.loss_sum as f64;
-            tok_sum += out.n_tok as f64;
+            loss_sum += out.loss_sum;
+            tok_sum += out.n_tok;
+            act_peak = act_peak.max(1);
         }
-        Ok((loss_sum, tok_sum, grads, set.chunks.len(), kv_peak))
+        Ok(GradAccum {
+            loss_sum,
+            tok_sum,
+            grads,
+            chunks: set.chunks.len(),
+            kv_peak_bytes: kv_peak,
+            act_peak_chunks: act_peak,
+        })
     }
 
     /// Token ids the trainer will use for a sequence (exposed for the
@@ -143,33 +214,34 @@ impl Trainer {
     /// Run one optimizer step; returns its metrics.
     pub fn train_step(&mut self) -> anyhow::Result<StepMetrics> {
         let t0 = Instant::now();
-        let calls0 = self.runtime.calls.get();
+        let calls0 = self.backend.calls();
         let batch = self.sampler.next_batch();
-        let (loss_sum, tok_sum, mut grads, n_chunks, kv_peak) =
-            self.compute_gradients(&batch)?;
+        let acc = self.compute_gradients(&batch)?;
 
-        anyhow::ensure!(tok_sum > 0.0, "no trainable tokens in batch");
-        // Mean-token loss: scale the summed grads.
-        let inv = (1.0 / tok_sum) as f32;
-        for g in grads.iter_mut() {
-            for x in g.iter_mut() {
-                *x *= inv;
-            }
-        }
+        anyhow::ensure!(acc.tok_sum > 0.0, "no trainable tokens in batch");
+        // Mean-token loss: scale the summed grads (f32 from here on — the
+        // optimizer state is f32 on every backend).
+        let inv = (1.0 / acc.tok_sum) as f32;
+        let mut grads: Vec<Vec<f32>> = acc
+            .grads
+            .iter()
+            .map(|g| g.iter().map(|&x| x.to_f32() * inv).collect())
+            .collect();
         let grad_norm = Adam::clip_global_norm(&mut grads, self.config.grad_clip);
         self.adam.update(&mut self.params.0, &grads);
-        self.runtime.set_params(&self.params)?;
+        self.backend.set_params(&self.params)?;
 
         self.step += 1;
         let metrics = StepMetrics {
             step: self.step,
-            loss_per_token: loss_sum / tok_sum,
-            tokens: tok_sum as u64,
-            chunks: n_chunks,
-            pjrt_calls: self.runtime.calls.get() - calls0,
+            loss_per_token: acc.loss_sum / acc.tok_sum,
+            tokens: acc.tok_sum as u64,
+            chunks: acc.chunks,
+            backend_calls: self.backend.calls() - calls0,
             seconds: t0.elapsed().as_secs_f64(),
             grad_norm,
-            kv_peak_bytes: kv_peak,
+            kv_peak_bytes: acc.kv_peak_bytes,
+            act_peak_chunks: acc.act_peak_chunks,
         };
         crate::info!(
             "step {:>4} | loss/tok {:.4} | tokens {:>6} | chunks {:>3} | {:>5.2}s | gnorm {:.3}",
@@ -184,72 +256,88 @@ impl Trainer {
         Ok(metrics)
     }
 
-    /// Algorithm 2 over one dependent-chunk group (K=1 semantics across the
-    /// AOT boundary; see DESIGN.md §Chunked-Backward).
+    /// Algorithm 2 over one dependent-chunk group, driven by the
+    /// `schedule::` plan for the configured retention budget K (see
+    /// DESIGN.md §Chunked-Backward and the module docs).
     fn run_group(
         &self,
         group: &[&Chunk],
         tokens: &BTreeMap<u64, Vec<u32>>,
         seq_len: &BTreeMap<u64, u64>,
-        grads: &mut [Vec<f32>],
+        grads: &mut [Vec<B::Elem>],
         kv_peak: &mut u64,
+        act_peak: &mut usize,
     ) -> anyhow::Result<(f64, f64)> {
-        let c = self.runtime.manifest.chunk_size;
-        let kv_unit_bytes = (self.runtime.kv_elements(c) * 4) as u64;
+        let c = self.backend.manifest().chunk_size;
+        let kv_unit_bytes = self.backend.kv_elements(c) as u64 * B::Elem::BYTES;
         let n = group.len();
         let seq_id = match group[0].kind {
             ChunkKind::Dependent { seq_id, .. } => seq_id,
             _ => anyhow::bail!("not a dependent group"),
         };
+        let k = (self.config.chunkflow.k.max(1)) as usize;
 
-        // Pass 1 (ascending): state-only forwards.
-        let mut store: StateStore<Vec<f32>> = StateStore::new();
-        for (i, chunk) in group.iter().enumerate() {
-            let prefix = i * c;
-            let kv_in = self.prefix_kv(&store, seq_id, i);
-            let inputs = self.chunk_inputs(chunk, tokens, seq_len, prefix);
-            let inputs = ChunkInputs { kv_in, ..inputs };
-            let out = self.runtime.fwd_kv(&inputs)?;
-            store.put(
-                StateKey { seq_id, chunk_index: i },
-                out.kv_own,
-                kv_unit_bytes,
-            );
-            *kv_peak = (*kv_peak).max(store.peak_bytes());
-        }
+        // Build and re-validate the Algorithm-2 plan; its peak live count
+        // is the activation high-water mark this group will ever need.
+        let positions: Vec<usize> = (0..n).collect();
+        let plan = schedule_group(&positions, k);
+        let stats = validate_group_plan(&plan)
+            .map_err(|e| anyhow::anyhow!("invalid Algorithm-2 plan (N={n}, K={k}): {e}"))?;
+        *act_peak = (*act_peak).max(stats.peak_live_activations);
 
-        // Pass 2 (descending): vjp with KV-gradient chaining.
-        let kv_elems = self.runtime.kv_elements(c);
-        let mut g_kv: Vec<Vec<f32>> = (0..n).map(|_| vec![0.0f32; kv_elems]).collect();
+        let kv_elems = self.backend.kv_elements(c);
+        let mut store: StateStore<Vec<B::Elem>> = StateStore::new();
+        let mut g_kv: Vec<Vec<B::Elem>> =
+            (0..n).map(|_| vec![B::Elem::ZERO; kv_elems]).collect();
         let mut loss = 0.0f64;
         let mut toks = 0.0f64;
-        for i in (0..n).rev() {
-            let prefix = i * c;
-            let kv_in = self.prefix_kv(&store, seq_id, i);
-            let inputs = self.chunk_inputs(group[i], tokens, seq_len, prefix);
-            let inputs = ChunkInputs { kv_in, ..inputs };
-            let out = self.runtime.chunk_vjp(&inputs, &g_kv[i])?;
-            accumulate(grads, &out.d_params);
-            loss += out.loss_sum as f64;
-            toks += out.n_tok as f64;
-            // Scatter d_kv_in ([L, 2, prefix, H, D]) into earlier chunks'
-            // pending gradients ([L, 2, C, H, D] each).
-            scatter_kv_grad(
-                &out.d_kv_in,
-                &mut g_kv[..i],
-                self.runtime.manifest.num_layers,
-                prefix,
-                c,
-                self.runtime.manifest.num_heads * self.runtime.manifest.head_dim,
-            );
+        let hd = self.backend.manifest().num_heads * self.backend.manifest().head_dim;
+        let num_layers = self.backend.manifest().num_layers;
+        for op in &plan.ops {
+            match *op {
+                ChunkOp::Forward { chunk: i, .. } => {
+                    // The final chunk's KV is never consumed as a prefix, but
+                    // its forward still runs and its KV is still stored: the
+                    // StateStore deliberately accounts the whole sequence's
+                    // KV (the paper's Table-5 "KV state ~ context" component).
+                    let prefix = i * c;
+                    let kv_in = self.prefix_kv(&store, seq_id, i);
+                    let inputs = self.chunk_inputs(group[i], tokens, seq_len, prefix);
+                    let inputs = ChunkInputs { kv_in, ..inputs };
+                    let out = self.backend.fwd_kv(&inputs)?;
+                    store.put(StateKey { seq_id, chunk_index: i }, out.kv_own, kv_unit_bytes);
+                    *kv_peak = (*kv_peak).max(store.peak_bytes());
+                }
+                // The three-program contract fuses the recompute-forward
+                // into `chunk_vjp`; the plan op only gates the budget.
+                ChunkOp::RecomputeForward { .. } => {}
+                ChunkOp::Backward { chunk: i } => {
+                    let prefix = i * c;
+                    let kv_in = self.prefix_kv(&store, seq_id, i);
+                    let inputs = self.chunk_inputs(group[i], tokens, seq_len, prefix);
+                    let inputs = ChunkInputs { kv_in, ..inputs };
+                    let out = self.backend.chunk_vjp(&inputs, &g_kv[i])?;
+                    accumulate(grads, &out.d_params);
+                    loss += out.loss_sum;
+                    toks += out.n_tok;
+                    // Scatter d_kv_in ([L, 2, prefix, H, D]) into earlier
+                    // chunks' pending gradients ([L, 2, C, H, D] each).
+                    scatter_kv_grad(&out.d_kv_in, &mut g_kv[..i], num_layers, prefix, c, hd);
+                }
+            }
         }
         Ok((loss, toks))
     }
 
     /// Assemble the KV prefix for chunk `upto` of `seq_id` from the
     /// StateStore ([L, 2, upto*C, H, D], interleaved from per-chunk blocks).
-    fn prefix_kv(&self, store: &StateStore<Vec<f32>>, seq_id: u64, upto: usize) -> Vec<f32> {
-        let parts: Vec<&Vec<f32>> = store
+    fn prefix_kv(
+        &self,
+        store: &StateStore<Vec<B::Elem>>,
+        seq_id: u64,
+        upto: usize,
+    ) -> Vec<B::Elem> {
+        let parts: Vec<&Vec<B::Elem>> = store
             .prefix_of(seq_id, upto)
             .into_iter()
             .map(|(_, v)| v)
@@ -257,9 +345,9 @@ impl Trainer {
         assert_eq!(parts.len(), upto, "missing KV state");
         concat_prefix_with(
             &parts,
-            self.runtime.manifest.num_layers,
-            self.runtime.manifest.chunk_size,
-            self.runtime.manifest.num_heads * self.runtime.manifest.head_dim,
+            self.backend.manifest().num_layers,
+            self.backend.manifest().chunk_size,
+            self.backend.manifest().num_heads * self.backend.manifest().head_dim,
         )
     }
 
@@ -271,8 +359,8 @@ impl Trainer {
         tokens: &BTreeMap<u64, Vec<u32>>,
         seq_len: &BTreeMap<u64, u64>,
         prefix: usize,
-    ) -> ChunkInputs {
-        let c = self.runtime.manifest.chunk_size;
+    ) -> ChunkInputs<B::Elem> {
+        let c = self.backend.manifest().chunk_size;
         let mut toks = vec![0i32; c];
         let mut targets = vec![-1i32; c];
         let mut pos = vec![0i32; c];
@@ -305,21 +393,51 @@ impl Trainer {
         Ok(())
     }
 
-    /// Save parameters + step counter.
+    /// Save parameters + step counter + Adam state.
     pub fn save_checkpoint(&self, path: &std::path::Path) -> anyhow::Result<()> {
-        checkpoint::save(path, &self.params, self.step)
+        checkpoint::save(path, &self.params, self.step, Some(&self.adam.export_state()))
     }
 
-    /// Restore parameters + step counter (optimizer moments restart).
+    /// Restore parameters, step counter, Adam moments (when the checkpoint
+    /// carries them; v1 checkpoints restart the optimizer), and the data
+    /// pipeline: batches are deterministic given the seed, so replaying
+    /// `step` draws puts the sampler exactly where it was at save time —
+    /// continuation is bit-identical to the uninterrupted run.
     pub fn load_checkpoint(&mut self, path: &std::path::Path) -> anyhow::Result<()> {
-        let (params, step) = checkpoint::load(path)?;
+        let state = checkpoint::load(path)?;
         anyhow::ensure!(
-            params.0.len() == self.params.0.len(),
+            state.params.0.len() == self.params.0.len(),
             "checkpoint param arity mismatch"
         );
-        self.params = params;
-        self.step = step;
-        self.runtime.set_params(&self.params)
+        for (have, want) in state.params.0.iter().zip(self.backend.manifest().params.iter()) {
+            anyhow::ensure!(
+                have.len() == want.size,
+                "checkpoint param size {} != manifest {} for `{}`",
+                have.len(),
+                want.size,
+                want.name
+            );
+        }
+        self.params = state.params;
+        self.step = state.step;
+        // Restoring an earlier checkpoint into a used trainer must not leave
+        // future-step metrics behind in the history.
+        self.history.retain(|m| m.step <= state.step);
+        match state.adam {
+            Some(st) => self.adam.import_state(st)?,
+            None => self.adam = fresh_adam(&self.config, self.backend.manifest()),
+        }
+        let mut sampler = BatchSampler::new(
+            self.dist.clone(),
+            self.config.context_length,
+            self.config.global_batch_size as usize,
+            self.config.seed,
+        );
+        for _ in 0..self.step {
+            let _ = sampler.next_batch();
+        }
+        self.sampler = sampler;
+        self.backend.set_params(&self.params)
     }
 
     pub fn loss_history_json(&self) -> Json {
@@ -332,14 +450,27 @@ impl Trainer {
                         ("loss_per_token", Json::num(m.loss_per_token)),
                         ("tokens", Json::num(m.tokens as f64)),
                         ("chunks", Json::num(m.chunks as f64)),
+                        ("backend_calls", Json::num(m.backend_calls as f64)),
                         ("seconds", Json::num(m.seconds)),
                         ("grad_norm", Json::num(m.grad_norm)),
                         ("kv_peak_bytes", Json::num(m.kv_peak_bytes as f64)),
+                        ("act_peak_chunks", Json::num(m.act_peak_chunks as f64)),
                     ])
                 })
                 .collect(),
         )
     }
+}
+
+fn fresh_adam(config: &TrainConfig, manifest: &crate::runtime::Manifest) -> Adam {
+    Adam::new(
+        config.lr,
+        config.adam_beta1,
+        config.adam_beta2,
+        config.adam_eps,
+        config.weight_decay,
+        &manifest.params.iter().map(|p| p.size).collect::<Vec<_>>(),
+    )
 }
 
 /// Deterministic parameter init mirroring python's scheme closely enough for
@@ -363,7 +494,7 @@ pub fn init_params(manifest: &crate::runtime::Manifest, seed: u64) -> FlatParams
     FlatParams(out)
 }
 
-fn accumulate(acc: &mut [Vec<f32>], delta: &[Vec<f32>]) {
+fn accumulate<E: Scalar>(acc: &mut [Vec<E>], delta: &[Vec<E>]) {
     for (a, d) in acc.iter_mut().zip(delta) {
         for (x, y) in a.iter_mut().zip(d) {
             *x += *y;
@@ -373,12 +504,12 @@ fn accumulate(acc: &mut [Vec<f32>], delta: &[Vec<f32>]) {
 
 /// Layout-aware prefix concat: interleaves per-chunk [L, 2, C, H, D] blocks
 /// into [L, 2, upto*C, H, D].
-pub fn concat_prefix_with(
-    parts: &[&Vec<f32>],
+pub fn concat_prefix_with<E: Scalar>(
+    parts: &[&Vec<E>],
     num_layers: usize,
     chunk: usize,
     hd: usize,
-) -> Vec<f32> {
+) -> Vec<E> {
     let upto = parts.len();
     if upto == 0 {
         return Vec::new();
@@ -386,7 +517,7 @@ pub fn concat_prefix_with(
     let block = chunk * hd; // C*H*D elements per (layer, k/v) pair
     let l2 = num_layers * 2;
     debug_assert!(parts.iter().all(|p| p.len() == l2 * block));
-    let mut out = vec![0.0f32; l2 * upto * block];
+    let mut out = vec![E::ZERO; l2 * upto * block];
     for (ci, part) in parts.iter().enumerate() {
         for b in 0..l2 {
             let src = &part[b * block..(b + 1) * block];
@@ -399,9 +530,9 @@ pub fn concat_prefix_with(
 
 /// Scatter `d_kv_in` ([L, 2, prefix, H, D]) into per-chunk pending gradients
 /// ([L, 2, C, H, D] each, chunks 0..prefix/C).
-pub fn scatter_kv_grad(
-    d_kv_in: &[f32],
-    g_kv: &mut [Vec<f32>],
+pub fn scatter_kv_grad<E: Scalar>(
+    d_kv_in: &[E],
+    g_kv: &mut [Vec<E>],
     num_layers: usize,
     prefix: usize,
     chunk: usize,
@@ -436,8 +567,8 @@ mod tests {
     fn concat_prefix_interleaves_blocks() {
         // 1 layer, C=2, H*D=1: per-chunk = [L2=2][C*HD=2] = 4 elems.
         // part A = [a0 a1 | a2 a3] (K block | V block), part B likewise.
-        let a = vec![1.0, 2.0, 3.0, 4.0];
-        let b = vec![5.0, 6.0, 7.0, 8.0];
+        let a = vec![1.0f32, 2.0, 3.0, 4.0];
+        let b = vec![5.0f32, 6.0, 7.0, 8.0];
         let out = concat_prefix_with(&[&a, &b], 1, 2, 1);
         // Expected [L,2,4,1,1]: K = a0 a1 b0 b1, V = a2 a3 b2 b3.
         assert_eq!(out, vec![1.0, 2.0, 5.0, 6.0, 3.0, 4.0, 7.0, 8.0]);
@@ -445,7 +576,14 @@ mod tests {
 
     #[test]
     fn concat_prefix_empty() {
-        assert!(concat_prefix_with(&[], 2, 4, 8).is_empty());
+        assert!(concat_prefix_with::<f32>(&[], 2, 4, 8).is_empty());
+    }
+
+    #[test]
+    fn concat_prefix_generic_over_f64() {
+        let a = vec![1.0f64, 2.0, 3.0, 4.0];
+        let out = concat_prefix_with(&[&a], 1, 2, 1);
+        assert_eq!(out, a);
     }
 
     #[test]

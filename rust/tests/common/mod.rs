@@ -1,0 +1,108 @@
+//! Shared helpers for the reference-backend integration suites: a
+//! minutes-to-milliseconds mini model, trainer constructors, and the
+//! unchunked `full_step` oracle.
+
+#![allow(dead_code)] // each test crate uses a subset of these helpers
+
+use chunkflow::config::{ChunkFlowParams, ModelSpec, TrainConfig};
+use chunkflow::data::{LengthDistribution, Sequence};
+use chunkflow::runtime::{Backend, Manifest, ReferenceBackend};
+use chunkflow::train::Trainer;
+
+/// Small enough that a chunk_vjp is sub-millisecond even in debug builds,
+/// large enough that attention/RoPE/SwiGLU all do real work (2 layers,
+/// 2 heads of dim 16, MHA, tied embeddings — the reference-model family).
+pub fn mini_spec() -> ModelSpec {
+    ModelSpec {
+        name: "ref-mini".into(),
+        hidden_size: 32,
+        num_layers: 2,
+        num_heads: 2,
+        num_kv_heads: 2,
+        intermediate_size: 48,
+        vocab_size: 64,
+        tie_embeddings: true,
+    }
+}
+
+/// Training config for the mini model: context = chunk * max_chunks.
+pub fn mini_config(chunk: u64, max_chunks: usize, k: u64) -> TrainConfig {
+    let mut cfg = TrainConfig::default_for(mini_spec());
+    cfg.context_length = chunk * max_chunks as u64;
+    cfg.global_batch_size = 4;
+    cfg.steps = 2;
+    cfg.lr = 1e-2;
+    cfg.seed = 1234;
+    cfg.chunkflow = ChunkFlowParams::new(chunk, k);
+    cfg
+}
+
+/// Short-sequence distribution bounded by `ctx` (ctx must be >= 16).
+pub fn short_dist(ctx: u64) -> LengthDistribution {
+    LengthDistribution::from_cdf("mini-test", &[(16, 0.5), (32, 0.8)], ctx)
+}
+
+/// Reference-backend trainer from a config + distribution.
+pub fn trainer_with(cfg: TrainConfig, dist: LengthDistribution) -> Trainer<ReferenceBackend> {
+    let chunk = cfg.chunkflow.chunk_size;
+    let max_chunks = cfg.context_length.div_ceil(chunk) as usize;
+    let manifest = Manifest::for_reference(&cfg.model, chunk as usize, max_chunks)
+        .expect("reference manifest");
+    let backend = ReferenceBackend::new(manifest).expect("reference backend");
+    Trainer::with_backend(backend, cfg, dist).expect("trainer")
+}
+
+/// Convenience: mini trainer with the default short distribution.
+pub fn mini_trainer(chunk: u64, max_chunks: usize, k: u64) -> Trainer<ReferenceBackend> {
+    let cfg = mini_config(chunk, max_chunks, k);
+    let ctx = cfg.context_length;
+    trainer_with(cfg, short_dist(ctx))
+}
+
+/// Unchunked oracle for a batch: run `full_step` per sequence over the same
+/// tokens the trainer would use and sum losses / token counts / gradients.
+pub fn oracle_grads(
+    trainer: &Trainer<ReferenceBackend>,
+    batch: &[Sequence],
+) -> (f64, f64, Vec<Vec<f64>>) {
+    let mut grads: Vec<Vec<f64>> = trainer
+        .backend
+        .manifest()
+        .params
+        .iter()
+        .map(|p| vec![0.0f64; p.size])
+        .collect();
+    let mut loss = 0.0f64;
+    let mut ntok = 0.0f64;
+    for seq in batch {
+        let toks: Vec<i32> =
+            trainer.sequence_tokens(seq).iter().map(|&t| t as i32).collect();
+        let mut targets: Vec<i32> = toks[1..].to_vec();
+        targets.push(-1);
+        let pos: Vec<i32> = (0..seq.len as i32).collect();
+        let seg = vec![0i32; seq.len as usize];
+        let out = trainer
+            .backend
+            .full_step(seq.len as usize, &toks, &targets, &pos, &seg)
+            .expect("oracle step");
+        loss += out.loss_sum;
+        ntok += out.n_tok;
+        for (g, d) in grads.iter_mut().zip(&out.d_params) {
+            for (x, y) in g.iter_mut().zip(d) {
+                *x += *y;
+            }
+        }
+    }
+    (loss, ntok, grads)
+}
+
+/// Worst per-tensor relative error: max |a - b| / max |b| over each tensor.
+pub fn max_rel_err(a: &[Vec<f64>], b: &[Vec<f64>]) -> f64 {
+    let mut worst = 0.0f64;
+    for (ga, gb) in a.iter().zip(b) {
+        let max_ref = gb.iter().fold(0.0f64, |m, &x| m.max(x.abs())).max(1e-12);
+        let max_err = ga.iter().zip(gb).map(|(x, y)| (x - y).abs()).fold(0.0f64, f64::max);
+        worst = worst.max(max_err / max_ref);
+    }
+    worst
+}

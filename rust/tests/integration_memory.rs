@@ -1,0 +1,100 @@
+//! Peak-memory invariant suite: the paper's Table-5 shape, CI-enforced.
+//!
+//! Two components bound ChunkFlow's training memory:
+//! - the KV StateStore grows linearly with a group's chunk count (context
+//!   length), independent of K;
+//! - retained activations never exceed K chunks for ANY plan produced by
+//!   `schedule::` — the `K * ChunkSize` bound that replaces max-sequence-
+//!   length activation memory.
+
+mod common;
+
+use chunkflow::data::Sequence;
+use chunkflow::runtime::{Backend, Scalar};
+use chunkflow::schedule::{schedule_group, validate_group_plan};
+use chunkflow::util::prop::{check, ensure, gen_pair, gen_u64, gen_usize, gen_vec};
+
+use common::{mini_config, short_dist, trainer_with};
+
+#[test]
+fn kv_statestore_peak_scales_with_chunk_count() {
+    // One dependent group of N chunks holds exactly N chunk-sized KV blocks
+    // at its peak: bytes = N * unit, linear in context length.
+    let tr = common::mini_trainer(16, 8, 1);
+    let unit = tr.backend.kv_elements(16) as u64 * <f64 as Scalar>::BYTES;
+    let mut peaks = Vec::new();
+    for (id, n_chunks) in [(1u64, 2u64), (2, 4), (3, 8)] {
+        let acc = tr
+            .compute_gradients(&[Sequence { id, len: 16 * n_chunks }])
+            .expect("grads");
+        assert_eq!(acc.kv_peak_bytes, n_chunks * unit, "N={n_chunks}");
+        peaks.push(acc.kv_peak_bytes);
+    }
+    assert_eq!(peaks[2], 4 * peaks[0], "4x the context -> 4x the KV state");
+}
+
+#[test]
+fn standalone_only_batches_keep_the_statestore_empty() {
+    let tr = common::mini_trainer(16, 4, 1);
+    let batch: Vec<Sequence> =
+        (0..6).map(|i| Sequence { id: 100 + i, len: 5 + i }).collect();
+    let acc = tr.compute_gradients(&batch).expect("grads");
+    assert_eq!(acc.kv_peak_bytes, 0, "no dependent chunks => no KV state");
+    assert_eq!(acc.act_peak_chunks, 1, "standalone chunks retain one activation");
+}
+
+#[test]
+fn prop_trainer_activation_hwm_never_exceeds_k() {
+    // Property over random long-tail batches and budgets: the trainer's
+    // activation high-water mark obeys min(K, max group size), and the KV
+    // peak equals the largest dependent group's chunk count times the unit.
+    let gen = gen_pair(gen_vec(gen_u64(1, 96), 1, 6), gen_usize(1, 8));
+    check(20, gen, |(lens, k)| {
+        let cfg = mini_config(16, 6, *k as u64);
+        let ctx = cfg.context_length;
+        let tr = trainer_with(cfg, short_dist(ctx));
+        let batch: Vec<Sequence> = lens
+            .iter()
+            .enumerate()
+            .map(|(i, &len)| Sequence { id: i as u64, len })
+            .collect();
+        let acc = tr.compute_gradients(&batch).map_err(|e| e.to_string())?;
+        ensure(acc.act_peak_chunks <= *k, "activation HWM bounded by K")?;
+        let unit = tr.backend.kv_elements(16) as u64 * <f64 as Scalar>::BYTES;
+        let max_group = lens.iter().map(|&l| l.div_ceil(16)).filter(|&n| n > 1).max();
+        let expect_kv = max_group.map(|n| n * unit).unwrap_or(0);
+        ensure(acc.kv_peak_bytes == expect_kv, "KV peak = largest group x unit")?;
+        let expect_act = lens
+            .iter()
+            .map(|&l| {
+                let n = l.div_ceil(16) as usize;
+                if n > 1 { n.min(*k) } else { 1 }
+            })
+            .max()
+            .unwrap_or(0);
+        ensure(acc.act_peak_chunks == expect_act, "HWM = max over groups of min(N, K)")?;
+        let expect_tok: u64 = lens.iter().map(|&l| l - 1).sum();
+        ensure(acc.tok_sum == expect_tok as f64, "one target per non-final token")?;
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_schedule_peak_live_bounded_by_k_for_large_n() {
+    // Plan-level Table-5 property at integration scale: any (N, K) up to
+    // N=200 keeps live activations <= K while still backwarding every
+    // chunk exactly once.
+    let gen = gen_pair(gen_usize(1, 200), gen_usize(1, 16));
+    check(300, gen, |(n, k)| {
+        let ids: Vec<usize> = (0..*n).collect();
+        let plan = schedule_group(&ids, *k);
+        let stats = validate_group_plan(&plan).map_err(|e| e.to_string())?;
+        ensure(stats.peak_live_activations <= *k, "peak live <= K")?;
+        ensure(stats.n_backward == *n, "every chunk backwarded")?;
+        ensure(
+            stats.n_recompute == n.saturating_sub(*k),
+            "exactly max(N-K, 0) recompute forwards",
+        )?;
+        Ok(())
+    });
+}

@@ -1,0 +1,195 @@
+//! Gradient-equivalence suite for the reference backend: the paper's §4.2
+//! claim — chunked execution with the explicit KV chain rule is
+//! gradient-equivalent to unchunked training — checked against the
+//! `full_step` oracle across a (ChunkSize, K) grid including K < N, plus a
+//! direct finite-difference check of the KV chain rule itself.
+
+mod common;
+
+use chunkflow::data::Sequence;
+use chunkflow::runtime::{Backend, ChunkInputs, Manifest, ReferenceBackend};
+use chunkflow::train::{concat_prefix_with, init_params};
+
+use common::{max_rel_err, mini_config, mini_spec, oracle_grads, short_dist, trainer_with};
+
+/// Batch mixing standalone and dependent chunk groups (total 80-token
+/// coverage): 70 and 48 split into dependent groups at every ChunkSize
+/// below; 12 and 20 flip between the standalone and dependent regimes as
+/// ChunkSize varies.
+fn mixed_batch() -> Vec<Sequence> {
+    vec![
+        Sequence { id: 1, len: 70 },
+        Sequence { id: 2, len: 12 },
+        Sequence { id: 3, len: 20 },
+        Sequence { id: 4, len: 48 },
+    ]
+}
+
+#[test]
+fn chunked_grads_match_unchunked_oracle_across_chunk_size_and_k() {
+    // (ChunkSize, K) grid; K < N holds wherever max N = ceil(70/C) > K
+    // (every row except (32, 4)).
+    let grid: [(u64, u64); 6] = [(8, 1), (8, 3), (16, 1), (16, 2), (32, 1), (32, 4)];
+    let batch = mixed_batch();
+    for (c, k) in grid {
+        let max_chunks = 80u64.div_ceil(c) as usize;
+        let cfg = mini_config(c, max_chunks, k);
+        let ctx = cfg.context_length;
+        let tr = trainer_with(cfg, short_dist(ctx));
+        let acc = tr.compute_gradients(&batch).expect("chunked grads");
+        let (loss_o, ntok_o, grads_o) = oracle_grads(&tr, &batch);
+        assert_eq!(acc.tok_sum, ntok_o, "(C={c}, K={k}) token counts");
+        assert!(
+            (acc.loss_sum - loss_o).abs() / loss_o.abs() < 1e-9,
+            "(C={c}, K={k}) loss {} vs oracle {loss_o}",
+            acc.loss_sum
+        );
+        let rel = max_rel_err(&acc.grads, &grads_o);
+        assert!(rel < 1e-6, "(C={c}, K={k}) chunked-vs-oracle rel err {rel}");
+        let max_n = batch.iter().map(|s| s.len.div_ceil(c)).max().unwrap();
+        assert!(
+            acc.act_peak_chunks as u64 <= k.min(max_n),
+            "(C={c}, K={k}) activation HWM {}",
+            acc.act_peak_chunks
+        );
+    }
+}
+
+#[test]
+fn compute_gradients_is_bitwise_deterministic() {
+    let batch = mixed_batch();
+    let a = {
+        let cfg = mini_config(16, 5, 2);
+        let ctx = cfg.context_length;
+        trainer_with(cfg, short_dist(ctx)).compute_gradients(&batch).unwrap()
+    };
+    let b = {
+        let cfg = mini_config(16, 5, 2);
+        let ctx = cfg.context_length;
+        trainer_with(cfg, short_dist(ctx)).compute_gradients(&batch).unwrap()
+    };
+    assert_eq!(a.loss_sum.to_bits(), b.loss_sum.to_bits());
+    assert_eq!(a.grads, b.grads, "same seed must give bitwise-equal gradients");
+}
+
+/// Direct check of the explicit KV chain rule (§4.2): `chunk_vjp`'s
+/// `d_kv_in` must equal the finite-difference sensitivity of the later
+/// chunk's loss to the stored prefix KV entries.
+#[test]
+fn d_kv_in_matches_finite_difference_through_the_prefix() {
+    let c = 8usize;
+    let manifest = Manifest::for_reference(&mini_spec(), c, 2).unwrap();
+    let mut backend = ReferenceBackend::new(manifest).unwrap();
+    backend.set_params(&init_params(&backend.manifest, 21)).unwrap();
+
+    // One 16-token sequence as two dependent chunks of 8.
+    let tokens: Vec<i32> = (0..16).map(|i| ((i * 7 + 3) % 64) as i32).collect();
+    let chunk_inputs = |lo: usize, kv_in: Vec<f64>, prefix: usize| ChunkInputs::<f64> {
+        tokens: tokens[lo..lo + c].to_vec(),
+        targets: (lo..lo + c)
+            .map(|gp| if gp + 1 < 16 { tokens[gp + 1] } else { -1 })
+            .collect(),
+        pos: (lo as i32..(lo + c) as i32).collect(),
+        seg: vec![0i32; c],
+        kv_in,
+        prefix_len: prefix,
+    };
+
+    let first = chunk_inputs(0, Vec::new(), 0);
+    let kv_own = backend.fwd_kv(&first).unwrap().kv_own;
+    let man = backend.manifest.clone();
+    let prefix_kv = concat_prefix_with(
+        &[&kv_own],
+        man.num_layers,
+        man.chunk_size,
+        man.num_heads * man.head_dim,
+    );
+
+    let second = chunk_inputs(c, prefix_kv.clone(), c);
+    let g_zero = vec![0.0f64; backend.kv_elements(c)];
+    let vjp = backend.chunk_vjp(&second, &g_zero).unwrap();
+    assert_eq!(vjp.d_kv_in.len(), prefix_kv.len());
+
+    // Finite differences on a spread of prefix-KV coordinates.
+    let eps = 1e-6f64;
+    let n = prefix_kv.len();
+    for coord in [0, n / 5, n / 3, n / 2, 2 * n / 3, n - 1] {
+        let probe = |delta: f64| -> f64 {
+            let mut kv = prefix_kv.clone();
+            kv[coord] += delta;
+            backend.fwd_kv(&chunk_inputs(c, kv, c)).unwrap().loss_sum
+        };
+        let fd = (probe(eps) - probe(-eps)) / (2.0 * eps);
+        let an = vjp.d_kv_in[coord];
+        // Floor the denominator well above the central-difference noise
+        // (~1e-8 here) so near-zero gradients cannot amplify it.
+        let denom = an.abs().max(fd.abs()).max(1e-4);
+        assert!(
+            (fd - an).abs() / denom < 1e-3,
+            "coord {coord}: fd {fd} vs analytic {an}"
+        );
+    }
+}
+
+/// `g_kv_own` must act as an exact cotangent: chaining chunk 2's `d_kv_in`
+/// into chunk 1's `chunk_vjp` reproduces the oracle gradient of the
+/// two-chunk sequence (the smallest complete Algorithm-2 instance).
+#[test]
+fn two_chunk_chain_rule_reproduces_oracle_exactly() {
+    let c = 8usize;
+    let manifest = Manifest::for_reference(&mini_spec(), c, 2).unwrap();
+    let mut backend = ReferenceBackend::new(manifest).unwrap();
+    backend.set_params(&init_params(&backend.manifest, 33)).unwrap();
+
+    let tokens: Vec<i32> = (0..16).map(|i| ((i * 11 + 5) % 64) as i32).collect();
+    let targets: Vec<i32> =
+        (0..16).map(|gp| if gp + 1 < 16 { tokens[gp + 1] } else { -1 }).collect();
+    let pos: Vec<i32> = (0..16).collect();
+    let seg = vec![0i32; 16];
+
+    // Chunk 1 forward (KV out), chunk 2 vjp (d_kv_in), chunk 1 vjp with the
+    // chained cotangent.
+    let first = ChunkInputs::<f64> {
+        tokens: tokens[..c].to_vec(),
+        targets: targets[..c].to_vec(),
+        pos: pos[..c].to_vec(),
+        seg: vec![0; c],
+        kv_in: Vec::new(),
+        prefix_len: 0,
+    };
+    let kv_own = backend.fwd_kv(&first).unwrap().kv_own;
+    let man = backend.manifest.clone();
+    let prefix_kv = concat_prefix_with(
+        &[&kv_own],
+        man.num_layers,
+        man.chunk_size,
+        man.num_heads * man.head_dim,
+    );
+    let second = ChunkInputs::<f64> {
+        tokens: tokens[c..].to_vec(),
+        targets: targets[c..].to_vec(),
+        pos: pos[c..].to_vec(),
+        seg: vec![0; c],
+        kv_in: prefix_kv,
+        prefix_len: c,
+    };
+    let g_zero = vec![0.0f64; backend.kv_elements(c)];
+    let out2 = backend.chunk_vjp(&second, &g_zero).unwrap();
+    let out1 = backend.chunk_vjp(&first, &out2.d_kv_in).unwrap();
+
+    let oracle = backend.full_step(16, &tokens, &targets, &pos, &seg).unwrap();
+    assert!(
+        ((out1.loss_sum + out2.loss_sum) - oracle.loss_sum).abs() < 1e-9,
+        "chunked loss {} vs oracle {}",
+        out1.loss_sum + out2.loss_sum,
+        oracle.loss_sum
+    );
+    let chained: Vec<Vec<f64>> = out1
+        .d_params
+        .iter()
+        .zip(&out2.d_params)
+        .map(|(a, b)| a.iter().zip(b).map(|(x, y)| x + y).collect())
+        .collect();
+    let rel = max_rel_err(&chained, &oracle.d_params);
+    assert!(rel < 1e-6, "two-chunk chain rel err {rel}");
+}

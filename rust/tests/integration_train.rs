@@ -1,115 +1,120 @@
-//! Integration tests over the real PJRT runtime + trainer (Layer 3 against
-//! the AOT artifacts of Layers 1-2).
+//! End-to-end trainer integration tests over the pure-Rust reference
+//! backend (Layer 3 against `runtime::ReferenceBackend`).
 //!
-//! Requires `make artifacts` (tiny model) to have run; tests skip with a
-//! notice when artifacts are absent so bare `cargo test` stays green.
+//! These run on every bare `cargo test` — no artifacts, no cargo features,
+//! no `#[ignore]`. They execute full Algorithm-2 optimizer steps, including
+//! dependent groups with K < N (the recompute path), and pin the paper's
+//! gradient-equivalence claim (§4.2) against the unchunked `full_step`
+//! oracle.
 
-use std::path::Path;
+mod common;
 
-use chunkflow::config::{ModelSpec, TrainConfig};
 use chunkflow::data::{LengthDistribution, Sequence};
-use chunkflow::train::Trainer;
+use chunkflow::runtime::{Backend, Scalar};
+use chunkflow::train::Adam;
 
-const K: u64 = 1024;
+use common::{max_rel_err, mini_config, mini_trainer, oracle_grads, trainer_with};
 
-fn artifacts_ready() -> bool {
-    Path::new("artifacts/manifest_tiny.json").exists()
-}
+#[test]
+fn full_algorithm2_optimizer_step_end_to_end() {
+    // Uniform 48-token sequences at ChunkSize 16 with K = 1: every sequence
+    // is a dependent group of N = 3 > K, so each optimizer step runs the
+    // full Algorithm-2 machinery (ascending fwd_kv pass, descending
+    // chunk_vjp pass with KV-gradient chaining, recompute budget of 1).
+    let mut cfg = mini_config(16, 4, 1);
+    cfg.global_batch_size = 2;
+    cfg.steps = 2;
+    let mut tr = trainer_with(cfg, LengthDistribution::uniform_length(48));
+    let p0 = tr.params.0[0].clone();
 
-fn tiny_config() -> TrainConfig {
-    let mut cfg = TrainConfig::default_for(ModelSpec::preset("tiny").unwrap());
-    cfg.context_length = 1024; // = chunk_size(256) * max_chunks(4)
-    cfg.global_batch_size = 4;
-    cfg.steps = 3;
-    cfg.lr = 1e-3;
-    cfg.artifacts_dir = "artifacts".into();
-    cfg
-}
+    let m1 = tr.train_step().expect("step 1");
+    assert_eq!(m1.step, 1);
+    assert_eq!(m1.chunks, 6, "2 sequences x 3 dependent chunks");
+    assert_eq!(m1.tokens, 2 * 47, "each 48-token sequence has 47 next-token targets");
+    assert_eq!(m1.backend_calls, 12, "per group: 3 fwd_kv + 3 chunk_vjp");
+    assert_eq!(m1.act_peak_chunks, 1, "K = 1 bounds the activation budget");
+    let unit = tr.backend.kv_elements(16) as u64 * <f64 as Scalar>::BYTES;
+    assert_eq!(m1.kv_peak_bytes, 3 * unit, "KV store holds all 3 chunks of a group");
+    assert!((3.0..5.5).contains(&m1.loss_per_token), "loss/tok {}", m1.loss_per_token);
+    assert!(m1.grad_norm > 0.0);
+    assert_ne!(tr.params.0[0], p0, "optimizer step must move the parameters");
 
-/// Short-sequence distribution so tiny tests stay fast.
-fn tiny_dist() -> LengthDistribution {
-    LengthDistribution::from_cdf("tiny-test", &[(256, 0.6), (512, 0.9)], 1024)
+    let m2 = tr.train_step().expect("step 2");
+    assert_eq!(m2.step, 2);
+    assert!(m2.loss_per_token.is_finite());
 }
 
 #[test]
-fn trainer_matches_full_sequence_oracle() {
-    if !artifacts_ready() {
-        eprintln!("SKIP: run `make artifacts` first");
-        return;
-    }
-    let trainer = Trainer::new(tiny_config(), tiny_dist()).expect("trainer");
-    // One sequence of exactly 512 tokens = 2 chunks of 256: exercises the
-    // dependent-group path (fwd_kv + chunk_vjp chaining).
-    let seq = Sequence { id: 77, len: 512 };
-    let (loss_c, ntok_c, grads_c, n_chunks, _kv) =
-        trainer.compute_gradients(&[seq]).expect("chunked grads");
-    assert_eq!(n_chunks, 2);
+fn trainer_matches_full_sequence_oracle_with_k_less_than_n() {
+    // Mixed batch: dependent groups of N = 5, 3 and 2 chunks plus a packed
+    // standalone chunk, scheduled with K = 2 < N. Chained chunk_vjp grads
+    // must match the unchunked oracle within 1e-6 relative error (they
+    // agree to ~1e-12 — everything is f64).
+    let tr = mini_trainer(16, 8, 2);
+    let batch = [
+        Sequence { id: 1, len: 70 },
+        Sequence { id: 2, len: 12 },
+        Sequence { id: 3, len: 20 },
+        Sequence { id: 4, len: 48 },
+    ];
+    let acc = tr.compute_gradients(&batch).expect("chunked grads");
+    assert_eq!(acc.chunks, 5 + 1 + 2 + 3);
+    assert_eq!(acc.act_peak_chunks, 2, "plans cap live activations at K = 2");
 
-    // Oracle: the AOT full-sequence program over the same tokens.
-    let tokens = trainer.sequence_tokens(&seq);
-    let toks: Vec<i32> = tokens.iter().map(|&t| t as i32).collect();
-    let mut targets: Vec<i32> = toks[1..].to_vec();
-    targets.push(-1);
-    let pos: Vec<i32> = (0..512).collect();
-    let seg = vec![0i32; 512];
-    let oracle = trainer
-        .runtime
-        .full_step(512, &toks, &targets, &pos, &seg)
-        .expect("oracle step");
+    let (loss_o, ntok_o, grads_o) = oracle_grads(&tr, &batch);
+    assert_eq!(acc.tok_sum, ntok_o);
+    assert!(
+        (acc.loss_sum - loss_o).abs() / loss_o.abs() < 1e-9,
+        "loss {} vs oracle {loss_o}",
+        acc.loss_sum
+    );
+    let rel = max_rel_err(&acc.grads, &grads_o);
+    assert!(rel < 1e-6, "chunked-vs-oracle rel err {rel}");
+}
 
-    assert!((loss_c as f32 - oracle.loss_sum).abs() / oracle.loss_sum < 1e-5,
-        "loss {loss_c} vs oracle {}", oracle.loss_sum);
-    assert_eq!(ntok_c as f32, oracle.n_tok);
-    for (i, (gc, go)) in grads_c.iter().zip(&oracle.d_params).enumerate() {
-        let max_ref = go.iter().fold(0f32, |a, &b| a.max(b.abs())).max(1e-6);
-        let max_err = gc
-            .iter()
-            .zip(go)
-            .map(|(a, b)| (a - b).abs())
-            .fold(0f32, f32::max);
-        assert!(
-            max_err / max_ref < 1e-3,
-            "param {i}: chunked-vs-oracle rel err {}",
-            max_err / max_ref
-        );
+#[test]
+fn gradients_are_invariant_across_k() {
+    // K changes the schedule's activation accounting, never the math: the
+    // executed program stream is identical, so gradients must be
+    // bit-identical across retention budgets.
+    let batch = [Sequence { id: 10, len: 70 }, Sequence { id: 11, len: 30 }];
+    let base = mini_trainer(16, 8, 1).compute_gradients(&batch).expect("K=1");
+    for k in [2u64, 3, 16] {
+        let acc = mini_trainer(16, 8, k).compute_gradients(&batch).expect("K>1");
+        assert_eq!(acc.loss_sum.to_bits(), base.loss_sum.to_bits());
+        assert_eq!(acc.grads, base.grads, "K={k} must not change gradients");
+        assert!(acc.act_peak_chunks <= k.max(1) as usize);
     }
 }
 
 #[test]
 fn training_reduces_loss_on_fixed_batch() {
-    if !artifacts_ready() {
-        eprintln!("SKIP: run `make artifacts` first");
-        return;
-    }
     // Overfit one fixed batch: descent must be unambiguous.
-    let mut cfg = tiny_config();
-    cfg.lr = 1e-2;
-    let mut trainer = Trainer::new(cfg, tiny_dist()).expect("trainer");
+    let mut tr = mini_trainer(16, 4, 1);
     let batch = vec![
-        Sequence { id: 5, len: 300 },
-        Sequence { id: 6, len: 120 },
-        Sequence { id: 7, len: 512 }, // dependent group too
+        Sequence { id: 5, len: 30 },
+        Sequence { id: 6, len: 12 },
+        Sequence { id: 7, len: 48 }, // dependent group too
     ];
     let mut losses = Vec::new();
     for _ in 0..12 {
-        let (loss, ntok, mut grads, _c, _kv) =
-            trainer.compute_gradients(&batch).expect("grads");
-        losses.push(loss / ntok);
-        let inv = (1.0 / ntok) as f32;
-        for g in grads.iter_mut() {
-            for x in g.iter_mut() {
-                *x *= inv;
-            }
-        }
-        chunkflow::train::Adam::clip_global_norm(&mut grads, 1.0);
-        trainer.adam.update(&mut trainer.params.0, &grads);
-        let params = trainer.params.clone();
-        trainer.runtime.set_params(&params).unwrap();
+        let acc = tr.compute_gradients(&batch).expect("grads");
+        losses.push(acc.loss_sum / acc.tok_sum);
+        let inv = (1.0 / acc.tok_sum) as f32;
+        let mut grads: Vec<Vec<f32>> = acc
+            .grads
+            .iter()
+            .map(|g| g.iter().map(|&x| x as f32 * inv).collect())
+            .collect();
+        Adam::clip_global_norm(&mut grads, 1.0);
+        tr.adam.update(&mut tr.params.0, &grads);
+        let params = tr.params.clone();
+        tr.backend.set_params(&params).unwrap();
     }
     let first = losses[0];
     let last = *losses.last().unwrap();
-    // Fresh init predicts ~uniform(512) = 6.24 nats.
-    assert!(first > 5.0, "initial loss {first}");
+    // Fresh init predicts ~uniform(64) = 4.16 nats.
+    assert!(first > 3.5, "initial loss {first}");
     assert!(
         last < first - 0.3,
         "overfitting a fixed batch must descend: {first:.3} -> {last:.3} ({losses:?})"
@@ -117,41 +122,112 @@ fn training_reduces_loss_on_fixed_batch() {
 }
 
 #[test]
-fn packed_chunk_standalone_path_runs() {
-    if !artifacts_ready() {
-        eprintln!("SKIP: run `make artifacts` first");
-        return;
+fn checkpoint_roundtrip_resumes_bit_identical() {
+    // Save params + Adam state mid-run, restore into a fresh trainer, and
+    // require the continued loss trajectory to be bit-identical to the
+    // uninterrupted run (optimizer moments and data-pipeline position are
+    // both part of the checkpoint contract).
+    // Fixed-length sequences keep every sampled batch trainable (a length-1
+    // sequence has no next-token target); ids/tokens still differ per draw,
+    // so the trajectory is non-trivial. 24 tokens = a 2-chunk dependent
+    // group per sequence at ChunkSize 16.
+    let cfg = mini_config(16, 4, 2);
+    let dist = LengthDistribution::uniform_length(24);
+    let dir = std::env::temp_dir().join("chunkflow_it_ckpt");
+    let path = dir.join("resume.ckpt");
+
+    let mut a = trainer_with(cfg.clone(), dist.clone());
+    for _ in 0..2 {
+        a.train_step().expect("warmup step");
     }
-    let trainer = Trainer::new(tiny_config(), tiny_dist()).expect("trainer");
-    // Several short sequences packed into standalone chunks only.
-    let batch: Vec<Sequence> =
-        (0..6).map(|i| Sequence { id: 100 + i, len: 80 + 10 * i }).collect();
-    let (loss, ntok, _grads, n_chunks, kv_peak) =
-        trainer.compute_gradients(&batch).expect("grads");
-    // 6 sequences of ~80-130 tokens pack into 3 chunks of 256.
-    assert!(n_chunks <= 3, "packed into {n_chunks} chunks");
-    assert_eq!(kv_peak, 0, "no dependent chunks => empty state store");
-    let per_tok = loss / ntok;
-    assert!((4.0..8.0).contains(&per_tok), "loss/token {per_tok}");
+    a.save_checkpoint(&path).expect("save");
+    let tail: Vec<(u64, f64, f64)> = (0..3)
+        .map(|_| {
+            let m = a.train_step().expect("tail step");
+            (m.step, m.loss_per_token, m.grad_norm)
+        })
+        .collect();
+
+    let mut b = trainer_with(cfg, dist);
+    b.load_checkpoint(&path).expect("load");
+    for (step, loss, gnorm) in tail {
+        let m = b.train_step().expect("resumed step");
+        assert_eq!(m.step, step, "step numbering continues");
+        assert_eq!(
+            m.loss_per_token.to_bits(),
+            loss.to_bits(),
+            "resumed loss must be bit-identical (step {step})"
+        );
+        assert_eq!(m.grad_norm.to_bits(), gnorm.to_bits(), "grad norm (step {step})");
+    }
 }
 
 #[test]
-fn kv_state_peak_tracks_context() {
-    if !artifacts_ready() {
-        eprintln!("SKIP: run `make artifacts` first");
-        return;
+fn train_runs_configured_steps_and_records_history() {
+    let mut cfg = mini_config(16, 4, 1);
+    cfg.steps = 3;
+    cfg.global_batch_size = 2;
+    let mut tr = trainer_with(cfg, LengthDistribution::uniform_length(24));
+    tr.train().expect("train");
+    assert_eq!(tr.history.len(), 3);
+    let j = tr.loss_history_json().dump();
+    assert!(j.contains("backend_calls") && j.contains("act_peak_chunks"), "{j}");
+}
+
+/// PJRT-backed oracle comparison: only meaningful with the `pjrt` feature
+/// and AOT artifacts present (`make artifacts`); skips cleanly otherwise so
+/// the f32 runtime keeps oracle coverage once the xla crate is wired in.
+#[cfg(feature = "pjrt")]
+mod pjrt_oracle {
+    use chunkflow::config::{ChunkFlowParams, ModelSpec, TrainConfig};
+    use chunkflow::data::{LengthDistribution, Sequence};
+    use chunkflow::runtime::Backend;
+    use chunkflow::train::Trainer;
+
+    #[test]
+    fn pjrt_trainer_matches_full_sequence_oracle() {
+        if !std::path::Path::new("artifacts/manifest_tiny.json").exists() {
+            eprintln!("SKIP: run `make artifacts` first");
+            return;
+        }
+        let mut cfg = TrainConfig::default_for(ModelSpec::preset("tiny").unwrap());
+        cfg.context_length = 1024; // = chunk_size(256) * max_chunks(4)
+        cfg.chunkflow = ChunkFlowParams::new(256, 1);
+        cfg.artifacts_dir = "artifacts".into();
+        let dist = LengthDistribution::from_cdf("tiny-test", &[(256, 0.6), (512, 0.9)], 1024);
+        let trainer = Trainer::new(cfg, dist).expect("trainer");
+        // One 512-token sequence = 2 chunks of 256: exercises the dependent
+        // fwd_kv + chunk_vjp chaining against the AOT full-sequence program.
+        let seq = Sequence { id: 77, len: 512 };
+        let acc = trainer.compute_gradients(&[seq]).expect("chunked grads");
+        assert_eq!(acc.chunks, 2);
+        let toks: Vec<i32> =
+            trainer.sequence_tokens(&seq).iter().map(|&t| t as i32).collect();
+        let mut targets: Vec<i32> = toks[1..].to_vec();
+        targets.push(-1);
+        let pos: Vec<i32> = (0..512).collect();
+        let seg = vec![0i32; 512];
+        let oracle = trainer
+            .backend
+            .full_step(512, &toks, &targets, &pos, &seg)
+            .expect("oracle step");
+        assert!(
+            (acc.loss_sum - oracle.loss_sum).abs() / oracle.loss_sum < 1e-5,
+            "loss {} vs oracle {}",
+            acc.loss_sum,
+            oracle.loss_sum
+        );
+        assert_eq!(acc.tok_sum, oracle.n_tok);
+        for (i, (gc, go)) in acc.grads.iter().zip(&oracle.d_params).enumerate() {
+            let max_ref = go.iter().fold(0f32, |a, &b| a.max(b.abs())).max(1e-6);
+            let max_err =
+                gc.iter().zip(go).map(|(a, b)| (a - b).abs()).fold(0f32, f32::max);
+            // f32 runtime: looser gate than the reference backend's 1e-6.
+            assert!(
+                max_err / max_ref < 1e-3,
+                "param {i}: chunked-vs-oracle rel err {}",
+                max_err / max_ref
+            );
+        }
     }
-    let trainer = Trainer::new(tiny_config(), tiny_dist()).expect("trainer");
-    let (_l, _t, _g, chunks_short, kv_short) = trainer
-        .compute_gradients(&[Sequence { id: 1, len: 512 }])
-        .unwrap();
-    let (_l2, _t2, _g2, chunks_long, kv_long) = trainer
-        .compute_gradients(&[Sequence { id: 2, len: 1024 }])
-        .unwrap();
-    assert_eq!(chunks_short, 2);
-    assert_eq!(chunks_long, 4);
-    // Table 5's KV slope: state grows with context length...
-    assert!(kv_long > kv_short);
-    // ...while activations stay bounded inside single chunk-sized PJRT calls
-    // (not directly observable here; asserted by the memory model tests).
 }
