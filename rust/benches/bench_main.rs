@@ -272,6 +272,42 @@ fn bench_runtime(b: &mut Bencher) {
     });
 }
 
+/// Stage-parallel executor vs single-stage trainer on the same batch: the
+/// real (threaded, channel-connected) pipeline's end-to-end step latency,
+/// plus the per-op overhead of the stage decomposition at P = 1.
+fn bench_pipeline_exec(b: &mut Bencher) {
+    println!("\n-- suite: stage-parallel pipeline executor (reference backend) --");
+    use chunkflow::config::{ChunkFlowParams, TrainConfig};
+    use chunkflow::runtime::{Manifest, ReferenceBackend};
+    use chunkflow::train::Trainer;
+    let mut cfg = TrainConfig::default_for(ModelSpec::preset("tiny").unwrap());
+    cfg.context_length = 1024;
+    cfg.chunkflow = ChunkFlowParams::new(256, 2);
+    let manifest = Manifest::for_reference(&cfg.model, 256, 4).expect("manifest");
+    let backend = ReferenceBackend::new(manifest).expect("backend");
+    let dist = LengthDistribution::from_cdf("bench", &[(256, 0.7)], 1024);
+    let trainer = Trainer::with_backend(backend, cfg, dist).expect("trainer");
+    let batch = vec![
+        Sequence { id: 1, len: 1024 }, // 4-chunk dependent group
+        Sequence { id: 2, len: 200 },
+        Sequence { id: 3, len: 180 },
+    ];
+    b.bench_items("pipeline_exec/single_stage_reference_path", Some(1404.0), || {
+        black_box(trainer.compute_gradients(black_box(&batch)).unwrap());
+    });
+    for p in [1usize, 2] {
+        b.bench_items(
+            &format!("pipeline_exec/executor_{p}stage"),
+            Some(1404.0),
+            || {
+                black_box(
+                    trainer.compute_gradients_pipelined(black_box(&batch), p).unwrap(),
+                );
+            },
+        );
+    }
+}
+
 /// Run the sweep engine's smoke scenarios and write the perf-trajectory
 /// artifact with the micro-benchmark rows embedded.
 fn emit_bench_json(b: &Bencher) {
@@ -317,6 +353,7 @@ fn main() {
     bench_table6(&mut b);
     bench_memory(&mut b);
     bench_runtime(&mut b);
+    bench_pipeline_exec(&mut b);
     let j = b.to_json();
     if let Err(e) = j.write_file(std::path::Path::new("target/bench_results.json")) {
         eprintln!("could not write bench_results.json: {e}");

@@ -5,9 +5,12 @@
 //!
 //! - **Layer 3 (this crate)** — the chunk-centric training coordinator:
 //!   chunk construction ([`chunk`], paper Algorithm 1), state-aware chunk
-//!   scheduling ([`schedule`], Algorithm 2), the StateStore ([`state`]),
-//!   state-aware 1F1B pipeline scheduling and its discrete-event simulator
-//!   ([`pipeline`]), the analytic memory model ([`memory`]), the
+//!   scheduling ([`schedule`], Algorithm 2), the StateStore and its
+//!   disk-spilling offload tier ([`state`]), state-aware 1F1B pipeline
+//!   scheduling with its discrete-event simulator *and* the stage-parallel
+//!   executor that runs the same agendas for real over layer-partitioned
+//!   backend stages ([`pipeline`], [`runtime::StageBackend`]), the
+//!   analytic memory model ([`memory`]), the
 //!   Megatron-LM-like baseline ([`baseline`]), the end-to-end iteration
 //!   simulator ([`sim`]), the (ChunkSize, K) tuner ([`tune`]), the parallel
 //!   scenario-sweep engine and its `BENCH_chunkflow.json` perf-trajectory

@@ -29,6 +29,8 @@ fn flags() -> Vec<FlagSpec> {
         flag("context", true, "context length, e.g. 32K / 256K"),
         flag("chunk-size", true, "ChunkSize in tokens (e.g. 8K)"),
         flag("k", true, "retention budget K"),
+        flag("stages", true, "pipeline stages for train (reference backend; default 1)"),
+        flag("offload-budget-bytes", true, "KV residency budget; spill coldest chunk KV to disk"),
         flag("steps", true, "training steps"),
         flag("batch", true, "global batch size (sequences)"),
         flag("lr", true, "learning rate"),
@@ -41,6 +43,7 @@ fn flags() -> Vec<FlagSpec> {
         flag("iters", true, "simulation iterations to average"),
         flag("out", true, "output JSON path"),
         flag("scenario", true, "sweep scenarios: smoke|paper|<name>[,<name>...]"),
+        flag("measure-exec", false, "attach measured executor bubble ratios (reference probe)"),
         flag("serial", false, "run the sweep serially (reference order)"),
         flag("threads", true, "sweep worker threads (default: all cores)"),
         flag("list", false, "list registered sweep scenarios and exit"),
@@ -110,6 +113,15 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     cfg.artifacts_dir = args.get_or("artifacts", "artifacts").to_string();
     let k = args.get_u64("k", 1)?;
     anyhow::ensure!(k >= 1, "--k must be >= 1");
+    let stages = args.get_usize("stages", 1)?;
+    anyhow::ensure!(stages >= 1, "--stages must be >= 1");
+    let offload_budget = match args.get("offload-budget-bytes") {
+        Some(s) => Some(
+            chunkflow::util::cli::parse_size(s)
+                .ok_or_else(|| anyhow::anyhow!("--offload-budget-bytes: invalid size `{s}`"))?,
+        ),
+        None => None,
+    };
 
     // Clamp the sampled lengths to backend coverage via a suitable
     // distribution: reuse the evaluation shape truncated at the context.
@@ -125,12 +137,46 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
             let chunk_size = args.get_u64("chunk-size", 256)?;
             anyhow::ensure!(chunk_size >= 1, "--chunk-size must be >= 1");
             cfg.chunkflow = ChunkFlowParams::new(chunk_size, k);
+            cfg.parallel = ParallelConfig::new(1, stages as u64, RecomputeGranularity::Selective);
             let max_chunks = cfg.context_length.div_ceil(chunk_size) as usize;
             let manifest = Manifest::for_reference(&cfg.model, chunk_size as usize, max_chunks)?;
             let backend = ReferenceBackend::new(manifest)?;
-            run_training(Trainer::with_backend(backend, cfg, dist)?, args)
+            let mut trainer = Trainer::with_backend(backend, cfg, dist)?;
+            if let Some(budget) = offload_budget {
+                trainer.set_offload_budget(Some(budget));
+            }
+            if stages > 1 {
+                anyhow::ensure!(
+                    offload_budget.is_none(),
+                    "--offload-budget-bytes applies to the single-stage path \
+                     (the pipeline executor owns per-stage KV)"
+                );
+                trainer.train_pipelined(stages)?;
+                finish_training(&trainer, args)
+            } else {
+                trainer.train()?;
+                finish_training(&trainer, args)
+            }
         }
         "pjrt" => {
+            // Fail fast on builds without the PJRT runtime — before any
+            // config or artifact-directory work happens.
+            if cfg!(not(feature = "pjrt")) {
+                anyhow::bail!(
+                    "`--backend pjrt` is unavailable: this chunkflow binary was built \
+                     without the `pjrt` cargo feature (the stub runtime cannot execute \
+                     programs). Rebuild with `cargo build --release --features pjrt` \
+                     after vendoring the `xla` crate, or use `--backend reference`."
+                );
+            }
+            anyhow::ensure!(
+                stages <= 1,
+                "pipeline mode (--stages > 1) requires --backend reference"
+            );
+            anyhow::ensure!(
+                offload_budget.is_none(),
+                "--offload-budget-bytes requires --backend reference"
+            );
             // The AOT artifacts own the compiled chunk shape: default
             // --chunk-size to it; an explicit contradicting flag errors in
             // Trainer::with_backend.
@@ -140,14 +186,15 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
             )?;
             let chunk_size = args.get_u64("chunk-size", runtime.manifest.chunk_size as u64)?;
             cfg.chunkflow = ChunkFlowParams::new(chunk_size, k);
-            run_training(Trainer::with_backend(runtime, cfg, dist)?, args)
+            let mut trainer = Trainer::with_backend(runtime, cfg, dist)?;
+            trainer.train()?;
+            finish_training(&trainer, args)
         }
         other => anyhow::bail!("unknown backend `{other}` (have: reference, pjrt)"),
     }
 }
 
-fn run_training<B: Backend>(mut trainer: Trainer<B>, args: &Args) -> anyhow::Result<()> {
-    trainer.train()?;
+fn finish_training<B: Backend>(trainer: &Trainer<B>, args: &Args) -> anyhow::Result<()> {
     let out = args.get_or("out", "target/train_history.json");
     trainer.loss_history_json().write_file(std::path::Path::new(out))?;
     println!("wrote {out}");
@@ -263,7 +310,24 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
         scenarios.len(),
         engine.parallelism
     );
-    let results = engine.run(&scenarios)?;
+    let mut results = engine.run(&scenarios)?;
+    if args.get_bool("measure-exec") {
+        println!("running executor probes (scaled-down reference mirror per scenario)...\n");
+        sweep::attach_measured_exec(&mut results)?;
+        for r in &results {
+            if let Some(me) = &r.measured_exec {
+                println!(
+                    "  {:<28} stages {} K {} -> bubble {:>5.1}% measured / {:>5.1}% predicted",
+                    r.scenario.name,
+                    me.stages,
+                    me.k,
+                    100.0 * me.bubble_ratio_measured,
+                    100.0 * me.bubble_ratio_predicted
+                );
+            }
+        }
+        println!();
+    }
     println!(
         "{:<28} {:>12} {:>14} {:>12} {:>9}",
         "scenario", "baseline s", "best (CS,K)", "chunkflow s", "speedup"

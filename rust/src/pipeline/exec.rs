@@ -1,0 +1,676 @@
+//! Stage-parallel pipeline executor: run state-aware 1F1B for real.
+//!
+//! The simulator (`pipeline::simulate`) predicts what the paper's schedules
+//! *should* do; this module actually does it. One OS thread per pipeline
+//! stage drives a [`StageBackend`] (a contiguous layer range of the
+//! reference backend, embedding on stage 0, LM head + loss on the last)
+//! through the **same `Op` agendas** `onef1b::standard_1f1b_agendas` /
+//! `state_aware_1f1b_agendas` produce — the executor and the simulator
+//! share one scheduling source of truth. Stage boundaries exchange the two
+//! typed handoffs of `runtime::stage`:
+//! [`ActivationHandoff`] downstream after every (recompute-)forward,
+//! [`GradHandoff`] upstream after every backward.
+//!
+//! Execution semantics mirror the simulator exactly: each stage executes
+//! its agenda strictly in order, an op starting once its cross-stage inputs
+//! have arrived. Arrival order on a boundary can differ from the receiving
+//! stage's agenda order (warmup depth differs per stage, so one stage may
+//! emit a recompute-forward earlier relative to plain forwards than its
+//! neighbor consumes it); an [`Inbox`] buffers early messages so execution
+//! order stays agenda order regardless.
+//!
+//! Per stage, the executor owns the paper's per-stage state:
+//!
+//! - a KV store of its own layers' K/V per forwarded chunk (prefixes are
+//!   assembled stage-locally — KV never crosses a boundary);
+//! - pending KV cotangents chained from later chunks' `d_kv_in`
+//!   (Algorithm 2's explicit chain rule, at stage granularity);
+//! - retained activation caches: a chunk whose agenda carries a
+//!   recompute-forward is discarded at first forward and rebuilt by the
+//!   recompute — the K-budget shows up as the per-stage cache high-water
+//!   mark;
+//! - its slice of the parameter gradients (full-arity buffers; the tied
+//!   embedding accumulates on both boundary stages and the final sum
+//!   reproduces the monolithic backward).
+//!
+//! Every op records wall-clock start/end against a shared epoch, so the
+//! result carries a *measured* [`Timeline`] whose bubble ratio can sit next
+//! to the simulator's predicted one.
+
+use std::collections::BTreeMap;
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::time::{Duration, Instant};
+
+use super::onef1b::state_aware_1f1b_agendas;
+use super::{Op, OpKind, ScheduledOp, Timeline};
+use crate::chunk::ChunkSet;
+use crate::runtime::{
+    ActivationHandoff, Backend, ChunkInputs, GradHandoff, ReferenceBackend, StageBackend,
+    StageCache,
+};
+
+/// How long a stage waits on a boundary channel before declaring the
+/// pipeline wedged — malformed agendas fail loudly instead of hanging CI.
+const HANDOFF_TIMEOUT: Duration = Duration::from_secs(60);
+
+/// Everything the executor needs to run one chunk (pipeline item) besides
+/// the KV plumbing it owns.
+#[derive(Clone, Debug)]
+pub struct ExecItem {
+    /// Fixed-shape chunk inputs. `kv_in` is ignored (each stage assembles
+    /// its local prefix itself); `prefix_len` must equal
+    /// `prefix_items.len() * chunk_size`.
+    pub inputs: ChunkInputs<f64>,
+    /// Item ids of the same sequence's earlier chunks, ascending (empty for
+    /// standalone chunks).
+    pub prefix_items: Vec<usize>,
+}
+
+/// Result of one pipelined execution over a chunk set.
+pub struct ExecOutcome {
+    /// Parameter gradients summed over stages — same unscaled convention as
+    /// `Trainer::compute_gradients`.
+    pub grads: Vec<Vec<f64>>,
+    pub loss_sum: f64,
+    pub tok_sum: f64,
+    /// Measured wall-clock Gantt (seconds from the executor epoch); its
+    /// `bubble_ratio()` is the *measured* counterpart of the simulator's
+    /// predicted one.
+    pub timeline: Timeline,
+    /// Per-stage executed op order — conformance evidence against the
+    /// agendas the run was driven by.
+    pub op_log: Vec<Vec<Op>>,
+    /// Peak live activation caches on any single stage.
+    pub act_peak_chunks: usize,
+    /// Peak stage-local KV bytes, summed over stages. Unlike the
+    /// single-stage trainer's per-group metric this spans the whole batch
+    /// (groups execute concurrently in the pipeline).
+    pub kv_peak_bytes: u64,
+}
+
+/// Execute a chunk set under the state-aware 1F1B schedule on `p` stages
+/// with retention budget `k`. Agendas come from
+/// [`state_aware_1f1b_agendas`] — the exact lists the simulator runs.
+pub fn execute_state_aware(
+    backend: &ReferenceBackend,
+    set: &ChunkSet,
+    items: &[ExecItem],
+    k: usize,
+    p: usize,
+) -> anyhow::Result<ExecOutcome> {
+    anyhow::ensure!(
+        set.chunks.len() == items.len(),
+        "chunk set has {} chunks but {} exec items were given",
+        set.chunks.len(),
+        items.len()
+    );
+    let (agendas, _edges) = state_aware_1f1b_agendas(set, k, p);
+    // Same-stage precedence edges are satisfied by construction: each stage
+    // executes its agenda strictly in order, and the agenda emits units in
+    // an edge-consistent order (the simulator relies on the same fact for
+    // progress).
+    execute_agendas(backend, &agendas, items)
+}
+
+/// Execute explicit per-stage agendas (the executor's core). Exposed so
+/// conformance tests can drive hand-built or standard-1F1B agendas too.
+pub fn execute_agendas(
+    backend: &ReferenceBackend,
+    agendas: &[Vec<Op>],
+    items: &[ExecItem],
+) -> anyhow::Result<ExecOutcome> {
+    let p = agendas.len();
+    anyhow::ensure!(p >= 1, "need at least one stage");
+    for op in agendas.iter().flatten() {
+        anyhow::ensure!(
+            op.item < items.len(),
+            "agenda op {op:?} references item {} but only {} items were given",
+            op.item,
+            items.len()
+        );
+    }
+    // Retention policy, derived from the agendas themselves: a chunk whose
+    // agenda carries a recompute-forward was discarded at first forward.
+    // (The recompute set is identical on every stage by construction.)
+    let mut retain = vec![true; items.len()];
+    for op in agendas.iter().flatten() {
+        if op.kind == OpKind::RecomputeFwd {
+            retain[op.item] = false;
+        }
+    }
+
+    // Boundary channels: activations flow s -> s+1, gradients s+1 -> s.
+    let mut act_tx: Vec<Option<Sender<ActivationHandoff>>> = (0..p).map(|_| None).collect();
+    let mut act_rx: Vec<Option<Receiver<ActivationHandoff>>> = (0..p).map(|_| None).collect();
+    let mut grad_tx: Vec<Option<Sender<GradHandoff>>> = (0..p).map(|_| None).collect();
+    let mut grad_rx: Vec<Option<Receiver<GradHandoff>>> = (0..p).map(|_| None).collect();
+    for s in 0..p.saturating_sub(1) {
+        let (tx, rx) = std::sync::mpsc::channel();
+        act_tx[s] = Some(tx);
+        act_rx[s + 1] = Some(rx);
+        let (tx, rx) = std::sync::mpsc::channel();
+        grad_tx[s + 1] = Some(tx);
+        grad_rx[s] = Some(rx);
+    }
+
+    let retain = &retain;
+    let epoch = Instant::now();
+    let results: Vec<anyhow::Result<StageResult>> = std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(p);
+        let chans = act_tx.into_iter().zip(act_rx).zip(grad_tx).zip(grad_rx);
+        for (s, (((atx, arx), gtx), grx)) in chans.enumerate() {
+            let agenda = &agendas[s];
+            handles.push(scope.spawn(move || {
+                run_stage(backend, s, p, agenda, items, retain, atx, arx, gtx, grx, epoch)
+            }));
+        }
+        handles
+            .into_iter()
+            .map(|h| {
+                h.join()
+                    .unwrap_or_else(|_| Err(anyhow::anyhow!("stage thread panicked")))
+            })
+            .collect()
+    });
+
+    // Aggregate: sum per-stage grads (slots are disjoint except the tied
+    // embedding, which legitimately accumulates from both boundary stages).
+    let mut grads = backend.zero_grads();
+    let (mut loss, mut toks) = (0.0f64, 0.0f64);
+    let mut op_log = Vec::with_capacity(p);
+    let mut ops_all: Vec<ScheduledOp> = Vec::new();
+    let mut act_peak = 0usize;
+    let mut kv_peak = 0u64;
+    for (s, r) in results.into_iter().enumerate() {
+        let r = r.map_err(|e| e.context(format!("pipeline stage {s}")))?;
+        for (g, d) in grads.iter_mut().zip(&r.d_params) {
+            for (x, y) in g.iter_mut().zip(d) {
+                *x += *y;
+            }
+        }
+        loss += r.loss_sum;
+        toks += r.tok_sum;
+        op_log.push(r.ops.iter().map(|o| o.op).collect());
+        act_peak = act_peak.max(r.act_peak);
+        kv_peak += r.kv_peak_bytes;
+        ops_all.extend(r.ops);
+    }
+    let makespan = ops_all.iter().map(|o| o.end).fold(0.0, f64::max);
+    let busy = ops_all.iter().map(|o| o.end - o.start).sum();
+    Ok(ExecOutcome {
+        grads,
+        loss_sum: loss,
+        tok_sum: toks,
+        timeline: Timeline { num_stages: p, ops: ops_all, makespan, busy },
+        op_log,
+        act_peak_chunks: act_peak,
+        kv_peak_bytes: kv_peak,
+    })
+}
+
+/// Per-stage results funneled back to the coordinator.
+struct StageResult {
+    d_params: Vec<Vec<f64>>,
+    loss_sum: f64,
+    tok_sum: f64,
+    ops: Vec<ScheduledOp>,
+    act_peak: usize,
+    kv_peak_bytes: u64,
+}
+
+/// Order-tolerant boundary receiver: messages can arrive earlier than the
+/// receiving stage's agenda consumes them (neighbor stages interleave
+/// forwards and backward units differently — warmup depth is per-stage), so
+/// early arrivals are stashed by key until the agenda asks for them.
+struct Inbox<K: Ord, T> {
+    rx: Option<Receiver<T>>,
+    pending: BTreeMap<K, T>,
+}
+
+impl<K: Ord + Copy + std::fmt::Debug, T> Inbox<K, T> {
+    fn new(rx: Option<Receiver<T>>) -> Self {
+        Self { rx, pending: BTreeMap::new() }
+    }
+
+    /// Receive the message with key `want`, buffering everything else.
+    fn recv_for(
+        &mut self,
+        want: K,
+        key_of: impl Fn(&T) -> K,
+        stage: usize,
+        what: &str,
+    ) -> anyhow::Result<T> {
+        if let Some(msg) = self.pending.remove(&want) {
+            return Ok(msg);
+        }
+        let rx = self
+            .rx
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("stage {stage}: no {what} channel for {want:?}"))?;
+        loop {
+            let msg = rx.recv_timeout(HANDOFF_TIMEOUT).map_err(|e| match e {
+                RecvTimeoutError::Timeout => anyhow::anyhow!(
+                    "stage {stage}: timed out waiting for the {what} of {want:?} \
+                     (deadlocked agendas?)"
+                ),
+                RecvTimeoutError::Disconnected => anyhow::anyhow!(
+                    "stage {stage}: neighbor exited before sending the {what} of {want:?}"
+                ),
+            })?;
+            let key = key_of(&msg);
+            if key == want {
+                return Ok(msg);
+            }
+            anyhow::ensure!(
+                self.pending.insert(key, msg).is_none(),
+                "stage {stage}: duplicate {what} for {key:?}"
+            );
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_stage(
+    backend: &ReferenceBackend,
+    s: usize,
+    p: usize,
+    agenda: &[Op],
+    items: &[ExecItem],
+    retain: &[bool],
+    act_tx: Option<Sender<ActivationHandoff>>,
+    act_rx: Option<Receiver<ActivationHandoff>>,
+    grad_tx: Option<Sender<GradHandoff>>,
+    grad_rx: Option<Receiver<GradHandoff>>,
+    epoch: Instant,
+) -> anyhow::Result<StageResult> {
+    let stage = StageBackend::new(backend, s, p)?;
+    let m = backend.manifest();
+    let c = m.chunk_size;
+    let hd = m.num_heads * m.head_dim;
+    let lr = stage.layers.len();
+    let kv_unit_elems = stage.kv_elements(c);
+    let kv_unit_bytes = (kv_unit_elems * std::mem::size_of::<f64>()) as u64;
+
+    // Stage-local state (see module docs).
+    let mut kv_store: BTreeMap<usize, Vec<f64>> = BTreeMap::new();
+    let (mut kv_bytes, mut kv_peak) = (0u64, 0u64);
+    let mut g_kv: BTreeMap<usize, Vec<f64>> = BTreeMap::new();
+    let mut caches: BTreeMap<usize, StageCache> = BTreeMap::new();
+    let mut act_peak = 0usize;
+    let mut d_params = backend.zero_grads();
+    let (mut loss, mut toks) = (0.0f64, 0.0f64);
+    let mut ops: Vec<ScheduledOp> = Vec::with_capacity(agenda.len());
+
+    let mut act_in: Inbox<(usize, bool), ActivationHandoff> = Inbox::new(act_rx);
+    let mut grad_in: Inbox<usize, GradHandoff> = Inbox::new(grad_rx);
+
+    for &op in agenda {
+        let item = &items[op.item];
+        match op.kind {
+            OpKind::Fwd | OpKind::RecomputeFwd => {
+                let recompute = op.kind == OpKind::RecomputeFwd;
+                let x_in = if stage.is_first() {
+                    None
+                } else {
+                    let h = act_in.recv_for(
+                        (op.item, recompute),
+                        |h| (h.item, h.recompute),
+                        s,
+                        "activation",
+                    )?;
+                    Some(h.x)
+                };
+                let start = epoch.elapsed().as_secs_f64();
+                anyhow::ensure!(
+                    item.inputs.prefix_len == item.prefix_items.len() * c,
+                    "item {}: prefix_len {} != {} prefix chunks x {c}",
+                    op.item,
+                    item.inputs.prefix_len,
+                    item.prefix_items.len()
+                );
+                // Assemble the stage-local KV prefix from this stage's own
+                // store ([Lr, 2, P, H, D] from per-chunk [Lr, 2, C, H, D]).
+                let parts: Vec<&Vec<f64>> = item
+                    .prefix_items
+                    .iter()
+                    .map(|i| {
+                        kv_store.get(i).ok_or_else(|| {
+                            anyhow::anyhow!("stage {s}: missing KV of chunk {i} for {op:?}")
+                        })
+                    })
+                    .collect::<anyhow::Result<_>>()?;
+                let kv_in = crate::train::concat_prefix_with(&parts, lr, c, hd);
+                let inputs = ChunkInputs { kv_in, ..item.inputs.clone() };
+                let out = stage.forward(&inputs, x_in.as_deref())?;
+                if !recompute {
+                    anyhow::ensure!(
+                        kv_store.insert(op.item, out.kv_own).is_none(),
+                        "stage {s}: duplicate forward of chunk {}",
+                        op.item
+                    );
+                    kv_bytes += kv_unit_bytes;
+                    kv_peak = kv_peak.max(kv_bytes);
+                }
+                // Retain the cache unless Algorithm 2 discards it (it will
+                // come back through this chunk's recompute-forward).
+                if retain[op.item] || recompute {
+                    caches.insert(op.item, out.cache);
+                    act_peak = act_peak.max(caches.len());
+                }
+                // End before the send so cross-stage timestamps are a
+                // dataflow proof: the receiver's start can never precede
+                // the sender's recorded end.
+                let end = epoch.elapsed().as_secs_f64();
+                ops.push(ScheduledOp { op, stage: s, start, end });
+                if let Some(tx) = &act_tx {
+                    let x = out.x_out.ok_or_else(|| {
+                        anyhow::anyhow!("stage {s}: interior stage produced no activation")
+                    })?;
+                    tx.send(ActivationHandoff { item: op.item, recompute, x })
+                        .map_err(|_| anyhow::anyhow!("stage {s}: downstream stage hung up"))?;
+                }
+            }
+            OpKind::Bwd => {
+                let d_x_out = if stage.is_last() {
+                    None
+                } else {
+                    let h = grad_in.recv_for(op.item, |h| h.item, s, "gradient")?;
+                    Some(h.d_x)
+                };
+                let start = epoch.elapsed().as_secs_f64();
+                let cache = caches.remove(&op.item).ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "stage {s}: backward of chunk {} without live activations",
+                        op.item
+                    )
+                })?;
+                let g_own = g_kv
+                    .remove(&op.item)
+                    .unwrap_or_else(|| vec![0.0f64; kv_unit_elems]);
+                let inputs = ChunkInputs { kv_in: Vec::new(), ..item.inputs.clone() };
+                let out =
+                    stage.backward(&inputs, &cache, d_x_out.as_deref(), &g_own, &mut d_params)?;
+                // Chain d_kv_in into earlier chunks' pending KV cotangents —
+                // Algorithm 2's explicit chain rule at stage granularity.
+                scatter_stage_kv_grad(
+                    &out.d_kv_in,
+                    &item.prefix_items,
+                    &mut g_kv,
+                    lr,
+                    c,
+                    hd,
+                    kv_unit_elems,
+                );
+                if stage.is_last() {
+                    loss += cache.loss_sum();
+                    toks += cache.n_tok();
+                }
+                // Backwards run in descending dependency order, so once a
+                // chunk backed up its own KV can never be a prefix again.
+                if kv_store.remove(&op.item).is_some() {
+                    kv_bytes -= kv_unit_bytes;
+                }
+                let end = epoch.elapsed().as_secs_f64();
+                ops.push(ScheduledOp { op, stage: s, start, end });
+                if let Some(tx) = &grad_tx {
+                    let d_x = out.d_x_in.ok_or_else(|| {
+                        anyhow::anyhow!("stage {s}: interior stage produced no input cotangent")
+                    })?;
+                    tx.send(GradHandoff { item: op.item, d_x })
+                        .map_err(|_| anyhow::anyhow!("stage {s}: upstream stage hung up"))?;
+                }
+            }
+        }
+    }
+    Ok(StageResult {
+        d_params,
+        loss_sum: loss,
+        tok_sum: toks,
+        ops,
+        act_peak,
+        kv_peak_bytes: kv_peak,
+    })
+}
+
+/// Build the fixed-shape exec items for a chunk set from per-sequence
+/// token streams — the trainer's exact input assembly
+/// ([`crate::train::chunk_inputs_for`]: padding positions 1_000_000+i,
+/// segment -1, cross-chunk targets) plus each chunk's prefix chain.
+pub fn build_exec_items(
+    backend: &ReferenceBackend,
+    set: &ChunkSet,
+    tokens: &BTreeMap<u64, Vec<u32>>,
+    seq_len: &BTreeMap<u64, u64>,
+) -> Vec<ExecItem> {
+    let c = backend.manifest().chunk_size;
+    let mut prefix_of: Vec<Vec<usize>> = vec![Vec::new(); set.chunks.len()];
+    for group in set.dependent_groups() {
+        let ids: Vec<usize> = group.iter().map(|ch| ch.id).collect();
+        for (i, &id) in ids.iter().enumerate() {
+            prefix_of[id] = ids[..i].to_vec();
+        }
+    }
+    set.chunks
+        .iter()
+        .map(|chunk| {
+            let prefix_items = std::mem::take(&mut prefix_of[chunk.id]);
+            let inputs = crate::train::chunk_inputs_for::<f64>(
+                chunk,
+                c,
+                tokens,
+                seq_len,
+                prefix_items.len() * c,
+            );
+            ExecItem { inputs, prefix_items }
+        })
+        .collect()
+}
+
+/// Scatter a stage-local `d_kv_in` ([Lr, 2, P, H, D]) into the pending KV
+/// cotangents of the prefix chunks ([Lr, 2, C, H, D] each) — the per-stage
+/// slice of `train::scatter_kv_grad`.
+fn scatter_stage_kv_grad(
+    d_kv_in: &[f64],
+    prefix_items: &[usize],
+    g_kv: &mut BTreeMap<usize, Vec<f64>>,
+    lr: usize,
+    c: usize,
+    hd: usize,
+    kv_unit_elems: usize,
+) {
+    let n_prev = prefix_items.len();
+    if n_prev == 0 {
+        return;
+    }
+    let block = c * hd;
+    debug_assert_eq!(d_kv_in.len(), lr * 2 * n_prev * block);
+    for (ci, &it) in prefix_items.iter().enumerate() {
+        let dst = g_kv.entry(it).or_insert_with(|| vec![0.0f64; kv_unit_elems]);
+        for b in 0..lr * 2 {
+            let src_off = (b * n_prev + ci) * block;
+            let dst_off = b * block;
+            for (x, y) in dst[dst_off..dst_off + block]
+                .iter_mut()
+                .zip(&d_kv_in[src_off..src_off + block])
+            {
+                *x += *y;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chunk::construct_chunks;
+    use crate::config::ModelSpec;
+    use crate::data::Sequence;
+    use crate::pipeline::standard_1f1b_agendas;
+    use crate::runtime::Manifest;
+    use crate::train::init_params;
+
+    fn backend(chunk: usize, max_chunks: usize) -> ReferenceBackend {
+        let spec = ModelSpec {
+            name: "exec-mini".into(),
+            hidden_size: 16,
+            num_layers: 2,
+            num_heads: 2,
+            num_kv_heads: 2,
+            intermediate_size: 24,
+            vocab_size: 32,
+            tie_embeddings: true,
+        };
+        let manifest = Manifest::for_reference(&spec, chunk, max_chunks).unwrap();
+        let mut b = ReferenceBackend::new(manifest).unwrap();
+        let params = init_params(&b.manifest, 11);
+        b.set_params(&params).unwrap();
+        b
+    }
+
+    /// Exec items for a chunk set over deterministic synthetic tokens.
+    fn exec_items(b: &ReferenceBackend, set: &ChunkSet, batch: &[Sequence]) -> Vec<ExecItem> {
+        let corpus = crate::data::SyntheticCorpus::new(b.manifest.vocab_size as u32, 99);
+        let tokens: BTreeMap<u64, Vec<u32>> =
+            batch.iter().map(|q| (q.id, corpus.generate(q.id, q.len))).collect();
+        let seq_len: BTreeMap<u64, u64> = batch.iter().map(|q| (q.id, q.len)).collect();
+        build_exec_items(b, set, &tokens, &seq_len)
+    }
+
+    #[test]
+    fn single_stage_single_chunk_runs() {
+        let b = backend(8, 1);
+        let batch = vec![Sequence { id: 0, len: 8 }];
+        let set = construct_chunks(&batch, 8);
+        let items = exec_items(&b, &set, &batch);
+        let out = execute_state_aware(&b, &set, &items, 1, 1).unwrap();
+        assert!(out.loss_sum > 0.0);
+        assert_eq!(out.tok_sum, 7.0);
+        assert_eq!(out.op_log.len(), 1);
+        assert_eq!(out.op_log[0], vec![Op::fwd(0), Op::bwd(0)]);
+        assert_eq!(out.timeline.ops.len(), 2);
+    }
+
+    #[test]
+    fn empty_agenda_is_a_noop() {
+        let b = backend(8, 1);
+        let out = execute_agendas(&b, &[Vec::new(), Vec::new()], &[]).unwrap();
+        assert_eq!(out.tok_sum, 0.0);
+        assert_eq!(out.timeline.ops.len(), 0);
+        assert_eq!(out.timeline.bubble_ratio(), 0.0);
+        assert!(out.grads.iter().all(|g| g.iter().all(|&x| x == 0.0)));
+    }
+
+    #[test]
+    fn standard_agendas_execute_on_two_stages() {
+        // Two standalone chunks under plain 1F1B (no recompute, no
+        // dependent state): the executor must drive standard agendas too.
+        let b = backend(8, 1);
+        let batch =
+            vec![Sequence { id: 0, len: 8 }, Sequence { id: 1, len: 8 }];
+        let set = construct_chunks(&batch, 8);
+        let items = exec_items(&b, &set, &batch);
+        let agendas = standard_1f1b_agendas(items.len(), 2);
+        let out = execute_agendas(&b, &agendas, &items).unwrap();
+        assert_eq!(out.tok_sum, 14.0);
+        for (s, log) in out.op_log.iter().enumerate() {
+            assert_eq!(log, &agendas[s], "stage {s} executed its agenda in order");
+        }
+    }
+
+    #[test]
+    fn cross_stage_timestamps_respect_dataflow() {
+        // Fwd(i) at stage s starts only after Fwd(i) at s-1 ended; Bwd(i)
+        // at s only after Bwd(i) at s+1 ended — measured, not simulated.
+        let b = backend(8, 2);
+        let batch = vec![
+            Sequence { id: 0, len: 16 }, // 2 dependent chunks
+            Sequence { id: 1, len: 8 },
+            Sequence { id: 2, len: 8 },
+        ];
+        let set = construct_chunks(&batch, 8);
+        let items = exec_items(&b, &set, &batch);
+        let p = 2;
+        let out = execute_state_aware(&b, &set, &items, 1, p).unwrap();
+        let find = |stage: usize, op: Op| {
+            out.timeline
+                .ops
+                .iter()
+                .find(|o| o.stage == stage && o.op == op)
+                .copied()
+                .unwrap_or_else(|| panic!("missing {op:?} at stage {stage}"))
+        };
+        for i in 0..items.len() {
+            let f0 = find(0, Op::fwd(i));
+            let f1 = find(1, Op::fwd(i));
+            assert!(f1.start >= f0.end - 1e-9, "item {i}: fwd flowed 0 -> 1");
+            let b1 = find(1, Op::bwd(i));
+            let b0 = find(0, Op::bwd(i));
+            assert!(b0.start >= b1.end - 1e-9, "item {i}: bwd flowed 1 -> 0");
+        }
+    }
+
+    #[test]
+    fn recompute_schedule_matches_single_stage_gradients() {
+        // A K < N dependent group through the real pipeline must reproduce
+        // the monolithic chunk_vjp chain: compare against the same batch's
+        // single-stage execution (P = 1), which the trainer suites already
+        // pin to the unchunked oracle.
+        let b = backend(8, 4);
+        let batch = vec![Sequence { id: 7, len: 32 }]; // 4 dependent chunks
+        let set = construct_chunks(&batch, 8);
+        let items = exec_items(&b, &set, &batch);
+        let base = execute_state_aware(&b, &set, &items, 1, 1).unwrap();
+        for p in [2usize, 3] {
+            let out = execute_state_aware(&b, &set, &items, 1, p).unwrap();
+            assert!(
+                (out.loss_sum - base.loss_sum).abs() < 1e-9,
+                "P={p} loss {} vs {}",
+                out.loss_sum,
+                base.loss_sum
+            );
+            assert_eq!(out.tok_sum, base.tok_sum);
+            for (pi, (got, want)) in out.grads.iter().zip(&base.grads).enumerate() {
+                let max_ref =
+                    want.iter().fold(0.0f64, |a, &x| a.max(x.abs())).max(1e-12);
+                let max_err = got
+                    .iter()
+                    .zip(want)
+                    .map(|(x, y)| (x - y).abs())
+                    .fold(0.0f64, f64::max);
+                assert!(
+                    max_err / max_ref < 1e-9,
+                    "P={p} param {pi} rel err {}",
+                    max_err / max_ref
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn act_peak_is_bounded_by_k_for_a_single_group() {
+        let b = backend(8, 8);
+        let batch = vec![Sequence { id: 3, len: 48 }]; // 6 dependent chunks
+        let set = construct_chunks(&batch, 8);
+        let items = exec_items(&b, &set, &batch);
+        for k in [1usize, 2, 3] {
+            let out = execute_state_aware(&b, &set, &items, k, 2).unwrap();
+            assert!(
+                out.act_peak_chunks <= k,
+                "K={k}: act peak {} exceeds the budget",
+                out.act_peak_chunks
+            );
+        }
+    }
+
+    #[test]
+    fn bad_agenda_fails_instead_of_hanging() {
+        // Backward before forward: the stage finds no live activations.
+        let b = backend(8, 1);
+        let batch = vec![Sequence { id: 0, len: 8 }];
+        let set = construct_chunks(&batch, 8);
+        let items = exec_items(&b, &set, &batch);
+        let agendas = vec![vec![Op::bwd(0), Op::fwd(0)]];
+        let err = execute_agendas(&b, &agendas, &items).unwrap_err();
+        assert!(err.to_string().contains("stage 0"), "{err:#}");
+    }
+}

@@ -236,6 +236,39 @@ mod tests {
     }
 
     #[test]
+    fn p1_v1_single_microbatch_degenerates_to_sequential() {
+        // One chunk on one stage, one virtual pass: F then B, no bubbles.
+        let set = chunkset(&[2], 2);
+        let t = simulate_interleaved(&set, 1, 1, 1, unit_costs(&set)).unwrap();
+        assert_eq!(t.ops.len(), 2);
+        assert!((t.makespan - 6.0).abs() < 1e-9, "fwd 2 + bwd 4");
+        assert_eq!(t.bubble_ratio(), 0.0);
+    }
+
+    #[test]
+    fn empty_chunkset_yields_empty_timeline() {
+        // Zero micro-batches => empty agendas on every stage: legal, with a
+        // zero-makespan, zero-bubble timeline (matches `simulate`'s own
+        // empty-agenda degenerate case).
+        let set = chunkset(&[], 4);
+        assert!(set.chunks.is_empty());
+        let t = simulate_interleaved(&set, 1, 3, 2, unit_costs(&set)).unwrap();
+        assert_eq!(t.ops.len(), 0);
+        assert_eq!(t.makespan, 0.0);
+        assert_eq!(t.bubble_ratio(), 0.0);
+        assert_eq!(t.num_stages, 3);
+    }
+
+    #[test]
+    fn single_microbatch_multi_stage_is_valid() {
+        let set = chunkset(&[4], 4); // one standalone chunk
+        let t = simulate_interleaved(&set, 1, 4, 2, unit_costs(&set)).unwrap();
+        // 1 item x 2 virtual stages x (fwd + bwd) on each of 4 stages.
+        assert_eq!(t.ops.len(), 4 * 2 * 2);
+        assert!(t.makespan > 0.0);
+    }
+
+    #[test]
     fn dependent_group_order_respected_under_interleaving() {
         let set = chunkset(&[8], 2); // 4 dependent chunks
         let t = simulate_interleaved(&set, 1, 2, 2, unit_costs(&set)).unwrap();

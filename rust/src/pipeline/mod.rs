@@ -21,9 +21,11 @@
 //!   waits for `Fwd(i)` (or its recompute) there;
 //! - policy-injected extra edges (state-aware ordering within chunk groups).
 
+pub mod exec;
 pub mod interleaved;
 pub mod onef1b;
 
+pub use exec::{build_exec_items, execute_agendas, execute_state_aware, ExecItem, ExecOutcome};
 pub use interleaved::simulate_interleaved;
 
 pub use onef1b::{standard_1f1b_agendas, state_aware_1f1b_agendas, PipelineItem};
@@ -344,6 +346,55 @@ mod tests {
         let t = simulate(&agendas, &uniform_costs(&lens), &vec![]).unwrap();
         let expect: f64 = lens.iter().map(|l| 3.0 * l).sum::<f64>() * 2.0;
         assert!((t.busy - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_agendas_yield_empty_timeline() {
+        let t = simulate(&[Vec::new(), Vec::new()], &[], &vec![]).unwrap();
+        assert_eq!(t.ops.len(), 0);
+        assert_eq!(t.makespan, 0.0);
+        assert_eq!(t.bubble_ratio(), 0.0);
+    }
+
+    #[test]
+    fn prop_simulated_stage_order_equals_agenda_order() {
+        // The conformance property the executor relies on: the simulator
+        // executes each stage's agenda strictly in order, for random
+        // (sequence lengths, P, K) under the state-aware policy.
+        use crate::chunk::construct_chunks;
+        use crate::data::Sequence;
+        use crate::util::prop::{check, ensure, gen_pair, gen_u64, gen_usize, gen_vec};
+        let gen = gen_pair(
+            gen_vec(gen_u64(1, 40), 1, 12),
+            gen_pair(gen_usize(1, 6), gen_usize(1, 4)),
+        );
+        check(150, gen, |(lens, (p, k))| {
+            let batch: Vec<Sequence> = lens
+                .iter()
+                .enumerate()
+                .map(|(i, &len)| Sequence { id: i as u64, len })
+                .collect();
+            let set = construct_chunks(&batch, 8);
+            let (agendas, edges) = onef1b::state_aware_1f1b_agendas(&set, *k, *p);
+            let costs: Vec<OpCosts> = set
+                .chunks
+                .iter()
+                .map(|c| {
+                    let len = c.total_len() as f64;
+                    OpCosts { fwd: len, bwd: 2.0 * len }
+                })
+                .collect();
+            let t = simulate(&agendas, &costs, &edges).map_err(|e| e.to_string())?;
+            for s in 0..*p {
+                let executed: Vec<Op> =
+                    t.ops.iter().filter(|o| o.stage == s).map(|o| o.op).collect();
+                ensure(
+                    executed == agendas[s],
+                    "per-stage executed op order equals the agenda",
+                )?;
+            }
+            Ok(())
+        });
     }
 
     #[test]

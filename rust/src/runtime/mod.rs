@@ -39,11 +39,13 @@ mod manifest;
 #[cfg(feature = "pjrt")]
 mod pjrt;
 mod reference;
+mod stage;
 
 pub use manifest::{Manifest, ParamSpec};
 #[cfg(feature = "pjrt")]
 pub use pjrt::Runtime;
-pub use reference::ReferenceBackend;
+pub use reference::{ReferenceBackend, StageBwdOut, StageCache, StageFwdOut};
+pub use stage::{stage_layer_range, ActivationHandoff, GradHandoff, StageBackend};
 
 /// Element type of KV-state and gradient buffers: f32 on the PJRT runtime,
 /// f64 on the reference backend.
@@ -63,6 +65,10 @@ pub trait Scalar:
     const BYTES: u64;
     /// Narrow to f32 (the optimizer state is f32 on every backend).
     fn to_f32(self) -> f32;
+    /// Append this element's little-endian bytes (OffloadStore spill).
+    fn write_le(self, out: &mut Vec<u8>);
+    /// Read one element back from `BYTES` little-endian bytes.
+    fn read_le(bytes: &[u8]) -> Self;
 }
 
 impl Scalar for f32 {
@@ -71,6 +77,12 @@ impl Scalar for f32 {
     fn to_f32(self) -> f32 {
         self
     }
+    fn write_le(self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.to_le_bytes());
+    }
+    fn read_le(bytes: &[u8]) -> f32 {
+        f32::from_le_bytes(bytes.try_into().expect("4 bytes per f32"))
+    }
 }
 
 impl Scalar for f64 {
@@ -78,6 +90,12 @@ impl Scalar for f64 {
     const BYTES: u64 = 8;
     fn to_f32(self) -> f32 {
         self as f32
+    }
+    fn write_le(self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.to_le_bytes());
+    }
+    fn read_le(bytes: &[u8]) -> f64 {
+        f64::from_le_bytes(bytes.try_into().expect("8 bytes per f64"))
     }
 }
 

@@ -32,7 +32,8 @@
 
 #![allow(clippy::too_many_arguments, clippy::needless_range_loop)]
 
-use std::cell::Cell;
+use std::ops::Range;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use super::{Backend, ChunkInputs, ChunkVjpOut, FlatParams, FullStepOut, FwdKvOut, Manifest};
 
@@ -74,12 +75,16 @@ struct Dims {
 }
 
 /// Deterministic in-process backend (see module docs).
+///
+/// Shared-reference execution: every program takes `&self`, and the call
+/// counter is atomic, so a `&ReferenceBackend` can be driven concurrently
+/// from several pipeline-stage threads (`pipeline::exec`).
 pub struct ReferenceBackend {
     pub manifest: Manifest,
     dims: Dims,
     /// Current parameters, widened to f64 (set via `set_params`).
     params: Option<Vec<Vec<f64>>>,
-    calls: Cell<u64>,
+    calls: AtomicU64,
 }
 
 /// Per-layer forward caches consumed by the reverse pass.
@@ -114,17 +119,65 @@ struct LayerCache {
     act: Vec<f64>,
 }
 
-/// Whole-forward cache.
-struct Cache {
-    layers: Vec<LayerCache>,
-    /// [T, hh] final hidden states (input to ln_f).
-    x_out: Vec<f64>,
+/// Final-norm + tied-head caches consumed by `head_bwd`.
+struct HeadCache {
     /// [T, hh] ln_f output.
     xf: Vec<f64>,
     /// [T] ln_f rsqrt factors.
     inv_f: Vec<f64>,
     /// [T, V] vocab softmax per row.
     probs_v: Vec<f64>,
+}
+
+/// Whole-forward cache.
+struct Cache {
+    layers: Vec<LayerCache>,
+    /// [T, hh] final hidden states (input to ln_f).
+    x_out: Vec<f64>,
+    head: HeadCache,
+}
+
+/// Per-chunk caches one pipeline stage retains between its forward and
+/// backward — the "activations" Algorithm 2 budgets with K, now at stage
+/// granularity. Opaque to the executor: it only stores, counts and returns
+/// them.
+pub struct StageCache {
+    layers: Vec<LayerCache>,
+    /// Last stage only: [T, hh] input to ln_f.
+    x_out: Option<Vec<f64>>,
+    /// Last stage only.
+    head: Option<HeadCache>,
+    /// Last stage only: this chunk's summed loss / trainable-token count.
+    loss_sum: f64,
+    n_tok: f64,
+}
+
+impl StageCache {
+    pub fn loss_sum(&self) -> f64 {
+        self.loss_sum
+    }
+
+    pub fn n_tok(&self) -> f64 {
+        self.n_tok
+    }
+}
+
+/// Output of one stage's forward over one chunk op.
+pub struct StageFwdOut {
+    /// Activation handed to the next stage ([T, hh]); None on the last.
+    pub x_out: Option<Vec<f64>>,
+    /// Stage-local own KV ([Lr, 2, T, H, D]).
+    pub kv_own: Vec<f64>,
+    pub cache: StageCache,
+}
+
+/// Output of one stage's backward over one chunk op.
+pub struct StageBwdOut {
+    /// Activation cotangent handed to the previous stage ([T, hh]); None on
+    /// the first stage (it flows into the embedding gradient instead).
+    pub d_x_in: Option<Vec<f64>>,
+    /// Stage-local prefix-KV cotangent ([Lr, 2, P, H, D]).
+    pub d_kv_in: Vec<f64>,
 }
 
 impl ReferenceBackend {
@@ -181,7 +234,7 @@ impl ReferenceBackend {
                 manifest.params[*idx].name
             );
         }
-        Ok(Self { manifest, dims, params: None, calls: Cell::new(0) })
+        Ok(Self { manifest, dims, params: None, calls: AtomicU64::new(0) })
     }
 
     fn params_ref(&self) -> anyhow::Result<&Vec<Vec<f64>>> {
@@ -211,51 +264,56 @@ impl ReferenceBackend {
         Ok(())
     }
 
-    /// Forward over `t` tokens with a `p`-token KV prefix. Returns
-    /// (loss_sum, n_tok, kv_own [L, 2, T, H, D], caches).
-    fn forward(
-        &self,
-        tokens: &[i32],
-        targets: &[i32],
-        pos: &[i32],
-        seg: &[i32],
-        kv_in: &[f64],
-        p: usize,
-    ) -> anyhow::Result<(f64, f64, Vec<f64>, Cache)> {
+    /// Embedding lookup (stage 0's entry point).
+    fn embed_fwd(&self, tokens: &[i32]) -> anyhow::Result<Vec<f64>> {
         let params = self.params_ref()?;
-        let Dims { l, heads, d, hh, ii, v } = self.dims;
-        let t = tokens.len();
-        let s_len = p + t;
-        let scale = 1.0 / (d as f64).sqrt();
-        anyhow::ensure!(kv_in.len() == l * 2 * p * heads * d, "kv_in len");
+        let Dims { hh, v, .. } = self.dims;
         for &tok in tokens {
             anyhow::ensure!(tok >= 0 && (tok as usize) < v, "token {tok} out of vocab {v}");
         }
-        for &tg in targets {
-            anyhow::ensure!(tg < v as i32, "target {tg} out of vocab {v}");
-        }
-
-        // Key metadata: prefix tokens are positions 0..P of segment 0.
-        let mut k_pos = Vec::with_capacity(s_len);
-        let mut k_seg = Vec::with_capacity(s_len);
-        for j in 0..p {
-            k_pos.push(j as i32);
-            k_seg.push(0i32);
-        }
-        k_pos.extend_from_slice(pos);
-        k_seg.extend_from_slice(seg);
-
-        // Embedding lookup.
         let embed = &params[P_EMBED];
+        let t = tokens.len();
         let mut x = vec![0.0f64; t * hh];
         for i in 0..t {
             let row = &embed[tokens[i] as usize * hh..(tokens[i] as usize + 1) * hh];
             x[i * hh..(i + 1) * hh].copy_from_slice(row);
         }
+        Ok(x)
+    }
 
-        let mut layers = Vec::with_capacity(l);
+    /// Forward a contiguous `layers` range over activation `x` with a
+    /// range-local KV prefix (`kv_in` is [Lr, 2, P, H, D]). Returns the
+    /// range's output activation, its own KV ([Lr, 2, T, H, D]) and the
+    /// per-layer caches the matching `layers_bwd` consumes. An empty range
+    /// is a passthrough (a stage that only holds the embedding or head).
+    fn layers_fwd(
+        &self,
+        layers: Range<usize>,
+        mut x: Vec<f64>,
+        pos: &[i32],
+        seg: &[i32],
+        k_pos: &[i32],
+        k_seg: &[i32],
+        kv_in: &[f64],
+        p: usize,
+    ) -> anyhow::Result<(Vec<f64>, Vec<f64>, Vec<LayerCache>)> {
+        let params = self.params_ref()?;
+        let Dims { heads, d, hh, ii, .. } = self.dims;
+        let t = pos.len();
+        let s_len = p + t;
+        let scale = 1.0 / (d as f64).sqrt();
+        let lr = layers.len();
+        anyhow::ensure!(x.len() == t * hh, "activation len {} != {}", x.len(), t * hh);
+        anyhow::ensure!(
+            kv_in.len() == lr * 2 * p * heads * d,
+            "stage kv_in len {} != {} for {lr} layers, prefix {p}",
+            kv_in.len(),
+            lr * 2 * p * heads * d
+        );
+
+        let mut caches = Vec::with_capacity(lr);
         let mut s_buf = vec![0.0f64; s_len];
-        for li in 0..l {
+        for (lj, li) in layers.clone().enumerate() {
             let x_in = x.clone();
             let norm1 = &params[P_NORM1][li * hh..(li + 1) * hh];
             let (xn1, inv1) = rmsnorm_fwd(&x_in, norm1, t, hh);
@@ -280,8 +338,8 @@ impl ReferenceBackend {
             for h in 0..heads {
                 for j in 0..p {
                     for dd in 0..d {
-                        let kidx = (((li * 2) * p + j) * heads + h) * d + dd;
-                        let vidx = (((li * 2 + 1) * p + j) * heads + h) * d + dd;
+                        let kidx = (((lj * 2) * p + j) * heads + h) * d + dd;
+                        let vidx = (((lj * 2 + 1) * p + j) * heads + h) * d + dd;
                         k_full[(h * s_len + j) * d + dd] = kv_in[kidx];
                         v_full[(h * s_len + j) * d + dd] = kv_in[vidx];
                     }
@@ -368,7 +426,7 @@ impl ReferenceBackend {
                 *xo += *mv;
             }
 
-            layers.push(LayerCache {
+            caches.push(LayerCache {
                 x_in,
                 xn1,
                 inv1,
@@ -387,9 +445,34 @@ impl ReferenceBackend {
             x = x_out;
         }
 
-        // Final norm + tied logits + summed cross-entropy.
-        let x_out = x;
-        let (xf, inv_f) = rmsnorm_fwd(&x_out, &params[P_LN_F], t, hh);
+        // Own KV contribution [Lr, 2, T, H, D] from the per-layer full K/V.
+        let mut kv_own = vec![0.0f64; lr * 2 * t * heads * d];
+        for (lj, lc) in caches.iter().enumerate() {
+            for i in 0..t {
+                for h in 0..heads {
+                    let src = (h * s_len + p + i) * d;
+                    let kdst = (((lj * 2) * t + i) * heads + h) * d;
+                    let vdst = (((lj * 2 + 1) * t + i) * heads + h) * d;
+                    kv_own[kdst..kdst + d].copy_from_slice(&lc.k_full[src..src + d]);
+                    kv_own[vdst..vdst + d].copy_from_slice(&lc.v_full[src..src + d]);
+                }
+            }
+        }
+
+        Ok((x, kv_own, caches))
+    }
+
+    /// Final RMSNorm + tied logits + summed next-token cross-entropy (the
+    /// last stage's exit point). Returns (loss_sum, n_tok, head cache).
+    fn head_fwd(&self, x_out: &[f64], targets: &[i32]) -> anyhow::Result<(f64, f64, HeadCache)> {
+        let params = self.params_ref()?;
+        let Dims { hh, v, .. } = self.dims;
+        let t = targets.len();
+        for &tg in targets {
+            anyhow::ensure!(tg < v as i32, "target {tg} out of vocab {v}");
+        }
+        let embed = &params[P_EMBED];
+        let (xf, inv_f) = rmsnorm_fwd(x_out, &params[P_LN_F], t, hh);
         let mut probs_v = vec![0.0f64; t * v];
         let mut logits = vec![0.0f64; v];
         let mut loss_sum = 0.0f64;
@@ -424,47 +507,43 @@ impl ReferenceBackend {
                 n_tok += 1.0;
             }
         }
-
-        // Own KV contribution [L, 2, T, H, D] from the per-layer full K/V.
-        let mut kv_own = vec![0.0f64; l * 2 * t * heads * d];
-        for (li, lc) in layers.iter().enumerate() {
-            for i in 0..t {
-                for h in 0..heads {
-                    let src = (h * s_len + p + i) * d;
-                    let kdst = (((li * 2) * t + i) * heads + h) * d;
-                    let vdst = (((li * 2 + 1) * t + i) * heads + h) * d;
-                    kv_own[kdst..kdst + d].copy_from_slice(&lc.k_full[src..src + d]);
-                    kv_own[vdst..vdst + d].copy_from_slice(&lc.v_full[src..src + d]);
-                }
-            }
-        }
-
-        Ok((loss_sum, n_tok, kv_own, Cache { layers, x_out, xf, inv_f, probs_v }))
+        Ok((loss_sum, n_tok, HeadCache { xf, inv_f, probs_v }))
     }
 
-    /// Reverse pass. Cotangents: d(loss_sum) = 1, d(n_tok) = 0, and
-    /// `g_kv_own` on this chunk's KV output (None for the full oracle).
-    /// Returns (d_params, d_kv_in [L, 2, P, H, D]). Segment ids are not
-    /// needed here: the mask lives implicitly in the cached probabilities
-    /// (masked entries are exactly zero).
-    fn backward(
+    /// Forward over `t` tokens with a `p`-token KV prefix — the single-stage
+    /// composition of the stage pieces (embed, all layers, head). Returns
+    /// (loss_sum, n_tok, kv_own [L, 2, T, H, D], caches).
+    fn forward(
         &self,
         tokens: &[i32],
         targets: &[i32],
         pos: &[i32],
+        seg: &[i32],
+        kv_in: &[f64],
         p: usize,
-        cache: &Cache,
-        g_kv_own: Option<&[f64]>,
-    ) -> (Vec<Vec<f64>>, Vec<f64>) {
-        let params = self.params.as_ref().expect("backward after forward");
-        let Dims { l, heads, d, hh, ii, v } = self.dims;
-        let t = tokens.len();
-        let s_len = p + t;
-        let scale = 1.0 / (d as f64).sqrt();
+    ) -> anyhow::Result<(f64, f64, Vec<f64>, Cache)> {
+        let l = self.dims.l;
+        let (k_pos, k_seg) = key_meta(pos, seg, p);
+        let x = self.embed_fwd(tokens)?;
+        let (x_out, kv_own, layers) =
+            self.layers_fwd(0..l, x, pos, seg, &k_pos, &k_seg, kv_in, p)?;
+        let (loss_sum, n_tok, head) = self.head_fwd(&x_out, targets)?;
+        Ok((loss_sum, n_tok, kv_own, Cache { layers, x_out, head }))
+    }
 
-        let mut d_params: Vec<Vec<f64>> =
-            self.manifest.params.iter().map(|spec| vec![0.0f64; spec.size]).collect();
-        let mut d_kv_in = vec![0.0f64; l * 2 * p * heads * d];
+    /// Head backward: loss cotangent (d loss_sum = 1) through the tied head
+    /// and ln_f. Accumulates embed/ln_f grads into `d_params`, returns the
+    /// cotangent at the last layer range's output.
+    fn head_bwd(
+        &self,
+        targets: &[i32],
+        x_out: &[f64],
+        head: &HeadCache,
+        d_params: &mut [Vec<f64>],
+    ) -> Vec<f64> {
+        let params = self.params.as_ref().expect("backward after forward");
+        let Dims { hh, v, .. } = self.dims;
+        let t = targets.len();
 
         // Loss -> logits -> (xf, embed). Tied head: logits = xf @ embed^T.
         let embed = &params[P_EMBED];
@@ -474,8 +553,8 @@ impl ReferenceBackend {
                 continue;
             }
             let tgt = targets[i] as usize;
-            let prow = &cache.probs_v[i * v..(i + 1) * v];
-            let xfr = &cache.xf[i * hh..(i + 1) * hh];
+            let prow = &head.probs_v[i * v..(i + 1) * v];
+            let xfr = &head.xf[i * hh..(i + 1) * hh];
             let dxfr = &mut d_xf[i * hh..(i + 1) * hh];
             for j in 0..v {
                 let dl = prow[j] - if j == tgt { 1.0 } else { 0.0 };
@@ -492,19 +571,47 @@ impl ReferenceBackend {
         // the mask is implicit in the cached probs — masked entries are 0.)
         let mut d_x = vec![0.0f64; t * hh];
         rmsnorm_bwd(
-            &cache.x_out,
+            x_out,
             &params[P_LN_F],
-            &cache.inv_f,
+            &head.inv_f,
             &d_xf,
             t,
             hh,
             &mut d_x,
             &mut d_params[P_LN_F],
         );
+        d_x
+    }
+
+    /// Reverse pass over a `layers` range (matching a prior `layers_fwd`).
+    /// Cotangents: `d_x` at the range output plus the range-local slice of
+    /// `g_kv_own` on the chunk's KV output ([Lr, 2, T, H, D]). Accumulates
+    /// parameter grads into `d_params` and returns (cotangent at the range
+    /// input, d_kv_in [Lr, 2, P, H, D]). Segment ids are not needed here:
+    /// the mask lives implicitly in the cached probabilities (masked
+    /// entries are exactly zero).
+    fn layers_bwd(
+        &self,
+        layers: Range<usize>,
+        caches: &[LayerCache],
+        mut d_x: Vec<f64>,
+        pos: &[i32],
+        p: usize,
+        g_kv_own: Option<&[f64]>,
+        d_params: &mut [Vec<f64>],
+    ) -> (Vec<f64>, Vec<f64>) {
+        let params = self.params.as_ref().expect("backward after forward");
+        let Dims { heads, d, hh, ii, .. } = self.dims;
+        let t = pos.len();
+        let s_len = p + t;
+        let scale = 1.0 / (d as f64).sqrt();
+        let lr = layers.len();
+        debug_assert_eq!(caches.len(), lr);
+        let mut d_kv_in = vec![0.0f64; lr * 2 * p * heads * d];
 
         let mut d_p_buf = vec![0.0f64; s_len];
-        for li in (0..l).rev() {
-            let lc = &cache.layers[li];
+        for (lj, li) in layers.clone().enumerate().rev() {
+            let lc = &caches[lj];
             let w_down = &params[P_W_DOWN][li * ii * hh..(li + 1) * ii * hh];
             let w_gate = &params[P_W_GATE][li * hh * ii..(li + 1) * hh * ii];
             let w_up = &params[P_W_UP][li * hh * ii..(li + 1) * hh * ii];
@@ -597,8 +704,8 @@ impl ReferenceBackend {
             if let Some(g) = g_kv_own {
                 for i in 0..t {
                     for h in 0..heads {
-                        let kidx = (((li * 2) * t + i) * heads + h) * d;
-                        let vidx = (((li * 2 + 1) * t + i) * heads + h) * d;
+                        let kidx = (((lj * 2) * t + i) * heads + h) * d;
+                        let vidx = (((lj * 2 + 1) * t + i) * heads + h) * d;
                         let kdst = (h * s_len + p + i) * d;
                         for dd in 0..d {
                             d_k_full[kdst + dd] += g[kidx + dd];
@@ -613,8 +720,8 @@ impl ReferenceBackend {
             for j in 0..p {
                 for h in 0..heads {
                     let ksrc = (h * s_len + j) * d;
-                    let kdst = (((li * 2) * p + j) * heads + h) * d;
-                    let vdst = (((li * 2 + 1) * p + j) * heads + h) * d;
+                    let kdst = (((lj * 2) * p + j) * heads + h) * d;
+                    let vdst = (((lj * 2 + 1) * p + j) * heads + h) * d;
                     for dd in 0..d {
                         d_kv_in[kdst + dd] += d_k_full[ksrc + dd];
                         d_kv_in[vdst + dd] += d_v_full[ksrc + dd];
@@ -662,8 +769,14 @@ impl ReferenceBackend {
             d_x = d_x_in;
         }
 
-        // Embedding lookup backward.
-        for i in 0..t {
+        (d_x, d_kv_in)
+    }
+
+    /// Embedding-lookup backward (stage 0's exit point): routes the final
+    /// residual cotangent into the embedding rows.
+    fn embed_bwd(&self, tokens: &[i32], d_x: &[f64], d_params: &mut [Vec<f64>]) {
+        let hh = self.dims.hh;
+        for i in 0..tokens.len() {
             let tok = tokens[i] as usize;
             let drow = &mut d_params[P_EMBED][tok * hh..(tok + 1) * hh];
             let dxr = &d_x[i * hh..(i + 1) * hh];
@@ -671,9 +784,155 @@ impl ReferenceBackend {
                 drow[c] += dxr[c];
             }
         }
+    }
 
+    /// Fresh zeroed full-arity gradient buffers.
+    pub fn zero_grads(&self) -> Vec<Vec<f64>> {
+        self.manifest.params.iter().map(|spec| vec![0.0f64; spec.size]).collect()
+    }
+
+    /// Reverse pass. Cotangents: d(loss_sum) = 1, d(n_tok) = 0, and
+    /// `g_kv_own` on this chunk's KV output (None for the full oracle).
+    /// Returns (d_params, d_kv_in [L, 2, P, H, D]) — the single-stage
+    /// composition of the stage pieces (head, all layers, embed).
+    fn backward(
+        &self,
+        tokens: &[i32],
+        targets: &[i32],
+        pos: &[i32],
+        p: usize,
+        cache: &Cache,
+        g_kv_own: Option<&[f64]>,
+    ) -> (Vec<Vec<f64>>, Vec<f64>) {
+        let l = self.dims.l;
+        let mut d_params = self.zero_grads();
+        let d_x = self.head_bwd(targets, &cache.x_out, &cache.head, &mut d_params);
+        let (d_x, d_kv_in) =
+            self.layers_bwd(0..l, &cache.layers, d_x, pos, p, g_kv_own, &mut d_params);
+        self.embed_bwd(tokens, &d_x, &mut d_params);
         (d_params, d_kv_in)
     }
+
+    /// One pipeline stage's forward for a chunk op: embedding on the first
+    /// stage, the stage's contiguous layer range, LM head + loss on the
+    /// last. `inputs.kv_in` must be the *stage-local* prefix KV
+    /// ([Lr, 2, P, H, D]); `x_in` is the activation handed over from the
+    /// previous stage (None iff `first_stage`). An empty layer range is a
+    /// legal passthrough, so P > num_layers still partitions.
+    pub fn stage_fwd(
+        &self,
+        layers: Range<usize>,
+        first_stage: bool,
+        last_stage: bool,
+        inputs: &ChunkInputs<f64>,
+        x_in: Option<&[f64]>,
+    ) -> anyhow::Result<StageFwdOut> {
+        anyhow::ensure!(
+            first_stage == x_in.is_none(),
+            "activation handoff mismatch: stage 0 embeds, later stages receive"
+        );
+        self.calls.fetch_add(1, Ordering::Relaxed);
+        let p = inputs.prefix_len;
+        let (k_pos, k_seg) = key_meta(&inputs.pos, &inputs.seg, p);
+        let x = match x_in {
+            None => self.embed_fwd(&inputs.tokens)?,
+            Some(x) => x.to_vec(),
+        };
+        let (x_out, kv_own, caches) =
+            self.layers_fwd(layers, x, &inputs.pos, &inputs.seg, &k_pos, &k_seg, &inputs.kv_in, p)?;
+        if last_stage {
+            let (loss_sum, n_tok, head) = self.head_fwd(&x_out, &inputs.targets)?;
+            Ok(StageFwdOut {
+                x_out: None,
+                kv_own,
+                cache: StageCache {
+                    layers: caches,
+                    x_out: Some(x_out),
+                    head: Some(head),
+                    loss_sum,
+                    n_tok,
+                },
+            })
+        } else {
+            Ok(StageFwdOut {
+                x_out: Some(x_out),
+                kv_own,
+                cache: StageCache {
+                    layers: caches,
+                    x_out: None,
+                    head: None,
+                    loss_sum: 0.0,
+                    n_tok: 0.0,
+                },
+            })
+        }
+    }
+
+    /// One pipeline stage's backward for a chunk op, consuming the cache its
+    /// forward (or recompute-forward) produced. `d_x_out` is the cotangent
+    /// from the next stage (None iff `last_stage` — the loss cotangent
+    /// d(loss_sum) = 1 starts there); `g_kv_own` is the stage-local
+    /// accumulated KV cotangent from later chunks ([Lr, 2, T, H, D]).
+    /// Parameter gradients accumulate into the caller's full-arity buffers
+    /// (each stage only ever touches its own layers' slots, plus embed on
+    /// the boundary stages — the tied embedding accumulates from both ends,
+    /// exactly like the monolithic backward).
+    pub fn stage_bwd(
+        &self,
+        layers: Range<usize>,
+        first_stage: bool,
+        last_stage: bool,
+        inputs: &ChunkInputs<f64>,
+        cache: &StageCache,
+        d_x_out: Option<&[f64]>,
+        g_kv_own: &[f64],
+        d_params: &mut [Vec<f64>],
+    ) -> anyhow::Result<StageBwdOut> {
+        anyhow::ensure!(
+            last_stage == d_x_out.is_none(),
+            "gradient handoff mismatch: the last stage starts from the loss"
+        );
+        self.calls.fetch_add(1, Ordering::Relaxed);
+        let p = inputs.prefix_len;
+        let d_x = match d_x_out {
+            None => {
+                let x_out = cache.x_out.as_ref().expect("last-stage cache carries x_out");
+                let head = cache.head.as_ref().expect("last-stage cache carries head");
+                self.head_bwd(&inputs.targets, x_out, head, d_params)
+            }
+            Some(d) => d.to_vec(),
+        };
+        let (d_x, d_kv_in) = self.layers_bwd(
+            layers,
+            &cache.layers,
+            d_x,
+            &inputs.pos,
+            p,
+            Some(g_kv_own),
+            d_params,
+        );
+        if first_stage {
+            self.embed_bwd(&inputs.tokens, &d_x, d_params);
+            Ok(StageBwdOut { d_x_in: None, d_kv_in })
+        } else {
+            Ok(StageBwdOut { d_x_in: Some(d_x), d_kv_in })
+        }
+    }
+}
+
+/// Key metadata for a chunk with a `p`-token stored prefix: prefix keys
+/// carry positions 0..P and segment 0, own keys follow the chunk's pos/seg.
+fn key_meta(pos: &[i32], seg: &[i32], p: usize) -> (Vec<i32>, Vec<i32>) {
+    let s_len = p + pos.len();
+    let mut k_pos = Vec::with_capacity(s_len);
+    let mut k_seg = Vec::with_capacity(s_len);
+    for j in 0..p {
+        k_pos.push(j as i32);
+        k_seg.push(0i32);
+    }
+    k_pos.extend_from_slice(pos);
+    k_seg.extend_from_slice(seg);
+    (k_pos, k_seg)
 }
 
 impl Backend for ReferenceBackend {
@@ -701,7 +960,7 @@ impl Backend for ReferenceBackend {
 
     fn fwd_kv(&self, inputs: &ChunkInputs<f64>) -> anyhow::Result<FwdKvOut<f64>> {
         self.check_chunk(inputs)?;
-        self.calls.set(self.calls.get() + 1);
+        self.calls.fetch_add(1, Ordering::Relaxed);
         let (loss_sum, n_tok, kv_own, _cache) = self.forward(
             &inputs.tokens,
             &inputs.targets,
@@ -726,7 +985,7 @@ impl Backend for ReferenceBackend {
             g_kv_own.len(),
             self.kv_elements(c)
         );
-        self.calls.set(self.calls.get() + 1);
+        self.calls.fetch_add(1, Ordering::Relaxed);
         let (loss_sum, n_tok, kv_own, cache) = self.forward(
             &inputs.tokens,
             &inputs.targets,
@@ -759,7 +1018,7 @@ impl Backend for ReferenceBackend {
         anyhow::ensure!(targets.len() == s, "targets len {} != {s}", targets.len());
         anyhow::ensure!(pos.len() == s, "pos len {} != {s}", pos.len());
         anyhow::ensure!(seg.len() == s, "seg len {} != {s}", seg.len());
-        self.calls.set(self.calls.get() + 1);
+        self.calls.fetch_add(1, Ordering::Relaxed);
         let (loss_sum, n_tok, _kv_own, cache) =
             self.forward(tokens, targets, pos, seg, &[], 0)?;
         let (d_params, _d_kv_in) = self.backward(tokens, targets, pos, 0, &cache, None);
@@ -767,7 +1026,7 @@ impl Backend for ReferenceBackend {
     }
 
     fn calls(&self) -> u64 {
-        self.calls.get()
+        self.calls.load(Ordering::Relaxed)
     }
 }
 

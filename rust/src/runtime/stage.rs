@@ -1,0 +1,256 @@
+//! Layer-partitioned view of the reference backend — the per-stage
+//! execution surface of the stage-parallel pipeline executor
+//! (`pipeline::exec`).
+//!
+//! A [`StageBackend`] owns one contiguous layer range of the model. Stage 0
+//! additionally owns the embedding lookup; the last stage owns the final
+//! norm, the tied LM head and the loss. The tied embedding matrix therefore
+//! receives gradient contributions from both boundary stages — summing the
+//! per-stage gradient buffers reproduces the monolithic backward exactly
+//! (the same accumulation the single-stage `chunk_vjp` performs
+//! internally).
+//!
+//! Stage boundaries exchange exactly two typed messages:
+//!
+//! - [`ActivationHandoff`] flows downstream (stage s → s+1) after each
+//!   forward or recompute-forward of a chunk: the [T, hidden] activation
+//!   that is the next stage's layer input.
+//! - [`GradHandoff`] flows upstream (stage s+1 → s) after each backward:
+//!   the [T, hidden] activation cotangent.
+//!
+//! KV state never crosses a boundary: each stage stores the KV of its own
+//! layers for its own chunks (the paper's per-stage StateStore), assembles
+//! its own prefixes, and chains its own `d_kv_in` into earlier chunks'
+//! pending KV gradients.
+
+use std::ops::Range;
+
+use super::reference::{ReferenceBackend, StageBwdOut, StageCache, StageFwdOut};
+use super::{Backend, ChunkInputs};
+
+/// Contiguous, balanced layer partition: stage `s` of `p` owns
+/// `[s*L/P, (s+1)*L/P)`. Empty ranges are legal when P > L — such a stage
+/// just relays activations (stage 0 still embeds, the last still computes
+/// the loss).
+pub fn stage_layer_range(num_layers: usize, num_stages: usize, stage: usize) -> Range<usize> {
+    (stage * num_layers / num_stages)..((stage + 1) * num_layers / num_stages)
+}
+
+/// Activation handed from stage `s` to `s + 1` for one pipeline op.
+#[derive(Clone, Debug)]
+pub struct ActivationHandoff {
+    /// Chunk (pipeline item) id.
+    pub item: usize,
+    /// True when this is a recompute-forward (Alg. 2's second forward).
+    pub recompute: bool,
+    /// [T, hidden] layer input for the receiving stage.
+    pub x: Vec<f64>,
+}
+
+/// Activation cotangent handed from stage `s + 1` back to `s` for one
+/// backward op.
+#[derive(Clone, Debug)]
+pub struct GradHandoff {
+    /// Chunk (pipeline item) id.
+    pub item: usize,
+    /// [T, hidden] cotangent at the sending stage's layer input.
+    pub d_x: Vec<f64>,
+}
+
+/// One pipeline stage's view of the reference backend: a contiguous layer
+/// range plus the embedding (first stage) / head + loss (last stage).
+pub struct StageBackend<'a> {
+    backend: &'a ReferenceBackend,
+    pub stage: usize,
+    pub num_stages: usize,
+    pub layers: Range<usize>,
+}
+
+impl<'a> StageBackend<'a> {
+    pub fn new(
+        backend: &'a ReferenceBackend,
+        stage: usize,
+        num_stages: usize,
+    ) -> anyhow::Result<Self> {
+        anyhow::ensure!(num_stages >= 1, "need at least one stage");
+        anyhow::ensure!(stage < num_stages, "stage {stage} out of {num_stages}");
+        let layers = stage_layer_range(backend.manifest.num_layers, num_stages, stage);
+        Ok(Self { backend, stage, num_stages, layers })
+    }
+
+    /// All stages of a `p`-way partition, in order.
+    pub fn partition(backend: &'a ReferenceBackend, p: usize) -> anyhow::Result<Vec<Self>> {
+        (0..p).map(|s| Self::new(backend, s, p)).collect()
+    }
+
+    pub fn is_first(&self) -> bool {
+        self.stage == 0
+    }
+
+    pub fn is_last(&self) -> bool {
+        self.stage == self.num_stages - 1
+    }
+
+    /// Elements of a stage-local KV buffer covering `tokens` positions
+    /// ([Lr, 2, tokens, H, D]).
+    pub fn kv_elements(&self, tokens: usize) -> usize {
+        let m = self.backend.manifest();
+        self.layers.len() * 2 * tokens * m.num_heads * m.head_dim
+    }
+
+    /// This stage's forward for one chunk op. `inputs.kv_in` carries the
+    /// stage-local prefix KV; `x_in` is the upstream activation handoff
+    /// (None iff this is the first stage).
+    pub fn forward(
+        &self,
+        inputs: &ChunkInputs<f64>,
+        x_in: Option<&[f64]>,
+    ) -> anyhow::Result<StageFwdOut> {
+        self.backend.stage_fwd(
+            self.layers.clone(),
+            self.is_first(),
+            self.is_last(),
+            inputs,
+            x_in,
+        )
+    }
+
+    /// This stage's backward for one chunk op, consuming the cache its
+    /// forward produced. `d_x_out` is the downstream cotangent handoff
+    /// (None iff this is the last stage); parameter grads accumulate into
+    /// `d_params` (full arity; only this stage's slots are touched).
+    pub fn backward(
+        &self,
+        inputs: &ChunkInputs<f64>,
+        cache: &StageCache,
+        d_x_out: Option<&[f64]>,
+        g_kv_own: &[f64],
+        d_params: &mut [Vec<f64>],
+    ) -> anyhow::Result<StageBwdOut> {
+        self.backend.stage_bwd(
+            self.layers.clone(),
+            self.is_first(),
+            self.is_last(),
+            inputs,
+            cache,
+            d_x_out,
+            g_kv_own,
+            d_params,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelSpec;
+    use crate::runtime::{FlatParams, Manifest};
+    use crate::train::init_params;
+
+    fn mini_backend(layers: u64) -> (ReferenceBackend, FlatParams) {
+        let spec = ModelSpec {
+            name: "stage-mini".into(),
+            hidden_size: 16,
+            num_layers: layers,
+            num_heads: 2,
+            num_kv_heads: 2,
+            intermediate_size: 24,
+            vocab_size: 32,
+            tie_embeddings: true,
+        };
+        let manifest = Manifest::for_reference(&spec, 8, 2).unwrap();
+        let mut b = ReferenceBackend::new(manifest).unwrap();
+        let params = init_params(&b.manifest, 3);
+        b.set_params(&params).unwrap();
+        (b, params)
+    }
+
+    #[test]
+    fn partition_covers_all_layers_contiguously() {
+        for (l, p) in [(4usize, 1usize), (4, 2), (4, 4), (2, 4), (5, 3), (1, 1)] {
+            let mut covered = Vec::new();
+            for s in 0..p {
+                let r = stage_layer_range(l, p, s);
+                covered.extend(r);
+            }
+            assert_eq!(covered, (0..l).collect::<Vec<_>>(), "L={l} P={p}");
+        }
+    }
+
+    #[test]
+    fn staged_forward_backward_matches_monolithic_chunk_vjp() {
+        // Chain stage forwards/backwards by hand across P ∈ {1, 2, 3, 4}
+        // (4 > num_layers exercises the empty-range passthrough) and
+        // require bitwise-equal loss and gradients vs the single-stage
+        // chunk_vjp — the stage pieces ARE the monolithic program.
+        let (b, _params) = mini_backend(3);
+        let c = b.manifest.chunk_size;
+        let inputs = crate::runtime::ChunkInputs::<f64> {
+            tokens: (0..c as i32).map(|i| i % 32).collect(),
+            targets: (0..c as i32).map(|i| (i + 1) % 32).collect(),
+            pos: (0..c as i32).collect(),
+            seg: vec![0; c],
+            kv_in: Vec::new(),
+            prefix_len: 0,
+        };
+        let g_zero = vec![0.0f64; b.kv_elements(c)];
+        let mono = b.chunk_vjp(&inputs, &g_zero).unwrap();
+
+        for p in [1usize, 2, 3, 4] {
+            let stages = StageBackend::partition(&b, p).unwrap();
+            // Forward chain.
+            let mut x: Option<Vec<f64>> = None;
+            let mut caches = Vec::new();
+            let mut kv_own_parts = Vec::new();
+            for st in &stages {
+                let stage_inputs = ChunkInputs { kv_in: Vec::new(), ..inputs.clone() };
+                let out = st.forward(&stage_inputs, x.as_deref()).unwrap();
+                x = out.x_out;
+                caches.push(out.cache);
+                kv_own_parts.push(out.kv_own);
+            }
+            assert!(x.is_none(), "last stage consumes the activation");
+            let loss: f64 = caches.last().unwrap().loss_sum();
+            assert_eq!(loss.to_bits(), mono.loss_sum.to_bits(), "P={p} loss");
+            let kv_cat: Vec<f64> = kv_own_parts.concat();
+            assert_eq!(kv_cat, mono.kv_own, "P={p}: stage KV blocks concat to full KV");
+
+            // Backward chain with per-stage grad buffers, then sum.
+            let mut d_params = b.zero_grads();
+            let mut d_x: Option<Vec<f64>> = None;
+            for (st, cache) in stages.iter().zip(&caches).rev() {
+                let stage_inputs = ChunkInputs { kv_in: Vec::new(), ..inputs.clone() };
+                let g_kv = vec![0.0f64; st.kv_elements(c)];
+                let out = st
+                    .backward(&stage_inputs, cache, d_x.as_deref(), &g_kv, &mut d_params)
+                    .unwrap();
+                d_x = out.d_x_in;
+                assert!(out.d_kv_in.is_empty(), "no prefix here");
+            }
+            assert!(d_x.is_none(), "first stage consumes the cotangent");
+            for (pi, (got, want)) in d_params.iter().zip(&mono.d_params).enumerate() {
+                assert_eq!(got, want, "P={p} param {pi} grads");
+            }
+        }
+    }
+
+    #[test]
+    fn handoff_contract_enforced() {
+        let (b, _) = mini_backend(2);
+        let c = b.manifest.chunk_size;
+        let inputs = crate::runtime::ChunkInputs::<f64> {
+            tokens: vec![0; c],
+            targets: vec![-1; c],
+            pos: (0..c as i32).collect(),
+            seg: vec![0; c],
+            kv_in: Vec::new(),
+            prefix_len: 0,
+        };
+        let stages = StageBackend::partition(&b, 2).unwrap();
+        // Stage 1 without an activation handoff is a contract violation.
+        assert!(stages[1].forward(&inputs, None).is_err());
+        // Stage 0 with one, likewise.
+        let x = vec![0.0; c * b.manifest.hidden_size];
+        assert!(stages[0].forward(&inputs, Some(&x)).is_err());
+    }
+}

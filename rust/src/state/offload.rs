@@ -7,16 +7,38 @@
 //! byte budget and spills the excess to a temp file; `get` transparently
 //! reloads (and re-evicts something else if needed). For ChunkFlow's access
 //! pattern — ascending-forward then descending-backward over a sequence's
-//! chunks — LRU is within one fetch of optimal on the backward sweep.
+//! chunks — LRU is within one fetch of optimal on the backward sweep: the
+//! coldest chunk KV spills first and is restored exactly when its
+//! recompute/backward consumes it.
+//!
+//! The store is generic over the element type ([`Scalar`]): f64 buffers on
+//! the reference backend, f32 on PJRT. Spill serialization is the element's
+//! little-endian byte image, so a spill/reload round trip is bit-exact and
+//! the trainer's gradients are unchanged by any budget.
+//!
+//! Two accounting views: `resident` (bytes currently in host memory —
+//! bounded by the budget at every stable point, tracked as
+//! `peak_resident_bytes`) and `total` (resident + spilled — the logical KV
+//! footprint the paper's Table 5 charges).
+//!
+//! The spill file is created lazily on the first spill (a store whose
+//! budget never triggers does zero filesystem work) and freed slots are
+//! recycled, so repeated re-spills of the same keys keep the file bounded
+//! by the peak number of concurrently spilled buffers.
 
 use std::collections::BTreeMap;
 use std::io::{Read, Seek, SeekFrom, Write};
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use super::StateKey;
+use crate::runtime::Scalar;
 
-struct Resident {
-    data: Vec<f32>,
+/// Distinguishes spill files of stores created in the same process.
+static SPILL_SEQ: AtomicU64 = AtomicU64::new(0);
+
+struct Resident<E> {
+    data: Vec<E>,
     /// Monotone access stamp for LRU.
     stamp: u64,
 }
@@ -27,43 +49,53 @@ struct Spilled {
 }
 
 /// KV store with bounded residency.
-pub struct OffloadStore {
+pub struct OffloadStore<E: Scalar = f32> {
     budget_bytes: u64,
-    resident: BTreeMap<StateKey, Resident>,
+    resident: BTreeMap<StateKey, Resident<E>>,
     spilled: BTreeMap<StateKey, Spilled>,
-    file: std::fs::File,
+    /// Created lazily on the first spill: a store whose budget never
+    /// triggers pays no filesystem syscalls at all.
+    file: Option<std::fs::File>,
     path: PathBuf,
     file_len: u64,
+    /// Reusable spill slots (element count -> offsets), recycled when a
+    /// spilled entry is reloaded, replaced or removed. Without this the
+    /// append-only file would grow O(N²) under the trainer's repeated
+    /// prefix-fetch pattern; with it the file is bounded by the peak number
+    /// of concurrently spilled buffers.
+    free_slots: BTreeMap<usize, Vec<u64>>,
     clock: u64,
     resident_bytes: u64,
+    peak_resident_bytes: u64,
+    total_bytes: u64,
+    peak_total_bytes: u64,
     pub spill_count: u64,
     pub fetch_count: u64,
 }
 
-impl OffloadStore {
-    /// Create with a residency budget (bytes). Spill file lives in the OS
-    /// temp dir and is removed on drop.
+impl<E: Scalar> OffloadStore<E> {
+    /// Create with a residency budget (bytes). The spill file lives in the
+    /// OS temp dir, is unique per store, is created only when the first
+    /// spill actually happens, and is removed on drop.
     pub fn new(budget_bytes: u64) -> anyhow::Result<Self> {
         let path = std::env::temp_dir().join(format!(
-            "chunkflow-kv-spill-{}-{:x}.bin",
+            "chunkflow-kv-spill-{}-{}.bin",
             std::process::id(),
-            &budget_bytes ^ 0x5eed
+            SPILL_SEQ.fetch_add(1, Ordering::Relaxed)
         ));
-        let file = std::fs::OpenOptions::new()
-            .create(true)
-            .truncate(true)
-            .read(true)
-            .write(true)
-            .open(&path)?;
         Ok(Self {
             budget_bytes,
             resident: BTreeMap::new(),
             spilled: BTreeMap::new(),
-            file,
+            file: None,
             path,
             file_len: 0,
+            free_slots: BTreeMap::new(),
             clock: 0,
             resident_bytes: 0,
+            peak_resident_bytes: 0,
+            total_bytes: 0,
+            peak_total_bytes: 0,
             spill_count: 0,
             fetch_count: 0,
         })
@@ -74,20 +106,36 @@ impl OffloadStore {
         self.clock
     }
 
+    /// Return a spilled entry's slot to the free list.
+    fn recycle_slot(&mut self, sp: Spilled) {
+        self.free_slots.entry(sp.len).or_default().push(sp.offset);
+    }
+
     /// Insert a KV buffer (takes ownership; may evict older buffers).
-    pub fn put(&mut self, key: StateKey, data: Vec<f32>) -> anyhow::Result<()> {
-        let bytes = (data.len() * 4) as u64;
+    /// Replacing an existing key adjusts both accounting views.
+    pub fn put(&mut self, key: StateKey, data: Vec<E>) -> anyhow::Result<()> {
+        let bytes = data.len() as u64 * E::BYTES;
         let stamp = self.tick();
-        self.resident.insert(key, Resident { data, stamp });
+        if let Some(old) = self.resident.insert(key, Resident { data, stamp }) {
+            let old_bytes = old.data.len() as u64 * E::BYTES;
+            self.resident_bytes -= old_bytes;
+            self.total_bytes -= old_bytes;
+        }
+        if let Some(old) = self.spilled.remove(&key) {
+            self.total_bytes -= old.len as u64 * E::BYTES;
+            self.recycle_slot(old);
+        }
         self.resident_bytes += bytes;
-        self.spilled.remove(&key);
+        self.total_bytes += bytes;
+        self.peak_total_bytes = self.peak_total_bytes.max(self.total_bytes);
         self.enforce_budget(Some(key))?;
+        self.peak_resident_bytes = self.peak_resident_bytes.max(self.resident_bytes);
         Ok(())
     }
 
     /// Fetch a buffer (reloading from disk if spilled). Returns a clone of
     /// the data (callers assemble prefixes from several entries anyway).
-    pub fn get(&mut self, key: &StateKey) -> anyhow::Result<Option<Vec<f32>>> {
+    pub fn get(&mut self, key: &StateKey) -> anyhow::Result<Option<Vec<E>>> {
         let stamp = self.tick();
         if let Some(r) = self.resident.get_mut(key) {
             r.stamp = stamp;
@@ -96,28 +144,39 @@ impl OffloadStore {
         let Some(sp) = self.spilled.get(key) else {
             return Ok(None);
         };
+        let (offset, len) = (sp.offset, sp.len);
         self.fetch_count += 1;
-        let mut buf = vec![0u8; sp.len * 4];
-        self.file.seek(SeekFrom::Start(sp.offset))?;
-        self.file.read_exact(&mut buf)?;
-        let data: Vec<f32> = buf
-            .chunks_exact(4)
-            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
-            .collect();
+        let elem = E::BYTES as usize;
+        let mut buf = vec![0u8; len * elem];
+        let file = self
+            .file
+            .as_mut()
+            .ok_or_else(|| anyhow::anyhow!("spilled entry without a spill file"))?;
+        file.seek(SeekFrom::Start(offset))?;
+        file.read_exact(&mut buf)?;
+        let data: Vec<E> = buf.chunks_exact(elem).map(E::read_le).collect();
         let key = *key;
-        self.spilled.remove(&key);
-        self.resident_bytes += (data.len() * 4) as u64;
+        if let Some(sp) = self.spilled.remove(&key) {
+            self.recycle_slot(sp);
+        }
+        self.resident_bytes += data.len() as u64 * E::BYTES;
         self.resident.insert(key, Resident { data: data.clone(), stamp });
         self.enforce_budget(Some(key))?;
+        self.peak_resident_bytes = self.peak_resident_bytes.max(self.resident_bytes);
         Ok(Some(data))
     }
 
     /// Remove an entry entirely (sequence finished backward).
     pub fn remove(&mut self, key: &StateKey) {
         if let Some(r) = self.resident.remove(key) {
-            self.resident_bytes -= (r.data.len() * 4) as u64;
+            let bytes = r.data.len() as u64 * E::BYTES;
+            self.resident_bytes -= bytes;
+            self.total_bytes -= bytes;
         }
-        self.spilled.remove(key);
+        if let Some(sp) = self.spilled.remove(key) {
+            self.total_bytes -= sp.len as u64 * E::BYTES;
+            self.recycle_slot(sp);
+        }
     }
 
     /// Spill least-recently-used residents until within budget, never
@@ -132,24 +191,66 @@ impl OffloadStore {
                 .map(|(k, _)| *k);
             let Some(victim) = victim else { break };
             let r = self.resident.remove(&victim).unwrap();
-            self.resident_bytes -= (r.data.len() * 4) as u64;
-            // Append to spill file.
-            let mut bytes = Vec::with_capacity(r.data.len() * 4);
+            self.resident_bytes -= r.data.len() as u64 * E::BYTES;
+            let mut bytes = Vec::with_capacity(r.data.len() * E::BYTES as usize);
             for v in &r.data {
-                bytes.extend_from_slice(&v.to_le_bytes());
+                v.write_le(&mut bytes);
             }
-            self.file.seek(SeekFrom::Start(self.file_len))?;
-            self.file.write_all(&bytes)?;
-            self.spilled
-                .insert(victim, Spilled { offset: self.file_len, len: r.data.len() });
-            self.file_len += bytes.len() as u64;
+            // Reuse a freed same-size slot when one exists; append only
+            // when the file has no hole to fill.
+            let offset = match self.free_slots.get_mut(&r.data.len()).and_then(|v| v.pop()) {
+                Some(off) => off,
+                None => {
+                    let off = self.file_len;
+                    self.file_len += bytes.len() as u64;
+                    off
+                }
+            };
+            if self.file.is_none() {
+                self.file = Some(
+                    std::fs::OpenOptions::new()
+                        .create(true)
+                        .truncate(true)
+                        .read(true)
+                        .write(true)
+                        .open(&self.path)?,
+                );
+            }
+            let file = self.file.as_mut().expect("spill file just ensured");
+            file.seek(SeekFrom::Start(offset))?;
+            file.write_all(&bytes)?;
+            self.spilled.insert(victim, Spilled { offset, len: r.data.len() });
             self.spill_count += 1;
         }
         Ok(())
     }
 
+    /// Current spill-file length in bytes (slot reuse keeps this bounded by
+    /// the peak number of concurrently spilled buffers, not the spill
+    /// count).
+    pub fn spill_file_len(&self) -> u64 {
+        self.file_len
+    }
+
     pub fn resident_bytes(&self) -> u64 {
         self.resident_bytes
+    }
+
+    /// High-water mark of resident bytes at stable points (after each
+    /// put/get finished enforcing the budget) — the number the
+    /// `--offload-budget-bytes` contract bounds.
+    pub fn peak_resident_bytes(&self) -> u64 {
+        self.peak_resident_bytes
+    }
+
+    /// Resident + spilled bytes right now (logical KV footprint).
+    pub fn total_bytes(&self) -> u64 {
+        self.total_bytes
+    }
+
+    /// High-water mark of the logical KV footprint (Table 5's component).
+    pub fn peak_total_bytes(&self) -> u64 {
+        self.peak_total_bytes
     }
 
     pub fn len(&self) -> usize {
@@ -161,9 +262,11 @@ impl OffloadStore {
     }
 }
 
-impl Drop for OffloadStore {
+impl<E: Scalar> Drop for OffloadStore<E> {
     fn drop(&mut self) {
-        let _ = std::fs::remove_file(&self.path);
+        if self.file.is_some() {
+            let _ = std::fs::remove_file(&self.path);
+        }
     }
 }
 
@@ -190,6 +293,8 @@ mod tests {
             assert_eq!(s.get(&key(i)).unwrap().unwrap(), payload(i, 100));
         }
         assert_eq!(s.fetch_count, 0);
+        assert_eq!(s.total_bytes(), 1600);
+        assert_eq!(s.peak_resident_bytes(), 1600);
     }
 
     #[test]
@@ -201,11 +306,28 @@ mod tests {
         }
         assert!(s.spill_count >= 4, "spilled {}", s.spill_count);
         assert!(s.resident_bytes() <= 9_000);
+        assert!(s.peak_resident_bytes() <= 9_000, "budget bounds the stable peak");
+        assert_eq!(s.peak_total_bytes(), 24_000, "logical footprint is all 6 buffers");
         // All data still retrievable, bit-exact.
         for i in 0..6 {
             assert_eq!(s.get(&key(i)).unwrap().unwrap(), payload(i, 1000), "chunk {i}");
         }
         assert!(s.fetch_count >= 4);
+    }
+
+    #[test]
+    fn f64_roundtrip_is_bit_exact() {
+        let mut s: OffloadStore<f64> = OffloadStore::new(40).unwrap(); // ~1 tiny buffer
+        let a: Vec<f64> = vec![std::f64::consts::PI, -0.0, 1e-300, f64::MAX];
+        let b: Vec<f64> = vec![std::f64::consts::E, 2.0f64.powi(-1074), -1.5, 0.125];
+        s.put(key(0), a.clone()).unwrap();
+        s.put(key(1), b.clone()).unwrap(); // evicts key(0) to disk
+        assert!(s.spill_count >= 1);
+        let got = s.get(&key(0)).unwrap().unwrap();
+        for (x, y) in got.iter().zip(&a) {
+            assert_eq!(x.to_bits(), y.to_bits(), "spill round trip must be bit-exact");
+        }
+        assert_eq!(s.get(&key(1)).unwrap().unwrap(), b);
     }
 
     #[test]
@@ -220,11 +342,12 @@ mod tests {
             s.remove(&key(i));
         }
         assert!(s.is_empty());
+        assert_eq!(s.total_bytes(), 0);
     }
 
     #[test]
     fn missing_key_is_none() {
-        let mut s = OffloadStore::new(1000).unwrap();
+        let mut s: OffloadStore<f32> = OffloadStore::new(1000).unwrap();
         assert!(s.get(&key(9)).unwrap().is_none());
     }
 
@@ -235,15 +358,67 @@ mod tests {
         assert_eq!(s.resident_bytes(), 4000);
         s.remove(&key(0));
         assert_eq!(s.resident_bytes(), 0);
+        assert_eq!(s.total_bytes(), 0);
         assert!(s.is_empty());
     }
 
     #[test]
-    fn overwrite_same_key() {
+    fn overwrite_same_key_adjusts_accounting() {
         let mut s = OffloadStore::new(100_000).unwrap();
         s.put(key(1), payload(1, 10)).unwrap();
         s.put(key(1), payload(2, 20)).unwrap();
         assert_eq!(s.get(&key(1)).unwrap().unwrap(), payload(2, 20));
         assert_eq!(s.len(), 1);
+        assert_eq!(s.resident_bytes(), 80, "replaced entry must not leak bytes");
+        assert_eq!(s.total_bytes(), 80);
+    }
+
+    #[test]
+    fn spill_file_stays_bounded_under_repeated_respills() {
+        // The trainer's prefix-fetch pattern re-spills the same keys over
+        // and over; slot reuse must keep the file at (peak concurrently
+        // spilled) slots, not (spill count) slots.
+        let mut s = OffloadStore::new(4_000).unwrap(); // 1 buffer resident
+        for i in 0..4 {
+            s.put(key(i), payload(i, 1000)).unwrap(); // 4000 B each
+        }
+        for round in 0..10 {
+            for i in 0..4 {
+                assert_eq!(
+                    s.get(&key(i)).unwrap().unwrap(),
+                    payload(i, 1000),
+                    "round {round} chunk {i}"
+                );
+            }
+        }
+        assert!(s.spill_count > 10, "re-spills must actually have happened");
+        assert!(
+            s.spill_file_len() <= 4 * 4_000,
+            "spill file {} B exceeds the 4-slot bound",
+            s.spill_file_len()
+        );
+    }
+
+    #[test]
+    fn no_spill_means_no_spill_file() {
+        let s: OffloadStore<f32> = OffloadStore::new(1_000_000).unwrap();
+        assert_eq!(s.spill_file_len(), 0);
+        assert!(s.file.is_none(), "file must be created lazily");
+    }
+
+    #[test]
+    fn concurrent_stores_use_distinct_spill_files() {
+        // Two stores in one process with the same budget must not clobber
+        // each other's spill data.
+        let mut a = OffloadStore::new(4_000).unwrap();
+        let mut b = OffloadStore::new(4_000).unwrap();
+        for i in 0..3 {
+            a.put(key(i), payload(i, 1000)).unwrap();
+            b.put(key(i), payload(i + 100, 1000)).unwrap();
+        }
+        for i in 0..3 {
+            assert_eq!(a.get(&key(i)).unwrap().unwrap(), payload(i, 1000));
+            assert_eq!(b.get(&key(i)).unwrap().unwrap(), payload(i + 100, 1000));
+        }
     }
 }

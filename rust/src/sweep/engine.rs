@@ -72,6 +72,9 @@ pub struct ScenarioResult {
     pub scenario: Scenario,
     pub baseline: UnitMetrics,
     pub candidates: Vec<CandidateResult>,
+    /// Optional executor probe (`probe::attach_measured_exec`, the sweep's
+    /// `--measure-exec` pass). None in the default deterministic artifact.
+    pub measured_exec: Option<super::probe::MeasuredExec>,
 }
 
 impl ScenarioResult {
@@ -249,7 +252,12 @@ impl SweepEngine {
                     feasible: peak <= GPU_CAPACITY,
                 });
             }
-            results.push(ScenarioResult { scenario: s.clone(), baseline, candidates });
+            results.push(ScenarioResult {
+                scenario: s.clone(),
+                baseline,
+                candidates,
+                measured_exec: None,
+            });
         }
         Ok(results)
     }

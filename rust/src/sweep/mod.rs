@@ -16,10 +16,12 @@
 
 pub mod engine;
 pub mod output;
+pub mod probe;
 pub mod scenario;
 
 pub use engine::{CandidateResult, Parallelism, ScenarioResult, SweepEngine, UnitMetrics};
 pub use output::{
     compare_scenarios, to_json, validate, write_bench_json, DEFAULT_BENCH_PATH, SCHEMA_VERSION,
 };
+pub use probe::{attach_measured_exec, measure_scenario, MeasuredExec};
 pub use scenario::Scenario;

@@ -59,7 +59,7 @@ pub fn to_json(results: &[ScenarioResult], micro_benchmarks: Option<Json>) -> Js
                     ])
                 })
                 .unwrap_or(Json::Null);
-            Json::obj(vec![
+            let mut fields = vec![
                 ("name", Json::str(s.name.clone())),
                 ("model", Json::str(s.model.name.clone())),
                 ("parallel", Json::str(s.parallel.paper_format())),
@@ -75,7 +75,27 @@ pub fn to_json(results: &[ScenarioResult], micro_benchmarks: Option<Json>) -> Js
                     "speedup",
                     r.speedup().map(Json::num).unwrap_or(Json::Null),
                 ),
-            ])
+            ];
+            // Optional executor probe (`--measure-exec`): measured bubble
+            // ratio next to the predicted one. Additive — absent in the
+            // default artifact, and never compared by `benchdiff` (its
+            // wall-clock component is nondeterministic by nature).
+            if let Some(me) = &r.measured_exec {
+                fields.push((
+                    "measured_exec",
+                    Json::obj(vec![
+                        ("stages", Json::num(me.stages as f64)),
+                        ("chunk_size", Json::num(me.chunk_size as f64)),
+                        ("k", Json::num(me.k as f64)),
+                        ("context_length", Json::num(me.context_length as f64)),
+                        ("global_batch_size", Json::num(me.global_batch_size as f64)),
+                        ("bubble_ratio_measured", Json::num(me.bubble_ratio_measured)),
+                        ("bubble_ratio_predicted", Json::num(me.bubble_ratio_predicted)),
+                        ("act_peak_chunks", Json::num(me.act_peak_chunks as f64)),
+                    ]),
+                ));
+            }
+            Json::obj(fields)
         })
         .collect();
     let mut fields = vec![
@@ -134,6 +154,24 @@ pub fn validate(doc: &Json) -> anyhow::Result<usize> {
                 m.req_f64("iteration_seconds")? > 0.0,
                 "{name}: candidate iteration_seconds must be positive"
             );
+        }
+        // Optional executor-probe block (schema v1 addition): when present
+        // it must carry the measured/predicted bubble pair and a sane
+        // stage count. Old artifacts without it remain valid.
+        if let Some(me) = s.get("measured_exec") {
+            anyhow::ensure!(
+                me.req_u64("stages")? >= 1,
+                "{name}: measured_exec.stages must be >= 1"
+            );
+            me.req_u64("chunk_size")?;
+            me.req_u64("k")?;
+            for field in ["bubble_ratio_measured", "bubble_ratio_predicted"] {
+                let v = me.req_f64(field)?;
+                anyhow::ensure!(
+                    (0.0..=1.0).contains(&v),
+                    "{name}: measured_exec.{field} = {v} outside [0, 1]"
+                );
+            }
         }
     }
     // `micro_benchmarks` is optional, but when present it must hold the

@@ -1,0 +1,146 @@
+//! Executor probe: attach *measured* bubble ratios to sweep scenarios.
+//!
+//! Sweep scenarios describe 7B/14B-class models that cannot execute in CI,
+//! so their `bubble_ratio` metrics are simulator predictions. The probe
+//! runs a scaled-down mirror of each scenario — same length distribution
+//! and seed, CI-sized context/ChunkSize, the reference mini model — through
+//! the stage-parallel pipeline executor (`pipeline::exec`) and records the
+//! wall-clock bubble ratio next to the simulator's prediction for the
+//! *same* probe-sized chunk set and schedule.
+//!
+//! The resulting `measured_exec` block is additive and opt-in
+//! (`chunkflow sweep --measure-exec`): wall-clock is inherently
+//! nondeterministic, so the default artifact stays byte-deterministic and
+//! `benchdiff` never compares the field (it only diffs
+//! baseline/best/speedup).
+
+use std::collections::BTreeMap;
+
+use crate::chunk::construct_chunks;
+use crate::config::ModelSpec;
+use crate::data::{BatchSampler, SyntheticCorpus};
+use crate::pipeline::{build_exec_items, execute_state_aware, onef1b, OpCosts};
+use crate::runtime::{Backend, Manifest, ReferenceBackend};
+use crate::train::init_params;
+
+use super::engine::ScenarioResult;
+use super::scenario::Scenario;
+
+/// Probe scale: small enough for CI seconds, structured enough that the
+/// state-aware schedule is non-trivial (dependent groups + short-sequence
+/// packing under any long-tail distribution).
+const PROBE_CONTEXT: u64 = 512;
+const PROBE_CHUNK: usize = 64;
+const PROBE_BATCH_CAP: usize = 8;
+const PROBE_STAGE_CAP: u64 = 4;
+
+/// Measured-vs-predicted execution stats for one scenario's probe.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MeasuredExec {
+    /// Pipeline stages executed (scenario PP clamped to the probe cap).
+    pub stages: usize,
+    pub chunk_size: u64,
+    /// Retention budget (best feasible candidate's K, clamped).
+    pub k: u64,
+    pub context_length: u64,
+    pub global_batch_size: usize,
+    /// Wall-clock bubble ratio from the executor's measured timeline.
+    pub bubble_ratio_measured: f64,
+    /// The simulator's prediction for the same chunk set and schedule.
+    pub bubble_ratio_predicted: f64,
+    /// Peak live activation caches on any single stage.
+    pub act_peak_chunks: usize,
+}
+
+/// The reference mini model the probe executes (4 layers so stage
+/// partitions up to the cap are non-degenerate).
+fn probe_model() -> ModelSpec {
+    ModelSpec {
+        name: "exec-probe".into(),
+        hidden_size: 32,
+        num_layers: 4,
+        num_heads: 2,
+        num_kv_heads: 2,
+        intermediate_size: 48,
+        vocab_size: 64,
+        tie_embeddings: true,
+    }
+}
+
+/// Run the probe for one scenario. `best_k` is the scenario's best feasible
+/// candidate's K (the schedule actually worth measuring), clamped to the
+/// probe's chunk count.
+pub fn measure_scenario(s: &Scenario, best_k: Option<u64>) -> anyhow::Result<MeasuredExec> {
+    let stages = s.parallel.pp.clamp(1, PROBE_STAGE_CAP) as usize;
+    let k = best_k.unwrap_or(1).clamp(1, 4);
+    let max_chunks = PROBE_CONTEXT as usize / PROBE_CHUNK;
+    let manifest = Manifest::for_reference(&probe_model(), PROBE_CHUNK, max_chunks)?;
+    let mut backend = ReferenceBackend::new(manifest)?;
+    backend.set_params(&init_params(&backend.manifest, s.seed ^ 0xE5EC))?;
+
+    let batch_n = s.global_batch_size.min(PROBE_BATCH_CAP).max(1);
+    let mut sampler = BatchSampler::new(s.dist()?, PROBE_CONTEXT, batch_n, s.seed);
+    let batch = sampler.next_batch();
+    let set = construct_chunks(&batch, PROBE_CHUNK as u64);
+    let corpus = SyntheticCorpus::new(backend.manifest.vocab_size as u32, s.seed ^ 0xDA7A);
+    let tokens: BTreeMap<u64, Vec<u32>> =
+        batch.iter().map(|q| (q.id, corpus.generate(q.id, q.len))).collect();
+    let seq_len: BTreeMap<u64, u64> = batch.iter().map(|q| (q.id, q.len)).collect();
+    let items = build_exec_items(&backend, &set, &tokens, &seq_len);
+
+    let out = execute_state_aware(&backend, &set, &items, k as usize, stages)?;
+    let predicted = onef1b::simulate_state_aware(&set, k as usize, stages, |id| {
+        let len = set.chunks[id].total_len() as f64;
+        OpCosts { fwd: len, bwd: 2.0 * len }
+    })?;
+    Ok(MeasuredExec {
+        stages,
+        chunk_size: PROBE_CHUNK as u64,
+        k,
+        context_length: PROBE_CONTEXT,
+        global_batch_size: batch_n,
+        bubble_ratio_measured: out.timeline.bubble_ratio(),
+        bubble_ratio_predicted: predicted.bubble_ratio(),
+        act_peak_chunks: out.act_peak_chunks,
+    })
+}
+
+/// Attach probes to already-evaluated results — the `--measure-exec` pass.
+pub fn attach_measured_exec(results: &mut [ScenarioResult]) -> anyhow::Result<()> {
+    for r in results.iter_mut() {
+        let best_k = r.best().map(|b| b.k);
+        r.measured_exec = Some(
+            measure_scenario(&r.scenario, best_k)
+                .map_err(|e| e.context(format!("executor probe for `{}`", r.scenario.name)))?,
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn probe_runs_on_a_smoke_scenario() {
+        let s = &Scenario::smoke()[0];
+        let me = measure_scenario(s, Some(4)).unwrap();
+        assert!(me.stages >= 1);
+        assert!((0.0..=1.0).contains(&me.bubble_ratio_measured), "{me:?}");
+        assert!((0.0..=1.0).contains(&me.bubble_ratio_predicted), "{me:?}");
+        assert!(me.act_peak_chunks >= 1, "{me:?}");
+        assert_eq!(me.chunk_size, PROBE_CHUNK as u64);
+    }
+
+    #[test]
+    fn attach_fills_every_scenario() {
+        let scenarios = Scenario::smoke();
+        let mut results =
+            crate::sweep::SweepEngine::serial().run(&scenarios).unwrap();
+        attach_measured_exec(&mut results).unwrap();
+        assert!(results.iter().all(|r| r.measured_exec.is_some()));
+        // The artifact with probes attached still validates.
+        let j = crate::sweep::to_json(&results, None);
+        assert_eq!(crate::sweep::validate(&j).unwrap(), results.len());
+    }
+}

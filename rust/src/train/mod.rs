@@ -43,11 +43,97 @@ use std::time::Instant;
 use crate::chunk::{construct_chunks, Chunk, ChunkKind};
 use crate::config::TrainConfig;
 use crate::data::{BatchSampler, LengthDistribution, SyntheticCorpus};
-use crate::runtime::{Backend, ChunkInputs, FlatParams, Runtime, Scalar};
+use crate::runtime::{Backend, ChunkInputs, FlatParams, ReferenceBackend, Runtime, Scalar};
 use crate::schedule::{schedule_group, validate_group_plan, ChunkOp};
-use crate::state::{StateKey, StateStore};
+use crate::state::{OffloadStore, StateKey, StateStore};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
+
+/// Unified view of the trainer's retained-KV backing: the plain in-memory
+/// [`StateStore`] or the budgeted, disk-spilling [`OffloadStore`]
+/// (`--offload-budget-bytes`). `prefix` assembles the [L, 2, upto·C, H, D]
+/// buffer a dependent chunk's forward consumes; on the offload backing this
+/// transparently restores spilled chunk KV — the "restore on recompute"
+/// path, since the recompute-forward inside `chunk_vjp` is exactly what
+/// consumes the prefix again.
+pub trait KvBacking<E: Scalar> {
+    fn store(&mut self, key: StateKey, data: Vec<E>, bytes: u64) -> anyhow::Result<()>;
+    fn prefix(
+        &mut self,
+        seq_id: u64,
+        upto: usize,
+        num_layers: usize,
+        chunk: usize,
+        hd: usize,
+    ) -> anyhow::Result<Vec<E>>;
+    /// High-water mark of the logical KV footprint (Table 5's component).
+    fn logical_peak_bytes(&self) -> u64;
+    /// High-water mark of host-resident bytes (== logical when nothing
+    /// spills; bounded by the budget on the offload backing).
+    fn resident_peak_bytes(&self) -> u64;
+}
+
+impl<E: Scalar> KvBacking<E> for StateStore<Vec<E>> {
+    fn store(&mut self, key: StateKey, data: Vec<E>, bytes: u64) -> anyhow::Result<()> {
+        self.put(key, data, bytes);
+        Ok(())
+    }
+
+    fn prefix(
+        &mut self,
+        seq_id: u64,
+        upto: usize,
+        num_layers: usize,
+        chunk: usize,
+        hd: usize,
+    ) -> anyhow::Result<Vec<E>> {
+        let parts: Vec<&Vec<E>> =
+            self.prefix_of(seq_id, upto).into_iter().map(|(_, v)| v).collect();
+        anyhow::ensure!(parts.len() == upto, "missing KV state");
+        Ok(concat_prefix_with(&parts, num_layers, chunk, hd))
+    }
+
+    fn logical_peak_bytes(&self) -> u64 {
+        self.peak_bytes()
+    }
+
+    fn resident_peak_bytes(&self) -> u64 {
+        self.peak_bytes()
+    }
+}
+
+impl<E: Scalar> KvBacking<E> for OffloadStore<E> {
+    fn store(&mut self, key: StateKey, data: Vec<E>, _bytes: u64) -> anyhow::Result<()> {
+        self.put(key, data)
+    }
+
+    fn prefix(
+        &mut self,
+        seq_id: u64,
+        upto: usize,
+        num_layers: usize,
+        chunk: usize,
+        hd: usize,
+    ) -> anyhow::Result<Vec<E>> {
+        let mut owned: Vec<Vec<E>> = Vec::with_capacity(upto);
+        for i in 0..upto {
+            let v = self
+                .get(&StateKey { seq_id, chunk_index: i })?
+                .ok_or_else(|| anyhow::anyhow!("missing KV state for chunk {i}"))?;
+            owned.push(v);
+        }
+        let parts: Vec<&Vec<E>> = owned.iter().collect();
+        Ok(concat_prefix_with(&parts, num_layers, chunk, hd))
+    }
+
+    fn logical_peak_bytes(&self) -> u64 {
+        self.peak_total_bytes()
+    }
+
+    fn resident_peak_bytes(&self) -> u64 {
+        self.peak_resident_bytes()
+    }
+}
 
 /// Per-step metrics.
 #[derive(Clone, Debug)]
@@ -65,6 +151,15 @@ pub struct StepMetrics {
     /// Peak retained-activation budget used across all Algorithm-2 plans
     /// this step, in chunks (never exceeds the configured K).
     pub act_peak_chunks: usize,
+    /// Pipeline stages this step executed on (1 = the classic single-stage
+    /// Algorithm-2 path).
+    pub stages: usize,
+    /// Pipeline mode only: wall-clock bubble ratio measured by the
+    /// stage-parallel executor (`pipeline::exec`).
+    pub measured_bubble_ratio: Option<f64>,
+    /// Pipeline mode only: the simulator's predicted bubble ratio for the
+    /// same chunk set and schedule (`pipeline::simulate`).
+    pub predicted_bubble_ratio: Option<f64>,
 }
 
 /// Result of gradient accumulation over one batch (`compute_gradients`).
@@ -75,8 +170,12 @@ pub struct GradAccum<E> {
     /// Summed (unscaled) parameter gradients in the backend element type.
     pub grads: Vec<Vec<E>>,
     pub chunks: usize,
-    /// Peak KV StateStore bytes across the batch's chunk groups.
+    /// Peak logical KV bytes across the batch's chunk groups (resident +
+    /// spilled when offloading).
     pub kv_peak_bytes: u64,
+    /// Peak host-resident KV bytes; equals `kv_peak_bytes` without an
+    /// offload budget, and never exceeds the budget with one.
+    pub kv_resident_peak_bytes: u64,
     /// Peak live-activation count across all group plans (<= K).
     pub act_peak_chunks: usize,
 }
@@ -91,6 +190,9 @@ pub struct Trainer<B: Backend = Runtime> {
     sampler: BatchSampler,
     corpus: SyntheticCorpus,
     step: u64,
+    /// KV residency budget: when set, dependent groups run over a
+    /// disk-spilling [`OffloadStore`] instead of the in-memory StateStore.
+    offload_budget: Option<u64>,
     pub history: Vec<StepMetrics>,
 }
 
@@ -144,8 +246,18 @@ impl<B: Backend> Trainer<B> {
             sampler,
             corpus,
             step: 0,
+            offload_budget: None,
             history: Vec::new(),
         })
+    }
+
+    /// Bound resident KV bytes (`--offload-budget-bytes`): when set, each
+    /// dependent group's retained KV runs over an [`OffloadStore`] — the
+    /// coldest chunk KV spills to disk when the budget is exceeded and is
+    /// restored transparently when a later backward/recompute consumes it.
+    /// Spill round trips are bit-exact, so gradients are unchanged.
+    pub fn set_offload_budget(&mut self, budget: Option<u64>) {
+        self.offload_budget = budget;
     }
 
     /// Gradient accumulation over one batch: Algorithm 1 + Algorithm 2 over
@@ -174,12 +286,28 @@ impl<B: Backend> Trainer<B> {
         let mut loss_sum = 0.0f64;
         let mut tok_sum = 0.0f64;
         let mut kv_peak = 0u64;
+        let mut kv_resident_peak = 0u64;
         let mut act_peak = 0usize;
 
-        // Dependent groups: Algorithm 2 under the configured K budget.
+        // Dependent groups: Algorithm 2 under the configured K budget. The
+        // retained-KV backing is per group: in-memory, or the disk-spilling
+        // OffloadStore under an `--offload-budget-bytes` residency bound.
         for group in set.dependent_groups() {
-            let (l, t) =
-                self.run_group(&group, &tokens, &seq_len, &mut grads, &mut kv_peak, &mut act_peak)?;
+            let (l, t) = if let Some(budget) = self.offload_budget {
+                let mut store: OffloadStore<B::Elem> = OffloadStore::new(budget)?;
+                let r = self
+                    .run_group(&group, &tokens, &seq_len, &mut grads, &mut store, &mut act_peak)?;
+                kv_peak = kv_peak.max(store.peak_total_bytes());
+                kv_resident_peak = kv_resident_peak.max(store.peak_resident_bytes());
+                r
+            } else {
+                let mut store: StateStore<Vec<B::Elem>> = StateStore::new();
+                let r = self
+                    .run_group(&group, &tokens, &seq_len, &mut grads, &mut store, &mut act_peak)?;
+                kv_peak = kv_peak.max(store.peak_bytes());
+                kv_resident_peak = kv_resident_peak.max(store.peak_bytes());
+                r
+            };
             loss_sum += l;
             tok_sum += t;
         }
@@ -201,6 +329,7 @@ impl<B: Backend> Trainer<B> {
             grads,
             chunks: set.chunks.len(),
             kv_peak_bytes: kv_peak,
+            kv_resident_peak_bytes: kv_resident_peak,
             act_peak_chunks: act_peak,
         })
     }
@@ -211,6 +340,23 @@ impl<B: Backend> Trainer<B> {
         self.corpus.generate(seq.id, seq.len)
     }
 
+    /// Scale the summed grads to mean-token loss, clip, Adam-update and
+    /// re-send parameters; returns the pre-clip gradient norm. Shared by
+    /// the single-stage and pipelined step paths.
+    fn apply_update(&mut self, grads_raw: &[Vec<B::Elem>], tok_sum: f64) -> anyhow::Result<f64> {
+        // Mean-token loss: scale the summed grads (f32 from here on — the
+        // optimizer state is f32 on every backend).
+        let inv = (1.0 / tok_sum) as f32;
+        let mut grads: Vec<Vec<f32>> = grads_raw
+            .iter()
+            .map(|g| g.iter().map(|&x| x.to_f32() * inv).collect())
+            .collect();
+        let grad_norm = Adam::clip_global_norm(&mut grads, self.config.grad_clip);
+        self.adam.update(&mut self.params.0, &grads);
+        self.backend.set_params(&self.params)?;
+        Ok(grad_norm)
+    }
+
     /// Run one optimizer step; returns its metrics.
     pub fn train_step(&mut self) -> anyhow::Result<StepMetrics> {
         let t0 = Instant::now();
@@ -219,17 +365,7 @@ impl<B: Backend> Trainer<B> {
         let acc = self.compute_gradients(&batch)?;
 
         anyhow::ensure!(acc.tok_sum > 0.0, "no trainable tokens in batch");
-        // Mean-token loss: scale the summed grads (f32 from here on — the
-        // optimizer state is f32 on every backend).
-        let inv = (1.0 / acc.tok_sum) as f32;
-        let mut grads: Vec<Vec<f32>> = acc
-            .grads
-            .iter()
-            .map(|g| g.iter().map(|&x| x.to_f32() * inv).collect())
-            .collect();
-        let grad_norm = Adam::clip_global_norm(&mut grads, self.config.grad_clip);
-        self.adam.update(&mut self.params.0, &grads);
-        self.backend.set_params(&self.params)?;
+        let grad_norm = self.apply_update(&acc.grads, acc.tok_sum)?;
 
         self.step += 1;
         let metrics = StepMetrics {
@@ -242,6 +378,9 @@ impl<B: Backend> Trainer<B> {
             grad_norm,
             kv_peak_bytes: acc.kv_peak_bytes,
             act_peak_chunks: acc.act_peak_chunks,
+            stages: 1,
+            measured_bubble_ratio: None,
+            predicted_bubble_ratio: None,
         };
         crate::info!(
             "step {:>4} | loss/tok {:.4} | tokens {:>6} | chunks {:>3} | {:>5.2}s | gnorm {:.3}",
@@ -258,14 +397,16 @@ impl<B: Backend> Trainer<B> {
 
     /// Algorithm 2 over one dependent-chunk group, driven by the
     /// `schedule::` plan for the configured retention budget K (see
-    /// DESIGN.md §Chunked-Backward and the module docs).
-    fn run_group(
+    /// DESIGN.md §Chunked-Backward and the module docs). The retained-KV
+    /// backing is injected so the same path runs in-memory or budgeted
+    /// (`KvBacking`).
+    fn run_group<S: KvBacking<B::Elem>>(
         &self,
         group: &[&Chunk],
         tokens: &BTreeMap<u64, Vec<u32>>,
         seq_len: &BTreeMap<u64, u64>,
         grads: &mut [Vec<B::Elem>],
-        kv_peak: &mut u64,
+        store: &mut S,
         act_peak: &mut usize,
     ) -> anyhow::Result<(f64, f64)> {
         let c = self.backend.manifest().chunk_size;
@@ -286,7 +427,6 @@ impl<B: Backend> Trainer<B> {
         *act_peak = (*act_peak).max(stats.peak_live_activations);
 
         let kv_elems = self.backend.kv_elements(c);
-        let mut store: StateStore<Vec<B::Elem>> = StateStore::new();
         let mut g_kv: Vec<Vec<B::Elem>> =
             (0..n).map(|_| vec![B::Elem::ZERO; kv_elems]).collect();
         let mut loss = 0.0f64;
@@ -298,22 +438,23 @@ impl<B: Backend> Trainer<B> {
                 ChunkOp::Forward { chunk: i, .. } => {
                     // The final chunk's KV is never consumed as a prefix, but
                     // its forward still runs and its KV is still stored: the
-                    // StateStore deliberately accounts the whole sequence's
-                    // KV (the paper's Table-5 "KV state ~ context" component).
+                    // store deliberately accounts the whole sequence's KV
+                    // (the paper's Table-5 "KV state ~ context" component).
                     let prefix = i * c;
-                    let kv_in = self.prefix_kv(&store, seq_id, i);
+                    let kv_in = store.prefix(seq_id, i, num_layers, c, hd)?;
                     let inputs = self.chunk_inputs(group[i], tokens, seq_len, prefix);
                     let inputs = ChunkInputs { kv_in, ..inputs };
                     let out = self.backend.fwd_kv(&inputs)?;
-                    store.put(StateKey { seq_id, chunk_index: i }, out.kv_own, kv_unit_bytes);
-                    *kv_peak = (*kv_peak).max(store.peak_bytes());
+                    store.store(StateKey { seq_id, chunk_index: i }, out.kv_own, kv_unit_bytes)?;
                 }
                 // The three-program contract fuses the recompute-forward
                 // into `chunk_vjp`; the plan op only gates the budget.
                 ChunkOp::RecomputeForward { .. } => {}
                 ChunkOp::Backward { chunk: i } => {
                     let prefix = i * c;
-                    let kv_in = self.prefix_kv(&store, seq_id, i);
+                    // On the offload backing this restores any spilled
+                    // prefix KV just in time for the fused recompute.
+                    let kv_in = store.prefix(seq_id, i, num_layers, c, hd)?;
                     let inputs = self.chunk_inputs(group[i], tokens, seq_len, prefix);
                     let inputs = ChunkInputs { kv_in, ..inputs };
                     let out = self.backend.chunk_vjp(&inputs, &g_kv[i])?;
@@ -329,28 +470,6 @@ impl<B: Backend> Trainer<B> {
         Ok((loss, toks))
     }
 
-    /// Assemble the KV prefix for chunk `upto` of `seq_id` from the
-    /// StateStore ([L, 2, upto*C, H, D], interleaved from per-chunk blocks).
-    fn prefix_kv(
-        &self,
-        store: &StateStore<Vec<B::Elem>>,
-        seq_id: u64,
-        upto: usize,
-    ) -> Vec<B::Elem> {
-        let parts: Vec<&Vec<B::Elem>> = store
-            .prefix_of(seq_id, upto)
-            .into_iter()
-            .map(|(_, v)| v)
-            .collect();
-        assert_eq!(parts.len(), upto, "missing KV state");
-        concat_prefix_with(
-            &parts,
-            self.backend.manifest().num_layers,
-            self.backend.manifest().chunk_size,
-            self.backend.manifest().num_heads * self.backend.manifest().head_dim,
-        )
-    }
-
     /// Build fixed-shape chunk inputs from a chunk's segments (L3 input
     /// conventions documented in python/compile/model.py).
     fn chunk_inputs(
@@ -360,29 +479,7 @@ impl<B: Backend> Trainer<B> {
         seq_len: &BTreeMap<u64, u64>,
         prefix: usize,
     ) -> ChunkInputs<B::Elem> {
-        let c = self.backend.manifest().chunk_size;
-        let mut toks = vec![0i32; c];
-        let mut targets = vec![-1i32; c];
-        let mut pos = vec![0i32; c];
-        let mut seg = vec![-1i32; c];
-        let mut slot = 0usize;
-        for (seg_idx, s) in chunk.segments.iter().enumerate() {
-            let data = &tokens[&s.seq_id];
-            let total = seq_len[&s.seq_id] as usize;
-            for j in 0..s.len as usize {
-                let gp = s.offset as usize + j;
-                toks[slot] = data[gp] as i32;
-                targets[slot] = if gp + 1 < total { data[gp + 1] as i32 } else { -1 };
-                pos[slot] = gp as i32;
-                seg[slot] = seg_idx as i32;
-                slot += 1;
-            }
-        }
-        // Padding convention: unique large positions, segment -1.
-        for (i, sl) in (slot..c).enumerate() {
-            pos[sl] = 1_000_000 + i as i32;
-        }
-        ChunkInputs { tokens: toks, targets, pos, seg, kv_in: Vec::new(), prefix_len: prefix }
+        chunk_inputs_for(chunk, self.backend.manifest().chunk_size, tokens, seq_len, prefix)
     }
 
     /// Run the configured number of steps.
@@ -445,7 +542,7 @@ impl<B: Backend> Trainer<B> {
             self.history
                 .iter()
                 .map(|m| {
-                    Json::obj(vec![
+                    let mut fields = vec![
                         ("step", Json::num(m.step as f64)),
                         ("loss_per_token", Json::num(m.loss_per_token)),
                         ("tokens", Json::num(m.tokens as f64)),
@@ -455,10 +552,128 @@ impl<B: Backend> Trainer<B> {
                         ("grad_norm", Json::num(m.grad_norm)),
                         ("kv_peak_bytes", Json::num(m.kv_peak_bytes as f64)),
                         ("act_peak_chunks", Json::num(m.act_peak_chunks as f64)),
-                    ])
+                        ("stages", Json::num(m.stages as f64)),
+                    ];
+                    if let Some(b) = m.measured_bubble_ratio {
+                        fields.push(("measured_bubble_ratio", Json::num(b)));
+                    }
+                    if let Some(b) = m.predicted_bubble_ratio {
+                        fields.push(("predicted_bubble_ratio", Json::num(b)));
+                    }
+                    Json::obj(fields)
                 })
                 .collect(),
         )
+    }
+}
+
+/// Executor-vs-simulator statistics for one pipelined step.
+#[derive(Clone, Copy, Debug)]
+pub struct PipelineStepReport {
+    pub stages: usize,
+    /// Wall-clock bubble ratio measured by `pipeline::exec`.
+    pub measured_bubble_ratio: f64,
+    /// Bubble ratio `pipeline::simulate` predicts for the same chunk set
+    /// under token-proportional costs (fwd = len, bwd = 2·len, §3).
+    pub predicted_bubble_ratio: f64,
+    pub act_peak_chunks: usize,
+    pub kv_peak_bytes: u64,
+}
+
+impl Trainer<ReferenceBackend> {
+    /// Gradient accumulation over one batch through the stage-parallel
+    /// pipeline executor: Algorithm 1 chunks the batch, the state-aware
+    /// 1F1B agendas schedule it, and `pipeline::exec` runs those agendas
+    /// for real on `stages` layer-partitioned threads. Gradients match
+    /// [`Trainer::compute_gradients`] up to float re-association (the
+    /// accumulation order differs; everything is f64, so the difference is
+    /// far below the suites' 1e-6 gate).
+    pub fn compute_gradients_pipelined(
+        &self,
+        batch: &[crate::data::Sequence],
+        stages: usize,
+    ) -> anyhow::Result<(GradAccum<f64>, PipelineStepReport)> {
+        anyhow::ensure!(stages >= 1, "need at least one pipeline stage");
+        let set = construct_chunks(batch, self.backend.manifest().chunk_size as u64);
+        let mut tokens: BTreeMap<u64, Vec<u32>> = BTreeMap::new();
+        for s in batch {
+            tokens.insert(s.id, self.corpus.generate(s.id, s.len));
+        }
+        let seq_len: BTreeMap<u64, u64> = batch.iter().map(|s| (s.id, s.len)).collect();
+        let k = (self.config.chunkflow.k.max(1)) as usize;
+
+        let items = crate::pipeline::build_exec_items(&self.backend, &set, &tokens, &seq_len);
+        let out = crate::pipeline::execute_state_aware(&self.backend, &set, &items, k, stages)?;
+        // The simulator's prediction for the exact same chunk set and
+        // schedule, under the paper's cost assumptions.
+        let predicted =
+            crate::pipeline::onef1b::simulate_state_aware(&set, k, stages, |id| {
+                let len = set.chunks[id].total_len() as f64;
+                crate::pipeline::OpCosts { fwd: len, bwd: 2.0 * len }
+            })?;
+        let report = PipelineStepReport {
+            stages,
+            measured_bubble_ratio: out.timeline.bubble_ratio(),
+            predicted_bubble_ratio: predicted.bubble_ratio(),
+            act_peak_chunks: out.act_peak_chunks,
+            kv_peak_bytes: out.kv_peak_bytes,
+        };
+        let acc = GradAccum {
+            loss_sum: out.loss_sum,
+            tok_sum: out.tok_sum,
+            grads: out.grads,
+            chunks: set.chunks.len(),
+            kv_peak_bytes: out.kv_peak_bytes,
+            kv_resident_peak_bytes: out.kv_peak_bytes,
+            act_peak_chunks: out.act_peak_chunks,
+        };
+        Ok((acc, report))
+    }
+
+    /// One optimizer step through the pipeline executor (`--stages P`).
+    pub fn train_step_pipelined(&mut self, stages: usize) -> anyhow::Result<StepMetrics> {
+        let t0 = Instant::now();
+        let calls0 = self.backend.calls();
+        let batch = self.sampler.next_batch();
+        let (acc, report) = self.compute_gradients_pipelined(&batch, stages)?;
+
+        anyhow::ensure!(acc.tok_sum > 0.0, "no trainable tokens in batch");
+        let grad_norm = self.apply_update(&acc.grads, acc.tok_sum)?;
+
+        self.step += 1;
+        let metrics = StepMetrics {
+            step: self.step,
+            loss_per_token: acc.loss_sum / acc.tok_sum,
+            tokens: acc.tok_sum as u64,
+            chunks: acc.chunks,
+            backend_calls: self.backend.calls() - calls0,
+            seconds: t0.elapsed().as_secs_f64(),
+            grad_norm,
+            kv_peak_bytes: acc.kv_peak_bytes,
+            act_peak_chunks: acc.act_peak_chunks,
+            stages,
+            measured_bubble_ratio: Some(report.measured_bubble_ratio),
+            predicted_bubble_ratio: Some(report.predicted_bubble_ratio),
+        };
+        crate::info!(
+            "step {:>4} | loss/tok {:.4} | stages {} | bubble {:>5.1}% measured / {:>5.1}% predicted | {:>5.2}s",
+            metrics.step,
+            metrics.loss_per_token,
+            stages,
+            100.0 * report.measured_bubble_ratio,
+            100.0 * report.predicted_bubble_ratio,
+            metrics.seconds
+        );
+        self.history.push(metrics.clone());
+        Ok(metrics)
+    }
+
+    /// Run the configured number of steps in pipeline mode.
+    pub fn train_pipelined(&mut self, stages: usize) -> anyhow::Result<()> {
+        for _ in 0..self.config.steps {
+            self.train_step_pipelined(stages)?;
+        }
+        Ok(())
     }
 }
 
@@ -500,6 +715,43 @@ fn accumulate<E: Scalar>(acc: &mut [Vec<E>], delta: &[Vec<E>]) {
             *x += *y;
         }
     }
+}
+
+/// Build fixed-shape chunk inputs from a chunk's segments (L3 input
+/// conventions documented in python/compile/model.py): padding slots get
+/// unique large positions (1_000_000+i) and segment -1; targets cross chunk
+/// boundaries within a sequence. Free function so the pipeline executor
+/// (`pipeline::exec`) shares the trainer's exact assembly.
+pub fn chunk_inputs_for<E>(
+    chunk: &Chunk,
+    chunk_size: usize,
+    tokens: &BTreeMap<u64, Vec<u32>>,
+    seq_len: &BTreeMap<u64, u64>,
+    prefix: usize,
+) -> ChunkInputs<E> {
+    let c = chunk_size;
+    let mut toks = vec![0i32; c];
+    let mut targets = vec![-1i32; c];
+    let mut pos = vec![0i32; c];
+    let mut seg = vec![-1i32; c];
+    let mut slot = 0usize;
+    for (seg_idx, s) in chunk.segments.iter().enumerate() {
+        let data = &tokens[&s.seq_id];
+        let total = seq_len[&s.seq_id] as usize;
+        for j in 0..s.len as usize {
+            let gp = s.offset as usize + j;
+            toks[slot] = data[gp] as i32;
+            targets[slot] = if gp + 1 < total { data[gp + 1] as i32 } else { -1 };
+            pos[slot] = gp as i32;
+            seg[slot] = seg_idx as i32;
+            slot += 1;
+        }
+    }
+    // Padding convention: unique large positions, segment -1.
+    for (i, sl) in (slot..c).enumerate() {
+        pos[sl] = 1_000_000 + i as i32;
+    }
+    ChunkInputs { tokens: toks, targets, pos, seg, kv_in: Vec::new(), prefix_len: prefix }
 }
 
 /// Layout-aware prefix concat: interleaves per-chunk [L, 2, C, H, D] blocks

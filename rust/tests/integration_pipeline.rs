@@ -1,0 +1,275 @@
+//! Stage-parallel pipeline executor integration (Layer 3 against
+//! `pipeline::exec` + `runtime::StageBackend`):
+//!
+//! - multi-stage gradient equivalence — `--stages P` for P ∈ {1, 2, 4}
+//!   matches the unchunked full-sequence oracle to 1e-6 across a
+//!   (ChunkSize, K) grid including K < N (the recompute path);
+//! - executor/simulator conformance — each stage's *executed* op order
+//!   equals its `onef1b` agenda, property-tested over random
+//!   (items, P, K);
+//! - the CLI surface: `--backend pjrt` fails fast on non-pjrt builds, and
+//!   `train --stages 2` runs end to end emitting measured bubble ratios.
+
+mod common;
+
+use std::collections::BTreeMap;
+
+use chunkflow::chunk::construct_chunks;
+use chunkflow::config::{ModelSpec, TrainConfig};
+use chunkflow::data::{Sequence, SyntheticCorpus};
+use chunkflow::pipeline::{build_exec_items, execute_agendas, state_aware_1f1b_agendas};
+use chunkflow::runtime::{Backend, Manifest, ReferenceBackend};
+use chunkflow::train::init_params;
+
+use common::{max_rel_err, mini_config, mini_trainer, oracle_grads, short_dist, trainer_with};
+
+/// 4-layer variant of the mini model: 4-stage partitions are
+/// non-degenerate here, while the 2-layer `mini_trainer` exercises the
+/// empty-stage passthrough below.
+fn deep_config(chunk: u64, max_chunks: usize, k: u64) -> TrainConfig {
+    let mut cfg = mini_config(chunk, max_chunks, k);
+    cfg.model = ModelSpec {
+        name: "ref-mini-4l".into(),
+        hidden_size: 32,
+        num_layers: 4,
+        num_heads: 2,
+        num_kv_heads: 2,
+        intermediate_size: 48,
+        vocab_size: 64,
+        tie_embeddings: true,
+    };
+    cfg
+}
+
+#[test]
+fn pipelined_gradients_match_oracle_across_stage_counts() {
+    // Mixed batch: a 5-chunk dependent group (K < N at ChunkSize 16), a
+    // packed standalone chunk, and 2- and 3-chunk groups.
+    let batch = [
+        Sequence { id: 1, len: 70 },
+        Sequence { id: 2, len: 12 },
+        Sequence { id: 3, len: 20 },
+        Sequence { id: 4, len: 48 },
+    ];
+    for (chunk, k) in [(16u64, 1u64), (16, 2), (32, 2)] {
+        let max_chunks = (128 / chunk) as usize;
+        let cfg = deep_config(chunk, max_chunks, k);
+        let ctx = cfg.context_length;
+        let tr = trainer_with(cfg, short_dist(ctx));
+        let (loss_o, ntok_o, grads_o) = oracle_grads(&tr, &batch);
+        for p in [1usize, 2, 4] {
+            let (acc, report) =
+                tr.compute_gradients_pipelined(&batch, p).expect("pipelined grads");
+            assert_eq!(acc.tok_sum, ntok_o, "P={p} chunk={chunk} K={k}");
+            assert!(
+                (acc.loss_sum - loss_o).abs() / loss_o.abs() < 1e-9,
+                "P={p} chunk={chunk} K={k}: loss {} vs oracle {loss_o}",
+                acc.loss_sum
+            );
+            let rel = max_rel_err(&acc.grads, &grads_o);
+            assert!(rel < 1e-6, "P={p} chunk={chunk} K={k}: rel err {rel}");
+            assert_eq!(report.stages, p);
+            assert!(
+                (0.0..=1.0).contains(&report.measured_bubble_ratio),
+                "measured bubble {}",
+                report.measured_bubble_ratio
+            );
+            assert!(
+                (0.0..=1.0).contains(&report.predicted_bubble_ratio),
+                "predicted bubble {}",
+                report.predicted_bubble_ratio
+            );
+        }
+    }
+}
+
+#[test]
+fn empty_layer_stages_are_exact_passthroughs() {
+    // P = 4 over the 2-layer mini model forces at least two stages with no
+    // layers at all; gradients must still match the single-stage path
+    // bit-for-bit up to accumulation order.
+    let tr = mini_trainer(16, 8, 2);
+    let batch = [Sequence { id: 5, len: 40 }, Sequence { id: 6, len: 14 }];
+    let base = tr.compute_gradients(&batch).expect("single-stage grads");
+    let (acc, _) = tr.compute_gradients_pipelined(&batch, 4).expect("P=4 grads");
+    assert_eq!(acc.tok_sum, base.tok_sum);
+    let rel = max_rel_err(&acc.grads, &base.grads);
+    assert!(rel < 1e-9, "empty-stage partition drifted: {rel}");
+}
+
+#[test]
+fn pipelined_train_step_descends_and_reports_bubbles() {
+    let mut cfg = deep_config(16, 4, 1);
+    cfg.steps = 2;
+    cfg.global_batch_size = 2;
+    let ctx = cfg.context_length;
+    let mut tr = trainer_with(cfg, short_dist(ctx));
+    let m1 = tr.train_step_pipelined(2).expect("step 1");
+    assert_eq!(m1.step, 1);
+    assert_eq!(m1.stages, 2);
+    assert!(m1.measured_bubble_ratio.is_some());
+    assert!(m1.predicted_bubble_ratio.is_some());
+    assert!(m1.loss_per_token.is_finite() && m1.loss_per_token > 0.0);
+    let m2 = tr.train_step_pipelined(2).expect("step 2");
+    assert_eq!(m2.step, 2);
+    let json = tr.loss_history_json().dump();
+    assert!(
+        json.contains("measured_bubble_ratio") && json.contains("predicted_bubble_ratio"),
+        "{json}"
+    );
+}
+
+/// Exec-item assembly for conformance tests (mirrors the trainer's token
+/// plumbing without needing a Trainer).
+fn items_for(
+    b: &ReferenceBackend,
+    set: &chunkflow::chunk::ChunkSet,
+    batch: &[Sequence],
+) -> Vec<chunkflow::pipeline::ExecItem> {
+    let corpus = SyntheticCorpus::new(b.manifest.vocab_size as u32, 4242);
+    let tokens: BTreeMap<u64, Vec<u32>> =
+        batch.iter().map(|q| (q.id, corpus.generate(q.id, q.len))).collect();
+    let seq_len: BTreeMap<u64, u64> = batch.iter().map(|q| (q.id, q.len)).collect();
+    build_exec_items(b, set, &tokens, &seq_len)
+}
+
+fn conformance_backend() -> ReferenceBackend {
+    let spec = ModelSpec {
+        name: "conf-mini".into(),
+        hidden_size: 16,
+        num_layers: 2,
+        num_heads: 2,
+        num_kv_heads: 2,
+        intermediate_size: 24,
+        vocab_size: 32,
+        tie_embeddings: true,
+    };
+    let manifest = Manifest::for_reference(&spec, 8, 4).unwrap();
+    let mut b = ReferenceBackend::new(manifest).unwrap();
+    let params = init_params(&b.manifest, 7);
+    b.set_params(&params).unwrap();
+    b
+}
+
+#[test]
+fn prop_executed_stage_order_equals_agenda_order() {
+    use chunkflow::util::prop::{check, ensure, gen_pair, gen_u64, gen_usize, gen_vec};
+    let b = conformance_backend();
+    // Random (sequence lengths, (P, K)); lengths up to 4 chunks of 8.
+    let gen = gen_pair(
+        gen_vec(gen_u64(1, 32), 1, 5),
+        gen_pair(gen_usize(1, 4), gen_usize(1, 3)),
+    );
+    check(12, gen, |(lens, (p, k))| {
+        let batch: Vec<Sequence> = lens
+            .iter()
+            .enumerate()
+            .map(|(i, &len)| Sequence { id: i as u64, len })
+            .collect();
+        let set = construct_chunks(&batch, 8);
+        let items = items_for(&b, &set, &batch);
+        let (agendas, _edges) = state_aware_1f1b_agendas(&set, *k, *p);
+        let out = execute_agendas(&b, &agendas, &items).map_err(|e| format!("{e:#}"))?;
+        for s in 0..*p {
+            ensure(
+                out.op_log[s] == agendas[s],
+                "executed per-stage op order must equal the agenda",
+            )?;
+        }
+        // Timestamps are monotone within a stage (in-order execution) and
+        // each op's span is well-formed.
+        for s in 0..*p {
+            let stage_ops: Vec<_> =
+                out.timeline.ops.iter().filter(|o| o.stage == s).collect();
+            for w in stage_ops.windows(2) {
+                ensure(w[1].start >= w[0].end - 1e-9, "stage execution is serial")?;
+            }
+            for o in &stage_ops {
+                ensure(o.end >= o.start, "op spans are non-negative")?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn executor_tokens_match_trainer_accounting() {
+    // tok_sum from the pipeline equals the trainer's (targets < seq end).
+    let b = conformance_backend();
+    let batch =
+        vec![Sequence { id: 0, len: 24 }, Sequence { id: 1, len: 6 }];
+    let set = construct_chunks(&batch, 8);
+    let items = items_for(&b, &set, &batch);
+    let (agendas, _) = state_aware_1f1b_agendas(&set, 2, 2);
+    let out = execute_agendas(&b, &agendas, &items).unwrap();
+    assert_eq!(out.tok_sum, 23.0 + 5.0);
+}
+
+// ----- CLI surface ----------------------------------------------------------
+
+fn chunkflow_bin() -> std::process::Command {
+    std::process::Command::new(env!("CARGO_BIN_EXE_chunkflow"))
+}
+
+#[cfg(not(feature = "pjrt"))]
+#[test]
+fn cli_pjrt_backend_fails_fast_with_rebuild_guidance() {
+    let out = chunkflow_bin()
+        .args(["train", "--backend", "pjrt", "--model", "tiny", "--steps", "1"])
+        .output()
+        .expect("spawn chunkflow");
+    assert!(!out.status.success(), "must exit non-zero");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("--features pjrt"), "stderr: {stderr}");
+    assert!(stderr.contains("--backend reference"), "stderr: {stderr}");
+}
+
+#[test]
+fn cli_train_with_stages_runs_end_to_end() {
+    let dir = std::env::temp_dir().join("chunkflow_it_pipeline_cli");
+    std::fs::create_dir_all(&dir).unwrap();
+    let out_path = dir.join("history.json");
+    let out = chunkflow_bin()
+        .args([
+            "train",
+            "--backend",
+            "reference",
+            "--model",
+            "tiny",
+            "--context",
+            "256",
+            "--chunk-size",
+            "128",
+            "--k",
+            "1",
+            "--stages",
+            "2",
+            "--steps",
+            "1",
+            "--batch",
+            "2",
+            "--out",
+            out_path.to_str().unwrap(),
+        ])
+        .output()
+        .expect("spawn chunkflow");
+    assert!(
+        out.status.success(),
+        "stdout: {}\nstderr: {}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let history = std::fs::read_to_string(&out_path).unwrap();
+    assert!(history.contains("measured_bubble_ratio"), "{history}");
+    assert!(history.contains("predicted_bubble_ratio"), "{history}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn cli_stages_rejected_on_pjrt_backend() {
+    let out = chunkflow_bin()
+        .args(["train", "--backend", "pjrt", "--stages", "2", "--model", "tiny"])
+        .output()
+        .expect("spawn chunkflow");
+    assert!(!out.status.success());
+}

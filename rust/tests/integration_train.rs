@@ -163,6 +163,40 @@ fn checkpoint_roundtrip_resumes_bit_identical() {
 }
 
 #[test]
+fn offload_budget_bounds_resident_kv_and_preserves_gradients() {
+    // A 5-chunk dependent group at ChunkSize 16 with a 2-chunk residency
+    // budget: the coldest chunk KV must spill to disk and reload on the
+    // backward/recompute sweep, without changing a single gradient bit.
+    let batch = [Sequence { id: 21, len: 80 }, Sequence { id: 22, len: 30 }];
+    let base = mini_trainer(16, 8, 2).compute_gradients(&batch).expect("in-memory grads");
+    let mut tr = mini_trainer(16, 8, 2);
+    let unit = tr.backend.kv_elements(16) as u64 * <f64 as Scalar>::BYTES;
+    let budget = 2 * unit;
+    tr.set_offload_budget(Some(budget));
+    let acc = tr.compute_gradients(&batch).expect("offloaded grads");
+
+    assert_eq!(
+        acc.loss_sum.to_bits(),
+        base.loss_sum.to_bits(),
+        "spill round trips must be lossless"
+    );
+    assert_eq!(acc.grads, base.grads, "gradients must be bit-identical under offload");
+    assert!(
+        acc.kv_resident_peak_bytes <= budget,
+        "resident KV {} exceeded the {budget}-byte budget",
+        acc.kv_resident_peak_bytes
+    );
+    assert_eq!(
+        acc.kv_peak_bytes, base.kv_peak_bytes,
+        "logical KV footprint (Table 5) is unchanged by offloading"
+    );
+    assert!(
+        acc.kv_resident_peak_bytes < acc.kv_peak_bytes,
+        "the budget must actually have forced spills here"
+    );
+}
+
+#[test]
 fn train_runs_configured_steps_and_records_history() {
     let mut cfg = mini_config(16, 4, 1);
     cfg.steps = 3;
