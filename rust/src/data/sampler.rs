@@ -78,13 +78,20 @@ impl BatchSampler {
     /// preserving arrival order (first-fit into the open buffer, flush when
     /// the next sequence doesn't fit). Long sequences (> pack_len) get a
     /// buffer of their own — they are NOT split (that is ChunkFlow's job).
+    /// An oversized sequence flushes the open buffer first, so packs come
+    /// out in arrival order and sequences it separates are never packed
+    /// together (the documented contract; previously violated).
     pub fn pack(batch: &[Sequence], pack_len: u64) -> Vec<Vec<Sequence>> {
         let mut packs: Vec<Vec<Sequence>> = Vec::new();
         let mut open: Vec<Sequence> = Vec::new();
         let mut open_len = 0u64;
         for &seq in batch {
             if seq.len >= pack_len {
-                // Oversized: own pack.
+                // Oversized: flush whatever was open, then its own pack.
+                if !open.is_empty() {
+                    packs.push(std::mem::take(&mut open));
+                    open_len = 0;
+                }
                 packs.push(vec![seq]);
                 continue;
             }
@@ -164,6 +171,49 @@ mod tests {
     #[test]
     fn packing_empty_batch() {
         assert!(BatchSampler::pack(&[], 1024).is_empty());
+    }
+
+    #[test]
+    fn oversized_sequence_flushes_open_buffer_first() {
+        // Regression: an oversized sequence used to be emitted as its own
+        // pack *before* the open buffer flushed, so packs left arrival
+        // order and the sequences it separated (ids 0 and 2 here, which
+        // fit one buffer together) were packed into one buffer.
+        let batch = [
+            Sequence { id: 0, len: 400 },
+            Sequence { id: 1, len: 5000 }, // oversized
+            Sequence { id: 2, len: 400 },
+        ];
+        let packs = BatchSampler::pack(&batch, 1024);
+        let ids: Vec<Vec<u64>> =
+            packs.iter().map(|p| p.iter().map(|s| s.id).collect()).collect();
+        assert_eq!(ids, vec![vec![0], vec![1], vec![2]]);
+    }
+
+    #[test]
+    fn packs_preserve_arrival_order() {
+        // First-appearance order of packs matches arrival order of their
+        // first sequences, for a mixed batch with several oversized runs.
+        let lens = [100u64, 2000, 300, 300, 4000, 4000, 200, 900, 50];
+        let batch: Vec<Sequence> = lens
+            .iter()
+            .enumerate()
+            .map(|(i, &len)| Sequence { id: i as u64, len })
+            .collect();
+        let packs = BatchSampler::pack(&batch, 1024);
+        let firsts: Vec<u64> = packs.iter().map(|p| p[0].id).collect();
+        let mut sorted = firsts.clone();
+        sorted.sort_unstable();
+        assert_eq!(firsts, sorted, "packs out of arrival order: {firsts:?}");
+        // Within each pack, sequences stay in arrival order too.
+        for p in &packs {
+            let ids: Vec<u64> = p.iter().map(|s| s.id).collect();
+            let mut s = ids.clone();
+            s.sort_unstable();
+            assert_eq!(ids, s);
+        }
+        let total: u64 = packs.iter().flatten().map(|s| s.len).sum();
+        assert_eq!(total, lens.iter().sum::<u64>());
     }
 
     #[test]

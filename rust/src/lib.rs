@@ -12,7 +12,8 @@
 //!   backend stages ([`pipeline`], [`runtime::StageBackend`]), the
 //!   analytic memory model ([`memory`]), the
 //!   Megatron-LM-like baseline ([`baseline`]), the end-to-end iteration
-//!   simulator ([`sim`]), the (ChunkSize, K) tuner ([`tune`]), the parallel
+//!   simulator with chunk-balanced data-parallel sharding and replica-group
+//!   execution ([`sim`], [`sim::dp`]), the (ChunkSize, K) tuner ([`tune`]), the parallel
 //!   scenario-sweep engine and its `BENCH_chunkflow.json` perf-trajectory
 //!   artifact ([`sweep`]), the trainer over pluggable execution backends
 //!   ([`runtime`] — the PJRT runtime and the pure-Rust reference backend —

@@ -30,6 +30,7 @@ fn flags() -> Vec<FlagSpec> {
         flag("chunk-size", true, "ChunkSize in tokens (e.g. 8K)"),
         flag("k", true, "retention budget K"),
         flag("stages", true, "pipeline stages for train (reference backend; default 1)"),
+        flag("dp", true, "data-parallel replica groups for train (reference backend; default 1)"),
         flag("offload-budget-bytes", true, "KV residency budget; spill coldest chunk KV to disk"),
         flag("steps", true, "training steps"),
         flag("batch", true, "global batch size (sequences)"),
@@ -115,6 +116,8 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     anyhow::ensure!(k >= 1, "--k must be >= 1");
     let stages = args.get_usize("stages", 1)?;
     anyhow::ensure!(stages >= 1, "--stages must be >= 1");
+    let dp = args.get_usize("dp", 1)?;
+    anyhow::ensure!(dp >= 1, "--dp must be >= 1");
     let offload_budget = match args.get("offload-budget-bytes") {
         Some(s) => Some(
             chunkflow::util::cli::parse_size(s)
@@ -137,7 +140,10 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
             let chunk_size = args.get_u64("chunk-size", 256)?;
             anyhow::ensure!(chunk_size >= 1, "--chunk-size must be >= 1");
             cfg.chunkflow = ChunkFlowParams::new(chunk_size, k);
-            cfg.parallel = ParallelConfig::new(1, stages as u64, RecomputeGranularity::Selective);
+            let mut parallel =
+                ParallelConfig::new(1, stages as u64, RecomputeGranularity::Selective);
+            parallel.dp = dp as u64;
+            cfg.parallel = parallel;
             let max_chunks = cfg.context_length.div_ceil(chunk_size) as usize;
             let manifest = Manifest::for_reference(&cfg.model, chunk_size as usize, max_chunks)?;
             let backend = ReferenceBackend::new(manifest)?;
@@ -145,7 +151,15 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
             if let Some(budget) = offload_budget {
                 trainer.set_offload_budget(Some(budget));
             }
-            if stages > 1 {
+            if dp > 1 {
+                anyhow::ensure!(
+                    offload_budget.is_none(),
+                    "--offload-budget-bytes applies to the single-replica path \
+                     (replica groups own per-rank KV)"
+                );
+                trainer.train_dp(dp, stages)?;
+                finish_training(&trainer, args)
+            } else if stages > 1 {
                 anyhow::ensure!(
                     offload_budget.is_none(),
                     "--offload-budget-bytes applies to the single-stage path \
@@ -172,6 +186,10 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
             anyhow::ensure!(
                 stages <= 1,
                 "pipeline mode (--stages > 1) requires --backend reference"
+            );
+            anyhow::ensure!(
+                dp <= 1,
+                "data-parallel mode (--dp > 1) requires --backend reference"
             );
             anyhow::ensure!(
                 offload_budget.is_none(),

@@ -135,11 +135,26 @@ impl MemoryModel {
     }
 
     /// Peak per-GPU bytes for a baseline 1F1B pipeline whose in-flight
-    /// micro-batches have the given lengths (stage 0 holds all of them).
+    /// micro-batches have the given lengths, accounted per stage: stage 0
+    /// holds the full in-flight activation window but no logits; the last
+    /// stage holds at most one micro-batch's activations (its 1F1B depth
+    /// is 1) plus that micro-batch's lm-head logits. For PP > 1 those live
+    /// on different GPUs, so the peak is the max of the two footprints —
+    /// not their sum (the old accounting, which overstated the peak and
+    /// let `derive_baseline_config` over-provision). PP = 1 is unchanged:
+    /// everything coexists on the single stage.
     pub fn baseline_pipeline_peak(&self, in_flight: &[u64]) -> u64 {
         let acts: u64 = in_flight.iter().map(|&t| self.baseline_activation_bytes(t)).sum();
-        let lm = in_flight.iter().map(|&t| self.lm_head_bytes(t)).max().unwrap_or(0);
-        self.fixed_bytes() + acts + lm
+        if self.parallel.pp <= 1 {
+            let lm = in_flight.iter().map(|&t| self.lm_head_bytes(t)).max().unwrap_or(0);
+            return self.fixed_bytes() + acts + lm;
+        }
+        let last_stage = in_flight
+            .iter()
+            .map(|&t| self.baseline_activation_bytes(t) + self.lm_head_bytes(t))
+            .max()
+            .unwrap_or(0);
+        self.fixed_bytes() + acts.max(last_stage)
     }
 
     /// Peak per-GPU bytes for ChunkFlow with the given tunables and the
@@ -268,16 +283,57 @@ mod tests {
     }
 
     #[test]
-    fn pipeline_peak_sums_in_flight() {
+    fn pipeline_peak_accounts_per_stage() {
         let m = MemoryModel::new(
             ModelSpec::preset("qwen2.5-7b").unwrap(),
             ParallelConfig::new(4, 4, RecomputeGranularity::Selective),
         );
+        let act = m.baseline_activation_bytes(1024);
+        let lm = m.lm_head_bytes(1024);
+        // A single in-flight micro-batch peaks on whichever stage is
+        // heavier: its activations alone (stage 0) vs activations + logits
+        // (last stage).
         let single = m.baseline_pipeline_peak(&[1024]);
+        assert_eq!(single, m.fixed_bytes() + act.max(act + lm));
+        // A full in-flight window sums activations on stage 0 but never
+        // adds the last stage's logits on top of that sum.
         let four = m.baseline_pipeline_peak(&[1024, 1024, 1024, 1024]);
         assert!(four > single);
-        let act = m.baseline_activation_bytes(1024);
-        assert_eq!(four - single, 3 * act);
+        assert_eq!(four, m.fixed_bytes() + (4 * act).max(act + lm));
+        assert!(
+            four < m.fixed_bytes() + 4 * act + lm,
+            "stage-0 and last-stage footprints must not be summed for PP > 1"
+        );
+    }
+
+    #[test]
+    fn pipeline_peak_pp1_unchanged() {
+        // Single stage: everything coexists — the original accounting.
+        let m = table5_model(); // PP = 1
+        let act = m.baseline_activation_bytes(2048);
+        let lm = m.lm_head_bytes(2048);
+        assert_eq!(m.baseline_pipeline_peak(&[2048]), m.fixed_bytes() + act + lm);
+        assert_eq!(
+            m.baseline_pipeline_peak(&[2048, 2048]),
+            m.fixed_bytes() + 2 * act + lm
+        );
+    }
+
+    #[test]
+    fn pipeline_peak_long_sequence_dominated_by_last_stage_or_stage0() {
+        // A 32K in-flight head with short companions: the fix can only
+        // shrink (or preserve) the old sum-everything accounting.
+        let m = MemoryModel::new(
+            ModelSpec::preset("qwen2.5-7b").unwrap(),
+            ParallelConfig::new(4, 4, RecomputeGranularity::Selective),
+        );
+        let in_flight = [32 * 1024, 1024, 1024, 1024];
+        let acts: u64 =
+            in_flight.iter().map(|&t| m.baseline_activation_bytes(t)).sum();
+        let lm_max = in_flight.iter().map(|&t| m.lm_head_bytes(t)).max().unwrap();
+        let peak = m.baseline_pipeline_peak(&in_flight);
+        assert!(peak <= m.fixed_bytes() + acts + lm_max, "never above the old sum");
+        assert!(peak >= m.fixed_bytes() + acts, "stage 0 holds the full window");
     }
 
     #[test]

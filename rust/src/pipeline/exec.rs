@@ -208,6 +208,48 @@ pub fn execute_agendas(
     })
 }
 
+/// One data-parallel replica group's work: its rank-local chunk set and the
+/// exec items built against the rank-local (re-densified) chunk ids.
+pub struct ReplicaSpec {
+    pub set: ChunkSet,
+    pub items: Vec<ExecItem>,
+}
+
+/// Execute data-parallel replica groups concurrently: each rank runs the
+/// state-aware 1F1B executor ([`execute_state_aware`] — its own `p` stage
+/// threads) over its rank-local chunk assignment. Outcomes come back in
+/// rank order; the gradient reduction (the trainer's deterministic
+/// rank-ordered sum) is the caller's job, mirroring how a real DP group
+/// separates compute from the all-reduce.
+pub fn execute_replica_groups(
+    backend: &ReferenceBackend,
+    replicas: &[ReplicaSpec],
+    k: usize,
+    p: usize,
+) -> anyhow::Result<Vec<ExecOutcome>> {
+    anyhow::ensure!(!replicas.is_empty(), "need at least one replica group");
+    let results: Vec<anyhow::Result<ExecOutcome>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = replicas
+            .iter()
+            .map(|r| {
+                scope.spawn(move || execute_state_aware(backend, &r.set, &r.items, k, p))
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| {
+                h.join()
+                    .unwrap_or_else(|_| Err(anyhow::anyhow!("replica thread panicked")))
+            })
+            .collect()
+    });
+    results
+        .into_iter()
+        .enumerate()
+        .map(|(r, res)| res.map_err(|e| e.context(format!("dp rank {r}"))))
+        .collect()
+}
+
 /// Per-stage results funneled back to the coordinator.
 struct StageResult {
     d_params: Vec<Vec<f64>>,

@@ -25,7 +25,10 @@ pub mod exec;
 pub mod interleaved;
 pub mod onef1b;
 
-pub use exec::{build_exec_items, execute_agendas, execute_state_aware, ExecItem, ExecOutcome};
+pub use exec::{
+    build_exec_items, execute_agendas, execute_replica_groups, execute_state_aware, ExecItem,
+    ExecOutcome, ReplicaSpec,
+};
 pub use interleaved::simulate_interleaved;
 
 pub use onef1b::{standard_1f1b_agendas, state_aware_1f1b_agendas, PipelineItem};

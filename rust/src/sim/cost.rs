@@ -29,6 +29,10 @@ use crate::pipeline::OpCosts;
 /// A100-class peak bf16 throughput per GPU (FLOP/s).
 pub const PEAK_FLOPS: f64 = 312e12;
 
+/// Effective per-GPU all-reduce bus bandwidth (bytes/s) for the DP gradient
+/// synchronization barrier — NVLink/NVSwitch-class.
+pub const DP_ALLREDUCE_BYTES_PER_SEC: f64 = 100e9;
+
 #[derive(Clone, Debug)]
 pub struct CostModel {
     pub model: ModelSpec,
@@ -86,6 +90,22 @@ impl CostModel {
         let local_params =
             self.model.param_count() as f64 / (self.parallel.tp * self.parallel.pp) as f64;
         local_params * 20.0 / 1.0e12
+    }
+
+    /// Seconds for the data-parallel gradient all-reduce barrier closing a
+    /// dp > 1 iteration: a ring all-reduce moves `2·(dp-1)/dp` of the local
+    /// fp32 gradient bytes through the bus. `dp == 1` pays exactly nothing,
+    /// keeping the pre-DP iteration model bit-identical (the `bench-smoke`
+    /// drift contract).
+    pub fn dp_allreduce_seconds(&self) -> f64 {
+        let dp = self.parallel.dp;
+        if dp <= 1 {
+            return 0.0;
+        }
+        let local_params =
+            self.model.param_count() as f64 / (self.parallel.tp * self.parallel.pp) as f64;
+        let grad_bytes = 4.0 * local_params;
+        2.0 * (dp - 1) as f64 / dp as f64 * grad_bytes / DP_ALLREDUCE_BYTES_PER_SEC
     }
 }
 
@@ -165,5 +185,22 @@ mod tests {
         let m = cm(RecomputeGranularity::Selective);
         let s = m.optimizer_seconds();
         assert!(s > 0.0 && s < 1.0, "optimizer step {s}s");
+    }
+
+    #[test]
+    fn dp_allreduce_free_at_dp1_and_saturating_in_dp() {
+        let mut m = cm(RecomputeGranularity::Selective);
+        assert_eq!(m.dp_allreduce_seconds(), 0.0, "dp=1 must pay nothing");
+        m.parallel.dp = 2;
+        let t2 = m.dp_allreduce_seconds();
+        m.parallel.dp = 8;
+        let t8 = m.dp_allreduce_seconds();
+        // Ring volume grows like (dp-1)/dp: monotone, bounded by 2x bytes/bw.
+        assert!(t2 > 0.0 && t8 > t2);
+        let local_params = m.model.param_count() as f64
+            / (m.parallel.tp * m.parallel.pp) as f64;
+        let bound = 2.0 * 4.0 * local_params / DP_ALLREDUCE_BYTES_PER_SEC;
+        assert!(t8 < bound, "t8 {t8} under asymptotic bound {bound}");
+        assert!(t8 < 1.0, "all-reduce stays sub-second: {t8}");
     }
 }

@@ -1,20 +1,32 @@
-//! Data-parallel load balance (the other half of the paper's Obs. 3).
+//! Data parallelism (the other half of the paper's Obs. 3).
 //!
 //! With variable-length sequences, naive round-robin DP splits leave ranks
 //! with very different token loads; a DP step is gated on the slowest rank
-//! (gradient all-reduce barrier). This module quantifies the imbalance for
-//! three policies:
+//! (gradient all-reduce barrier). Three policies:
 //!
 //! - `RoundRobin`  — the naive split (paper's baseline behaviour);
 //! - `SmartBatching` — LongAlign-style: sort by length, then deal
 //!   longest-first onto the currently-lightest rank (greedy LPT);
 //! - `ChunkBalanced` — ChunkFlow-style: because chunks are near-uniform,
 //!   dealing *chunks* instead of sequences is balanced by construction.
+//!
+//! Two layers live here:
+//!
+//! - [`split_dp`] / [`DpSplit`] — the original *load counters*: they only
+//!   tally per-rank token loads (the `ChunkBalanced` counter deals chunks
+//!   individually, ignoring KV locality — a theoretical bound).
+//! - [`assign_chunks`] / [`DpAssignment`] and [`assign_sequences`] /
+//!   [`DpSeqAssignment`] — the *real* sharding the simulator and the
+//!   replica-group trainer execute. Assignment is at **unit** granularity:
+//!   a unit is either one standalone chunk or one whole dependent-chunk
+//!   group, so the KV state of a split sequence never crosses ranks. The
+//!   baseline variant maps sequences (each rank then runs its own
+//!   Algorithm 1 / micro-batching, like a real Megatron DP group).
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
-use crate::chunk::construct_chunks;
+use crate::chunk::{construct_chunks, Chunk, ChunkSet};
 use crate::data::Sequence;
 
 /// DP assignment policy.
@@ -36,14 +48,7 @@ impl DpSplit {
     /// Max/mean load ratio; 1.0 = perfectly balanced. A DP iteration takes
     /// max-load time, so this is the slowdown factor vs. ideal.
     pub fn imbalance(&self) -> f64 {
-        let max = *self.loads.iter().max().unwrap_or(&0) as f64;
-        let mean =
-            self.loads.iter().sum::<u64>() as f64 / self.loads.len().max(1) as f64;
-        if mean == 0.0 {
-            1.0
-        } else {
-            max / mean
-        }
+        imbalance_of(&self.loads)
     }
 }
 
@@ -80,18 +85,228 @@ pub fn split_dp(
     DpSplit { loads, policy }
 }
 
-/// Greedy LPT inner loop: each job goes to the currently-least-loaded rank.
-/// A min-heap on `(load, rank)` makes it O(n log dp) instead of the old
-/// O(n·dp) `min_by_key` scan, with the identical tiebreak (equal loads pick
-/// the lowest rank, exactly what the first-minimum scan did).
+/// Greedy LPT load counter: each job goes to the currently-least-loaded
+/// rank. Thin wrapper over [`lpt_assign_indexed`] (every caller starts from
+/// zeroed loads) so the counter path and the real assignment path can never
+/// drift apart.
 fn lpt_assign(loads: &mut [u64], jobs: impl Iterator<Item = u64>) {
+    let (_, l) = lpt_assign_indexed(loads.len(), jobs);
+    loads.copy_from_slice(&l);
+}
+
+/// Greedy LPT inner loop recording *which* rank each job landed on. A
+/// min-heap on `(load, rank)` makes it O(n log dp) instead of an O(n·dp)
+/// `min_by_key` scan, with the identical tiebreak (equal loads pick the
+/// lowest rank, exactly what the first-minimum scan did). Jobs arrive
+/// pre-sorted — the caller owns the LPT ordering.
+fn lpt_assign_indexed(dp: usize, jobs: impl Iterator<Item = u64>) -> (Vec<usize>, Vec<u64>) {
+    let mut loads = vec![0u64; dp];
+    let mut ranks = Vec::new();
     let mut heap: BinaryHeap<Reverse<(u64, usize)>> =
-        (0..loads.len()).map(|r| Reverse((loads[r], r))).collect();
+        (0..dp).map(|r| Reverse((0u64, r))).collect();
     for job in jobs {
         let Reverse((load, r)) = heap.pop().expect("at least one rank");
         heap.push(Reverse((load + job, r)));
         loads[r] = load + job;
+        ranks.push(r);
     }
+    (ranks, loads)
+}
+
+/// Max/mean load ratio shared by every assignment flavor.
+fn imbalance_of(loads: &[u64]) -> f64 {
+    let max = *loads.iter().max().unwrap_or(&0) as f64;
+    let mean = loads.iter().sum::<u64>() as f64 / loads.len().max(1) as f64;
+    if mean == 0.0 {
+        1.0
+    } else {
+        max / mean
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Real assignments (tentpole): concrete chunks / sequences onto ranks.
+// ---------------------------------------------------------------------------
+
+/// One atomic DP scheduling unit: a whole dependent-chunk group (the KV
+/// state of a split sequence must stay rank-local) or a single standalone
+/// chunk.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct DpUnit {
+    /// Chunk ids into the source [`ChunkSet`], ascending. A dependent
+    /// group's full id list, or exactly one standalone chunk id.
+    pub chunk_ids: Vec<usize>,
+    /// Total tokens carried (the unit's load).
+    pub tokens: u64,
+}
+
+/// Canonical unit decomposition of a chunk set: dependent groups first
+/// (ascending `seq_id`, the `dependent_groups` order), then standalone
+/// chunks in id order — the same iteration order the single-rank trainer
+/// accumulates gradients in, which is what makes the replica trainer's
+/// unit-ordered reduction invariant to the DP degree.
+pub fn dp_units(set: &ChunkSet) -> Vec<DpUnit> {
+    let mut units = Vec::new();
+    for group in set.dependent_groups() {
+        units.push(DpUnit {
+            chunk_ids: group.iter().map(|c| c.id).collect(),
+            tokens: group.iter().map(|c| c.total_len()).sum(),
+        });
+    }
+    for c in set.standalone_chunks() {
+        units.push(DpUnit { chunk_ids: vec![c.id], tokens: c.total_len() });
+    }
+    units
+}
+
+/// A real chunk→rank assignment for one global batch's chunk set.
+#[derive(Clone, Debug)]
+pub struct DpAssignment {
+    pub policy: DpPolicy,
+    /// Canonical units (see [`dp_units`]).
+    pub units: Vec<DpUnit>,
+    /// `units[i]` runs on rank `rank_of[i]`.
+    pub rank_of: Vec<usize>,
+    /// Per-rank token loads.
+    pub loads: Vec<u64>,
+}
+
+impl DpAssignment {
+    /// Data-parallel degree.
+    pub fn dp(&self) -> usize {
+        self.loads.len()
+    }
+
+    /// Max/mean load ratio; 1.0 = perfectly balanced (a DP iteration takes
+    /// max-load time, so this is the slowdown factor vs. ideal).
+    pub fn imbalance(&self) -> f64 {
+        imbalance_of(&self.loads)
+    }
+
+    /// Indices into `units` assigned to `rank`, in canonical unit order.
+    pub fn rank_units(&self, rank: usize) -> Vec<usize> {
+        (0..self.units.len()).filter(|&u| self.rank_of[u] == rank).collect()
+    }
+
+    /// Global chunk ids on `rank`, ascending.
+    pub fn rank_chunk_ids(&self, rank: usize) -> Vec<usize> {
+        let mut ids: Vec<usize> = self
+            .rank_units(rank)
+            .into_iter()
+            .flat_map(|u| self.units[u].chunk_ids.iter().copied())
+            .collect();
+        ids.sort_unstable();
+        ids
+    }
+
+    /// Materialize the rank-local chunk set: the rank's chunks in ascending
+    /// global id order with densely re-assigned ids. Dependent groups move
+    /// whole, so `dependent_groups()` on the result stays well-formed; with
+    /// `dp == 1` this reproduces the source set exactly.
+    pub fn rank_chunk_set(&self, set: &ChunkSet, rank: usize) -> ChunkSet {
+        let mut chunks: Vec<Chunk> = self
+            .rank_chunk_ids(rank)
+            .into_iter()
+            .map(|i| set.chunks[i].clone())
+            .collect();
+        for (i, c) in chunks.iter_mut().enumerate() {
+            c.id = i;
+        }
+        ChunkSet { chunk_size: set.chunk_size, chunks }
+    }
+}
+
+/// Assign a chunk set's units to `dp` ranks. `RoundRobin` deals units in
+/// canonical order; `SmartBatching` and `ChunkBalanced` both run greedy LPT
+/// over unit loads (at unit granularity — groups atomic — the two coincide;
+/// the *counter* [`split_dp`] still shows their theoretical difference).
+/// Every policy keeps dependent groups rank-local by construction.
+pub fn assign_chunks(set: &ChunkSet, dp: usize, policy: DpPolicy) -> DpAssignment {
+    assert!(dp >= 1);
+    let units = dp_units(set);
+    let (rank_of, loads) = match policy {
+        DpPolicy::RoundRobin => {
+            let mut loads = vec![0u64; dp];
+            let mut rank_of = Vec::with_capacity(units.len());
+            for (i, u) in units.iter().enumerate() {
+                loads[i % dp] += u.tokens;
+                rank_of.push(i % dp);
+            }
+            (rank_of, loads)
+        }
+        DpPolicy::SmartBatching | DpPolicy::ChunkBalanced => {
+            // LPT: heaviest unit first onto the lightest rank. Stable sort
+            // keeps equal-load units in canonical order (deterministic).
+            let mut order: Vec<usize> = (0..units.len()).collect();
+            order.sort_by_key(|&u| Reverse(units[u].tokens));
+            let (ranks, loads) =
+                lpt_assign_indexed(dp, order.iter().map(|&u| units[u].tokens));
+            let mut rank_of = vec![0usize; units.len()];
+            for (pos, &u) in order.iter().enumerate() {
+                rank_of[u] = ranks[pos];
+            }
+            (rank_of, loads)
+        }
+    };
+    DpAssignment { policy, units, rank_of, loads }
+}
+
+/// A real sequence→rank assignment (the baseline's DP sharding: each rank
+/// micro-batches / packs its own sub-batch afterwards).
+#[derive(Clone, Debug)]
+pub struct DpSeqAssignment {
+    pub policy: DpPolicy,
+    /// Per-rank indices into the batch, ascending.
+    pub seq_ranks: Vec<Vec<usize>>,
+    /// Per-rank token loads.
+    pub loads: Vec<u64>,
+}
+
+impl DpSeqAssignment {
+    /// Max/mean load ratio (see [`DpAssignment::imbalance`]).
+    pub fn imbalance(&self) -> f64 {
+        imbalance_of(&self.loads)
+    }
+}
+
+/// Assign whole sequences to `dp` ranks: `RoundRobin` (the naive baseline
+/// split Obs. 3 calls out) or `SmartBatching` (LongAlign-style LPT).
+/// `ChunkBalanced` is a chunk-level policy — use [`assign_chunks`].
+pub fn assign_sequences(
+    batch: &[Sequence],
+    dp: usize,
+    policy: DpPolicy,
+) -> anyhow::Result<DpSeqAssignment> {
+    anyhow::ensure!(dp >= 1, "dp must be >= 1");
+    let (seq_ranks, loads) = match policy {
+        DpPolicy::RoundRobin => {
+            let mut seq_ranks = vec![Vec::new(); dp];
+            let mut loads = vec![0u64; dp];
+            for (i, s) in batch.iter().enumerate() {
+                seq_ranks[i % dp].push(i);
+                loads[i % dp] += s.len;
+            }
+            (seq_ranks, loads)
+        }
+        DpPolicy::SmartBatching => {
+            let mut order: Vec<usize> = (0..batch.len()).collect();
+            order.sort_by_key(|&i| Reverse(batch[i].len));
+            let (ranks, loads) =
+                lpt_assign_indexed(dp, order.iter().map(|&i| batch[i].len));
+            let mut seq_ranks = vec![Vec::new(); dp];
+            for (pos, &i) in order.iter().enumerate() {
+                seq_ranks[ranks[pos]].push(i);
+            }
+            for r in &mut seq_ranks {
+                r.sort_unstable();
+            }
+            (seq_ranks, loads)
+        }
+        DpPolicy::ChunkBalanced => anyhow::bail!(
+            "ChunkBalanced assigns chunks, not sequences (use assign_chunks)"
+        ),
+    };
+    Ok(DpSeqAssignment { policy, seq_ranks, loads })
 }
 
 #[cfg(test)]
@@ -189,5 +404,192 @@ mod tests {
         let split = split_dp(&batch, 1, DpPolicy::RoundRobin, 8192);
         assert_eq!(split.imbalance(), 1.0);
         Ok(())
+    }
+
+    // ----- real assignments -------------------------------------------------
+
+    #[test]
+    fn prop_assignment_conserves_chunks_and_tokens() {
+        use crate::util::prop::{check, ensure, gen_mix, gen_pair, gen_u64, gen_usize, gen_vec};
+        let gen = gen_pair(
+            gen_vec(gen_mix(gen_u64(1, 2_000), gen_u64(2_000, 60_000), 0.2), 1, 48),
+            gen_pair(gen_usize(1, 8), gen_u64(1_000, 8_192)),
+        );
+        check(200, gen, |(lens, (dp, chunk_size))| {
+            let batch: Vec<Sequence> = lens
+                .iter()
+                .enumerate()
+                .map(|(i, &len)| Sequence { id: i as u64, len })
+                .collect();
+            let set = construct_chunks(&batch, *chunk_size);
+            for policy in
+                [DpPolicy::RoundRobin, DpPolicy::SmartBatching, DpPolicy::ChunkBalanced]
+            {
+                let a = assign_chunks(&set, *dp, policy);
+                ensure(a.rank_of.len() == a.units.len(), "every unit has a rank")?;
+                ensure(
+                    a.loads.iter().sum::<u64>() == set.total_tokens(),
+                    "token loads conserve the batch",
+                )?;
+                // Every chunk appears on exactly one rank, and the union of
+                // rank-local sets reproduces the whole set.
+                let mut seen = vec![false; set.chunks.len()];
+                let mut union_tokens = 0u64;
+                let mut union_chunks = 0usize;
+                for r in 0..*dp {
+                    let sub = a.rank_chunk_set(&set, r);
+                    union_chunks += sub.chunks.len();
+                    union_tokens += sub.total_tokens();
+                    ensure(a.loads[r] == sub.total_tokens(), "load matches rank set")?;
+                    for id in a.rank_chunk_ids(r) {
+                        ensure(!seen[id], "chunk assigned to one rank only")?;
+                        seen[id] = true;
+                    }
+                    // Rank-local ids re-densified.
+                    for (i, c) in sub.chunks.iter().enumerate() {
+                        ensure(c.id == i, "rank-local ids dense")?;
+                    }
+                }
+                ensure(union_chunks == set.chunks.len(), "all chunks covered")?;
+                ensure(union_tokens == set.total_tokens(), "all tokens covered")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_dependent_groups_stay_rank_local() {
+        use crate::util::prop::{check, ensure, gen_pair, gen_u64, gen_usize, gen_vec};
+        let gen = gen_pair(
+            gen_vec(gen_u64(1, 100_000), 1, 24),
+            gen_pair(gen_usize(1, 8), gen_u64(1_000, 8_192)),
+        );
+        check(200, gen, |(lens, (dp, chunk_size))| {
+            let batch: Vec<Sequence> = lens
+                .iter()
+                .enumerate()
+                .map(|(i, &len)| Sequence { id: i as u64, len })
+                .collect();
+            let set = construct_chunks(&batch, *chunk_size);
+            for policy in
+                [DpPolicy::RoundRobin, DpPolicy::SmartBatching, DpPolicy::ChunkBalanced]
+            {
+                let a = assign_chunks(&set, *dp, policy);
+                // All chunks of one dependent group share a rank, and each
+                // rank-local set's groups cover their sequences whole.
+                for group in set.dependent_groups() {
+                    let rank_of_chunk = |id: usize| -> usize {
+                        for r in 0..*dp {
+                            if a.rank_chunk_ids(r).contains(&id) {
+                                return r;
+                            }
+                        }
+                        unreachable!("chunk {id} unassigned");
+                    };
+                    let r0 = rank_of_chunk(group[0].id);
+                    for c in &group {
+                        ensure(
+                            rank_of_chunk(c.id) == r0,
+                            "dependent group crosses ranks",
+                        )?;
+                    }
+                    let sub = a.rank_chunk_set(&set, r0);
+                    let seq_id = group[0].segments[0].seq_id;
+                    let local: Vec<_> = sub
+                        .dependent_groups()
+                        .into_iter()
+                        .find(|g| g[0].segments[0].seq_id == seq_id)
+                        .expect("group present on its rank");
+                    ensure(local.len() == group.len(), "group intact on its rank")?;
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn chunk_balanced_assignment_beats_round_robin_units() -> anyhow::Result<()> {
+        let batch = longtail_batch()?;
+        let set = construct_chunks(&batch, 8192);
+        let rr = assign_chunks(&set, 8, DpPolicy::RoundRobin);
+        let cb = assign_chunks(&set, 8, DpPolicy::ChunkBalanced);
+        assert!(
+            cb.imbalance() <= rr.imbalance() + 1e-9,
+            "LPT {:.3} vs round-robin {:.3}",
+            cb.imbalance(),
+            rr.imbalance()
+        );
+        // Greedy list-scheduling bound: max load < mean + largest unit
+        // (atomic dependent groups cap how balanced any policy can get).
+        let mean = set.total_tokens() as f64 / 8.0;
+        let max_unit = cb.units.iter().map(|u| u.tokens).max().unwrap() as f64;
+        assert!(
+            cb.imbalance() < (mean + max_unit) / mean + 1e-9,
+            "chunk-balanced imbalance {:.3} above the LPT bound",
+            cb.imbalance()
+        );
+        Ok(())
+    }
+
+    #[test]
+    fn single_rank_assignment_reproduces_the_set() -> anyhow::Result<()> {
+        // dp = 1 must be the identity: all units on rank 0, and the
+        // rank-local set equal to the source set chunk-for-chunk — the
+        // invariant the replica trainer's dp=1 path rests on.
+        let batch = longtail_batch()?;
+        let set = construct_chunks(&batch, 8192);
+        for policy in
+            [DpPolicy::RoundRobin, DpPolicy::SmartBatching, DpPolicy::ChunkBalanced]
+        {
+            let a = assign_chunks(&set, 1, policy);
+            assert!(a.rank_of.iter().all(|&r| r == 0));
+            assert_eq!(a.loads, vec![set.total_tokens()]);
+            let sub = a.rank_chunk_set(&set, 0);
+            assert_eq!(sub.chunks, set.chunks, "{policy:?}");
+        }
+        Ok(())
+    }
+
+    #[test]
+    fn sequence_assignment_matches_round_robin_counter() -> anyhow::Result<()> {
+        let batch = longtail_batch()?;
+        let a = assign_sequences(&batch, 4, DpPolicy::RoundRobin)?;
+        let counter = split_dp(&batch, 4, DpPolicy::RoundRobin, 8192);
+        assert_eq!(a.loads, counter.loads);
+        let total: usize = a.seq_ranks.iter().map(|r| r.len()).sum();
+        assert_eq!(total, batch.len());
+        // SmartBatching loads match the counter too (same LPT tiebreak).
+        let smart = assign_sequences(&batch, 4, DpPolicy::SmartBatching)?;
+        let smart_counter = split_dp(&batch, 4, DpPolicy::SmartBatching, 8192);
+        assert_eq!(smart.loads, smart_counter.loads);
+        Ok(())
+    }
+
+    #[test]
+    fn sequence_assignment_rejects_chunk_policy() {
+        let batch = vec![Sequence { id: 0, len: 10 }];
+        assert!(assign_sequences(&batch, 2, DpPolicy::ChunkBalanced).is_err());
+    }
+
+    #[test]
+    fn units_are_canonical_groups_then_standalone() {
+        // 2 long sequences (groups) + shorts packing into standalone chunks.
+        let batch = vec![
+            Sequence { id: 10, len: 5_000 },
+            Sequence { id: 3, len: 100 },
+            Sequence { id: 7, len: 9_000 },
+            Sequence { id: 5, len: 200 },
+        ];
+        let set = construct_chunks(&batch, 2_048);
+        let units = dp_units(&set);
+        // Groups first, ascending seq_id (7 before 10), then standalone.
+        assert_eq!(units[0].chunk_ids.len(), 5); // ceil(9000/2048)
+        assert_eq!(units[1].chunk_ids.len(), 3); // ceil(5000/2048)
+        let group_seq = |u: &DpUnit| set.chunks[u.chunk_ids[0]].segments[0].seq_id;
+        assert_eq!(group_seq(&units[0]), 7);
+        assert_eq!(group_seq(&units[1]), 10);
+        assert!(units[2..].iter().all(|u| u.chunk_ids.len() == 1));
+        let tokens: u64 = units.iter().map(|u| u.tokens).sum();
+        assert_eq!(tokens, set.total_tokens());
     }
 }

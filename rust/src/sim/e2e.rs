@@ -15,11 +15,20 @@
 //! chunk length), so splitting long sequences is not free in the model, and
 //! the recompute-forward of discarded chunks is charged (the simulator
 //! carries RecomputeFwd ops explicitly).
+//!
+//! With `dp > 1` in the parallel strategy (Obs. 3), both paths shard the
+//! work to ranks first — the baseline by naive sequence round-robin, the
+//! ChunkFlow path by the chunk-balanced assignment (`sim::dp`) — simulate
+//! each rank's pipeline independently, and gate the iteration on the
+//! slowest rank plus the gradient all-reduce barrier
+//! (`CostModel::dp_allreduce_seconds`). `dp == 1` runs the original
+//! single-pipeline code bit-for-bit (the bench-smoke drift contract).
 
 use crate::chunk::{construct_chunks, ChunkSet};
 use crate::data::Sequence;
-use crate::pipeline::{onef1b, OpCosts};
+use crate::pipeline::{onef1b, OpCosts, Timeline};
 use crate::sim::cost::CostModel;
+use crate::sim::dp::{assign_chunks, assign_sequences, DpPolicy};
 
 /// Result of simulating one training iteration.
 #[derive(Clone, Debug)]
@@ -33,25 +42,54 @@ pub struct IterationResult {
 }
 
 /// Simulate one Megatron-LM-style iteration: one sequence per micro-batch.
+/// With `dp > 1` in the cost model's strategy, the batch is first sharded
+/// to ranks by naive sequence round-robin (the baseline's DP, Obs. 3), each
+/// rank runs its own 1F1B pipeline, and the iteration is gated on the
+/// slowest rank plus the gradient all-reduce barrier. `dp == 1` takes the
+/// original single-pipeline path bit-for-bit.
 pub fn simulate_baseline_iteration(
     batch: &[Sequence],
     cost: &CostModel,
 ) -> anyhow::Result<IterationResult> {
     let p = cost.parallel.pp as usize;
-    let items: Vec<onef1b::PipelineItem> = batch
-        .iter()
+    let dp = cost.parallel.dp as usize;
+    if dp <= 1 {
+        let all: Vec<&Sequence> = batch.iter().collect();
+        let t = onef1b::simulate_standard(&baseline_items(&all, cost), p)?;
+        return Ok(IterationResult {
+            iteration_seconds: t.makespan + cost.optimizer_seconds(),
+            bubble_ratio: t.bubble_ratio(),
+            num_items: batch.len(),
+            busy_seconds: t.busy,
+        });
+    }
+    let assign = assign_sequences(batch, dp, DpPolicy::RoundRobin)?;
+    let (mut makespan, mut busy) = (0.0f64, 0.0f64);
+    for ranks in &assign.seq_ranks {
+        if ranks.is_empty() {
+            continue;
+        }
+        let seqs: Vec<&Sequence> = ranks.iter().map(|&i| &batch[i]).collect();
+        let t = onef1b::simulate_standard(&baseline_items(&seqs, cost), p)?;
+        makespan = makespan.max(t.makespan);
+        busy += t.busy;
+    }
+    Ok(IterationResult {
+        iteration_seconds: makespan + cost.optimizer_seconds() + cost.dp_allreduce_seconds(),
+        bubble_ratio: dp_bubble_ratio(makespan, busy, p, dp),
+        num_items: batch.len(),
+        busy_seconds: busy,
+    })
+}
+
+/// One micro-batch pipeline item per sequence, under the cost model.
+fn baseline_items(seqs: &[&Sequence], cost: &CostModel) -> Vec<onef1b::PipelineItem> {
+    seqs.iter()
         .map(|s| {
             let c = cost.stage_costs(s.len, s.len);
             onef1b::PipelineItem { fwd_cost: c.fwd, bwd_cost: c.bwd }
         })
-        .collect();
-    let t = onef1b::simulate_standard(&items, p)?;
-    Ok(IterationResult {
-        iteration_seconds: t.makespan + cost.optimizer_seconds(),
-        bubble_ratio: t.bubble_ratio(),
-        num_items: items.len(),
-        busy_seconds: t.busy,
-    })
+        .collect()
 }
 
 /// Simulate one ChunkFlow iteration with the given tunables.
@@ -67,20 +105,89 @@ pub fn simulate_chunkflow_iteration(
 
 /// Simulate an already-constructed chunk set (used by the tuner to avoid
 /// re-running Algorithm 1 per (ChunkSize, K) candidate with equal size).
+/// With `dp > 1`, the set is sharded by the chunk-balanced assignment
+/// (dependent groups rank-local), each rank runs its own state-aware 1F1B
+/// pipeline, and the iteration is the slowest rank's makespan plus the
+/// all-reduce barrier; `dp == 1` takes the original path bit-for-bit.
+///
+/// Callers evaluating several K values on one set should compute
+/// [`dp_rank_sets`] once and use [`simulate_chunkset_sharded`] — the
+/// assignment does not depend on K (the memoization contract's DP
+/// extension).
 pub fn simulate_chunkset(
     set: &ChunkSet,
+    cost: &CostModel,
+    k: usize,
+) -> anyhow::Result<IterationResult> {
+    simulate_chunkset_sharded(set, &dp_rank_sets(set, cost), cost, k)
+}
+
+/// The K-invariant half of a DP chunk-set simulation: the chunk-balanced
+/// rank-local sub-sets. Empty for `dp <= 1` (single-pipeline path) — cheap
+/// to compute unconditionally, shareable across a ChunkSize group's K
+/// candidates.
+pub fn dp_rank_sets(set: &ChunkSet, cost: &CostModel) -> Vec<ChunkSet> {
+    let dp = cost.parallel.dp as usize;
+    if dp <= 1 || set.chunks.is_empty() {
+        return Vec::new();
+    }
+    let assign = assign_chunks(set, dp, DpPolicy::ChunkBalanced);
+    (0..dp).map(|r| assign.rank_chunk_set(set, r)).collect()
+}
+
+/// [`simulate_chunkset`] with the rank shards precomputed
+/// (`shards == dp_rank_sets(set, cost)`); bit-identical to it.
+pub fn simulate_chunkset_sharded(
+    set: &ChunkSet,
+    shards: &[ChunkSet],
     cost: &CostModel,
     k: usize,
 ) -> anyhow::Result<IterationResult> {
     let p = cost.parallel.pp as usize;
     if set.chunks.is_empty() {
         return Ok(IterationResult {
-            iteration_seconds: cost.optimizer_seconds(),
+            iteration_seconds: cost.optimizer_seconds() + cost.dp_allreduce_seconds(),
             bubble_ratio: 0.0,
             num_items: 0,
             busy_seconds: 0.0,
         });
     }
+    let dp = cost.parallel.dp as usize;
+    if dp <= 1 {
+        let t = chunkset_timeline(set, cost, k)?;
+        return Ok(IterationResult {
+            iteration_seconds: t.makespan + cost.optimizer_seconds(),
+            bubble_ratio: t.bubble_ratio(),
+            num_items: set.chunks.len(),
+            busy_seconds: t.busy,
+        });
+    }
+    anyhow::ensure!(
+        shards.len() == dp,
+        "got {} rank shards for dp = {dp} (pass dp_rank_sets of the same set and cost)",
+        shards.len()
+    );
+    let (mut makespan, mut busy) = (0.0f64, 0.0f64);
+    for sub in shards {
+        if sub.chunks.is_empty() {
+            continue;
+        }
+        let t = chunkset_timeline(sub, cost, k)?;
+        makespan = makespan.max(t.makespan);
+        busy += t.busy;
+    }
+    Ok(IterationResult {
+        iteration_seconds: makespan + cost.optimizer_seconds() + cost.dp_allreduce_seconds(),
+        bubble_ratio: dp_bubble_ratio(makespan, busy, p, dp),
+        num_items: set.chunks.len(),
+        busy_seconds: busy,
+    })
+}
+
+/// One rank's state-aware 1F1B timeline for a (rank-local) chunk set —
+/// the single-pipeline kernel both the dp == 1 and dp > 1 paths run.
+fn chunkset_timeline(set: &ChunkSet, cost: &CostModel, k: usize) -> anyhow::Result<Timeline> {
+    let p = cost.parallel.pp as usize;
     let cost_of = |id: usize| -> OpCosts {
         let c = &set.chunks[id];
         let tokens = c.total_len();
@@ -88,13 +195,19 @@ pub fn simulate_chunkset(
         let ctx_end = c.prefix_len() + tokens;
         cost.stage_costs(tokens, ctx_end)
     };
-    let t = onef1b::simulate_state_aware(set, k, p, cost_of)?;
-    Ok(IterationResult {
-        iteration_seconds: t.makespan + cost.optimizer_seconds(),
-        bubble_ratio: t.bubble_ratio(),
-        num_items: set.chunks.len(),
-        busy_seconds: t.busy,
-    })
+    onef1b::simulate_state_aware(set, k, p, cost_of)
+}
+
+/// Aggregate bubble ratio over `dp` replicas of a `p`-stage pipeline: all
+/// `p·dp` GPUs are busy-or-bubbled until the slowest replica finishes (the
+/// all-reduce barrier), so total execution time is `makespan · p · dp`.
+fn dp_bubble_ratio(makespan: f64, busy: f64, p: usize, dp: usize) -> f64 {
+    let total = makespan * (p * dp) as f64;
+    if total == 0.0 {
+        0.0
+    } else {
+        (total - busy) / total
+    }
 }
 
 /// Average iteration seconds over `iters` sampled batches.
@@ -196,5 +309,91 @@ mod tests {
         let a = simulate_chunkflow_iteration(&batch, &c, 8192, 2).unwrap();
         let b = simulate_chunkflow_iteration(&batch, &c, 8192, 2).unwrap();
         assert_eq!(a.iteration_seconds, b.iteration_seconds);
+    }
+
+    // ----- data parallelism -------------------------------------------------
+
+    fn cost_dp(pp: u64, dp: u64) -> CostModel {
+        let mut parallel = ParallelConfig::new(4, pp, RecomputeGranularity::Selective);
+        parallel.dp = dp;
+        CostModel::new(ModelSpec::preset("qwen2.5-7b").unwrap(), parallel)
+    }
+
+    #[test]
+    fn explicit_dp1_is_bit_identical_to_default() {
+        // The dp field defaults to 1; setting it explicitly must route
+        // through the identical single-pipeline code (drift contract).
+        let batch = eval_batch(32 * 1024, 128);
+        let base = cost(2, RecomputeGranularity::Selective);
+        let dp1 = cost_dp(2, 1);
+        let a = simulate_chunkflow_iteration(&batch, &base, 8192, 2).unwrap();
+        let b = simulate_chunkflow_iteration(&batch, &dp1, 8192, 2).unwrap();
+        assert_eq!(a.iteration_seconds, b.iteration_seconds);
+        assert_eq!(a.bubble_ratio, b.bubble_ratio);
+        let ab = simulate_baseline_iteration(&batch, &base).unwrap();
+        let bb = simulate_baseline_iteration(&batch, &dp1).unwrap();
+        assert_eq!(ab.iteration_seconds, bb.iteration_seconds);
+        assert_eq!(ab.bubble_ratio, bb.bubble_ratio);
+    }
+
+    #[test]
+    fn dp_speeds_up_but_not_superlinearly() {
+        let batch = eval_batch(32 * 1024, 256);
+        let t1 = simulate_chunkflow_iteration(&batch, &cost_dp(2, 1), 8192, 2).unwrap();
+        let t2 = simulate_chunkflow_iteration(&batch, &cost_dp(2, 2), 8192, 2).unwrap();
+        let t4 = simulate_chunkflow_iteration(&batch, &cost_dp(2, 4), 8192, 2).unwrap();
+        assert!(t2.iteration_seconds < t1.iteration_seconds, "{t2:?} vs {t1:?}");
+        assert!(t4.iteration_seconds < t2.iteration_seconds, "{t4:?} vs {t2:?}");
+        // The slowest rank carries >= mean load, plus optimizer + all-reduce:
+        // scaling can never beat ideal division of the compute.
+        assert!(t2.iteration_seconds > t1.iteration_seconds / 2.5);
+        assert!(t4.iteration_seconds > t1.iteration_seconds / 5.0);
+        // Chunks conserved regardless of sharding.
+        assert_eq!(t2.num_items, t1.num_items);
+        assert_eq!(t4.num_items, t1.num_items);
+    }
+
+    #[test]
+    fn dp_baseline_gated_on_slowest_rank() {
+        // A batch with one huge sequence: under round-robin DP the rank
+        // holding it dominates, so dp=4 cannot reach anywhere near 4x.
+        let mut batch = eval_batch(32 * 1024, 64);
+        batch[0].len = 32 * 1024;
+        let t1 = simulate_baseline_iteration(&batch, &cost_dp(1, 1)).unwrap();
+        let t4 = simulate_baseline_iteration(&batch, &cost_dp(1, 4)).unwrap();
+        assert!(t4.iteration_seconds <= t1.iteration_seconds);
+        // The long sequence's rank still has to run it end to end (plus the
+        // barrier), so the DP iteration can never undercut it.
+        let long_alone =
+            simulate_baseline_iteration(&batch[..1], &cost_dp(1, 1)).unwrap();
+        assert!(
+            t4.iteration_seconds >= long_alone.iteration_seconds,
+            "slowest rank bounds the DP iteration: {} vs {}",
+            t4.iteration_seconds,
+            long_alone.iteration_seconds
+        );
+    }
+
+    #[test]
+    fn dp_chunkflow_still_beats_dp_baseline() {
+        // The headline win survives DP sharding: both sides divided across
+        // ranks, ChunkFlow keeps its packing + balance advantage.
+        let batch = eval_batch(32 * 1024, 256);
+        let base = simulate_baseline_iteration(&batch, &cost_dp(1, 4)).unwrap();
+        let cf = simulate_chunkflow_iteration(&batch, &cost_dp(1, 4), 32 * 1024, 1).unwrap();
+        assert!(
+            cf.iteration_seconds < base.iteration_seconds,
+            "chunkflow dp=4 {} vs baseline dp=4 {}",
+            cf.iteration_seconds,
+            base.iteration_seconds
+        );
+    }
+
+    #[test]
+    fn dp_empty_batch_pays_optimizer_and_barrier() {
+        let c = cost_dp(2, 4);
+        let r = simulate_chunkflow_iteration(&[], &c, 8192, 1).unwrap();
+        assert_eq!(r.num_items, 0);
+        assert!(r.iteration_seconds >= c.optimizer_seconds() + c.dp_allreduce_seconds());
     }
 }

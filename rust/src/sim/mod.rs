@@ -7,8 +7,11 @@ pub mod dp;
 pub mod e2e;
 
 pub use cost::CostModel;
-pub use dp::{split_dp, DpPolicy, DpSplit};
+pub use dp::{
+    assign_chunks, assign_sequences, dp_units, split_dp, DpAssignment, DpPolicy,
+    DpSeqAssignment, DpSplit, DpUnit,
+};
 pub use e2e::{
-    simulate_baseline_iteration, simulate_chunkflow_iteration, simulate_chunkset,
-    IterationResult,
+    dp_rank_sets, simulate_baseline_iteration, simulate_chunkflow_iteration,
+    simulate_chunkset, simulate_chunkset_sharded, IterationResult,
 };

@@ -17,16 +17,22 @@
 //!
 //! Fan-out granularity is (scenario × batch × unit), where a unit is either
 //! the baseline or one ChunkSize *group* of candidates: Algorithm 1 runs
-//! once per (batch, ChunkSize) and the resulting `ChunkSet` is shared across
-//! all of that group's K values via [`simulate_chunkset`] — chunk
-//! construction does not depend on K.
+//! once per (batch, ChunkSize) and the resulting `ChunkSet` — plus, for
+//! dp > 1 scenarios, its K-invariant rank sharding ([`dp_rank_sets`]) — is
+//! shared across all of that group's K values via
+//! [`simulate_chunkset_sharded`]; neither chunk construction nor the DP
+//! assignment depends on K.
 
 use std::sync::Arc;
 
 use crate::chunk::construct_chunks;
 use crate::data::{BatchSampler, Sequence};
 use crate::memory::{MemoryModel, GPU_CAPACITY};
-use crate::sim::{simulate_baseline_iteration, simulate_chunkset, CostModel, IterationResult};
+use crate::sim::dp::{assign_chunks, assign_sequences, DpPolicy};
+use crate::sim::{
+    dp_rank_sets, simulate_baseline_iteration, simulate_chunkset_sharded, CostModel,
+    IterationResult,
+};
 use crate::util::pool::ThreadPool;
 
 use super::scenario::Scenario;
@@ -66,6 +72,18 @@ pub struct CandidateResult {
     pub feasible: bool,
 }
 
+/// Additive per-scenario DP load-imbalance metric, emitted only for dp > 1
+/// scenarios (existing dp = 1 artifacts stay byte-identical): max/mean
+/// token-load ratios of the naive sequence round-robin vs. the
+/// chunk-balanced assignment at the scenario's first candidate ChunkSize,
+/// averaged over the scenario's batches. `benchdiff` never compares it.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DpImbalance {
+    pub dp: u64,
+    pub round_robin: f64,
+    pub chunk_balanced: f64,
+}
+
 /// Everything measured for one scenario.
 #[derive(Clone, Debug)]
 pub struct ScenarioResult {
@@ -75,6 +93,9 @@ pub struct ScenarioResult {
     /// Optional executor probe (`probe::attach_measured_exec`, the sweep's
     /// `--measure-exec` pass). None in the default deterministic artifact.
     pub measured_exec: Option<super::probe::MeasuredExec>,
+    /// DP load-imbalance metric; Some only when the scenario's strategy has
+    /// dp > 1 (additive — absent entries keep old artifact bytes).
+    pub dp_imbalance: Option<DpImbalance>,
 }
 
 impl ScenarioResult {
@@ -187,8 +208,9 @@ impl SweepEngine {
             }
         }
         let shared = Arc::new((scenarios.to_vec(), batches, groups.clone()));
+        let shared_for_units = Arc::clone(&shared);
         let evaluated = self.map(units, move |(i, b, kind)| {
-            let (scenarios, batches, groups) = &*shared;
+            let (scenarios, batches, groups) = &*shared_for_units;
             let s = &scenarios[i];
             let batch = &batches[i][b];
             let out = match kind {
@@ -237,6 +259,7 @@ impl SweepEngine {
 
         // Assemble per scenario in registry order; candidate peaks come from
         // the (batch-independent) memory model.
+        let batches = &shared.1;
         let mut results: Vec<ScenarioResult> = Vec::with_capacity(scenarios.len());
         for (i, s) in scenarios.iter().enumerate() {
             let n = s.iters as f64;
@@ -257,10 +280,36 @@ impl SweepEngine {
                 baseline,
                 candidates,
                 measured_exec: None,
+                dp_imbalance: dp_imbalance_for(s, &batches[i])?,
             });
         }
         Ok(results)
     }
+}
+
+/// The additive `dp_imbalance` metric for one scenario (None when dp <= 1):
+/// deterministic — a pure function of the scenario's sampled batches.
+fn dp_imbalance_for(
+    s: &Scenario,
+    batches: &[Vec<Sequence>],
+) -> anyhow::Result<Option<DpImbalance>> {
+    let dp = s.parallel.dp as usize;
+    if dp <= 1 || batches.is_empty() {
+        return Ok(None);
+    }
+    let chunk_size = s.candidates.first().map(|&(cs, _)| cs).unwrap_or(8 * 1024);
+    let (mut rr, mut cb) = (0.0f64, 0.0f64);
+    for batch in batches {
+        rr += assign_sequences(batch, dp, DpPolicy::RoundRobin)?.imbalance();
+        cb += assign_chunks(&construct_chunks(batch, chunk_size), dp, DpPolicy::ChunkBalanced)
+            .imbalance();
+    }
+    let n = batches.len() as f64;
+    Ok(Some(DpImbalance {
+        dp: s.parallel.dp,
+        round_robin: rr / n,
+        chunk_balanced: cb / n,
+    }))
 }
 
 /// What one fan-out unit evaluates on one (scenario, batch) pair.
@@ -323,7 +372,9 @@ fn evaluate_baseline_batch(s: &Scenario, batch: &[Sequence]) -> anyhow::Result<U
 }
 
 /// One ChunkFlow work unit: Algorithm 1 once for (batch, ChunkSize), then
-/// one state-aware simulation per K on the shared chunk set.
+/// one state-aware simulation per K on the shared chunk set. The dp rank
+/// sharding is K-invariant too, so it is computed once per unit and shared
+/// the same way (empty for dp = 1 scenarios).
 fn evaluate_group_batch(
     s: &Scenario,
     batch: &[Sequence],
@@ -332,9 +383,10 @@ fn evaluate_group_batch(
 ) -> anyhow::Result<UnitOut> {
     let cost = CostModel::new(s.model.clone(), s.chunkflow_parallel());
     let set = construct_chunks(batch, chunk_size);
+    let shards = dp_rank_sets(&set, &cost);
     let mut out = Vec::with_capacity(ks.len());
     for &k in ks {
-        out.push(simulate_chunkset(&set, &cost, k as usize)?);
+        out.push(simulate_chunkset_sharded(&set, &shards, &cost, k as usize)?);
     }
     Ok(UnitOut::Group(out))
 }
@@ -484,6 +536,55 @@ mod tests {
         for (a, b) in serial.iter().zip(&parallel) {
             assert_eq!(a.baseline, b.baseline, "{}", a.scenario.name);
             assert_eq!(a.candidates, b.candidates, "{}", a.scenario.name);
+        }
+    }
+
+    #[test]
+    fn dp_scenarios_carry_imbalance_metric() {
+        let scenarios = tiny_scenarios();
+        let results = SweepEngine::serial().run(&scenarios).unwrap();
+        for r in &results {
+            if r.scenario.parallel.dp > 1 {
+                let di = r
+                    .dp_imbalance
+                    .as_ref()
+                    .unwrap_or_else(|| panic!("{}: missing dp_imbalance", r.scenario.name));
+                assert_eq!(di.dp, r.scenario.parallel.dp);
+                assert!(di.round_robin >= 1.0 && di.chunk_balanced >= 1.0);
+                assert!(
+                    di.chunk_balanced <= di.round_robin + 1e-9,
+                    "{}: chunk-balanced {} vs round-robin {}",
+                    r.scenario.name,
+                    di.chunk_balanced,
+                    di.round_robin
+                );
+            } else {
+                assert!(
+                    r.dp_imbalance.is_none(),
+                    "{}: dp=1 scenarios must stay metric-free (artifact bytes)",
+                    r.scenario.name
+                );
+            }
+        }
+        assert!(
+            results.iter().any(|r| r.dp_imbalance.is_some()),
+            "smoke set must exercise a dp scenario"
+        );
+    }
+
+    #[test]
+    fn dp_scenario_results_are_deterministic_across_engines() {
+        let scenarios: Vec<Scenario> = tiny_scenarios()
+            .into_iter()
+            .filter(|s| s.parallel.dp > 1)
+            .collect();
+        assert!(!scenarios.is_empty());
+        let serial = SweepEngine::serial().run(&scenarios).unwrap();
+        let parallel = SweepEngine::with_threads(4).run(&scenarios).unwrap();
+        for (a, b) in serial.iter().zip(&parallel) {
+            assert_eq!(a.baseline, b.baseline, "{}", a.scenario.name);
+            assert_eq!(a.candidates, b.candidates, "{}", a.scenario.name);
+            assert_eq!(a.dp_imbalance, b.dp_imbalance, "{}", a.scenario.name);
         }
     }
 

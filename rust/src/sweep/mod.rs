@@ -19,7 +19,9 @@ pub mod output;
 pub mod probe;
 pub mod scenario;
 
-pub use engine::{CandidateResult, Parallelism, ScenarioResult, SweepEngine, UnitMetrics};
+pub use engine::{
+    CandidateResult, DpImbalance, Parallelism, ScenarioResult, SweepEngine, UnitMetrics,
+};
 pub use output::{
     compare_scenarios, to_json, validate, write_bench_json, DEFAULT_BENCH_PATH, SCHEMA_VERSION,
 };

@@ -95,6 +95,19 @@ pub fn to_json(results: &[ScenarioResult], micro_benchmarks: Option<Json>) -> Js
                     ]),
                 ));
             }
+            // Additive DP load-imbalance block: present only for dp > 1
+            // scenarios, so every existing scenario's bytes are unchanged;
+            // `benchdiff` ignores it (it only diffs baseline/best/speedup).
+            if let Some(di) = &r.dp_imbalance {
+                fields.push((
+                    "dp_imbalance",
+                    Json::obj(vec![
+                        ("dp", Json::num(di.dp as f64)),
+                        ("round_robin", Json::num(di.round_robin)),
+                        ("chunk_balanced", Json::num(di.chunk_balanced)),
+                    ]),
+                ));
+            }
             Json::obj(fields)
         })
         .collect();
@@ -154,6 +167,21 @@ pub fn validate(doc: &Json) -> anyhow::Result<usize> {
                 m.req_f64("iteration_seconds")? > 0.0,
                 "{name}: candidate iteration_seconds must be positive"
             );
+        }
+        // Optional DP load-imbalance block (schema v1 addition, dp > 1
+        // scenarios only): both ratios are max/mean loads, so >= 1.
+        if let Some(di) = s.get("dp_imbalance") {
+            anyhow::ensure!(
+                di.req_u64("dp")? >= 2,
+                "{name}: dp_imbalance.dp must be >= 2"
+            );
+            for field in ["round_robin", "chunk_balanced"] {
+                let v = di.req_f64(field)?;
+                anyhow::ensure!(
+                    v >= 1.0,
+                    "{name}: dp_imbalance.{field} = {v} below 1.0 (max/mean ratio)"
+                );
+            }
         }
         // Optional executor-probe block (schema v1 addition): when present
         // it must carry the measured/predicted bubble pair and a sane
@@ -331,6 +359,56 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(err.contains("missing"), "{err}");
+    }
+
+    #[test]
+    fn dp_imbalance_block_is_additive_and_validated() {
+        let results = SweepEngine::serial().run(&Scenario::smoke()).unwrap();
+        let j = to_json(&results, None);
+        assert_eq!(validate(&j).unwrap(), results.len());
+        // dp scenarios carry the block; dp=1 scenarios must not (their
+        // serialized bytes are what the bench-smoke drift check pins).
+        for (r, s) in results.iter().zip(j.get("scenarios").unwrap().as_arr().unwrap()) {
+            assert_eq!(
+                s.get("dp_imbalance").is_some(),
+                r.scenario.parallel.dp > 1,
+                "{}",
+                r.scenario.name
+            );
+        }
+        // benchdiff never compares the block: two identical artifacts pass,
+        // and stripping the block from one side still passes (it only diffs
+        // baseline/best/speedup).
+        let mut stripped = j.clone();
+        if let Json::Obj(o) = &mut stripped {
+            if let Some(Json::Arr(scenarios)) = o.get_mut("scenarios") {
+                for s in scenarios.iter_mut() {
+                    if let Json::Obj(so) = s {
+                        so.remove("dp_imbalance");
+                    }
+                }
+            }
+        }
+        assert_eq!(compare_scenarios(&j, &stripped).unwrap(), results.len());
+        // A malformed block (ratio below 1.0) is rejected by validate.
+        let mut bad = j.clone();
+        if let Json::Obj(o) = &mut bad {
+            if let Some(Json::Arr(scenarios)) = o.get_mut("scenarios") {
+                for s in scenarios.iter_mut() {
+                    if let Json::Obj(so) = s {
+                        if let Some(block) = so.get_mut("dp_imbalance") {
+                            *block = Json::obj(vec![
+                                ("dp", Json::num(2.0)),
+                                ("round_robin", Json::num(0.5)),
+                                ("chunk_balanced", Json::num(1.0)),
+                            ]);
+                        }
+                    }
+                }
+            }
+        }
+        let err = validate(&bad).unwrap_err().to_string();
+        assert!(err.contains("round_robin"), "{err}");
     }
 
     #[test]

@@ -77,6 +77,15 @@ impl Scenario {
         }
     }
 
+    /// Derive a dp > 1 variant of a scenario: same workload, `dp` replica
+    /// groups (so the sweep exercises the DP-aware simulation path and the
+    /// artifact carries the additive `dp_imbalance` block).
+    fn with_dp(mut s: Scenario, dp: u64) -> Scenario {
+        s.name = format!("{}-dp{dp}", s.name);
+        s.parallel.dp = dp;
+        s
+    }
+
     /// The default candidate grid around the paper's tuned point: the tuned
     /// `(ChunkSize, K)` itself plus the constant-`ChunkSize*K` extremes of
     /// Table 6, deduplicated.
@@ -129,6 +138,30 @@ impl Scenario {
             2,
             Self::default_candidates("qwen2.5-7b", 32 * K),
         ));
+        // Data-parallel variants (Obs. 3): the same workloads across dp
+        // replica groups — iteration gated on the slowest rank + all-reduce.
+        out.push(Self::with_dp(
+            Self::paper(
+                "qwen2.5-7b",
+                32 * K,
+                "eval",
+                128,
+                2,
+                Self::default_candidates("qwen2.5-7b", 32 * K),
+            ),
+            4,
+        ));
+        out.push(Self::with_dp(
+            Self::paper(
+                "qwen2.5-7b",
+                32 * K,
+                "longtail-sft",
+                128,
+                2,
+                Self::default_candidates("qwen2.5-7b", 32 * K),
+            ),
+            8,
+        ));
         out
     }
 
@@ -146,6 +179,13 @@ impl Scenario {
             shrink(Self::paper("qwen2.5-7b", 32 * K, "eval", 32, 1, vec![])),
             shrink(Self::paper("qwen2.5-7b", 32 * K, "longtail-sft", 32, 1, vec![])),
             shrink(Self::paper("qwen2.5-7b", 32 * K, "uniform-8K", 32, 1, vec![])),
+            // Additive dp scenario: exercises the DP-aware simulation and
+            // the `dp_imbalance` artifact block; the three original smoke
+            // scenarios above keep byte-identical artifact entries.
+            shrink(Self::with_dp(
+                Self::paper("qwen2.5-7b", 32 * K, "eval", 32, 1, vec![]),
+                2,
+            )),
         ]
     }
 
@@ -208,11 +248,34 @@ mod tests {
 
     #[test]
     fn select_resolves_names_and_rejects_unknown() {
-        assert_eq!(Scenario::select("smoke").unwrap().len(), 3);
-        assert!(Scenario::select("paper").unwrap().len() >= 9);
+        assert_eq!(Scenario::select("smoke").unwrap().len(), 4);
+        assert!(Scenario::select("paper").unwrap().len() >= 11);
         let one = Scenario::select("7b-32K-eval").unwrap();
         assert_eq!(one.len(), 1);
         assert!(Scenario::select("not-a-scenario").is_err());
+    }
+
+    #[test]
+    fn dp_scenarios_registered_with_dp_strategy() {
+        let all = Scenario::registry();
+        let dp4 = all.iter().find(|s| s.name == "7b-32K-eval-dp4").expect("dp4 scenario");
+        assert_eq!(dp4.parallel.dp, 4);
+        assert_eq!(dp4.parallel.world_size(), dp4.parallel.tp * dp4.parallel.pp * 4);
+        let dp8 = all
+            .iter()
+            .find(|s| s.name == "7b-32K-longtail-sft-dp8")
+            .expect("dp8 scenario");
+        assert_eq!(dp8.parallel.dp, 8);
+        // Non-dp scenarios stay at dp = 1 (artifact bytes unchanged).
+        assert!(all
+            .iter()
+            .filter(|s| !s.name.contains("-dp"))
+            .all(|s| s.parallel.dp == 1));
+        // The smoke set carries exactly one dp scenario, appended last.
+        let smoke = Scenario::smoke();
+        assert_eq!(smoke.last().unwrap().name, "smoke-7b-32K-eval-dp2");
+        assert_eq!(smoke.last().unwrap().parallel.dp, 2);
+        assert!(smoke[..3].iter().all(|s| s.parallel.dp == 1));
     }
 
     #[test]

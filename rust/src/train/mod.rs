@@ -40,7 +40,7 @@ use std::collections::BTreeMap;
 use std::path::Path;
 use std::time::Instant;
 
-use crate::chunk::{construct_chunks, Chunk, ChunkKind};
+use crate::chunk::{construct_chunks, Chunk, ChunkKind, ChunkSet};
 use crate::config::TrainConfig;
 use crate::data::{BatchSampler, LengthDistribution, SyntheticCorpus};
 use crate::runtime::{Backend, ChunkInputs, FlatParams, ReferenceBackend, Runtime, Scalar};
@@ -154,6 +154,11 @@ pub struct StepMetrics {
     /// Pipeline stages this step executed on (1 = the classic single-stage
     /// Algorithm-2 path).
     pub stages: usize,
+    /// Data-parallel replica groups this step executed on (1 = no DP).
+    pub dp: usize,
+    /// DP mode only: max/mean token-load ratio of the chunk-balanced rank
+    /// assignment this step ran under (1.0 = perfectly balanced).
+    pub dp_imbalance: Option<f64>,
     /// Pipeline mode only: wall-clock bubble ratio measured by the
     /// stage-parallel executor (`pipeline::exec`).
     pub measured_bubble_ratio: Option<f64>,
@@ -260,6 +265,21 @@ impl<B: Backend> Trainer<B> {
         self.offload_budget = budget;
     }
 
+    /// Batch prep shared by every gradient path: Algorithm 1 plus this
+    /// step's token cache and sequence-length map.
+    fn prepare_batch(
+        &self,
+        batch: &[crate::data::Sequence],
+    ) -> (ChunkSet, BTreeMap<u64, Vec<u32>>, BTreeMap<u64, u64>) {
+        let set = construct_chunks(batch, self.backend.manifest().chunk_size as u64);
+        let mut tokens: BTreeMap<u64, Vec<u32>> = BTreeMap::new();
+        for s in batch {
+            tokens.insert(s.id, self.corpus.generate(s.id, s.len));
+        }
+        let seq_len: BTreeMap<u64, u64> = batch.iter().map(|s| (s.id, s.len)).collect();
+        (set, tokens, seq_len)
+    }
+
     /// Gradient accumulation over one batch: Algorithm 1 + Algorithm 2 over
     /// the backend programs. Public so integration tests can compare
     /// against the unchunked `full_step` oracle.
@@ -267,14 +287,7 @@ impl<B: Backend> Trainer<B> {
         &self,
         batch: &[crate::data::Sequence],
     ) -> anyhow::Result<GradAccum<B::Elem>> {
-        let set = construct_chunks(batch, self.backend.manifest().chunk_size as u64);
-
-        // Token cache for this step's sequences.
-        let mut tokens: BTreeMap<u64, Vec<u32>> = BTreeMap::new();
-        for s in batch {
-            tokens.insert(s.id, self.corpus.generate(s.id, s.len));
-        }
-        let seq_len: BTreeMap<u64, u64> = batch.iter().map(|s| (s.id, s.len)).collect();
+        let (set, tokens, seq_len) = self.prepare_batch(batch);
 
         let mut grads: Vec<Vec<B::Elem>> = self
             .backend
@@ -379,6 +392,8 @@ impl<B: Backend> Trainer<B> {
             kv_peak_bytes: acc.kv_peak_bytes,
             act_peak_chunks: acc.act_peak_chunks,
             stages: 1,
+            dp: 1,
+            dp_imbalance: None,
             measured_bubble_ratio: None,
             predicted_bubble_ratio: None,
         };
@@ -553,7 +568,11 @@ impl<B: Backend> Trainer<B> {
                         ("kv_peak_bytes", Json::num(m.kv_peak_bytes as f64)),
                         ("act_peak_chunks", Json::num(m.act_peak_chunks as f64)),
                         ("stages", Json::num(m.stages as f64)),
+                        ("dp", Json::num(m.dp as f64)),
                     ];
+                    if let Some(i) = m.dp_imbalance {
+                        fields.push(("dp_imbalance", Json::num(i)));
+                    }
                     if let Some(b) = m.measured_bubble_ratio {
                         fields.push(("measured_bubble_ratio", Json::num(b)));
                     }
@@ -594,12 +613,7 @@ impl Trainer<ReferenceBackend> {
         stages: usize,
     ) -> anyhow::Result<(GradAccum<f64>, PipelineStepReport)> {
         anyhow::ensure!(stages >= 1, "need at least one pipeline stage");
-        let set = construct_chunks(batch, self.backend.manifest().chunk_size as u64);
-        let mut tokens: BTreeMap<u64, Vec<u32>> = BTreeMap::new();
-        for s in batch {
-            tokens.insert(s.id, self.corpus.generate(s.id, s.len));
-        }
-        let seq_len: BTreeMap<u64, u64> = batch.iter().map(|s| (s.id, s.len)).collect();
+        let (set, tokens, seq_len) = self.prepare_batch(batch);
         let k = (self.config.chunkflow.k.max(1)) as usize;
 
         let items = crate::pipeline::build_exec_items(&self.backend, &set, &tokens, &seq_len);
@@ -652,6 +666,8 @@ impl Trainer<ReferenceBackend> {
             kv_peak_bytes: acc.kv_peak_bytes,
             act_peak_chunks: acc.act_peak_chunks,
             stages,
+            dp: 1,
+            dp_imbalance: None,
             measured_bubble_ratio: Some(report.measured_bubble_ratio),
             predicted_bubble_ratio: Some(report.predicted_bubble_ratio),
         };
@@ -675,6 +691,305 @@ impl Trainer<ReferenceBackend> {
         }
         Ok(())
     }
+
+    /// One unit's gradient contribution (a dependent group or a standalone
+    /// chunk), into a *fresh* buffer — a pure function of the unit, so any
+    /// rank computes the identical bits.
+    fn unit_gradients(
+        &self,
+        set: &ChunkSet,
+        unit: &crate::sim::dp::DpUnit,
+        tokens: &BTreeMap<u64, Vec<u32>>,
+        seq_len: &BTreeMap<u64, u64>,
+    ) -> anyhow::Result<UnitGrad> {
+        let mut grads = self.backend.zero_grads();
+        let mut act_peak = 0usize;
+        if set.chunks[unit.chunk_ids[0]].is_dependent() {
+            let group: Vec<&Chunk> =
+                unit.chunk_ids.iter().map(|&i| &set.chunks[i]).collect();
+            let mut store: StateStore<Vec<f64>> = StateStore::new();
+            let (loss, toks) = self
+                .run_group(&group, tokens, seq_len, &mut grads, &mut store, &mut act_peak)?;
+            Ok(UnitGrad { grads, loss, toks, kv_peak: store.peak_bytes(), act_peak })
+        } else {
+            let c = self.backend.manifest().chunk_size;
+            let g_zero = vec![0.0f64; self.backend.kv_elements(c)];
+            let chunk = &set.chunks[unit.chunk_ids[0]];
+            let inputs = self.chunk_inputs(chunk, tokens, seq_len, 0);
+            let out = self.backend.chunk_vjp(&inputs, &g_zero)?;
+            accumulate(&mut grads, &out.d_params);
+            Ok(UnitGrad {
+                grads,
+                loss: out.loss_sum,
+                toks: out.n_tok,
+                kv_peak: 0,
+                act_peak: 1,
+            })
+        }
+    }
+
+    /// Gradient accumulation over one batch across `dp` data-parallel
+    /// replica groups (the tentpole's execution path).
+    ///
+    /// The chunk-balanced assignment (`sim::dp::assign_chunks`) maps whole
+    /// units — dependent groups and standalone chunks — to ranks, so KV
+    /// state never crosses a rank. Two execution modes:
+    ///
+    /// - `stages == 1`: each rank computes an independent gradient buffer
+    ///   *per unit*; the reduction then re-folds unit contributions in
+    ///   global unit order. The fold is invariant to how units were dealt
+    ///   to ranks, so gradients are **bit-identical for every dp** — the
+    ///   conformance property `tests/integration_dp.rs` pins.
+    /// - `stages > 1`: R replica groups of the stage-parallel executor run
+    ///   concurrently (`pipeline::execute_replica_groups`), each over its
+    ///   rank-local chunk set; rank partials are combined by a
+    ///   deterministic fixed-order tree sum in rank order. Reduction at
+    ///   rank granularity re-associates float adds, so this mode is gated
+    ///   (like the executor itself) at 1e-6 against the unchunked oracle.
+    ///
+    /// The offload budget is a single-replica feature and is ignored here
+    /// (the CLI rejects the combination).
+    pub fn compute_gradients_dp(
+        &self,
+        batch: &[crate::data::Sequence],
+        dp: usize,
+        stages: usize,
+    ) -> anyhow::Result<(GradAccum<f64>, DpStepReport)> {
+        anyhow::ensure!(dp >= 1, "need at least one data-parallel rank");
+        anyhow::ensure!(stages >= 1, "need at least one pipeline stage");
+        let (set, tokens, seq_len) = self.prepare_batch(batch);
+        let k = (self.config.chunkflow.k.max(1)) as usize;
+        let assign =
+            crate::sim::dp::assign_chunks(&set, dp, crate::sim::dp::DpPolicy::ChunkBalanced);
+
+        if stages == 1 {
+            // Rank threads stream each unit's gradient buffer to the
+            // coordinator as soon as it's done; the coordinator folds
+            // strictly in global unit order (dp-invariant bits), buffering
+            // only units that arrive out of order — peak memory is the
+            // pending set, not one buffer per unit.
+            let n_units = assign.units.len();
+            let folded: anyhow::Result<(Vec<Vec<f64>>, f64, f64, u64, usize)> =
+                std::thread::scope(|scope| {
+                    let (assign, set, tokens, seq_len) = (&assign, &set, &tokens, &seq_len);
+                    let (tx, rx) = std::sync::mpsc::channel::<(usize, UnitGrad)>();
+                    let mut handles = Vec::with_capacity(dp);
+                    for r in 0..dp {
+                        let tx = tx.clone();
+                        handles.push(scope.spawn(move || -> anyhow::Result<()> {
+                            for u in assign.rank_units(r) {
+                                let g = self.unit_gradients(
+                                    set,
+                                    &assign.units[u],
+                                    tokens,
+                                    seq_len,
+                                )?;
+                                if tx.send((u, g)).is_err() {
+                                    break; // coordinator gone; its error wins
+                                }
+                            }
+                            Ok(())
+                        }));
+                    }
+                    drop(tx);
+                    let mut pending: BTreeMap<usize, UnitGrad> = BTreeMap::new();
+                    let mut next = 0usize;
+                    let mut grads = self.backend.zero_grads();
+                    let (mut loss_sum, mut tok_sum) = (0.0f64, 0.0f64);
+                    let (mut kv_peak, mut act_peak) = (0u64, 0usize);
+                    for (u, g) in rx {
+                        pending.insert(u, g);
+                        while let Some(g) = pending.remove(&next) {
+                            accumulate(&mut grads, &g.grads);
+                            loss_sum += g.loss;
+                            tok_sum += g.toks;
+                            kv_peak = kv_peak.max(g.kv_peak);
+                            act_peak = act_peak.max(g.act_peak);
+                            next += 1;
+                        }
+                    }
+                    for (r, h) in handles.into_iter().enumerate() {
+                        h.join()
+                            .unwrap_or_else(|_| {
+                                Err(anyhow::anyhow!("dp rank thread panicked"))
+                            })
+                            .map_err(|e| e.context(format!("dp rank {r}")))?;
+                    }
+                    anyhow::ensure!(next == n_units, "unit assigned to no rank");
+                    Ok((grads, loss_sum, tok_sum, kv_peak, act_peak))
+                });
+            let (grads, loss_sum, tok_sum, kv_peak, act_peak) = folded?;
+            let acc = GradAccum {
+                loss_sum,
+                tok_sum,
+                grads,
+                chunks: set.chunks.len(),
+                kv_peak_bytes: kv_peak,
+                kv_resident_peak_bytes: kv_peak,
+                act_peak_chunks: act_peak,
+            };
+            let report = DpStepReport {
+                dp,
+                stages,
+                dp_imbalance: assign.imbalance(),
+                measured_bubble_ratio: None,
+                predicted_bubble_ratio: None,
+            };
+            return Ok((acc, report));
+        }
+
+        // stages > 1: replica groups of the pipeline executor.
+        let replicas: Vec<crate::pipeline::ReplicaSpec> = (0..dp)
+            .map(|r| {
+                let rank_set = assign.rank_chunk_set(&set, r);
+                let items = crate::pipeline::build_exec_items(
+                    &self.backend,
+                    &rank_set,
+                    &tokens,
+                    &seq_len,
+                );
+                crate::pipeline::ReplicaSpec { set: rank_set, items }
+            })
+            .collect();
+        let outcomes =
+            crate::pipeline::execute_replica_groups(&self.backend, &replicas, k, stages)?;
+        let (mut loss_sum, mut tok_sum) = (0.0f64, 0.0f64);
+        let (mut kv_peak, mut act_peak) = (0u64, 0usize);
+        let (mut measured, mut predicted) = (0.0f64, 0.0f64);
+        let mut partials: Vec<Vec<Vec<f64>>> = Vec::with_capacity(dp);
+        for (r, out) in outcomes.into_iter().enumerate() {
+            loss_sum += out.loss_sum;
+            tok_sum += out.tok_sum;
+            kv_peak = kv_peak.max(out.kv_peak_bytes);
+            act_peak = act_peak.max(out.act_peak_chunks);
+            measured = measured.max(out.timeline.bubble_ratio());
+            let pred = crate::pipeline::onef1b::simulate_state_aware(
+                &replicas[r].set,
+                k,
+                stages,
+                |id| {
+                    let len = replicas[r].set.chunks[id].total_len() as f64;
+                    crate::pipeline::OpCosts { fwd: len, bwd: 2.0 * len }
+                },
+            )?;
+            predicted = predicted.max(pred.bubble_ratio());
+            partials.push(out.grads);
+        }
+        let grads = tree_reduce_grads(partials);
+        let acc = GradAccum {
+            loss_sum,
+            tok_sum,
+            grads,
+            chunks: set.chunks.len(),
+            kv_peak_bytes: kv_peak,
+            kv_resident_peak_bytes: kv_peak,
+            act_peak_chunks: act_peak,
+        };
+        let report = DpStepReport {
+            dp,
+            stages,
+            dp_imbalance: assign.imbalance(),
+            measured_bubble_ratio: Some(measured),
+            predicted_bubble_ratio: Some(predicted),
+        };
+        Ok((acc, report))
+    }
+
+    /// One optimizer step across `dp` replica groups (`--dp R --stages P`).
+    pub fn train_step_dp(&mut self, dp: usize, stages: usize) -> anyhow::Result<StepMetrics> {
+        let t0 = Instant::now();
+        let calls0 = self.backend.calls();
+        let batch = self.sampler.next_batch();
+        let (acc, report) = self.compute_gradients_dp(&batch, dp, stages)?;
+
+        anyhow::ensure!(acc.tok_sum > 0.0, "no trainable tokens in batch");
+        let grad_norm = self.apply_update(&acc.grads, acc.tok_sum)?;
+
+        self.step += 1;
+        let metrics = StepMetrics {
+            step: self.step,
+            loss_per_token: acc.loss_sum / acc.tok_sum,
+            tokens: acc.tok_sum as u64,
+            chunks: acc.chunks,
+            backend_calls: self.backend.calls() - calls0,
+            seconds: t0.elapsed().as_secs_f64(),
+            grad_norm,
+            kv_peak_bytes: acc.kv_peak_bytes,
+            act_peak_chunks: acc.act_peak_chunks,
+            stages,
+            dp,
+            dp_imbalance: Some(report.dp_imbalance),
+            measured_bubble_ratio: report.measured_bubble_ratio,
+            predicted_bubble_ratio: report.predicted_bubble_ratio,
+        };
+        crate::info!(
+            "step {:>4} | loss/tok {:.4} | dp {} x stages {} | imbalance {:.3} | {:>5.2}s | gnorm {:.3}",
+            metrics.step,
+            metrics.loss_per_token,
+            dp,
+            stages,
+            report.dp_imbalance,
+            metrics.seconds,
+            metrics.grad_norm
+        );
+        self.history.push(metrics.clone());
+        Ok(metrics)
+    }
+
+    /// Run the configured number of steps across `dp` replica groups.
+    pub fn train_dp(&mut self, dp: usize, stages: usize) -> anyhow::Result<()> {
+        for _ in 0..self.config.steps {
+            self.train_step_dp(dp, stages)?;
+        }
+        Ok(())
+    }
+}
+
+/// One unit's independent gradient contribution (see
+/// [`Trainer::compute_gradients_dp`]).
+struct UnitGrad {
+    grads: Vec<Vec<f64>>,
+    loss: f64,
+    toks: f64,
+    kv_peak: u64,
+    act_peak: usize,
+}
+
+/// Replica-group statistics for one data-parallel step.
+#[derive(Clone, Copy, Debug)]
+pub struct DpStepReport {
+    pub dp: usize,
+    pub stages: usize,
+    /// Max/mean token-load ratio of the chunk-balanced rank assignment.
+    pub dp_imbalance: f64,
+    /// Worst per-rank measured bubble ratio (stages > 1 only).
+    pub measured_bubble_ratio: Option<f64>,
+    /// Worst per-rank predicted bubble ratio (stages > 1 only).
+    pub predicted_bubble_ratio: Option<f64>,
+}
+
+/// Deterministic fixed-order gradient all-reduce: a binary tree sum in rank
+/// order (rank r absorbs rank r + stride for stride = 1, 2, 4, ...). The
+/// reduction shape depends only on the rank count, never on timing, so
+/// replica runs are reproducible bit for bit.
+fn tree_reduce_grads(mut partials: Vec<Vec<Vec<f64>>>) -> Vec<Vec<f64>> {
+    assert!(!partials.is_empty(), "tree reduce needs at least one partial");
+    let mut stride = 1;
+    while stride < partials.len() {
+        let mut i = 0;
+        while i + stride < partials.len() {
+            let right = std::mem::take(&mut partials[i + stride]);
+            let left = &mut partials[i];
+            for (a, b) in left.iter_mut().zip(&right) {
+                for (x, y) in a.iter_mut().zip(b) {
+                    *x += *y;
+                }
+            }
+            i += 2 * stride;
+        }
+        stride *= 2;
+    }
+    partials.swap_remove(0)
 }
 
 fn fresh_adam(config: &TrainConfig, manifest: &crate::runtime::Manifest) -> Adam {

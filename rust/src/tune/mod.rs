@@ -7,11 +7,13 @@
 //!
 //! The sweep is memoized: batches are sampled once per search (not once per
 //! grid point), Algorithm 1 runs once per (batch, ChunkSize) work unit, and
-//! each resulting [`ChunkSet`](crate::chunk::ChunkSet) is shared across all
-//! K candidates via [`simulate_chunkset`] — chunk construction is
-//! independent of K. On the standard grid (5 ChunkSizes × 6 Ks) this cuts
-//! Algorithm-1 invocations 6×. Results are bit-identical to evaluating each
-//! point in isolation with [`GridSearch::evaluate`]; a test asserts it.
+//! each resulting [`ChunkSet`](crate::chunk::ChunkSet) — plus, under
+//! dp > 1, its K-invariant rank sharding ([`dp_rank_sets`]) — is shared
+//! across all K candidates via [`simulate_chunkset_sharded`]; chunk
+//! construction and DP assignment are independent of K. On the standard
+//! grid (5 ChunkSizes × 6 Ks) this cuts Algorithm-1 invocations 6×.
+//! Results are bit-identical to evaluating each point in isolation with
+//! [`GridSearch::evaluate`]; a test asserts it.
 
 use std::sync::Arc;
 
@@ -20,7 +22,10 @@ use crate::config::ModelSpec;
 use crate::config::ParallelConfig;
 use crate::data::{BatchSampler, LengthDistribution, Sequence};
 use crate::memory::{MemoryModel, GPU_CAPACITY};
-use crate::sim::{simulate_chunkflow_iteration, simulate_chunkset, CostModel, IterationResult};
+use crate::sim::{
+    dp_rank_sets, simulate_chunkflow_iteration, simulate_chunkset_sharded, CostModel,
+    IterationResult,
+};
 use crate::sweep::SweepEngine;
 
 /// One evaluated grid point.
@@ -102,9 +107,13 @@ impl GridSearch {
         }
         let per_unit: Vec<Vec<IterationResult>> = engine.map(units, move |(b, chunk_size)| {
             let set = construct_chunks(&batches[b], chunk_size);
+            // The dp rank sharding is K-invariant: compute it once per
+            // (batch, ChunkSize) unit and share it across the K values,
+            // like the chunk set itself (empty for dp = 1).
+            let shards = dp_rank_sets(&set, &cost);
             ks.iter()
                 .map(|&k| {
-                    simulate_chunkset(&set, &cost, k as usize)
+                    simulate_chunkset_sharded(&set, &shards, &cost, k as usize)
                         .expect("simulation cannot fail on valid chunk sets")
                 })
                 .collect()
@@ -259,6 +268,38 @@ mod tests {
             assert_eq!(p.bubble_ratio, q.bubble_ratio);
             assert_eq!(p.peak_memory_bytes, q.peak_memory_bytes);
             assert_eq!(p.feasible, q.feasible);
+        }
+    }
+
+    #[test]
+    fn dp_grid_keeps_memoization_bit_identical_and_speeds_up() {
+        // The tuner is DP-aware through `simulate_chunkset_sharded`: a dp > 1 grid
+        // must (a) still satisfy the memoization contract (memoized ==
+        // per-point bit-for-bit — the dp assignment is a pure function of
+        // the chunk set, shared across K), and (b) predict faster
+        // iterations than the same grid at dp = 1.
+        let mut g = search();
+        g.parallel.dp = 2;
+        let pts = g.run_on(&SweepEngine::serial());
+        for p in &pts {
+            let q = g.evaluate(p.chunk_size, p.k);
+            assert_eq!(
+                p.avg_iteration_seconds, q.avg_iteration_seconds,
+                "dp=2 ({}, {}) drifted",
+                p.chunk_size, p.k
+            );
+        }
+        let g1 = search();
+        for p in &pts {
+            let q1 = g1.evaluate(p.chunk_size, p.k);
+            assert!(
+                p.avg_iteration_seconds < q1.avg_iteration_seconds,
+                "dp=2 ({}, {}) {} not faster than dp=1 {}",
+                p.chunk_size,
+                p.k,
+                p.avg_iteration_seconds,
+                q1.avg_iteration_seconds
+            );
         }
     }
 

@@ -1,0 +1,281 @@
+//! Data-parallel replica training integration (Layer 3 against
+//! `train::compute_gradients_dp` + `pipeline::execute_replica_groups` +
+//! `sim::dp::assign_chunks`):
+//!
+//! - DP conformance — `--dp R` gradients are *bit-identical* to `--dp 1`
+//!   for R ∈ {1, 2, 4} on the single-stage replica path (the unit-ordered
+//!   reduction is invariant to the rank assignment), and match the
+//!   unchunked full-sequence oracle to 1e-6 on every (R, P) combination
+//!   including the stage-parallel replica groups;
+//! - determinism — repeated replica runs produce the same bits;
+//! - the CLI surface: `train --dp 2 --stages 2` runs end to end and the
+//!   history records the dp degree + assignment imbalance.
+
+mod common;
+
+use chunkflow::chunk::construct_chunks;
+use chunkflow::data::Sequence;
+use chunkflow::sim::{assign_chunks, dp_units, DpPolicy};
+
+use common::{max_rel_err, mini_config, oracle_grads, short_dist, trainer_with};
+
+/// A mixed batch: a 5-chunk dependent group (K < N at ChunkSize 16), short
+/// packable sequences, and 2-/3-chunk groups — every unit kind at once.
+fn mixed_batch() -> Vec<Sequence> {
+    vec![
+        Sequence { id: 1, len: 70 },
+        Sequence { id: 2, len: 12 },
+        Sequence { id: 3, len: 20 },
+        Sequence { id: 4, len: 48 },
+        Sequence { id: 5, len: 9 },
+        Sequence { id: 6, len: 33 },
+    ]
+}
+
+#[test]
+fn dp_gradients_bit_identical_across_rank_counts() {
+    // The conformance tentpole: on the single-stage replica path each unit's
+    // gradient buffer is computed independently and the reduction re-folds
+    // them in global unit order, so the result carries the exact same bits
+    // for every dp degree.
+    let batch = mixed_batch();
+    for (chunk, k) in [(16u64, 1u64), (16, 2)] {
+        let cfg = mini_config(chunk, 8, k);
+        let ctx = cfg.context_length;
+        let tr = trainer_with(cfg, short_dist(ctx));
+        let (acc1, rep1) = tr.compute_gradients_dp(&batch, 1, 1).expect("dp=1");
+        assert_eq!(rep1.dp, 1);
+        assert!((rep1.dp_imbalance - 1.0).abs() < 1e-12, "dp=1 trivially balanced");
+        for dp in [2usize, 4] {
+            let (acc, rep) = tr.compute_gradients_dp(&batch, dp, 1).expect("dp grads");
+            assert_eq!(rep.dp, dp);
+            assert!(rep.dp_imbalance >= 1.0);
+            assert_eq!(acc.chunks, acc1.chunks);
+            assert_eq!(acc.loss_sum, acc1.loss_sum, "dp={dp} chunk={chunk} K={k}");
+            assert_eq!(acc.tok_sum, acc1.tok_sum);
+            assert_eq!(
+                acc.grads, acc1.grads,
+                "dp={dp} chunk={chunk} K={k}: gradients must be bit-identical"
+            );
+        }
+    }
+}
+
+#[test]
+fn dp_replica_groups_match_oracle_across_stage_counts() {
+    // Acceptance bar: `--dp R --stages P` matches the single-rank unchunked
+    // oracle to 1e-6 for R ∈ {1, 2, 4} — including the stage-parallel
+    // replica path, whose rank-ordered tree reduction re-associates floats.
+    let batch = mixed_batch();
+    let cfg = mini_config(16, 8, 2);
+    let ctx = cfg.context_length;
+    let tr = trainer_with(cfg, short_dist(ctx));
+    let (loss_o, ntok_o, grads_o) = oracle_grads(&tr, &batch);
+    for dp in [1usize, 2, 4] {
+        for stages in [1usize, 2] {
+            let (acc, rep) =
+                tr.compute_gradients_dp(&batch, dp, stages).expect("dp grads");
+            assert_eq!(acc.tok_sum, ntok_o, "dp={dp} P={stages}");
+            assert!(
+                (acc.loss_sum - loss_o).abs() / loss_o.abs() < 1e-9,
+                "dp={dp} P={stages}: loss {} vs oracle {loss_o}",
+                acc.loss_sum
+            );
+            let rel = max_rel_err(&acc.grads, &grads_o);
+            assert!(rel < 1e-6, "dp={dp} P={stages}: rel err {rel}");
+            assert_eq!(rep.stages, stages);
+            if stages > 1 {
+                let m = rep.measured_bubble_ratio.expect("measured bubble");
+                let p = rep.predicted_bubble_ratio.expect("predicted bubble");
+                assert!((0.0..=1.0).contains(&m));
+                assert!((0.0..=1.0).contains(&p));
+            }
+        }
+    }
+}
+
+#[test]
+fn dp_runs_are_deterministic() {
+    let batch = mixed_batch();
+    let cfg = mini_config(16, 8, 1);
+    let ctx = cfg.context_length;
+    let tr = trainer_with(cfg, short_dist(ctx));
+    for stages in [1usize, 2] {
+        let (a, _) = tr.compute_gradients_dp(&batch, 2, stages).expect("run a");
+        let (b, _) = tr.compute_gradients_dp(&batch, 2, stages).expect("run b");
+        assert_eq!(a.grads, b.grads, "stages={stages}: replica runs must reproduce");
+        assert_eq!(a.loss_sum, b.loss_sum);
+    }
+}
+
+#[test]
+fn dp_exceeding_unit_count_still_conserves_everything() {
+    // More ranks than units: some replicas are empty; nothing is lost.
+    let batch = vec![Sequence { id: 1, len: 40 }, Sequence { id: 2, len: 10 }];
+    let cfg = mini_config(16, 4, 1);
+    let ctx = cfg.context_length;
+    let tr = trainer_with(cfg, short_dist(ctx));
+    let (acc1, _) = tr.compute_gradients_dp(&batch, 1, 1).expect("dp=1");
+    let (acc8, _) = tr.compute_gradients_dp(&batch, 8, 1).expect("dp=8");
+    assert_eq!(acc8.grads, acc1.grads);
+    assert_eq!(acc8.loss_sum, acc1.loss_sum);
+    let (acc8p, _) = tr.compute_gradients_dp(&batch, 8, 2).expect("dp=8 staged");
+    assert_eq!(acc8p.tok_sum, acc1.tok_sum);
+    let rel = max_rel_err(&acc8p.grads, &acc1.grads);
+    assert!(rel < 1e-9, "staged empty-replica run drifted: {rel}");
+}
+
+#[test]
+fn dp_train_step_descends_and_reports() {
+    let mut cfg = mini_config(16, 8, 1);
+    cfg.steps = 2;
+    cfg.global_batch_size = 4;
+    let ctx = cfg.context_length;
+    let mut tr = trainer_with(cfg, short_dist(ctx));
+    let m1 = tr.train_step_dp(2, 2).expect("step 1");
+    assert_eq!(m1.step, 1);
+    assert_eq!(m1.dp, 2);
+    assert_eq!(m1.stages, 2);
+    assert!(m1.dp_imbalance.expect("imbalance") >= 1.0);
+    assert!(m1.loss_per_token.is_finite() && m1.loss_per_token > 0.0);
+    let m2 = tr.train_step_dp(2, 2).expect("step 2");
+    assert_eq!(m2.step, 2);
+    let json = tr.loss_history_json().dump();
+    assert!(json.contains("\"dp\""), "{json}");
+    assert!(json.contains("dp_imbalance"), "{json}");
+}
+
+#[test]
+fn dp_trainer_path_equals_single_replica_algorithm2() {
+    // dp=1 through the replica machinery agrees with the classic
+    // single-stage accumulation path to float re-association (everything
+    // f64, so far below the 1e-6 suite gate).
+    let batch = mixed_batch();
+    let cfg = mini_config(16, 8, 2);
+    let ctx = cfg.context_length;
+    let tr = trainer_with(cfg, short_dist(ctx));
+    let base = tr.compute_gradients(&batch).expect("classic grads");
+    let (acc, _) = tr.compute_gradients_dp(&batch, 1, 1).expect("replica grads");
+    assert_eq!(acc.tok_sum, base.tok_sum);
+    assert_eq!(acc.act_peak_chunks, base.act_peak_chunks);
+    assert_eq!(acc.kv_peak_bytes, base.kv_peak_bytes);
+    let rel = max_rel_err(&acc.grads, &base.grads);
+    assert!(rel < 1e-9, "replica dp=1 drifted from Algorithm 2: {rel}");
+}
+
+#[test]
+fn prop_trainer_assignment_conserves_and_localizes() {
+    // Trainer-level view of the assignment invariants: chunk/token
+    // conservation and dependent-group locality over random batches.
+    use chunkflow::util::prop::{check, ensure, gen_pair, gen_u64, gen_usize, gen_vec};
+    let gen = gen_pair(
+        gen_vec(gen_u64(1, 64), 1, 8),
+        gen_pair(gen_usize(1, 5), gen_u64(8, 32)),
+    );
+    check(60, gen, |(lens, (dp, chunk_size))| {
+        let batch: Vec<Sequence> = lens
+            .iter()
+            .enumerate()
+            .map(|(i, &len)| Sequence { id: i as u64, len })
+            .collect();
+        let set = construct_chunks(&batch, *chunk_size);
+        let units = dp_units(&set);
+        let covered: usize = units.iter().map(|u| u.chunk_ids.len()).sum();
+        ensure(covered == set.chunks.len(), "units cover every chunk once")?;
+        let a = assign_chunks(&set, *dp, DpPolicy::ChunkBalanced);
+        ensure(
+            a.loads.iter().sum::<u64>() == set.total_tokens(),
+            "loads conserve tokens",
+        )?;
+        for r in 0..*dp {
+            let sub = a.rank_chunk_set(&set, r);
+            for g in sub.dependent_groups() {
+                let seq_id = g[0].segments[0].seq_id;
+                let orig = set
+                    .dependent_groups()
+                    .into_iter()
+                    .find(|og| og[0].segments[0].seq_id == seq_id)
+                    .expect("group exists globally");
+                ensure(g.len() == orig.len(), "group whole on one rank")?;
+            }
+        }
+        Ok(())
+    });
+}
+
+// ----- CLI surface ----------------------------------------------------------
+
+fn chunkflow_bin() -> std::process::Command {
+    std::process::Command::new(env!("CARGO_BIN_EXE_chunkflow"))
+}
+
+#[test]
+fn cli_train_with_dp_runs_end_to_end() {
+    let dir = std::env::temp_dir().join("chunkflow_it_dp_cli");
+    std::fs::create_dir_all(&dir).unwrap();
+    let out_path = dir.join("history.json");
+    let out = chunkflow_bin()
+        .args([
+            "train",
+            "--backend",
+            "reference",
+            "--model",
+            "tiny",
+            "--context",
+            "256",
+            "--chunk-size",
+            "128",
+            "--k",
+            "1",
+            "--dp",
+            "2",
+            "--stages",
+            "2",
+            "--steps",
+            "1",
+            "--batch",
+            "4",
+            "--out",
+            out_path.to_str().unwrap(),
+        ])
+        .output()
+        .expect("spawn chunkflow");
+    assert!(
+        out.status.success(),
+        "stdout: {}\nstderr: {}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let history = std::fs::read_to_string(&out_path).unwrap();
+    assert!(history.contains("\"dp\""), "{history}");
+    assert!(history.contains("dp_imbalance"), "{history}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn cli_dp_rejected_on_pjrt_backend_and_with_offload() {
+    let out = chunkflow_bin()
+        .args(["train", "--backend", "pjrt", "--dp", "2", "--model", "tiny"])
+        .output()
+        .expect("spawn chunkflow");
+    assert!(!out.status.success());
+    let out = chunkflow_bin()
+        .args([
+            "train",
+            "--backend",
+            "reference",
+            "--model",
+            "tiny",
+            "--dp",
+            "2",
+            "--offload-budget-bytes",
+            "1024",
+            "--steps",
+            "1",
+        ])
+        .output()
+        .expect("spawn chunkflow");
+    assert!(!out.status.success());
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("offload-budget-bytes"), "stderr: {stderr}");
+}
