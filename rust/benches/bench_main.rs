@@ -270,6 +270,25 @@ fn bench_runtime(b: &mut Bencher) {
     b.bench_items("runtime/dependent_group_4chunks_1024tok", Some(1024.0), || {
         black_box(trainer.compute_gradients(black_box(&long)).unwrap());
     });
+
+    // The same steps on the parallel fast path. The `<name>`/`<name>_fast`
+    // pairing is a schema the CI perf gate consumes:
+    // `chunkflow benchdiff --min-fastpath-speedup <floor>` fails the build
+    // when the best pair's speedup drops below the floor.
+    let mut cfg = TrainConfig::default_for(ModelSpec::preset("tiny").unwrap());
+    cfg.context_length = 1024;
+    cfg.chunkflow = ChunkFlowParams::new(256, 1);
+    let manifest = Manifest::for_reference(&cfg.model, 256, 4).expect("manifest");
+    let mut fast_backend = ReferenceBackend::new(manifest).expect("backend");
+    fast_backend.enable_fast_path();
+    let dist = LengthDistribution::from_cdf("bench", &[(256, 0.7)], 1024);
+    let fast_trainer = Trainer::with_backend(fast_backend, cfg, dist).expect("trainer");
+    b.bench_items("runtime/standalone_chunk_vjp_200tok_fast", Some(200.0), || {
+        black_box(fast_trainer.compute_gradients(black_box(&short)).unwrap());
+    });
+    b.bench_items("runtime/dependent_group_4chunks_1024tok_fast", Some(1024.0), || {
+        black_box(fast_trainer.compute_gradients(black_box(&long)).unwrap());
+    });
 }
 
 /// Stage-parallel executor vs single-stage trainer on the same batch: the
@@ -343,17 +362,32 @@ fn emit_bench_json(b: &Bencher) {
 
 fn main() {
     println!("chunkflow benchmark harness (paper-artifact suites)\n");
+    // CHUNKFLOW_BENCH_SUITES=hotpath,runtime narrows the run to named
+    // suites — the CI perf-smoke job measures only the fast-path-sensitive
+    // ones, keeping the gate minutes-cheap. Unset runs everything.
+    let only = std::env::var("CHUNKFLOW_BENCH_SUITES").ok();
+    let want = |name: &str| {
+        only.as_deref()
+            .map_or(true, |s| s.split(',').any(|x| x.trim() == name))
+    };
     let mut b = Bencher::new(200, 800);
-    bench_construction(&mut b);
-    bench_hotpath(&mut b);
-    bench_grid(&mut b);
-    bench_scheduling(&mut b);
-    bench_pipeline(&mut b);
-    bench_e2e(&mut b);
-    bench_table6(&mut b);
-    bench_memory(&mut b);
-    bench_runtime(&mut b);
-    bench_pipeline_exec(&mut b);
+    let suites: [(&str, fn(&mut Bencher)); 10] = [
+        ("construction", bench_construction),
+        ("hotpath", bench_hotpath),
+        ("grid", bench_grid),
+        ("scheduling", bench_scheduling),
+        ("pipeline", bench_pipeline),
+        ("e2e", bench_e2e),
+        ("table6", bench_table6),
+        ("memory", bench_memory),
+        ("runtime", bench_runtime),
+        ("pipeline_exec", bench_pipeline_exec),
+    ];
+    for (name, run) in suites {
+        if want(name) {
+            run(&mut b);
+        }
+    }
     let j = b.to_json();
     if let Err(e) = j.write_file(std::path::Path::new("target/bench_results.json")) {
         eprintln!("could not write bench_results.json: {e}");

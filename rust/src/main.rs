@@ -32,6 +32,8 @@ fn flags() -> Vec<FlagSpec> {
         flag("stages", true, "pipeline stages for train (reference backend; default 1)"),
         flag("dp", true, "data-parallel replica groups for train (reference backend; default 1)"),
         flag("offload-budget-bytes", true, "KV residency budget; spill coldest chunk KV to disk"),
+        flag("fast-path", false, "parallel reference-backend kernels (RAYON_NUM_THREADS caps)"),
+        flag("min-fastpath-speedup", true, "benchdiff: minimum runtime/*_fast pair speedup"),
         flag("steps", true, "training steps"),
         flag("batch", true, "global batch size (sequences)"),
         flag("lr", true, "learning rate"),
@@ -146,7 +148,10 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
             cfg.parallel = parallel;
             let max_chunks = cfg.context_length.div_ceil(chunk_size) as usize;
             let manifest = Manifest::for_reference(&cfg.model, chunk_size as usize, max_chunks)?;
-            let backend = ReferenceBackend::new(manifest)?;
+            let mut backend = ReferenceBackend::new(manifest)?;
+            if args.get_bool("fast-path") {
+                backend.enable_fast_path();
+            }
             let mut trainer = Trainer::with_backend(backend, cfg, dist)?;
             if let Some(budget) = offload_budget {
                 trainer.set_offload_budget(Some(budget));
@@ -194,6 +199,11 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
             anyhow::ensure!(
                 offload_budget.is_none(),
                 "--offload-budget-bytes requires --backend reference"
+            );
+            anyhow::ensure!(
+                !args.get_bool("fast-path"),
+                "--fast-path applies to the reference backend (PJRT programs are \
+                 already compiled)"
             );
             // The AOT artifacts own the compiled chunk shape: default
             // --chunk-size to it; an explicit contradicting flag errors in
@@ -396,6 +406,59 @@ fn cmd_benchdiff(args: &Args) -> anyhow::Result<()> {
     } else {
         println!("OK: {n} scenario(s) compared, no baseline/best/speedup drift");
     }
+    if let Some(floor) = args.get("min-fastpath-speedup") {
+        let floor: f64 = floor
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--min-fastpath-speedup: invalid number `{floor}`"))?;
+        check_fastpath_floor(&new_doc, floor)?;
+    }
+    Ok(())
+}
+
+/// CI perf-regression gate: the new artifact's `micro_benchmarks` must hold
+/// at least one `runtime/<name>` / `runtime/<name>_fast` pair, and the best
+/// pair's speedup (scalar mean_ns / fast mean_ns) must reach `floor`.
+fn check_fastpath_floor(doc: &Json, floor: f64) -> anyhow::Result<()> {
+    let rows = doc
+        .get("micro_benchmarks")
+        .and_then(|m| m.as_arr())
+        .ok_or_else(|| {
+            anyhow::anyhow!("--min-fastpath-speedup: new artifact has no `micro_benchmarks`")
+        })?;
+    let mean_of = |name: &str| -> Option<f64> {
+        rows.iter()
+            .find(|r| r.get("name").and_then(|n| n.as_str()) == Some(name))
+            .and_then(|r| r.get("mean_ns").and_then(|v| v.as_f64()))
+    };
+    let mut best: Option<(String, f64)> = None;
+    for row in rows {
+        let Some(name) = row.get("name").and_then(|n| n.as_str()) else { continue };
+        let Some(base_name) = name.strip_suffix("_fast") else { continue };
+        if !name.starts_with("runtime/") {
+            continue;
+        }
+        let (Some(base), Some(fast)) = (mean_of(base_name), mean_of(name)) else { continue };
+        if fast <= 0.0 {
+            continue;
+        }
+        let speedup = base / fast;
+        println!("fast-path {base_name}: {speedup:.2}x (scalar {base:.0} ns / fast {fast:.0} ns)");
+        if best.as_ref().map_or(true, |(_, s)| speedup > *s) {
+            best = Some((base_name.to_string(), speedup));
+        }
+    }
+    let (name, speedup) = best.ok_or_else(|| {
+        anyhow::anyhow!(
+            "--min-fastpath-speedup: no runtime/<name> + runtime/<name>_fast \
+             micro-benchmark pair in the new artifact"
+        )
+    })?;
+    anyhow::ensure!(
+        speedup >= floor,
+        "fast-path regression: best pair `{name}` is {speedup:.2}x, below the \
+         {floor:.2}x floor"
+    );
+    println!("OK: fast-path floor {floor:.2}x satisfied by `{name}` at {speedup:.2}x");
     Ok(())
 }
 

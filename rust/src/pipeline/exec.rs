@@ -48,6 +48,7 @@ use crate::runtime::{
     ActivationHandoff, Backend, ChunkInputs, GradHandoff, ReferenceBackend, StageBackend,
     StageCache,
 };
+use crate::util::pool::BufferPool;
 
 /// How long a stage waits on a boundary channel before declaring the
 /// pipeline wedged — malformed agendas fail loudly instead of hanging CI.
@@ -346,6 +347,11 @@ fn run_stage(
     let mut act_in: Inbox<(usize, bool), ActivationHandoff> = Inbox::new(act_rx);
     let mut grad_in: Inbox<usize, GradHandoff> = Inbox::new(grad_rx);
 
+    // Per-op scratch (KV-prefix concat buffers, zero KV cotangents, pending
+    // KV accumulators) recycles through a stage-local arena instead of
+    // hitting the allocator every op. Single-owner: this thread only.
+    let mut arena = BufferPool::new(4);
+
     for &op in agenda {
         let item = &items[op.item];
         match op.kind {
@@ -381,9 +387,13 @@ fn run_stage(
                         })
                     })
                     .collect::<anyhow::Result<_>>()?;
-                let kv_in = crate::train::concat_prefix_with(&parts, lr, c, hd);
+                let mut kv_in = arena.acquire(lr * 2 * item.prefix_items.len() * c * hd);
+                crate::train::concat_prefix_into(&parts, lr, c, hd, &mut kv_in);
                 let inputs = ChunkInputs { kv_in, ..item.inputs.clone() };
-                let out = stage.forward(&inputs, x_in.as_deref())?;
+                // Zero-copy: the upstream activation Vec moves straight into
+                // the stage's layer range.
+                let out = stage.forward(&inputs, x_in)?;
+                arena.release(inputs.kv_in);
                 if !recompute {
                     anyhow::ensure!(
                         kv_store.insert(op.item, out.kv_own).is_none(),
@@ -428,10 +438,11 @@ fn run_stage(
                 })?;
                 let g_own = g_kv
                     .remove(&op.item)
-                    .unwrap_or_else(|| vec![0.0f64; kv_unit_elems]);
+                    .unwrap_or_else(|| arena.acquire(kv_unit_elems));
                 let inputs = ChunkInputs { kv_in: Vec::new(), ..item.inputs.clone() };
-                let out =
-                    stage.backward(&inputs, &cache, d_x_out.as_deref(), &g_own, &mut d_params)?;
+                // Zero-copy: the downstream cotangent Vec moves straight in.
+                let out = stage.backward(&inputs, &cache, d_x_out, &g_own, &mut d_params)?;
+                arena.release(g_own);
                 // Chain d_kv_in into earlier chunks' pending KV cotangents —
                 // Algorithm 2's explicit chain rule at stage granularity.
                 scatter_stage_kv_grad(
@@ -442,6 +453,7 @@ fn run_stage(
                     c,
                     hd,
                     kv_unit_elems,
+                    &mut arena,
                 );
                 if stage.is_last() {
                     loss += cache.loss_sum();
@@ -510,7 +522,9 @@ pub fn build_exec_items(
 
 /// Scatter a stage-local `d_kv_in` ([Lr, 2, P, H, D]) into the pending KV
 /// cotangents of the prefix chunks ([Lr, 2, C, H, D] each) — the per-stage
-/// slice of `train::scatter_kv_grad`.
+/// slice of `train::scatter_kv_grad`. Fresh accumulators come zeroed from
+/// the stage arena.
+#[allow(clippy::too_many_arguments)]
 fn scatter_stage_kv_grad(
     d_kv_in: &[f64],
     prefix_items: &[usize],
@@ -519,6 +533,7 @@ fn scatter_stage_kv_grad(
     c: usize,
     hd: usize,
     kv_unit_elems: usize,
+    arena: &mut BufferPool,
 ) {
     let n_prev = prefix_items.len();
     if n_prev == 0 {
@@ -527,7 +542,7 @@ fn scatter_stage_kv_grad(
     let block = c * hd;
     debug_assert_eq!(d_kv_in.len(), lr * 2 * n_prev * block);
     for (ci, &it) in prefix_items.iter().enumerate() {
-        let dst = g_kv.entry(it).or_insert_with(|| vec![0.0f64; kv_unit_elems]);
+        let dst = g_kv.entry(it).or_insert_with(|| arena.acquire(kv_unit_elems));
         for b in 0..lr * 2 {
             let src_off = (b * n_prev + ci) * block;
             let dst_off = b * block;

@@ -1,0 +1,607 @@
+//! Deterministic parallel fast path for the reference backend.
+//!
+//! The reference backend's scalar path is the project's bit-exact oracle:
+//! single-threaded f64, fixed iteration order. This module provides the
+//! machinery to run the same kernels in parallel **without changing a single
+//! bit of the output**:
+//!
+//! - every parallel region partitions its *output* rows, so writes are
+//!   disjoint and no reduction ever crosses a part boundary;
+//! - per-element accumulation loops keep the serial path's ascending order
+//!   inside each part, so each output element sees the exact same sequence
+//!   of floating-point operations;
+//! - the partition count is a pure function of the problem size
+//!   ([`parts_for`]) — never of the worker count — so `RAYON_NUM_THREADS=1`
+//!   and `RAYON_NUM_THREADS=16` produce identical artifacts (the CI
+//!   determinism job diffs them byte-for-byte).
+//!
+//! The kernels are generic over [`Scalar`] (rayon is unavailable offline;
+//! scheduling runs on the in-tree [`ThreadPool`]). Production uses the f64
+//! instantiation; the f32 instantiation is exercised by unit tests so the
+//! `Scalar` seam stays honest. Inner loops are written over contiguous
+//! slices with no branches in the hot body, so the auto-vectorizer can emit
+//! SIMD for either element type.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Mutex};
+
+use super::Scalar;
+use crate::util::pool::ThreadPool;
+
+/// Regions with fewer scalar ops than this run serially — below it the
+/// fan-out overhead costs more than the parallelism saves.
+const MIN_PAR_OPS: usize = 32 * 1024;
+
+/// Cap on parts per region: bounds slot bookkeeping while leaving slack for
+/// dynamic load balancing across workers.
+const MAX_PARTS: usize = 16;
+
+/// Worker count: `RAYON_NUM_THREADS` when set (the conventional override,
+/// honored so CI can force serial execution), else available parallelism.
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("RAYON_NUM_THREADS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            if n >= 1 {
+                return n;
+            }
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+/// Partition `rows` output rows of roughly `ops_per_row` scalar operations
+/// each. A pure function of the problem size — never of the worker count —
+/// so the same split (hence the same per-part arithmetic) happens whether
+/// the parts run on 1 thread or 16.
+pub fn parts_for(rows: usize, ops_per_row: usize) -> usize {
+    if rows.saturating_mul(ops_per_row) < MIN_PAR_OPS {
+        1
+    } else {
+        rows.min(MAX_PARTS)
+    }
+}
+
+/// Row range `[start, end)` of part `pi` out of `parts` over `rows` rows
+/// (first `rows % parts` parts get one extra row).
+pub fn part_range(rows: usize, parts: usize, pi: usize) -> (usize, usize) {
+    let base = rows / parts;
+    let rem = rows % parts;
+    let start = pi * base + pi.min(rem);
+    let end = start + base + usize::from(pi < rem);
+    (start, end)
+}
+
+/// One part's view of a row-major output buffer: (first row, row count,
+/// the part's contiguous slice). `Option` so parts can `take` exclusively.
+pub type RowSlot<'b, T> = Option<(usize, usize, &'b mut [T])>;
+
+/// Split `buf` (row-major, `cols` elements per row) into one mutable slice
+/// per part, matching [`part_range`].
+pub fn split_rows<T>(buf: &mut [T], rows: usize, cols: usize, parts: usize) -> Vec<RowSlot<'_, T>> {
+    assert_eq!(buf.len(), rows * cols, "split_rows buffer shape mismatch");
+    let mut out = Vec::with_capacity(parts);
+    let mut rest = buf;
+    for pi in 0..parts {
+        let (start, end) = part_range(rows, parts, pi);
+        let (head, tail) = rest.split_at_mut((end - start) * cols);
+        out.push(Some((start, end - start, head)));
+        rest = tail;
+    }
+    out
+}
+
+/// Take part `pi`'s slot (exactly once per part per region).
+pub fn take_slot<'b, T>(
+    slots: &Mutex<Vec<RowSlot<'b, T>>>,
+    pi: usize,
+) -> (usize, usize, &'b mut [T]) {
+    slots.lock().unwrap()[pi].take().expect("each part slot is taken exactly once")
+}
+
+/// Shared state of one parallel region: the work closure plus a dynamic
+/// part counter (workers and the caller pull the next part index from it,
+/// so load balances itself without affecting *what* each part computes).
+struct Shared<'a> {
+    f: &'a (dyn Fn(usize) + Sync),
+    next: AtomicUsize,
+    parts: usize,
+}
+
+fn run_parts(s: &Shared<'_>) {
+    loop {
+        let pi = s.next.fetch_add(1, Ordering::Relaxed);
+        if pi >= s.parts {
+            break;
+        }
+        (s.f)(pi);
+    }
+}
+
+/// Completion tracker for one region. `drain` blocks until every spawned
+/// job has finished; the `Drop` impl does the same during unwinding so a
+/// panic in the caller's share of the work can never let workers outlive
+/// the stack frame their borrows point into.
+struct Pending<'a> {
+    rx: &'a mpsc::Receiver<()>,
+    left: usize,
+}
+
+impl Pending<'_> {
+    fn drain(&mut self) {
+        while self.left > 0 {
+            match self.rx.recv() {
+                Ok(()) => self.left -= 1,
+                Err(_) => {
+                    self.left = 0;
+                    panic!("fast-path worker panicked");
+                }
+            }
+        }
+    }
+}
+
+impl Drop for Pending<'_> {
+    fn drop(&mut self) {
+        while self.left > 0 {
+            match self.rx.recv() {
+                Ok(()) => self.left -= 1,
+                Err(_) => break, // a worker panicked; nothing left to wait on
+            }
+        }
+    }
+}
+
+/// Persistent worker pool driving the parallel regions. One per backend,
+/// created when the fast path is enabled.
+pub struct FastPath {
+    /// None when `threads == 1`: every region runs serially in the caller.
+    pool: Option<ThreadPool>,
+    threads: usize,
+}
+
+impl FastPath {
+    /// Pool sized by [`default_threads`] (`RAYON_NUM_THREADS` honored).
+    pub fn new() -> Self {
+        Self::with_threads(default_threads())
+    }
+
+    /// Pool with an explicit worker count (tests, benchmarks).
+    pub fn with_threads(threads: usize) -> Self {
+        let threads = threads.max(1);
+        let pool = if threads > 1 { Some(ThreadPool::new(threads)) } else { None };
+        Self { pool, threads }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `f(0), f(1), …, f(parts-1)`, each exactly once, distributed over
+    /// the pool plus the calling thread. Parts must touch disjoint output
+    /// regions (use [`split_rows`]). With one thread, or one part, this is
+    /// a plain serial loop — and because every part performs fixed
+    /// arithmetic regardless of where it runs, parallel results are
+    /// bit-identical to serial ones.
+    pub fn for_parts<F: Fn(usize) + Sync>(&self, parts: usize, f: F) {
+        let pool = match &self.pool {
+            Some(pool) if parts > 1 => pool,
+            _ => {
+                for pi in 0..parts {
+                    f(pi);
+                }
+                return;
+            }
+        };
+        let shared = Shared { f: &f, next: AtomicUsize::new(0), parts };
+        // SAFETY: the erased lifetime never escapes this frame. Every
+        // spawned job sends one completion when it stops pulling parts, and
+        // `pending` (declared after `rx`, so dropped first) blocks on — or,
+        // when unwinding, drains — all of them before `shared`, `f`, or any
+        // buffer they borrow can be dropped.
+        let shared_static: &'static Shared<'static> =
+            unsafe { std::mem::transmute::<&Shared<'_>, &'static Shared<'static>>(&shared) };
+        let jobs = self.threads.min(parts - 1).max(1);
+        let (tx, rx) = mpsc::channel::<()>();
+        let mut pending = Pending { rx: &rx, left: jobs };
+        for _ in 0..jobs {
+            let tx = tx.clone();
+            pool.execute(move || {
+                run_parts(shared_static);
+                let _ = tx.send(());
+            });
+        }
+        drop(tx);
+        run_parts(&shared);
+        pending.drain();
+    }
+}
+
+impl Default for FastPath {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+// ----- generic row-parallel kernels ----------------------------------------
+//
+// These mirror the serial kernels in `runtime/reference.rs` exactly: same
+// loop order per output row, same accumulation expressions. Partitioning is
+// by output rows only, so each element's op sequence is the serial one.
+
+/// `[T, A] @ [A, B] -> [T, B]`, partitioned over output rows.
+pub fn par_matmul<E: Scalar>(
+    fp: &FastPath,
+    x: &[E],
+    w: &[E],
+    t: usize,
+    a: usize,
+    b: usize,
+) -> Vec<E> {
+    debug_assert_eq!(x.len(), t * a);
+    debug_assert!(w.len() >= a * b);
+    let mut out = vec![E::ZERO; t * b];
+    let parts = parts_for(t, 2 * a * b);
+    if parts <= 1 {
+        matmul_rows(x, w, 0, t, a, b, &mut out);
+        return out;
+    }
+    {
+        let slots = Mutex::new(split_rows(&mut out, t, b, parts));
+        fp.for_parts(parts, |pi| {
+            let (start, rows, op) = take_slot(&slots, pi);
+            matmul_rows(x, w, start, rows, a, b, op);
+        });
+    }
+    out
+}
+
+fn matmul_rows<E: Scalar>(
+    x: &[E],
+    w: &[E],
+    start: usize,
+    rows: usize,
+    a: usize,
+    b: usize,
+    out: &mut [E],
+) {
+    for r in 0..rows {
+        let i = start + r;
+        let xrow = &x[i * a..(i + 1) * a];
+        let orow = &mut out[r * b..(r + 1) * b];
+        for (k, &xv) in xrow.iter().enumerate() {
+            let wrow = &w[k * b..(k + 1) * b];
+            for (ov, &wv) in orow.iter_mut().zip(wrow) {
+                *ov += xv * wv;
+            }
+        }
+    }
+}
+
+/// `dy [T, B] @ w[A, B]^T -> [T, A]`, partitioned over output rows.
+pub fn par_matmul_nt<E: Scalar>(
+    fp: &FastPath,
+    dy: &[E],
+    w: &[E],
+    t: usize,
+    a: usize,
+    b: usize,
+) -> Vec<E> {
+    debug_assert_eq!(dy.len(), t * b);
+    debug_assert!(w.len() >= a * b);
+    let mut out = vec![E::ZERO; t * a];
+    let parts = parts_for(t, 2 * a * b);
+    if parts <= 1 {
+        matmul_nt_rows(dy, w, 0, t, a, b, &mut out);
+        return out;
+    }
+    {
+        let slots = Mutex::new(split_rows(&mut out, t, a, parts));
+        fp.for_parts(parts, |pi| {
+            let (start, rows, op) = take_slot(&slots, pi);
+            matmul_nt_rows(dy, w, start, rows, a, b, op);
+        });
+    }
+    out
+}
+
+fn matmul_nt_rows<E: Scalar>(
+    dy: &[E],
+    w: &[E],
+    start: usize,
+    rows: usize,
+    a: usize,
+    b: usize,
+    out: &mut [E],
+) {
+    for r in 0..rows {
+        let i = start + r;
+        let dyr = &dy[i * b..(i + 1) * b];
+        let orow = &mut out[r * a..(r + 1) * a];
+        for k in 0..a {
+            let wrow = &w[k * b..(k + 1) * b];
+            let mut acc = E::ZERO;
+            for (&dv, &wv) in dyr.iter().zip(wrow) {
+                acc += dv * wv;
+            }
+            orow[k] = acc;
+        }
+    }
+}
+
+/// `dw[A, B] += x[T, A]^T @ dy[T, B]`, partitioned over `dw` rows. Each
+/// part keeps the serial t-ascending accumulation per element; `dw` may be
+/// a leading slice of a larger stacked buffer.
+pub fn par_accum_tn<E: Scalar>(
+    fp: &FastPath,
+    x: &[E],
+    dy: &[E],
+    t: usize,
+    a: usize,
+    b: usize,
+    dw: &mut [E],
+) {
+    debug_assert_eq!(x.len(), t * a);
+    debug_assert_eq!(dy.len(), t * b);
+    debug_assert!(dw.len() >= a * b);
+    let dwa = &mut dw[..a * b];
+    let parts = parts_for(a, 2 * t * b);
+    if parts <= 1 {
+        accum_tn_rows(x, dy, t, 0, a, a, b, dwa);
+        return;
+    }
+    let slots = Mutex::new(split_rows(dwa, a, b, parts));
+    fp.for_parts(parts, |pi| {
+        let (start, rows, dwp) = take_slot(&slots, pi);
+        accum_tn_rows(x, dy, t, start, rows, a, b, dwp);
+    });
+}
+
+fn accum_tn_rows<E: Scalar>(
+    x: &[E],
+    dy: &[E],
+    t: usize,
+    start: usize,
+    rows: usize,
+    a: usize,
+    b: usize,
+    dw: &mut [E],
+) {
+    for i in 0..t {
+        let xrow = &x[i * a..(i + 1) * a];
+        let dyr = &dy[i * b..(i + 1) * b];
+        for r in 0..rows {
+            let xv = xrow[start + r];
+            let dwrow = &mut dw[r * b..(r + 1) * b];
+            for (dwv, &dv) in dwrow.iter_mut().zip(dyr) {
+                *dwv += xv * dv;
+            }
+        }
+    }
+}
+
+/// `out[i] = f(i)` in parallel; the split depends only on `out.len()`.
+pub fn par_fill<T, F>(fp: &FastPath, out: &mut [T], ops_per_elem: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let n = out.len();
+    let parts = parts_for(n, ops_per_elem);
+    if parts <= 1 {
+        for (i, o) in out.iter_mut().enumerate() {
+            *o = f(i);
+        }
+        return;
+    }
+    let slots = Mutex::new(split_rows(out, n, 1, parts));
+    fp.for_parts(parts, |pi| {
+        let (start, _rows, op) = take_slot(&slots, pi);
+        for (r, o) in op.iter_mut().enumerate() {
+            *o = f(start + r);
+        }
+    });
+}
+
+/// `(out_a[i], out_b[i]) = f(i)` in parallel (paired outputs share one pass).
+pub fn par_fill2<T, F>(fp: &FastPath, out_a: &mut [T], out_b: &mut [T], ops_per_elem: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize) -> (T, T) + Sync,
+{
+    let n = out_a.len();
+    assert_eq!(n, out_b.len(), "paired outputs must have equal length");
+    let parts = parts_for(n, ops_per_elem);
+    if parts <= 1 {
+        for i in 0..n {
+            let (a, b) = f(i);
+            out_a[i] = a;
+            out_b[i] = b;
+        }
+        return;
+    }
+    let a_slots = Mutex::new(split_rows(out_a, n, 1, parts));
+    let b_slots = Mutex::new(split_rows(out_b, n, 1, parts));
+    fp.for_parts(parts, |pi| {
+        let (start, rows, ap) = take_slot(&a_slots, pi);
+        let (_start_b, _rows_b, bp) = take_slot(&b_slots, pi);
+        for r in 0..rows {
+            let (a, b) = f(start + r);
+            ap[r] = a;
+            bp[r] = b;
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU32;
+
+    #[test]
+    fn part_range_tiles_rows_exactly() {
+        for rows in [0usize, 1, 5, 16, 17, 100] {
+            for parts in [1usize, 2, 3, 16] {
+                let mut covered = 0;
+                let mut expect_start = 0;
+                for pi in 0..parts {
+                    let (s, e) = part_range(rows, parts, pi);
+                    assert_eq!(s, expect_start);
+                    assert!(e >= s);
+                    covered += e - s;
+                    expect_start = e;
+                }
+                assert_eq!(covered, rows, "rows {rows} parts {parts}");
+            }
+        }
+    }
+
+    #[test]
+    fn parts_for_is_thread_independent_and_thresholded() {
+        // Tiny regions stay serial; big ones split by rows, capped.
+        assert_eq!(parts_for(8, 16), 1);
+        assert_eq!(parts_for(4, 100_000), 4);
+        assert_eq!(parts_for(1024, 1024), 16);
+        // No dependence on worker count anywhere in the signature.
+    }
+
+    #[test]
+    fn for_parts_runs_every_part_exactly_once() {
+        let fp = FastPath::with_threads(4);
+        let counts: Vec<AtomicU32> = (0..37).map(|_| AtomicU32::new(0)).collect();
+        fp.for_parts(counts.len(), |pi| {
+            counts[pi].fetch_add(1, Ordering::SeqCst);
+        });
+        for (pi, c) in counts.iter().enumerate() {
+            assert_eq!(c.load(Ordering::SeqCst), 1, "part {pi}");
+        }
+    }
+
+    #[test]
+    fn for_parts_serial_when_one_thread() {
+        let fp = FastPath::with_threads(1);
+        let counts: Vec<AtomicU32> = (0..8).map(|_| AtomicU32::new(0)).collect();
+        fp.for_parts(counts.len(), |pi| {
+            counts[pi].fetch_add(1, Ordering::SeqCst);
+        });
+        assert!(counts.iter().all(|c| c.load(Ordering::SeqCst) == 1));
+    }
+
+    #[test]
+    fn for_parts_propagates_panics() {
+        let fp = FastPath::with_threads(2);
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            fp.for_parts(8, |pi| {
+                if pi == 3 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(caught.is_err(), "panic in one part must propagate");
+    }
+
+    /// Serial references replicating the reference backend's exact order.
+    fn serial_matmul(x: &[f64], w: &[f64], t: usize, a: usize, b: usize) -> Vec<f64> {
+        let mut out = vec![0.0f64; t * b];
+        for i in 0..t {
+            for k in 0..a {
+                for j in 0..b {
+                    out[i * b + j] += x[i * a + k] * w[k * b + j];
+                }
+            }
+        }
+        out
+    }
+
+    fn fixture(n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        (0..n).map(|_| rng.gen_f64_range(-1.0, 1.0)).collect()
+    }
+
+    #[test]
+    fn par_matmul_bit_matches_serial_for_any_thread_count() {
+        let (t, a, b) = (33, 17, 29);
+        let x = fixture(t * a, 1);
+        let w = fixture(a * b, 2);
+        let want = serial_matmul(&x, &w, t, a, b);
+        for threads in [1usize, 2, 5] {
+            let fp = FastPath::with_threads(threads);
+            let got = par_matmul(&fp, &x, &w, t, a, b);
+            assert!(
+                got.iter().zip(&want).all(|(g, w)| g.to_bits() == w.to_bits()),
+                "threads {threads}"
+            );
+        }
+    }
+
+    #[test]
+    fn par_matmul_nt_bit_matches_serial() {
+        let (t, a, b) = (21, 19, 23);
+        let dy = fixture(t * b, 3);
+        let w = fixture(a * b, 4);
+        let mut want = vec![0.0f64; t * a];
+        for i in 0..t {
+            for r in 0..a {
+                let mut acc = 0.0;
+                for j in 0..b {
+                    acc += dy[i * b + j] * w[r * b + j];
+                }
+                want[i * a + r] = acc;
+            }
+        }
+        let fp = FastPath::with_threads(3);
+        let got = par_matmul_nt(&fp, &dy, &w, t, a, b);
+        assert!(got.iter().zip(&want).all(|(g, w)| g.to_bits() == w.to_bits()));
+    }
+
+    #[test]
+    fn par_accum_tn_bit_matches_serial_and_accumulates() {
+        let (t, a, b) = (13, 37, 11);
+        let x = fixture(t * a, 5);
+        let dy = fixture(t * b, 6);
+        // Pre-seeded dw: += must preserve prior contents.
+        let mut want = fixture(a * b, 7);
+        let mut got = want.clone();
+        for i in 0..t {
+            for r in 0..a {
+                for j in 0..b {
+                    want[r * b + j] += x[i * a + r] * dy[i * b + j];
+                }
+            }
+        }
+        let fp = FastPath::with_threads(4);
+        par_accum_tn(&fp, &x, &dy, t, a, b, &mut got);
+        assert!(got.iter().zip(&want).all(|(g, w)| g.to_bits() == w.to_bits()));
+    }
+
+    #[test]
+    fn f32_instantiation_tracks_f64_loosely() {
+        // The Scalar seam must genuinely support f32: same kernel, looser
+        // tolerance (single precision accumulates more rounding).
+        let (t, a, b) = (24, 31, 18);
+        let x64 = fixture(t * a, 8);
+        let w64 = fixture(a * b, 9);
+        let x32: Vec<f32> = x64.iter().map(|&v| v as f32).collect();
+        let w32: Vec<f32> = w64.iter().map(|&v| v as f32).collect();
+        let fp = FastPath::with_threads(2);
+        let got32 = par_matmul(&fp, &x32, &w32, t, a, b);
+        let want64 = serial_matmul(&x64, &w64, t, a, b);
+        for (g, w) in got32.iter().zip(&want64) {
+            assert!((g.to_f64() - w).abs() < 1e-4, "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn par_fill_and_fill2_match_direct_evaluation() {
+        let fp = FastPath::with_threads(3);
+        let n = 10_000;
+        let src = fixture(n, 10);
+        let mut out = vec![0.0f64; n];
+        par_fill(&fp, &mut out, 8, |i| src[i] * 3.0 + 1.0);
+        assert!(out.iter().enumerate().all(|(i, &v)| v == src[i] * 3.0 + 1.0));
+        let mut a = vec![0.0f64; n];
+        let mut b = vec![0.0f64; n];
+        par_fill2(&fp, &mut a, &mut b, 8, |i| (src[i] + 1.0, src[i] - 1.0));
+        assert!(a.iter().enumerate().all(|(i, &v)| v == src[i] + 1.0));
+        assert!(b.iter().enumerate().all(|(i, &v)| v == src[i] - 1.0));
+    }
+}

@@ -35,12 +35,16 @@
 //! - `chunk_vjp_p{P}.hlo.txt` — forward+backward with explicit KV chain rule;
 //! - `full_step_s{S}.hlo.txt` — unchunked oracle (integration tests only).
 
+pub mod fastpath;
 mod manifest;
 #[cfg(feature = "pjrt")]
 mod pjrt;
 mod reference;
 mod stage;
+#[cfg(all(feature = "pjrt", not(feature = "xla-runtime")))]
+mod xla_stub;
 
+pub use fastpath::FastPath;
 pub use manifest::{Manifest, ParamSpec};
 #[cfg(feature = "pjrt")]
 pub use pjrt::Runtime;
@@ -48,7 +52,9 @@ pub use reference::{ReferenceBackend, StageBwdOut, StageCache, StageFwdOut};
 pub use stage::{stage_layer_range, ActivationHandoff, GradHandoff, StageBackend};
 
 /// Element type of KV-state and gradient buffers: f32 on the PJRT runtime,
-/// f64 on the reference backend.
+/// f64 on the reference backend. The arithmetic bounds (`AddAssign`, `Mul`)
+/// let the fast-path kernels (`runtime::fastpath`) be written once and
+/// instantiated at either precision.
 pub trait Scalar:
     Copy
     + Clone
@@ -56,6 +62,7 @@ pub trait Scalar:
     + PartialEq
     + std::fmt::Debug
     + std::ops::AddAssign
+    + std::ops::Mul<Output = Self>
     + Send
     + Sync
     + 'static
@@ -65,6 +72,10 @@ pub trait Scalar:
     const BYTES: u64;
     /// Narrow to f32 (the optimizer state is f32 on every backend).
     fn to_f32(self) -> f32;
+    /// Widen to f64 (reference-backend ingestion and test tolerances).
+    fn to_f64(self) -> f64;
+    /// Narrow/convert from f64 (kernel constants, test fixtures).
+    fn from_f64(x: f64) -> Self;
     /// Append this element's little-endian bytes (OffloadStore spill).
     fn write_le(self, out: &mut Vec<u8>);
     /// Read one element back from `BYTES` little-endian bytes.
@@ -76,6 +87,12 @@ impl Scalar for f32 {
     const BYTES: u64 = 4;
     fn to_f32(self) -> f32 {
         self
+    }
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+    fn from_f64(x: f64) -> f32 {
+        x as f32
     }
     fn write_le(self, out: &mut Vec<u8>) {
         out.extend_from_slice(&self.to_le_bytes());
@@ -90,6 +107,12 @@ impl Scalar for f64 {
     const BYTES: u64 = 8;
     fn to_f32(self) -> f32 {
         self as f32
+    }
+    fn to_f64(self) -> f64 {
+        self
+    }
+    fn from_f64(x: f64) -> f64 {
+        x
     }
     fn write_le(self, out: &mut Vec<u8>) {
         out.extend_from_slice(&self.to_le_bytes());
@@ -188,6 +211,11 @@ pub trait Backend {
 
     /// Program executions since start (metrics).
     fn calls(&self) -> u64;
+
+    /// True when a parallel fast path is active (surfaced in StepMetrics).
+    fn fast_path_active(&self) -> bool {
+        false
+    }
 
     /// Size in elements of a KV buffer for prefix `p`.
     fn kv_elements(&self, p: usize) -> usize {

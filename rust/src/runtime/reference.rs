@@ -34,7 +34,9 @@
 
 use std::ops::Range;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 
+use super::fastpath::{self, FastPath};
 use super::{Backend, ChunkInputs, ChunkVjpOut, FlatParams, FullStepOut, FwdKvOut, Manifest};
 
 const ROPE_THETA: f64 = 10000.0;
@@ -85,6 +87,10 @@ pub struct ReferenceBackend {
     /// Current parameters, widened to f64 (set via `set_params`).
     params: Option<Vec<Vec<f64>>>,
     calls: AtomicU64,
+    /// Parallel fast path; None = the serial scalar oracle. The fast path
+    /// is bit-identical to serial by construction (see `runtime/fastpath`):
+    /// output-row partitioning with per-element op order preserved.
+    fast: Option<FastPath>,
 }
 
 /// Per-layer forward caches consumed by the reverse pass.
@@ -234,11 +240,92 @@ impl ReferenceBackend {
                 manifest.params[*idx].name
             );
         }
-        Ok(Self { manifest, dims, params: None, calls: AtomicU64::new(0) })
+        Ok(Self { manifest, dims, params: None, calls: AtomicU64::new(0), fast: None })
+    }
+
+    /// Enable the parallel fast path. Worker count comes from
+    /// `RAYON_NUM_THREADS` when set, else available parallelism. Results
+    /// stay bit-identical to the serial path: every parallel kernel
+    /// partitions by output rows with a split that is a pure function of
+    /// the problem size, so per-element arithmetic and reduction order
+    /// never change (the CI determinism job enforces this byte-for-byte).
+    pub fn enable_fast_path(&mut self) {
+        self.fast = Some(FastPath::new());
+    }
+
+    /// Enable the fast path with an explicit worker count (tests, benches).
+    pub fn enable_fast_path_with_threads(&mut self, threads: usize) {
+        self.fast = Some(FastPath::with_threads(threads));
     }
 
     fn params_ref(&self) -> anyhow::Result<&Vec<Vec<f64>>> {
         self.params.as_ref().ok_or_else(|| anyhow::anyhow!("set_params not called"))
+    }
+
+    // --- kernel dispatch: serial oracle or the parallel fast path ---------
+
+    fn mm(&self, x: &[f64], w: &[f64], t: usize, a: usize, b: usize) -> Vec<f64> {
+        match &self.fast {
+            Some(fp) => fastpath::par_matmul(fp, x, w, t, a, b),
+            None => matmul(x, w, t, a, b),
+        }
+    }
+
+    fn mm_nt(&self, dy: &[f64], w: &[f64], t: usize, a: usize, b: usize) -> Vec<f64> {
+        match &self.fast {
+            Some(fp) => fastpath::par_matmul_nt(fp, dy, w, t, a, b),
+            None => matmul_nt(dy, w, t, a, b),
+        }
+    }
+
+    fn acc_tn(&self, x: &[f64], dy: &[f64], t: usize, a: usize, b: usize, dw: &mut [f64]) {
+        match &self.fast {
+            Some(fp) => fastpath::par_accum_tn(fp, x, dy, t, a, b, dw),
+            None => accum_tn(x, dy, t, a, b, dw),
+        }
+    }
+
+    fn rope(&self, xs: &mut [f64], pos: &[i32], heads: usize, t: usize, d: usize, inverse: bool) {
+        match &self.fast {
+            Some(fp) => rope_apply_par(fp, xs, pos, heads, t, d, inverse),
+            None => rope_apply(xs, pos, heads, t, d, inverse),
+        }
+    }
+
+    /// `act = silu(gate) * up` elementwise over `n` entries.
+    fn silu_mul(&self, gate: &[f64], up: &[f64], n: usize) -> Vec<f64> {
+        let mut act = vec![0.0f64; n];
+        match &self.fast {
+            Some(fp) => fastpath::par_fill(fp, &mut act, 8, |idx| silu(gate[idx]) * up[idx]),
+            None => {
+                for idx in 0..n {
+                    act[idx] = silu(gate[idx]) * up[idx];
+                }
+            }
+        }
+        act
+    }
+
+    /// SwiGLU backward: cotangents on gate pre-activation and up projection.
+    fn silu_bwd(&self, gate: &[f64], up: &[f64], d_act: &[f64], n: usize) -> (Vec<f64>, Vec<f64>) {
+        let mut d_gate = vec![0.0f64; n];
+        let mut d_up = vec![0.0f64; n];
+        let f = |idx: usize| {
+            let g = gate[idx];
+            let sg = sigmoid(g);
+            (d_act[idx] * up[idx] * (sg * (1.0 + g * (1.0 - sg))), d_act[idx] * (g * sg))
+        };
+        match &self.fast {
+            Some(fp) => fastpath::par_fill2(fp, &mut d_gate, &mut d_up, 16, f),
+            None => {
+                for idx in 0..n {
+                    let (dg, du) = f(idx);
+                    d_gate[idx] = dg;
+                    d_up[idx] = du;
+                }
+            }
+        }
+        (d_gate, d_up)
     }
 
     /// Validate a chunk call against the manifest contract (fixed chunk
@@ -321,16 +408,16 @@ impl ReferenceBackend {
             let wq = &params[P_WQ][li * hh * hh..(li + 1) * hh * hh];
             let wk = &params[P_WK][li * hh * hh..(li + 1) * hh * hh];
             let wv = &params[P_WV][li * hh * hh..(li + 1) * hh * hh];
-            let qmat = matmul(&xn1, wq, t, hh, hh);
-            let kmat = matmul(&xn1, wk, t, hh, hh);
-            let vmat = matmul(&xn1, wv, t, hh, hh);
+            let qmat = self.mm(&xn1, wq, t, hh, hh);
+            let kmat = self.mm(&xn1, wk, t, hh, hh);
+            let vmat = self.mm(&xn1, wv, t, hh, hh);
 
             // [T, hh] -> [H, T, D], RoPE on q and k.
             let mut q = heads_of(&qmat, heads, t, d);
             let mut k_own = heads_of(&kmat, heads, t, d);
             let v_own = heads_of(&vmat, heads, t, d);
-            rope_apply(&mut q, pos, heads, t, d, false);
-            rope_apply(&mut k_own, pos, heads, t, d, false);
+            self.rope(&mut q, pos, heads, t, d, false);
+            self.rope(&mut k_own, pos, heads, t, d, false);
 
             // Full K/V = stored prefix + own.
             let mut k_full = vec![0.0f64; heads * s_len * d];
@@ -353,57 +440,13 @@ impl ReferenceBackend {
             }
 
             // Masked softmax attention with exact-zero masked probabilities.
-            let mut probs = vec![0.0f64; heads * t * s_len];
-            let mut attn_flat = vec![0.0f64; t * hh];
-            for h in 0..heads {
-                for i in 0..t {
-                    let qrow = &q[(h * t + i) * d..(h * t + i + 1) * d];
-                    let mut mx = f64::NEG_INFINITY;
-                    for j in 0..s_len {
-                        if !attend(pos[i], seg[i], k_pos[j], k_seg[j]) {
-                            s_buf[j] = f64::NEG_INFINITY;
-                            continue;
-                        }
-                        let krow = &k_full[(h * s_len + j) * d..(h * s_len + j + 1) * d];
-                        let mut dot = 0.0;
-                        for dd in 0..d {
-                            dot += qrow[dd] * krow[dd];
-                        }
-                        s_buf[j] = dot * scale;
-                        if s_buf[j] > mx {
-                            mx = s_buf[j];
-                        }
-                    }
-                    let prow = &mut probs[(h * t + i) * s_len..(h * t + i + 1) * s_len];
-                    if mx == f64::NEG_INFINITY {
-                        continue; // fully masked row: zero probs, zero output
-                    }
-                    let mut sum = 0.0;
-                    for j in 0..s_len {
-                        if s_buf[j] == f64::NEG_INFINITY {
-                            prow[j] = 0.0;
-                        } else {
-                            let e = (s_buf[j] - mx).exp();
-                            prow[j] = e;
-                            sum += e;
-                        }
-                    }
-                    let out = &mut attn_flat[i * hh + h * d..i * hh + (h + 1) * d];
-                    for j in 0..s_len {
-                        if prow[j] == 0.0 {
-                            continue;
-                        }
-                        prow[j] /= sum;
-                        let vrow = &v_full[(h * s_len + j) * d..(h * s_len + j + 1) * d];
-                        for dd in 0..d {
-                            out[dd] += prow[j] * vrow[dd];
-                        }
-                    }
-                }
-            }
+            let (probs, attn_flat) = self.attn_fwd(
+                &q, &k_full, &v_full, pos, seg, k_pos, k_seg, heads, t, s_len, d, scale,
+                &mut s_buf,
+            );
 
             let wo = &params[P_WO][li * hh * hh..(li + 1) * hh * hh];
-            let attn_proj = matmul(&attn_flat, wo, t, hh, hh);
+            let attn_proj = self.mm(&attn_flat, wo, t, hh, hh);
             let mut x_mid = x_in.clone();
             for (xm, ap) in x_mid.iter_mut().zip(&attn_proj) {
                 *xm += *ap;
@@ -414,13 +457,10 @@ impl ReferenceBackend {
             let w_gate = &params[P_W_GATE][li * hh * ii..(li + 1) * hh * ii];
             let w_up = &params[P_W_UP][li * hh * ii..(li + 1) * hh * ii];
             let w_down = &params[P_W_DOWN][li * ii * hh..(li + 1) * ii * hh];
-            let gate = matmul(&xn2, w_gate, t, hh, ii);
-            let up = matmul(&xn2, w_up, t, hh, ii);
-            let mut act = vec![0.0f64; t * ii];
-            for idx in 0..t * ii {
-                act[idx] = silu(gate[idx]) * up[idx];
-            }
-            let mlp = matmul(&act, w_down, t, ii, hh);
+            let gate = self.mm(&xn2, w_gate, t, hh, ii);
+            let up = self.mm(&xn2, w_up, t, hh, ii);
+            let act = self.silu_mul(&gate, &up, t * ii);
+            let mlp = self.mm(&act, w_down, t, ii, hh);
             let mut x_out = x_mid.clone();
             for (xo, mv) in x_out.iter_mut().zip(&mlp) {
                 *xo += *mv;
@@ -462,6 +502,83 @@ impl ReferenceBackend {
         Ok((x, kv_own, caches))
     }
 
+    /// Masked softmax attention forward for one layer. Returns
+    /// (probs [H, T, S], attn_flat [T, hh]); masked probabilities are
+    /// exactly zero. `s_buf` is the serial path's scratch row (the fast
+    /// path uses per-part scratch instead).
+    fn attn_fwd(
+        &self,
+        q: &[f64],
+        k_full: &[f64],
+        v_full: &[f64],
+        pos: &[i32],
+        seg: &[i32],
+        k_pos: &[i32],
+        k_seg: &[i32],
+        heads: usize,
+        t: usize,
+        s_len: usize,
+        d: usize,
+        scale: f64,
+        s_buf: &mut [f64],
+    ) -> (Vec<f64>, Vec<f64>) {
+        if let Some(fp) = &self.fast {
+            return attn_fwd_par(
+                fp, q, k_full, v_full, pos, seg, k_pos, k_seg, heads, t, s_len, d, scale,
+            );
+        }
+        let hh = heads * d;
+        let mut probs = vec![0.0f64; heads * t * s_len];
+        let mut attn_flat = vec![0.0f64; t * hh];
+        for h in 0..heads {
+            for i in 0..t {
+                let qrow = &q[(h * t + i) * d..(h * t + i + 1) * d];
+                let mut mx = f64::NEG_INFINITY;
+                for j in 0..s_len {
+                    if !attend(pos[i], seg[i], k_pos[j], k_seg[j]) {
+                        s_buf[j] = f64::NEG_INFINITY;
+                        continue;
+                    }
+                    let krow = &k_full[(h * s_len + j) * d..(h * s_len + j + 1) * d];
+                    let mut dot = 0.0;
+                    for dd in 0..d {
+                        dot += qrow[dd] * krow[dd];
+                    }
+                    s_buf[j] = dot * scale;
+                    if s_buf[j] > mx {
+                        mx = s_buf[j];
+                    }
+                }
+                let prow = &mut probs[(h * t + i) * s_len..(h * t + i + 1) * s_len];
+                if mx == f64::NEG_INFINITY {
+                    continue; // fully masked row: zero probs, zero output
+                }
+                let mut sum = 0.0;
+                for j in 0..s_len {
+                    if s_buf[j] == f64::NEG_INFINITY {
+                        prow[j] = 0.0;
+                    } else {
+                        let e = (s_buf[j] - mx).exp();
+                        prow[j] = e;
+                        sum += e;
+                    }
+                }
+                let out = &mut attn_flat[i * hh + h * d..i * hh + (h + 1) * d];
+                for j in 0..s_len {
+                    if prow[j] == 0.0 {
+                        continue;
+                    }
+                    prow[j] /= sum;
+                    let vrow = &v_full[(h * s_len + j) * d..(h * s_len + j + 1) * d];
+                    for dd in 0..d {
+                        out[dd] += prow[j] * vrow[dd];
+                    }
+                }
+            }
+        }
+        (probs, attn_flat)
+    }
+
     /// Final RMSNorm + tied logits + summed next-token cross-entropy (the
     /// last stage's exit point). Returns (loss_sum, n_tok, head cache).
     fn head_fwd(&self, x_out: &[f64], targets: &[i32]) -> anyhow::Result<(f64, f64, HeadCache)> {
@@ -474,39 +591,10 @@ impl ReferenceBackend {
         let embed = &params[P_EMBED];
         let (xf, inv_f) = rmsnorm_fwd(x_out, &params[P_LN_F], t, hh);
         let mut probs_v = vec![0.0f64; t * v];
-        let mut logits = vec![0.0f64; v];
-        let mut loss_sum = 0.0f64;
-        let mut n_tok = 0.0f64;
-        for i in 0..t {
-            let xfr = &xf[i * hh..(i + 1) * hh];
-            let mut mx = f64::NEG_INFINITY;
-            for j in 0..v {
-                let erow = &embed[j * hh..(j + 1) * hh];
-                let mut dot = 0.0;
-                for c in 0..hh {
-                    dot += xfr[c] * erow[c];
-                }
-                logits[j] = dot;
-                if dot > mx {
-                    mx = dot;
-                }
-            }
-            let mut sum = 0.0;
-            let prow = &mut probs_v[i * v..(i + 1) * v];
-            for j in 0..v {
-                let e = (logits[j] - mx).exp();
-                prow[j] = e;
-                sum += e;
-            }
-            for pv in prow.iter_mut() {
-                *pv /= sum;
-            }
-            if targets[i] >= 0 {
-                let lse = mx + sum.ln();
-                loss_sum += lse - logits[targets[i] as usize];
-                n_tok += 1.0;
-            }
-        }
+        let (loss_sum, n_tok) = match &self.fast {
+            Some(fp) => head_fwd_rows_par(fp, embed, &xf, targets, t, hh, v, &mut probs_v),
+            None => head_fwd_rows(embed, &xf, targets, t, hh, v, &mut probs_v),
+        };
         Ok((loss_sum, n_tok, HeadCache { xf, inv_f, probs_v }))
     }
 
@@ -548,22 +636,20 @@ impl ReferenceBackend {
         // Loss -> logits -> (xf, embed). Tied head: logits = xf @ embed^T.
         let embed = &params[P_EMBED];
         let mut d_xf = vec![0.0f64; t * hh];
-        for i in 0..t {
-            if targets[i] < 0 {
-                continue;
-            }
-            let tgt = targets[i] as usize;
-            let prow = &head.probs_v[i * v..(i + 1) * v];
-            let xfr = &head.xf[i * hh..(i + 1) * hh];
-            let dxfr = &mut d_xf[i * hh..(i + 1) * hh];
-            for j in 0..v {
-                let dl = prow[j] - if j == tgt { 1.0 } else { 0.0 };
-                let erow = &embed[j * hh..(j + 1) * hh];
-                let derow = &mut d_params[P_EMBED][j * hh..(j + 1) * hh];
-                for c in 0..hh {
-                    dxfr[c] += dl * erow[c];
-                    derow[c] += dl * xfr[c];
-                }
+        match &self.fast {
+            Some(fp) => head_bwd_rows_par(
+                fp,
+                embed,
+                head,
+                targets,
+                t,
+                hh,
+                v,
+                &mut d_xf,
+                &mut d_params[P_EMBED],
+            ),
+            None => {
+                head_bwd_rows(embed, head, targets, t, hh, v, &mut d_xf, &mut d_params[P_EMBED])
             }
         }
 
@@ -622,23 +708,16 @@ impl ReferenceBackend {
 
             // MLP backward: x_out = x_mid + act @ w_down.
             let mut d_x_mid = d_x.clone(); // residual branch
-            let d_act = matmul_nt(&d_x, w_down, t, ii, hh);
-            accum_tn(&lc.act, &d_x, t, ii, hh, &mut d_params[P_W_DOWN][li * ii * hh..]);
-            let mut d_gate = vec![0.0f64; t * ii];
-            let mut d_up = vec![0.0f64; t * ii];
-            for idx in 0..t * ii {
-                let g = lc.gate[idx];
-                let sg = sigmoid(g);
-                d_gate[idx] = d_act[idx] * lc.up[idx] * (sg * (1.0 + g * (1.0 - sg)));
-                d_up[idx] = d_act[idx] * (g * sg);
-            }
-            let mut d_xn2 = matmul_nt(&d_gate, w_gate, t, hh, ii);
-            let d_xn2_up = matmul_nt(&d_up, w_up, t, hh, ii);
+            let d_act = self.mm_nt(&d_x, w_down, t, ii, hh);
+            self.acc_tn(&lc.act, &d_x, t, ii, hh, &mut d_params[P_W_DOWN][li * ii * hh..]);
+            let (d_gate, d_up) = self.silu_bwd(&lc.gate, &lc.up, &d_act, t * ii);
+            let mut d_xn2 = self.mm_nt(&d_gate, w_gate, t, hh, ii);
+            let d_xn2_up = self.mm_nt(&d_up, w_up, t, hh, ii);
             for (a, b) in d_xn2.iter_mut().zip(&d_xn2_up) {
                 *a += *b;
             }
-            accum_tn(&lc.xn2, &d_gate, t, hh, ii, &mut d_params[P_W_GATE][li * hh * ii..]);
-            accum_tn(&lc.xn2, &d_up, t, hh, ii, &mut d_params[P_W_UP][li * hh * ii..]);
+            self.acc_tn(&lc.xn2, &d_gate, t, hh, ii, &mut d_params[P_W_GATE][li * hh * ii..]);
+            self.acc_tn(&lc.xn2, &d_up, t, hh, ii, &mut d_params[P_W_UP][li * hh * ii..]);
             rmsnorm_bwd(
                 &lc.x_mid,
                 &params[P_NORM2][li * hh..(li + 1) * hh],
@@ -652,53 +731,12 @@ impl ReferenceBackend {
 
             // Attention output projection: x_mid = x_in + attn_flat @ wo.
             let mut d_x_in = d_x_mid.clone(); // residual branch
-            let d_attn_flat = matmul_nt(&d_x_mid, wo, t, hh, hh);
-            accum_tn(&lc.attn_flat, &d_x_mid, t, hh, hh, &mut d_params[P_WO][li * hh * hh..]);
+            let d_attn_flat = self.mm_nt(&d_x_mid, wo, t, hh, hh);
+            self.acc_tn(&lc.attn_flat, &d_x_mid, t, hh, hh, &mut d_params[P_WO][li * hh * hh..]);
 
             // Attention core backward (probs cached; masked entries are 0).
-            let mut d_q = vec![0.0f64; heads * t * d];
-            let mut d_k_full = vec![0.0f64; heads * s_len * d];
-            let mut d_v_full = vec![0.0f64; heads * s_len * d];
-            for h in 0..heads {
-                for i in 0..t {
-                    let d_out = &d_attn_flat[i * hh + h * d..i * hh + (h + 1) * d];
-                    let prow = &lc.probs[(h * t + i) * s_len..(h * t + i + 1) * s_len];
-                    let mut rowdot = 0.0f64;
-                    for j in 0..s_len {
-                        if prow[j] == 0.0 {
-                            d_p_buf[j] = 0.0;
-                            continue;
-                        }
-                        let vrow = &lc.v_full[(h * s_len + j) * d..(h * s_len + j + 1) * d];
-                        let mut acc = 0.0;
-                        for dd in 0..d {
-                            acc += d_out[dd] * vrow[dd];
-                        }
-                        d_p_buf[j] = acc;
-                        rowdot += prow[j] * acc;
-                        let dvrow = &mut d_v_full[(h * s_len + j) * d..(h * s_len + j + 1) * d];
-                        for dd in 0..d {
-                            dvrow[dd] += prow[j] * d_out[dd];
-                        }
-                    }
-                    let qrow = &lc.q[(h * t + i) * d..(h * t + i + 1) * d];
-                    for j in 0..s_len {
-                        if prow[j] == 0.0 {
-                            continue;
-                        }
-                        let ds = prow[j] * (d_p_buf[j] - rowdot) * scale;
-                        let krow = &lc.k_full[(h * s_len + j) * d..(h * s_len + j + 1) * d];
-                        let dqrow = &mut d_q[(h * t + i) * d..(h * t + i + 1) * d];
-                        for dd in 0..d {
-                            dqrow[dd] += ds * krow[dd];
-                        }
-                        let dkrow = &mut d_k_full[(h * s_len + j) * d..(h * s_len + j + 1) * d];
-                        for dd in 0..d {
-                            dkrow[dd] += ds * qrow[dd];
-                        }
-                    }
-                }
-            }
+            let (mut d_q, mut d_k_full, mut d_v_full) =
+                self.attn_bwd(lc, &d_attn_flat, heads, t, s_len, d, hh, scale, &mut d_p_buf);
 
             // Cotangent from later chunks on this chunk's KV output.
             if let Some(g) = g_kv_own {
@@ -741,21 +779,21 @@ impl ReferenceBackend {
 
             // RoPE is an orthogonal rotation: pull cotangents back with the
             // inverse rotation, then undo the [T, hh] -> [H, T, D] reshape.
-            rope_apply(&mut d_q, pos, heads, t, d, true);
-            rope_apply(&mut d_k_own, pos, heads, t, d, true);
+            self.rope(&mut d_q, pos, heads, t, d, true);
+            self.rope(&mut d_k_own, pos, heads, t, d, true);
             let d_qmat = heads_to(&d_q, heads, t, d);
             let d_kmat = heads_to(&d_k_own, heads, t, d);
             let d_vmat = heads_to(&d_v_own, heads, t, d);
 
-            let mut d_xn1 = matmul_nt(&d_qmat, wq, t, hh, hh);
-            let d_xn1_k = matmul_nt(&d_kmat, wk, t, hh, hh);
-            let d_xn1_v = matmul_nt(&d_vmat, wv, t, hh, hh);
+            let mut d_xn1 = self.mm_nt(&d_qmat, wq, t, hh, hh);
+            let d_xn1_k = self.mm_nt(&d_kmat, wk, t, hh, hh);
+            let d_xn1_v = self.mm_nt(&d_vmat, wv, t, hh, hh);
             for idx in 0..t * hh {
                 d_xn1[idx] += d_xn1_k[idx] + d_xn1_v[idx];
             }
-            accum_tn(&lc.xn1, &d_qmat, t, hh, hh, &mut d_params[P_WQ][li * hh * hh..]);
-            accum_tn(&lc.xn1, &d_kmat, t, hh, hh, &mut d_params[P_WK][li * hh * hh..]);
-            accum_tn(&lc.xn1, &d_vmat, t, hh, hh, &mut d_params[P_WV][li * hh * hh..]);
+            self.acc_tn(&lc.xn1, &d_qmat, t, hh, hh, &mut d_params[P_WQ][li * hh * hh..]);
+            self.acc_tn(&lc.xn1, &d_kmat, t, hh, hh, &mut d_params[P_WK][li * hh * hh..]);
+            self.acc_tn(&lc.xn1, &d_vmat, t, hh, hh, &mut d_params[P_WV][li * hh * hh..]);
             rmsnorm_bwd(
                 &lc.x_in,
                 &params[P_NORM1][li * hh..(li + 1) * hh],
@@ -770,6 +808,72 @@ impl ReferenceBackend {
         }
 
         (d_x, d_kv_in)
+    }
+
+    /// Attention core backward for one layer: cotangents on q (pre-RoPE
+    /// undo) and the full K/V. Returns (d_q [H, T, D], d_k_full [H, S, D],
+    /// d_v_full [H, S, D]). The fast path partitions by heads — K/V rows
+    /// accumulate over query rows *within* a head, so per-head serial
+    /// execution preserves the serial op order exactly.
+    fn attn_bwd(
+        &self,
+        lc: &LayerCache,
+        d_attn_flat: &[f64],
+        heads: usize,
+        t: usize,
+        s_len: usize,
+        d: usize,
+        hh: usize,
+        scale: f64,
+        d_p_buf: &mut [f64],
+    ) -> (Vec<f64>, Vec<f64>, Vec<f64>) {
+        if let Some(fp) = &self.fast {
+            return attn_bwd_par(fp, lc, d_attn_flat, heads, t, s_len, d, hh, scale);
+        }
+        let mut d_q = vec![0.0f64; heads * t * d];
+        let mut d_k_full = vec![0.0f64; heads * s_len * d];
+        let mut d_v_full = vec![0.0f64; heads * s_len * d];
+        for h in 0..heads {
+            for i in 0..t {
+                let d_out = &d_attn_flat[i * hh + h * d..i * hh + (h + 1) * d];
+                let prow = &lc.probs[(h * t + i) * s_len..(h * t + i + 1) * s_len];
+                let mut rowdot = 0.0f64;
+                for j in 0..s_len {
+                    if prow[j] == 0.0 {
+                        d_p_buf[j] = 0.0;
+                        continue;
+                    }
+                    let vrow = &lc.v_full[(h * s_len + j) * d..(h * s_len + j + 1) * d];
+                    let mut acc = 0.0;
+                    for dd in 0..d {
+                        acc += d_out[dd] * vrow[dd];
+                    }
+                    d_p_buf[j] = acc;
+                    rowdot += prow[j] * acc;
+                    let dvrow = &mut d_v_full[(h * s_len + j) * d..(h * s_len + j + 1) * d];
+                    for dd in 0..d {
+                        dvrow[dd] += prow[j] * d_out[dd];
+                    }
+                }
+                let qrow = &lc.q[(h * t + i) * d..(h * t + i + 1) * d];
+                for j in 0..s_len {
+                    if prow[j] == 0.0 {
+                        continue;
+                    }
+                    let ds = prow[j] * (d_p_buf[j] - rowdot) * scale;
+                    let krow = &lc.k_full[(h * s_len + j) * d..(h * s_len + j + 1) * d];
+                    let dqrow = &mut d_q[(h * t + i) * d..(h * t + i + 1) * d];
+                    for dd in 0..d {
+                        dqrow[dd] += ds * krow[dd];
+                    }
+                    let dkrow = &mut d_k_full[(h * s_len + j) * d..(h * s_len + j + 1) * d];
+                    for dd in 0..d {
+                        dkrow[dd] += ds * qrow[dd];
+                    }
+                }
+            }
+        }
+        (d_q, d_k_full, d_v_full)
     }
 
     /// Embedding-lookup backward (stage 0's exit point): routes the final
@@ -825,7 +929,7 @@ impl ReferenceBackend {
         first_stage: bool,
         last_stage: bool,
         inputs: &ChunkInputs<f64>,
-        x_in: Option<&[f64]>,
+        x_in: Option<Vec<f64>>,
     ) -> anyhow::Result<StageFwdOut> {
         anyhow::ensure!(
             first_stage == x_in.is_none(),
@@ -836,7 +940,7 @@ impl ReferenceBackend {
         let (k_pos, k_seg) = key_meta(&inputs.pos, &inputs.seg, p);
         let x = match x_in {
             None => self.embed_fwd(&inputs.tokens)?,
-            Some(x) => x.to_vec(),
+            Some(x) => x,
         };
         let (x_out, kv_own, caches) =
             self.layers_fwd(layers, x, &inputs.pos, &inputs.seg, &k_pos, &k_seg, &inputs.kv_in, p)?;
@@ -884,7 +988,7 @@ impl ReferenceBackend {
         last_stage: bool,
         inputs: &ChunkInputs<f64>,
         cache: &StageCache,
-        d_x_out: Option<&[f64]>,
+        d_x_out: Option<Vec<f64>>,
         g_kv_own: &[f64],
         d_params: &mut [Vec<f64>],
     ) -> anyhow::Result<StageBwdOut> {
@@ -900,7 +1004,7 @@ impl ReferenceBackend {
                 let head = cache.head.as_ref().expect("last-stage cache carries head");
                 self.head_bwd(&inputs.targets, x_out, head, d_params)
             }
-            Some(d) => d.to_vec(),
+            Some(d) => d,
         };
         let (d_x, d_kv_in) = self.layers_bwd(
             layers,
@@ -1027,6 +1131,10 @@ impl Backend for ReferenceBackend {
 
     fn calls(&self) -> u64 {
         self.calls.load(Ordering::Relaxed)
+    }
+
+    fn fast_path_active(&self) -> bool {
+        self.fast.is_some()
     }
 }
 
@@ -1205,6 +1313,421 @@ fn accum_tn(x: &[f64], dy: &[f64], t: usize, a: usize, b: usize, dw: &mut [f64])
             }
         }
     }
+}
+
+// ----- parallel fast-path bodies -------------------------------------------
+//
+// Each function mirrors its serial counterpart exactly — same per-row loop
+// order, same accumulation expressions — and partitions by *output* rows
+// (`fastpath::split_rows`), so results are bit-identical to serial whatever
+// the worker count. Scratch buffers (attention scores, logits) are per-part:
+// their contents are pure functions of the inputs, so recomputing them per
+// part changes nothing.
+
+/// Parallel attention forward: one output row per (head, query) pair.
+/// Returns (probs [H, T, S], attn_flat [T, hh]) exactly as the serial loop.
+fn attn_fwd_par(
+    fp: &FastPath,
+    q: &[f64],
+    k_full: &[f64],
+    v_full: &[f64],
+    pos: &[i32],
+    seg: &[i32],
+    k_pos: &[i32],
+    k_seg: &[i32],
+    heads: usize,
+    t: usize,
+    s_len: usize,
+    d: usize,
+    scale: f64,
+) -> (Vec<f64>, Vec<f64>) {
+    let rows = heads * t;
+    let mut probs = vec![0.0f64; rows * s_len];
+    let mut attn_heads = vec![0.0f64; rows * d];
+    let parts = fastpath::parts_for(rows, 2 * s_len * d);
+    {
+        let p_slots = Mutex::new(fastpath::split_rows(&mut probs, rows, s_len, parts));
+        let o_slots = Mutex::new(fastpath::split_rows(&mut attn_heads, rows, d, parts));
+        fp.for_parts(parts, |pi| {
+            let (start, n, probs_p) = fastpath::take_slot(&p_slots, pi);
+            let (_o_start, _o_n, out_p) = fastpath::take_slot(&o_slots, pi);
+            let mut s_buf = vec![0.0f64; s_len];
+            for r in 0..n {
+                let row = start + r;
+                let h = row / t;
+                let i = row % t;
+                let qrow = &q[row * d..(row + 1) * d];
+                let mut mx = f64::NEG_INFINITY;
+                for j in 0..s_len {
+                    if !attend(pos[i], seg[i], k_pos[j], k_seg[j]) {
+                        s_buf[j] = f64::NEG_INFINITY;
+                        continue;
+                    }
+                    let krow = &k_full[(h * s_len + j) * d..(h * s_len + j + 1) * d];
+                    let mut dot = 0.0;
+                    for dd in 0..d {
+                        dot += qrow[dd] * krow[dd];
+                    }
+                    s_buf[j] = dot * scale;
+                    if s_buf[j] > mx {
+                        mx = s_buf[j];
+                    }
+                }
+                let prow = &mut probs_p[r * s_len..(r + 1) * s_len];
+                if mx == f64::NEG_INFINITY {
+                    continue; // fully masked row: zero probs, zero output
+                }
+                let mut sum = 0.0;
+                for j in 0..s_len {
+                    if s_buf[j] == f64::NEG_INFINITY {
+                        prow[j] = 0.0;
+                    } else {
+                        let e = (s_buf[j] - mx).exp();
+                        prow[j] = e;
+                        sum += e;
+                    }
+                }
+                let out = &mut out_p[r * d..(r + 1) * d];
+                for j in 0..s_len {
+                    if prow[j] == 0.0 {
+                        continue;
+                    }
+                    prow[j] /= sum;
+                    let vrow = &v_full[(h * s_len + j) * d..(h * s_len + j + 1) * d];
+                    for dd in 0..d {
+                        out[dd] += prow[j] * vrow[dd];
+                    }
+                }
+            }
+        });
+    }
+    let attn_flat = heads_to(&attn_heads, heads, t, d);
+    (probs, attn_flat)
+}
+
+/// Parallel attention backward, partitioned by heads: K/V gradient rows
+/// accumulate over query positions *within* one head, so a per-head serial
+/// sweep preserves the serial accumulation order per element.
+fn attn_bwd_par(
+    fp: &FastPath,
+    lc: &LayerCache,
+    d_attn_flat: &[f64],
+    heads: usize,
+    t: usize,
+    s_len: usize,
+    d: usize,
+    hh: usize,
+    scale: f64,
+) -> (Vec<f64>, Vec<f64>, Vec<f64>) {
+    let mut d_q = vec![0.0f64; heads * t * d];
+    let mut d_k_full = vec![0.0f64; heads * s_len * d];
+    let mut d_v_full = vec![0.0f64; heads * s_len * d];
+    let parts = fastpath::parts_for(heads, 4 * t * s_len * d);
+    {
+        let q_slots = Mutex::new(fastpath::split_rows(&mut d_q, heads, t * d, parts));
+        let k_slots = Mutex::new(fastpath::split_rows(&mut d_k_full, heads, s_len * d, parts));
+        let v_slots = Mutex::new(fastpath::split_rows(&mut d_v_full, heads, s_len * d, parts));
+        fp.for_parts(parts, |pi| {
+            let (h0, nh, dq_p) = fastpath::take_slot(&q_slots, pi);
+            let (_k0, _kn, dk_p) = fastpath::take_slot(&k_slots, pi);
+            let (_v0, _vn, dv_p) = fastpath::take_slot(&v_slots, pi);
+            let mut d_p_buf = vec![0.0f64; s_len];
+            for hr in 0..nh {
+                let h = h0 + hr;
+                for i in 0..t {
+                    let d_out = &d_attn_flat[i * hh + h * d..i * hh + (h + 1) * d];
+                    let prow = &lc.probs[(h * t + i) * s_len..(h * t + i + 1) * s_len];
+                    let mut rowdot = 0.0f64;
+                    for j in 0..s_len {
+                        if prow[j] == 0.0 {
+                            d_p_buf[j] = 0.0;
+                            continue;
+                        }
+                        let vrow = &lc.v_full[(h * s_len + j) * d..(h * s_len + j + 1) * d];
+                        let mut acc = 0.0;
+                        for dd in 0..d {
+                            acc += d_out[dd] * vrow[dd];
+                        }
+                        d_p_buf[j] = acc;
+                        rowdot += prow[j] * acc;
+                        let dvrow = &mut dv_p[(hr * s_len + j) * d..(hr * s_len + j + 1) * d];
+                        for dd in 0..d {
+                            dvrow[dd] += prow[j] * d_out[dd];
+                        }
+                    }
+                    let qrow = &lc.q[(h * t + i) * d..(h * t + i + 1) * d];
+                    for j in 0..s_len {
+                        if prow[j] == 0.0 {
+                            continue;
+                        }
+                        let ds = prow[j] * (d_p_buf[j] - rowdot) * scale;
+                        let krow = &lc.k_full[(h * s_len + j) * d..(h * s_len + j + 1) * d];
+                        let dqrow = &mut dq_p[(hr * t + i) * d..(hr * t + i + 1) * d];
+                        for dd in 0..d {
+                            dqrow[dd] += ds * krow[dd];
+                        }
+                        let dkrow = &mut dk_p[(hr * s_len + j) * d..(hr * s_len + j + 1) * d];
+                        for dd in 0..d {
+                            dkrow[dd] += ds * qrow[dd];
+                        }
+                    }
+                }
+            }
+        });
+    }
+    (d_q, d_k_full, d_v_full)
+}
+
+/// Serial tied-head forward rows: per-token logits, vocab softmax into
+/// `probs_v`, summed cross-entropy. Returns (loss_sum, n_tok).
+fn head_fwd_rows(
+    embed: &[f64],
+    xf: &[f64],
+    targets: &[i32],
+    t: usize,
+    hh: usize,
+    v: usize,
+    probs_v: &mut [f64],
+) -> (f64, f64) {
+    let mut logits = vec![0.0f64; v];
+    let mut loss_sum = 0.0f64;
+    let mut n_tok = 0.0f64;
+    for i in 0..t {
+        let xfr = &xf[i * hh..(i + 1) * hh];
+        let mut mx = f64::NEG_INFINITY;
+        for j in 0..v {
+            let erow = &embed[j * hh..(j + 1) * hh];
+            let mut dot = 0.0;
+            for c in 0..hh {
+                dot += xfr[c] * erow[c];
+            }
+            logits[j] = dot;
+            if dot > mx {
+                mx = dot;
+            }
+        }
+        let mut sum = 0.0;
+        let prow = &mut probs_v[i * v..(i + 1) * v];
+        for j in 0..v {
+            let e = (logits[j] - mx).exp();
+            prow[j] = e;
+            sum += e;
+        }
+        for pv in prow.iter_mut() {
+            *pv /= sum;
+        }
+        if targets[i] >= 0 {
+            let lse = mx + sum.ln();
+            loss_sum += lse - logits[targets[i] as usize];
+            n_tok += 1.0;
+        }
+    }
+    (loss_sum, n_tok)
+}
+
+/// Parallel tied-head forward, partitioned over token rows; per-row losses
+/// land in a side buffer and fold serially in token order, so the sum sees
+/// the exact serial addition sequence.
+fn head_fwd_rows_par(
+    fp: &FastPath,
+    embed: &[f64],
+    xf: &[f64],
+    targets: &[i32],
+    t: usize,
+    hh: usize,
+    v: usize,
+    probs_v: &mut [f64],
+) -> (f64, f64) {
+    let mut loss_rows = vec![0.0f64; t];
+    let parts = fastpath::parts_for(t, 2 * v * hh);
+    {
+        let p_slots = Mutex::new(fastpath::split_rows(probs_v, t, v, parts));
+        let l_slots = Mutex::new(fastpath::split_rows(&mut loss_rows, t, 1, parts));
+        fp.for_parts(parts, |pi| {
+            let (start, n, probs_p) = fastpath::take_slot(&p_slots, pi);
+            let (_l_start, _l_n, loss_p) = fastpath::take_slot(&l_slots, pi);
+            let mut logits = vec![0.0f64; v];
+            for r in 0..n {
+                let i = start + r;
+                let xfr = &xf[i * hh..(i + 1) * hh];
+                let mut mx = f64::NEG_INFINITY;
+                for j in 0..v {
+                    let erow = &embed[j * hh..(j + 1) * hh];
+                    let mut dot = 0.0;
+                    for c in 0..hh {
+                        dot += xfr[c] * erow[c];
+                    }
+                    logits[j] = dot;
+                    if dot > mx {
+                        mx = dot;
+                    }
+                }
+                let mut sum = 0.0;
+                let prow = &mut probs_p[r * v..(r + 1) * v];
+                for j in 0..v {
+                    let e = (logits[j] - mx).exp();
+                    prow[j] = e;
+                    sum += e;
+                }
+                for pv in prow.iter_mut() {
+                    *pv /= sum;
+                }
+                if targets[i] >= 0 {
+                    let lse = mx + sum.ln();
+                    loss_p[r] = lse - logits[targets[i] as usize];
+                }
+            }
+        });
+    }
+    let mut loss_sum = 0.0f64;
+    let mut n_tok = 0.0f64;
+    for i in 0..t {
+        if targets[i] >= 0 {
+            loss_sum += loss_rows[i];
+            n_tok += 1.0;
+        }
+    }
+    (loss_sum, n_tok)
+}
+
+/// Serial tied-head backward rows: softmax-minus-onehot through the tied
+/// embedding, accumulating `d_xf` and `d_embed`.
+fn head_bwd_rows(
+    embed: &[f64],
+    head: &HeadCache,
+    targets: &[i32],
+    t: usize,
+    hh: usize,
+    v: usize,
+    d_xf: &mut [f64],
+    d_embed: &mut [f64],
+) {
+    for i in 0..t {
+        if targets[i] < 0 {
+            continue;
+        }
+        let tgt = targets[i] as usize;
+        let prow = &head.probs_v[i * v..(i + 1) * v];
+        let xfr = &head.xf[i * hh..(i + 1) * hh];
+        let dxfr = &mut d_xf[i * hh..(i + 1) * hh];
+        for j in 0..v {
+            let dl = prow[j] - if j == tgt { 1.0 } else { 0.0 };
+            let erow = &embed[j * hh..(j + 1) * hh];
+            let derow = &mut d_embed[j * hh..(j + 1) * hh];
+            for c in 0..hh {
+                dxfr[c] += dl * erow[c];
+                derow[c] += dl * xfr[c];
+            }
+        }
+    }
+}
+
+/// Parallel tied-head backward in two passes: pass 1 over token rows fills
+/// `d_xf` (vocab-ascending per element, as serial) and stashes the logit
+/// cotangents; pass 2 over vocab rows accumulates `d_embed` token-ascending
+/// per element — again the serial order, since the serial loop visits
+/// (i, j) lexicographically.
+fn head_bwd_rows_par(
+    fp: &FastPath,
+    embed: &[f64],
+    head: &HeadCache,
+    targets: &[i32],
+    t: usize,
+    hh: usize,
+    v: usize,
+    d_xf: &mut [f64],
+    d_embed: &mut [f64],
+) {
+    let mut dl_mat = vec![0.0f64; t * v];
+    let parts = fastpath::parts_for(t, 2 * v * hh);
+    {
+        let x_slots = Mutex::new(fastpath::split_rows(d_xf, t, hh, parts));
+        let dl_slots = Mutex::new(fastpath::split_rows(&mut dl_mat, t, v, parts));
+        fp.for_parts(parts, |pi| {
+            let (start, n, dxf_p) = fastpath::take_slot(&x_slots, pi);
+            let (_dl_start, _dl_n, dl_p) = fastpath::take_slot(&dl_slots, pi);
+            for r in 0..n {
+                let i = start + r;
+                if targets[i] < 0 {
+                    continue;
+                }
+                let tgt = targets[i] as usize;
+                let prow = &head.probs_v[i * v..(i + 1) * v];
+                let dxfr = &mut dxf_p[r * hh..(r + 1) * hh];
+                let dlr = &mut dl_p[r * v..(r + 1) * v];
+                for j in 0..v {
+                    let dl = prow[j] - if j == tgt { 1.0 } else { 0.0 };
+                    dlr[j] = dl;
+                    let erow = &embed[j * hh..(j + 1) * hh];
+                    for c in 0..hh {
+                        dxfr[c] += dl * erow[c];
+                    }
+                }
+            }
+        });
+    }
+    let vparts = fastpath::parts_for(v, 2 * t * hh);
+    let de = &mut d_embed[..v * hh];
+    let e_slots = Mutex::new(fastpath::split_rows(de, v, hh, vparts));
+    fp.for_parts(vparts, |pi| {
+        let (j0, nj, de_p) = fastpath::take_slot(&e_slots, pi);
+        for i in 0..t {
+            if targets[i] < 0 {
+                continue;
+            }
+            let xfr = &head.xf[i * hh..(i + 1) * hh];
+            let dlr = &dl_mat[i * v..(i + 1) * v];
+            for jr in 0..nj {
+                let dl = dlr[j0 + jr];
+                let derow = &mut de_p[jr * hh..(jr + 1) * hh];
+                for c in 0..hh {
+                    derow[c] += dl * xfr[c];
+                }
+            }
+        }
+    });
+}
+
+/// Parallel RoPE, partitioned over (head, token) rows. Angles depend only
+/// on (token, frequency), and each row's rotations touch disjoint element
+/// pairs, so per-row recomputation is bit-identical to the serial sweep.
+fn rope_apply_par(
+    fp: &FastPath,
+    xs: &mut [f64],
+    pos: &[i32],
+    heads: usize,
+    t: usize,
+    d: usize,
+    inverse: bool,
+) {
+    let half = d / 2;
+    let rows = heads * t;
+    let parts = fastpath::parts_for(rows, 16 * d);
+    if parts <= 1 {
+        rope_apply(xs, pos, heads, t, d, inverse);
+        return;
+    }
+    let slots = Mutex::new(fastpath::split_rows(xs, rows, d, parts));
+    fp.for_parts(parts, |pi| {
+        let (start, n, xs_p) = fastpath::take_slot(&slots, pi);
+        for r in 0..n {
+            let i = (start + r) % t;
+            let pf = pos[i] as f64;
+            let base = r * d;
+            for j in 0..half {
+                let freq = ROPE_THETA.powf(-(j as f64) / half as f64);
+                let angle = pf * freq;
+                let (mut sin, cos) = angle.sin_cos();
+                if inverse {
+                    sin = -sin;
+                }
+                let x1 = xs_p[base + j];
+                let x2 = xs_p[base + half + j];
+                xs_p[base + j] = x1 * cos - x2 * sin;
+                xs_p[base + half + j] = x1 * sin + x2 * cos;
+            }
+        }
+    });
 }
 
 #[cfg(test)]
@@ -1411,5 +1934,104 @@ mod tests {
         for (a, b) in xs.iter().zip(&orig) {
             assert!((a - b).abs() < 1e-12);
         }
+    }
+
+    fn fast_backend(chunk: usize, max_chunks: usize, threads: usize) -> ReferenceBackend {
+        let mut b = backend(chunk, max_chunks);
+        b.enable_fast_path_with_threads(threads);
+        b
+    }
+
+    fn assert_grads_close(got: &[Vec<f64>], want: &[Vec<f64>], tol: f64, what: &str) {
+        for (pi, (g, w)) in got.iter().zip(want).enumerate() {
+            let max_ref = w.iter().fold(0f64, |a, &x| a.max(x.abs())).max(1e-12);
+            let max_err = g.iter().zip(w).map(|(a, b)| (a - b).abs()).fold(0f64, f64::max);
+            assert!(
+                max_err / max_ref < tol,
+                "{what}: param {pi} rel err {}",
+                max_err / max_ref
+            );
+        }
+    }
+
+    #[test]
+    fn fast_path_matches_scalar_oracle() {
+        let slow = backend(16, 2);
+        let fast = fast_backend(16, 2, 4);
+        assert!(!slow.fast_path_active());
+        assert!(fast.fast_path_active());
+
+        let inputs = standalone_chunk(&slow, 16, 9);
+        let g_zero = vec![0.0f64; slow.kv_elements(16)];
+        let vs = slow.chunk_vjp(&inputs, &g_zero).unwrap();
+        let vf = fast.chunk_vjp(&inputs, &g_zero).unwrap();
+        assert!((vs.loss_sum - vf.loss_sum).abs() < 1e-9);
+        assert_eq!(vs.n_tok, vf.n_tok);
+        assert_grads_close(&vf.d_params, &vs.d_params, 1e-9, "chunk_vjp");
+
+        let (tokens, targets, pos, seg) = seq_inputs(32, 5);
+        let fs = slow.full_step(32, &tokens, &targets, &pos, &seg).unwrap();
+        let ff = fast.full_step(32, &tokens, &targets, &pos, &seg).unwrap();
+        assert!((fs.loss_sum - ff.loss_sum).abs() < 1e-9);
+        assert_grads_close(&ff.d_params, &fs.d_params, 1e-9, "full_step");
+    }
+
+    #[test]
+    fn fast_path_is_bit_invariant_across_thread_counts() {
+        // The partition split is a pure function of the problem size, so
+        // 1 worker and 4 workers must produce byte-identical results (the
+        // CI determinism job enforces the same property end-to-end).
+        let f1 = fast_backend(16, 2, 1);
+        let f4 = fast_backend(16, 2, 4);
+        let (tokens, targets, pos, seg) = seq_inputs(32, 13);
+        let a = f1.full_step(32, &tokens, &targets, &pos, &seg).unwrap();
+        let b = f4.full_step(32, &tokens, &targets, &pos, &seg).unwrap();
+        assert_eq!(a.loss_sum.to_bits(), b.loss_sum.to_bits());
+        for (pi, (x, y)) in a.d_params.iter().zip(&b.d_params).enumerate() {
+            assert!(
+                x.iter().zip(y).all(|(u, v)| u.to_bits() == v.to_bits()),
+                "param {pi} differs between 1 and 4 workers"
+            );
+        }
+    }
+
+    #[test]
+    fn fast_path_kv_chain_matches_scalar_chain() {
+        // Dependent chunks: chunk 1 consumes chunk 0's KV; the injected
+        // g_kv_own cotangent exercises attn_bwd's prefix split on both
+        // paths.
+        let slow = backend(8, 2);
+        let fast = fast_backend(8, 2, 3);
+        let (tokens, targets, pos, seg) = seq_inputs(16, 21);
+        let mk = |r: std::ops::Range<usize>, kv: Vec<f64>, p: usize| ChunkInputs::<f64> {
+            tokens: tokens[r.clone()].to_vec(),
+            targets: targets[r.clone()].to_vec(),
+            pos: pos[r.clone()].to_vec(),
+            seg: seg[r].to_vec(),
+            kv_in: kv,
+            prefix_len: p,
+        };
+        let run = |b: &ReferenceBackend| {
+            let c0 = mk(0..8, Vec::new(), 0);
+            let f0 = b.fwd_kv(&c0).unwrap();
+            let c1 = mk(8..16, f0.kv_own.clone(), 8);
+            let g_zero = vec![0.0f64; b.kv_elements(8)];
+            let v1 = b.chunk_vjp(&c1, &g_zero).unwrap();
+            let v0 = b.chunk_vjp(&c0, &v1.d_kv_in).unwrap();
+            (v0, v1)
+        };
+        let (s0, s1) = run(&slow);
+        let (f0, f1) = run(&fast);
+        assert!((s0.loss_sum - f0.loss_sum).abs() < 1e-9);
+        assert!((s1.loss_sum - f1.loss_sum).abs() < 1e-9);
+        assert_grads_close(&f0.d_params, &s0.d_params, 1e-9, "chunk 0");
+        assert_grads_close(&f1.d_params, &s1.d_params, 1e-9, "chunk 1");
+        let max_err = f1
+            .d_kv_in
+            .iter()
+            .zip(&s1.d_kv_in)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0f64, f64::max);
+        assert!(max_err < 1e-9, "d_kv_in err {max_err}");
     }
 }

@@ -18,6 +18,12 @@
 //! - [`GradHandoff`] flows upstream (stage s+1 → s) after each backward:
 //!   the [T, hidden] activation cotangent.
 //!
+//! Handoff buffers are *moved* across the boundary, never copied: the
+//! sender gives up its `Vec`, the channel transfers ownership, and the
+//! receiver feeds it straight into its layer range (`stage_fwd` /
+//! `stage_bwd` take `Option<Vec<f64>>`). A handoff costs O(1) regardless
+//! of the activation size.
+//!
 //! KV state never crosses a boundary: each stage stores the KV of its own
 //! layers for its own chunks (the paper's per-stage StateStore), assembles
 //! its own prefixes, and chains its own `d_kv_in` into earlier chunks'
@@ -99,12 +105,12 @@ impl<'a> StageBackend<'a> {
     }
 
     /// This stage's forward for one chunk op. `inputs.kv_in` carries the
-    /// stage-local prefix KV; `x_in` is the upstream activation handoff
-    /// (None iff this is the first stage).
+    /// stage-local prefix KV; `x_in` is the upstream activation handoff,
+    /// consumed by value — zero-copy (None iff this is the first stage).
     pub fn forward(
         &self,
         inputs: &ChunkInputs<f64>,
-        x_in: Option<&[f64]>,
+        x_in: Option<Vec<f64>>,
     ) -> anyhow::Result<StageFwdOut> {
         self.backend.stage_fwd(
             self.layers.clone(),
@@ -116,14 +122,15 @@ impl<'a> StageBackend<'a> {
     }
 
     /// This stage's backward for one chunk op, consuming the cache its
-    /// forward produced. `d_x_out` is the downstream cotangent handoff
-    /// (None iff this is the last stage); parameter grads accumulate into
-    /// `d_params` (full arity; only this stage's slots are touched).
+    /// forward produced. `d_x_out` is the downstream cotangent handoff,
+    /// consumed by value — zero-copy (None iff this is the last stage);
+    /// parameter grads accumulate into `d_params` (full arity; only this
+    /// stage's slots are touched).
     pub fn backward(
         &self,
         inputs: &ChunkInputs<f64>,
         cache: &StageCache,
-        d_x_out: Option<&[f64]>,
+        d_x_out: Option<Vec<f64>>,
         g_kv_own: &[f64],
         d_params: &mut [Vec<f64>],
     ) -> anyhow::Result<StageBwdOut> {
@@ -204,7 +211,7 @@ mod tests {
             let mut kv_own_parts = Vec::new();
             for st in &stages {
                 let stage_inputs = ChunkInputs { kv_in: Vec::new(), ..inputs.clone() };
-                let out = st.forward(&stage_inputs, x.as_deref()).unwrap();
+                let out = st.forward(&stage_inputs, x.take()).unwrap();
                 x = out.x_out;
                 caches.push(out.cache);
                 kv_own_parts.push(out.kv_own);
@@ -222,7 +229,7 @@ mod tests {
                 let stage_inputs = ChunkInputs { kv_in: Vec::new(), ..inputs.clone() };
                 let g_kv = vec![0.0f64; st.kv_elements(c)];
                 let out = st
-                    .backward(&stage_inputs, cache, d_x.as_deref(), &g_kv, &mut d_params)
+                    .backward(&stage_inputs, cache, d_x.take(), &g_kv, &mut d_params)
                     .unwrap();
                 d_x = out.d_x_in;
                 assert!(out.d_kv_in.is_empty(), "no prefix here");
@@ -251,6 +258,6 @@ mod tests {
         assert!(stages[1].forward(&inputs, None).is_err());
         // Stage 0 with one, likewise.
         let x = vec![0.0; c * b.manifest.hidden_size];
-        assert!(stages[0].forward(&inputs, Some(&x)).is_err());
+        assert!(stages[0].forward(&inputs, Some(x)).is_err());
     }
 }

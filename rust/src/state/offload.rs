@@ -331,6 +331,39 @@ mod tests {
     }
 
     #[test]
+    fn pooled_buffers_spill_and_restore_bit_exact() {
+        // The pipeline executor's per-stage arena (`util::pool::BufferPool`)
+        // recycles KV buffers through acquire/release; a buffer that has
+        // lived several arena generations must still spill and restore
+        // bit-exactly — pooling must be invisible to the offload tier.
+        let mut arena = crate::util::pool::BufferPool::new(4);
+        let first = arena.acquire(512);
+        arena.release(first);
+        let mut buf = arena.acquire(512); // recycled allocation
+        for (j, v) in buf.iter_mut().enumerate() {
+            *v = (j as f64 + 0.5).sqrt() * if j % 3 == 0 { -1.0 } else { 1.0 };
+        }
+        let want = buf.clone();
+
+        // Budget fits one 512-f64 buffer (4096 B); the fillers force `buf`
+        // through an actual disk round trip.
+        let mut s: OffloadStore<f64> = OffloadStore::new(4_100).unwrap();
+        s.put(key(0), buf).unwrap();
+        s.put(key(1), arena.acquire(512)).unwrap();
+        s.put(key(2), arena.acquire(512)).unwrap();
+        assert!(s.spill_count >= 1, "pooled buffer must have spilled");
+
+        let got = s.get(&key(0)).unwrap().unwrap();
+        assert_eq!(got.len(), want.len());
+        for (j, (x, y)) in got.iter().zip(&want).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "element {j} changed across spill");
+        }
+        // And the restored buffer can flow back into the arena.
+        arena.release(got);
+        assert!(arena.retained() >= 1);
+    }
+
+    #[test]
     fn backward_sweep_access_pattern() {
         // Forward puts 0..8, backward gets 7..0 — the Alg. 2 pattern.
         let mut s = OffloadStore::new(8_200).unwrap(); // ~2 buffers resident

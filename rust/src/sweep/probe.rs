@@ -28,9 +28,11 @@ use super::scenario::Scenario;
 
 /// Probe scale: small enough for CI seconds, structured enough that the
 /// state-aware schedule is non-trivial (dependent groups + short-sequence
-/// packing under any long-tail distribution).
-const PROBE_CONTEXT: u64 = 512;
-const PROBE_CHUNK: usize = 64;
+/// packing under any long-tail distribution). The probe backend runs the
+/// parallel fast path, so the envelope is ~10x wider than the scalar one
+/// and the probe can afford a real 1K context.
+const PROBE_CONTEXT: u64 = 1024;
+const PROBE_CHUNK: usize = 128;
 const PROBE_BATCH_CAP: usize = 8;
 const PROBE_STAGE_CAP: u64 = 4;
 
@@ -76,6 +78,9 @@ pub fn measure_scenario(s: &Scenario, best_k: Option<u64>) -> anyhow::Result<Mea
     let max_chunks = PROBE_CONTEXT as usize / PROBE_CHUNK;
     let manifest = Manifest::for_reference(&probe_model(), PROBE_CHUNK, max_chunks)?;
     let mut backend = ReferenceBackend::new(manifest)?;
+    // Probes measure wall-clock anyway (never diffed), so they default to
+    // the parallel fast path; it is bit-identical to serial regardless.
+    backend.enable_fast_path();
     backend.set_params(&init_params(&backend.manifest, s.seed ^ 0xE5EC))?;
 
     let batch_n = s.global_batch_size.min(PROBE_BATCH_CAP).max(1);

@@ -165,6 +165,9 @@ pub struct StepMetrics {
     /// Pipeline mode only: the simulator's predicted bubble ratio for the
     /// same chunk set and schedule (`pipeline::simulate`).
     pub predicted_bubble_ratio: Option<f64>,
+    /// Whether the backend ran its parallel fast path this step (the
+    /// reference backend's `--fast-path`; always false on PJRT).
+    pub fast_path: bool,
 }
 
 /// Result of gradient accumulation over one batch (`compute_gradients`).
@@ -396,6 +399,7 @@ impl<B: Backend> Trainer<B> {
             dp_imbalance: None,
             measured_bubble_ratio: None,
             predicted_bubble_ratio: None,
+            fast_path: self.backend.fast_path_active(),
         };
         crate::info!(
             "step {:>4} | loss/tok {:.4} | tokens {:>6} | chunks {:>3} | {:>5.2}s | gnorm {:.3}",
@@ -569,6 +573,7 @@ impl<B: Backend> Trainer<B> {
                         ("act_peak_chunks", Json::num(m.act_peak_chunks as f64)),
                         ("stages", Json::num(m.stages as f64)),
                         ("dp", Json::num(m.dp as f64)),
+                        ("fast_path", Json::Bool(m.fast_path)),
                     ];
                     if let Some(i) = m.dp_imbalance {
                         fields.push(("dp_imbalance", Json::num(i)));
@@ -670,6 +675,7 @@ impl Trainer<ReferenceBackend> {
             dp_imbalance: None,
             measured_bubble_ratio: Some(report.measured_bubble_ratio),
             predicted_bubble_ratio: Some(report.predicted_bubble_ratio),
+            fast_path: self.backend.fast_path_active(),
         };
         crate::info!(
             "step {:>4} | loss/tok {:.4} | stages {} | bubble {:>5.1}% measured / {:>5.1}% predicted | {:>5.2}s",
@@ -921,6 +927,7 @@ impl Trainer<ReferenceBackend> {
             dp_imbalance: Some(report.dp_imbalance),
             measured_bubble_ratio: report.measured_bubble_ratio,
             predicted_bubble_ratio: report.predicted_bubble_ratio,
+            fast_path: self.backend.fast_path_active(),
         };
         crate::info!(
             "step {:>4} | loss/tok {:.4} | dp {} x stages {} | imbalance {:.3} | {:>5.2}s | gnorm {:.3}",
@@ -1081,10 +1088,26 @@ pub fn concat_prefix_with<E: Scalar>(
     if upto == 0 {
         return Vec::new();
     }
+    let mut out = vec![E::ZERO; num_layers * 2 * upto * chunk * hd];
+    concat_prefix_into(parts, num_layers, chunk, hd, &mut out);
+    out
+}
+
+/// [`concat_prefix_with`] into a caller-provided buffer of exactly
+/// `L * 2 * parts.len() * C * H * D` elements — the allocation-free variant
+/// the pipeline executor feeds from its per-stage [`crate::util::pool::BufferPool`].
+pub fn concat_prefix_into<E: Scalar>(
+    parts: &[&Vec<E>],
+    num_layers: usize,
+    chunk: usize,
+    hd: usize,
+    out: &mut [E],
+) {
+    let upto = parts.len();
     let block = chunk * hd; // C*H*D elements per (layer, k/v) pair
     let l2 = num_layers * 2;
     debug_assert!(parts.iter().all(|p| p.len() == l2 * block));
-    let mut out = vec![E::ZERO; l2 * upto * block];
+    debug_assert_eq!(out.len(), l2 * upto * block);
     for (ci, part) in parts.iter().enumerate() {
         for b in 0..l2 {
             let src = &part[b * block..(b + 1) * block];
@@ -1092,7 +1115,6 @@ pub fn concat_prefix_with<E: Scalar>(
             out[dst_off..dst_off + block].copy_from_slice(src);
         }
     }
-    out
 }
 
 /// Scatter `d_kv_in` ([L, 2, prefix, H, D]) into per-chunk pending gradients

@@ -1,8 +1,11 @@
-//! A small scoped thread pool (tokio is unavailable offline).
+//! A small scoped thread pool (tokio is unavailable offline) and a buffer
+//! arena for steady-state allocation reuse.
 //!
-//! The coordinator uses it for parallel experiment sweeps (grid search runs
-//! thousands of independent pipeline simulations) and for overlapping host
-//! work with PJRT execution in the trainer.
+//! The coordinator uses the pool for parallel experiment sweeps (grid search
+//! runs thousands of independent pipeline simulations) and for overlapping
+//! host work with PJRT execution in the trainer. The stage-parallel executor
+//! uses [`BufferPool`] so per-op KV-prefix and gradient scratch buffers are
+//! recycled instead of freshly allocated every op.
 
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
@@ -94,6 +97,70 @@ impl Drop for ThreadPool {
     }
 }
 
+/// Arena of reusable `Vec<f64>` buffers (single-owner, no locking: each
+/// executor stage thread owns one).
+///
+/// `acquire(len)` hands out a zeroed buffer of exactly `len` elements,
+/// reusing a retained allocation when one is available; `release` returns a
+/// buffer to the arena. At most `max_retained` buffers are kept — releases
+/// beyond that bound free the allocation, so the arena's footprint stays
+/// bounded under churn. Checked-out buffers are plain owned `Vec`s, so two
+/// concurrent checkouts can never alias.
+pub struct BufferPool {
+    free: Vec<Vec<f64>>,
+    max_retained: usize,
+    /// Highest number of simultaneously retained buffers ever observed.
+    high_water: usize,
+    acquires: u64,
+    reuse_hits: u64,
+}
+
+impl BufferPool {
+    pub fn new(max_retained: usize) -> Self {
+        Self { free: Vec::new(), max_retained, high_water: 0, acquires: 0, reuse_hits: 0 }
+    }
+
+    /// Check out a zeroed buffer of exactly `len` elements.
+    pub fn acquire(&mut self, len: usize) -> Vec<f64> {
+        self.acquires += 1;
+        match self.free.pop() {
+            Some(mut buf) => {
+                self.reuse_hits += 1;
+                // Reset-on-acquire: callers always see zeroed contents,
+                // whatever the previous checkout wrote.
+                buf.clear();
+                buf.resize(len, 0.0);
+                buf
+            }
+            None => vec![0.0; len],
+        }
+    }
+
+    /// Return a buffer to the arena (dropped if the arena is full).
+    pub fn release(&mut self, mut buf: Vec<f64>) {
+        if self.free.len() < self.max_retained {
+            buf.clear();
+            self.free.push(buf);
+            self.high_water = self.high_water.max(self.free.len());
+        }
+    }
+
+    /// Buffers currently retained and idle.
+    pub fn retained(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Peak retained-buffer count (never exceeds `max_retained`).
+    pub fn high_water(&self) -> usize {
+        self.high_water
+    }
+
+    /// Total acquires, and how many were served from a retained buffer.
+    pub fn stats(&self) -> (u64, u64) {
+        (self.acquires, self.reuse_hits)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -133,5 +200,62 @@ mod tests {
             std::thread::sleep(std::time::Duration::from_millis(10));
         });
         drop(pool); // must not hang or panic
+    }
+
+    #[test]
+    fn buffer_pool_no_aliasing_across_checkouts() {
+        let mut arena = BufferPool::new(8);
+        // Seed the arena with retained buffers, then check two out at once.
+        arena.release(vec![0.0; 16]);
+        arena.release(vec![0.0; 16]);
+        let mut a = arena.acquire(16);
+        let mut b = arena.acquire(16);
+        assert_ne!(a.as_ptr(), b.as_ptr(), "concurrent checkouts must not alias");
+        a[0] = 1.0;
+        b[0] = 2.0;
+        assert_eq!(a[0], 1.0);
+        assert_eq!(b[0], 2.0);
+        arena.release(a);
+        arena.release(b);
+    }
+
+    #[test]
+    fn buffer_pool_resets_on_reuse() {
+        let mut arena = BufferPool::new(4);
+        let mut buf = arena.acquire(32);
+        for v in buf.iter_mut() {
+            *v = 7.25;
+        }
+        arena.release(buf);
+        // Same capacity class comes back zeroed, at the requested length.
+        let again = arena.acquire(32);
+        assert!(again.iter().all(|&v| v == 0.0), "reused buffer must be zeroed");
+        assert_eq!(again.len(), 32);
+        arena.release(again);
+        // Length changes are honored too (grow and shrink).
+        let grown = arena.acquire(64);
+        assert_eq!(grown.len(), 64);
+        assert!(grown.iter().all(|&v| v == 0.0));
+        arena.release(grown);
+        let shrunk = arena.acquire(8);
+        assert_eq!(shrunk.len(), 8);
+        assert!(shrunk.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn buffer_pool_high_water_bounded_under_churn() {
+        let cap = 3usize;
+        let mut arena = BufferPool::new(cap);
+        for round in 0..50 {
+            let n = 1 + round % 7;
+            let bufs: Vec<Vec<f64>> = (0..n).map(|i| arena.acquire(16 * (i + 1))).collect();
+            for b in bufs {
+                arena.release(b);
+            }
+            assert!(arena.retained() <= cap, "retained {} > cap {cap}", arena.retained());
+        }
+        assert!(arena.high_water() <= cap, "high water {} > cap {cap}", arena.high_water());
+        let (acquires, hits) = arena.stats();
+        assert!(acquires > 0 && hits > 0, "churn must exercise reuse ({acquires}, {hits})");
     }
 }

@@ -1,0 +1,136 @@
+//! Fast-path parity suite: the reference backend's parallel fast path must
+//! be (a) gradient-equivalent to the unchunked `full_step` oracle at 1e-6
+//! across a (ChunkSize, K, dp, stages) grid — the same gate the scalar
+//! chunked path passes — and (b) *bit-identical* across worker counts, so
+//! `RAYON_NUM_THREADS=1` and a many-core CI runner produce byte-equal
+//! artifacts. Partitioning is a pure function of problem size and every
+//! partial reduces in the serial order, so (b) holds by construction; this
+//! suite is the regression tripwire.
+
+mod common;
+
+use chunkflow::data::Sequence;
+use chunkflow::runtime::{Backend, Manifest, ReferenceBackend};
+use chunkflow::train::Trainer;
+
+use common::{max_rel_err, mini_config, oracle_grads, short_dist, trainer_with};
+
+/// Fast-path twin of `common::trainer_with`: same model/config, but the
+/// backend runs the parallel kernels (`threads = None` sizes the pool like
+/// `--fast-path` does; `Some(n)` pins it for the bit-invariance checks).
+fn fast_trainer_with(
+    cfg: chunkflow::config::TrainConfig,
+    threads: Option<usize>,
+) -> Trainer<ReferenceBackend> {
+    let ctx = cfg.context_length;
+    let chunk = cfg.chunkflow.chunk_size;
+    let max_chunks = ctx.div_ceil(chunk) as usize;
+    let manifest = Manifest::for_reference(&cfg.model, chunk as usize, max_chunks)
+        .expect("reference manifest");
+    let mut backend = ReferenceBackend::new(manifest).expect("reference backend");
+    match threads {
+        Some(n) => backend.enable_fast_path_with_threads(n),
+        None => backend.enable_fast_path(),
+    }
+    assert!(backend.fast_path_active());
+    Trainer::with_backend(backend, cfg, short_dist(ctx)).expect("trainer")
+}
+
+/// Batch mixing standalone and dependent chunk groups at every ChunkSize
+/// in the grid (mirrors the scalar suite's coverage shape).
+fn mixed_batch() -> Vec<Sequence> {
+    vec![
+        Sequence { id: 1, len: 70 },
+        Sequence { id: 2, len: 12 },
+        Sequence { id: 3, len: 20 },
+        Sequence { id: 4, len: 48 },
+    ]
+}
+
+#[test]
+fn fast_path_matches_oracle_across_chunk_size_k_dp_stages() {
+    let batch = mixed_batch();
+    for (c, k) in [(16u64, 1u64), (16, 2), (32, 1), (32, 2)] {
+        let max_chunks = 80u64.div_ceil(c) as usize;
+        let cfg = mini_config(c, max_chunks, k);
+
+        // Scalar f64 trainer supplies the unchunked oracle (same seed →
+        // same tokens), so the fast path is judged against ground truth,
+        // not against itself.
+        let scalar = trainer_with(cfg.clone(), short_dist(cfg.context_length));
+        let (loss_o, ntok_o, grads_o) = oracle_grads(&scalar, &batch);
+
+        let tr = fast_trainer_with(cfg, None);
+        for (dp, stages) in [(1usize, 1usize), (1, 2), (2, 1), (2, 2)] {
+            let acc = if dp > 1 {
+                tr.compute_gradients_dp(&batch, dp, stages).expect("dp grads").0
+            } else if stages > 1 {
+                tr.compute_gradients_pipelined(&batch, stages).expect("pipelined grads").0
+            } else {
+                tr.compute_gradients(&batch).expect("fast grads")
+            };
+            let tag = format!("(C={c}, K={k}, dp={dp}, stages={stages})");
+            assert_eq!(acc.tok_sum, ntok_o, "{tag} token count");
+            assert!(
+                ((acc.loss_sum - loss_o) / loss_o.abs().max(1e-12)).abs() < 1e-6,
+                "{tag} loss {} vs oracle {loss_o}",
+                acc.loss_sum
+            );
+            let rel = max_rel_err(&acc.grads, &grads_o);
+            assert!(rel < 1e-6, "{tag} fast-vs-oracle rel err {rel}");
+        }
+    }
+}
+
+#[test]
+fn fast_path_matches_scalar_path_tightly() {
+    // Same chunk schedule, fast vs scalar kernels: agreement must be at
+    // f64-kernel-reassociation level (1e-9), far inside the 1e-6 gate.
+    let cfg = mini_config(16, 5, 2);
+    let batch = mixed_batch();
+    let scalar = trainer_with(cfg.clone(), short_dist(cfg.context_length));
+    let fast = fast_trainer_with(cfg, None);
+    let a = scalar.compute_gradients(&batch).unwrap();
+    let b = fast.compute_gradients(&batch).unwrap();
+    assert!(
+        (a.loss_sum - b.loss_sum).abs() / a.loss_sum.abs().max(1e-12) < 1e-9,
+        "loss {} vs {}",
+        a.loss_sum,
+        b.loss_sum
+    );
+    let rel = max_rel_err(&b.grads, &a.grads);
+    assert!(rel < 1e-9, "fast-vs-scalar rel err {rel}");
+}
+
+#[test]
+fn fast_path_is_bit_invariant_across_worker_counts() {
+    // The determinism contract behind the CI job that diffs sweep artifacts
+    // between RAYON_NUM_THREADS=1 and the default: worker count must not
+    // change a single bit of any loss or gradient.
+    let cfg = mini_config(16, 5, 2);
+    let batch = mixed_batch();
+    let one = fast_trainer_with(cfg.clone(), Some(1));
+    let many = fast_trainer_with(cfg, Some(4));
+
+    let a = one.compute_gradients(&batch).unwrap();
+    let b = many.compute_gradients(&batch).unwrap();
+    assert_eq!(a.loss_sum.to_bits(), b.loss_sum.to_bits(), "loss bits");
+    assert_eq!(a.tok_sum.to_bits(), b.tok_sum.to_bits(), "token bits");
+    for (pi, (ga, gb)) in a.grads.iter().zip(&b.grads).enumerate() {
+        assert_eq!(ga.len(), gb.len());
+        for (j, (x, y)) in ga.iter().zip(gb).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "param {pi} elem {j}");
+        }
+    }
+
+    // And through the stage-parallel executor, whose own threading layers
+    // on top of the kernel pool.
+    let (ap, _) = one.compute_gradients_pipelined(&batch, 2).unwrap();
+    let (bp, _) = many.compute_gradients_pipelined(&batch, 2).unwrap();
+    assert_eq!(ap.loss_sum.to_bits(), bp.loss_sum.to_bits(), "pipelined loss bits");
+    for (pi, (ga, gb)) in ap.grads.iter().zip(&bp.grads).enumerate() {
+        for (j, (x, y)) in ga.iter().zip(gb).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "pipelined param {pi} elem {j}");
+        }
+    }
+}
