@@ -35,6 +35,12 @@ fn flags() -> Vec<FlagSpec> {
         flag("fast-path", false, "parallel reference-backend kernels (RAYON_NUM_THREADS caps)"),
         flag("min-fastpath-speedup", true, "benchdiff: minimum runtime/*_fast pair speedup"),
         flag("steps", true, "training steps"),
+        flag("max-retries", true, "supervised-executor retries per micro-step (reference; default 0)"),
+        flag("handoff-timeout-secs", true, "pipeline handoff deadline override (default: cost-model scaled)"),
+        flag("checkpoint-dir", true, "rotating-checkpoint directory (reference train)"),
+        flag("checkpoint-every", true, "checkpoint every N steps (0 = end of run only; default 0)"),
+        flag("checkpoint-keep", true, "checkpoint generations to keep (default 3)"),
+        flag("resume", false, "resume train from the newest valid checkpoint in --checkpoint-dir"),
         flag("batch", true, "global batch size (sequences)"),
         flag("lr", true, "learning rate"),
         flag("seed", true, "random seed"),
@@ -67,6 +73,13 @@ const SUBCOMMANDS: &[(&str, &str)] = &[
 
 fn main() {
     chunkflow::util::log::init();
+    // Arm the deterministic fault-injection registry from the environment
+    // before any subsystem runs (a no-op unless built with `fault-inject`
+    // and `CHUNKFLOW_FAULT_PLAN` is set).
+    if let Err(e) = chunkflow::util::fault::install_from_env() {
+        eprintln!("error: {e:#}");
+        std::process::exit(2);
+    }
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let spec = flags();
     let args = match Args::parse(&argv, &spec) {
@@ -127,6 +140,30 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         ),
         None => None,
     };
+    let max_retries = args.get_u64("max-retries", 0)? as u32;
+    let handoff_timeout = match args.get("handoff-timeout-secs") {
+        Some(s) => {
+            let secs: f64 = s.parse().map_err(|_| {
+                anyhow::anyhow!("--handoff-timeout-secs: invalid number `{s}`")
+            })?;
+            anyhow::ensure!(secs > 0.0, "--handoff-timeout-secs must be positive");
+            Some(std::time::Duration::from_secs_f64(secs))
+        }
+        None => None,
+    };
+    let ckpt = match args.get("checkpoint-dir") {
+        Some(dir) => Some(chunkflow::train::CheckpointPolicy {
+            dir: std::path::PathBuf::from(dir),
+            every: args.get_u64("checkpoint-every", 0)?,
+            keep: args.get_usize("checkpoint-keep", 3)?,
+        }),
+        None => None,
+    };
+    let resume = args.get_bool("resume");
+    anyhow::ensure!(
+        !resume || ckpt.is_some(),
+        "--resume needs --checkpoint-dir to know where the checkpoints live"
+    );
 
     // Clamp the sampled lengths to backend coverage via a suitable
     // distribution: reuse the evaluation shape truncated at the context.
@@ -156,26 +193,27 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
             if let Some(budget) = offload_budget {
                 trainer.set_offload_budget(Some(budget));
             }
-            if dp > 1 {
+            trainer.set_retry_policy(chunkflow::pipeline::RetryPolicy::with_retries(max_retries));
+            trainer.set_handoff_timeout(handoff_timeout);
+            let mode = if dp > 1 {
                 anyhow::ensure!(
                     offload_budget.is_none(),
                     "--offload-budget-bytes applies to the single-replica path \
                      (replica groups own per-rank KV)"
                 );
-                trainer.train_dp(dp, stages)?;
-                finish_training(&trainer, args)
+                chunkflow::train::TrainMode::Dp { dp, stages }
             } else if stages > 1 {
                 anyhow::ensure!(
                     offload_budget.is_none(),
                     "--offload-budget-bytes applies to the single-stage path \
                      (the pipeline executor owns per-stage KV)"
                 );
-                trainer.train_pipelined(stages)?;
-                finish_training(&trainer, args)
+                chunkflow::train::TrainMode::Pipelined { stages }
             } else {
-                trainer.train()?;
-                finish_training(&trainer, args)
-            }
+                chunkflow::train::TrainMode::Single
+            };
+            trainer.train_with_recovery(mode, ckpt.as_ref(), resume)?;
+            finish_training(&trainer, args)
         }
         "pjrt" => {
             // Fail fast on builds without the PJRT runtime — before any
@@ -204,6 +242,11 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
                 !args.get_bool("fast-path"),
                 "--fast-path applies to the reference backend (PJRT programs are \
                  already compiled)"
+            );
+            anyhow::ensure!(
+                ckpt.is_none() && !resume && max_retries == 0 && handoff_timeout.is_none(),
+                "--checkpoint-dir/--resume/--max-retries/--handoff-timeout-secs \
+                 require --backend reference"
             );
             // The AOT artifacts own the compiled chunk shape: default
             // --chunk-size to it; an explicit contradicting flag errors in
@@ -338,8 +381,13 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
         scenarios.len(),
         engine.parallelism
     );
-    let mut results = engine.run(&scenarios)?;
-    if args.get_bool("measure-exec") {
+    let out = args.get_or("out", sweep::DEFAULT_BENCH_PATH);
+    let path = std::path::Path::new(out);
+    let entries: Vec<Json> = if args.get_bool("measure-exec") {
+        // The executor probe mutates results after the sweep (wall-clock
+        // measurements, nondeterministic by nature), so this path stays
+        // non-journaled: an interrupted probe run simply reruns.
+        let mut results = engine.run(&scenarios)?;
         println!("running executor probes (scaled-down reference mirror per scenario)...\n");
         sweep::attach_measured_exec(&mut results)?;
         for r in &results {
@@ -355,36 +403,55 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
             }
         }
         println!();
-    }
+        results.iter().map(sweep::scenario_json).collect()
+    } else {
+        // Crash-resumable default path: every completed scenario is
+        // journaled (fsynced) to `<out>.partial`; a rerun after a crash
+        // skips completed scenarios and still emits byte-identical bytes.
+        engine.run_resumable(&scenarios, &journal_path(out))?
+    };
     println!(
         "{:<28} {:>12} {:>14} {:>12} {:>9}",
         "scenario", "baseline s", "best (CS,K)", "chunkflow s", "speedup"
     );
-    for r in &results {
-        let (best_label, best_secs) = match r.best() {
-            Some(b) => (
-                format!("({},{})", chunkflow::util::format_tokens(b.chunk_size), b.k),
-                format!("{:.3}", b.metrics.iteration_seconds),
+    for e in &entries {
+        let name = e.req_str("name")?;
+        let baseline = e
+            .get("baseline")
+            .map(|b| b.req_f64("iteration_seconds"))
+            .transpose()?
+            .unwrap_or(f64::NAN);
+        let (best_label, best_secs) = match e.get("best") {
+            Some(b) if b.get("chunk_size").is_some() => (
+                format!(
+                    "({},{})",
+                    chunkflow::util::format_tokens(b.req_u64("chunk_size")?),
+                    b.req_u64("k")?
+                ),
+                format!("{:.3}", b.req_f64("iteration_seconds")?),
             ),
-            None => ("-".into(), "-".into()),
+            _ => ("-".into(), "-".into()),
         };
-        println!(
-            "{:<28} {:>12.3} {:>14} {:>12} {:>8}",
-            r.scenario.name,
-            r.baseline.iteration_seconds,
-            best_label,
-            best_secs,
-            r.speedup().map(|s| format!("{s:.2}x")).unwrap_or_else(|| "-".into())
-        );
+        let speedup = e
+            .get("speedup")
+            .and_then(|v| v.as_f64())
+            .map(|s| format!("{s:.2}x"))
+            .unwrap_or_else(|| "-".into());
+        println!("{name:<28} {baseline:>12.3} {best_label:>14} {best_secs:>12} {speedup:>8}");
     }
-    let out = args.get_or("out", sweep::DEFAULT_BENCH_PATH);
-    let path = std::path::Path::new(out);
-    sweep::write_bench_json(path, &results, None)?;
+    sweep::doc_from_scenarios(entries, None).write_file(path)?;
     // Self-check the artifact against the schema contract before declaring
-    // success — CI consumes this file.
+    // success — CI consumes this file. Only then retire the journal: the
+    // finished artifact supersedes it.
     let n = sweep::validate(&Json::parse_file(path)?)?;
+    let _ = std::fs::remove_file(journal_path(out));
     println!("\nwrote {out} ({n} scenarios, schema v{})", sweep::SCHEMA_VERSION);
     Ok(())
+}
+
+/// Journal location for a sweep writing its artifact to `out`.
+fn journal_path(out: &str) -> std::path::PathBuf {
+    std::path::PathBuf::from(format!("{out}.partial"))
 }
 
 fn cmd_benchdiff(args: &Args) -> anyhow::Result<()> {

@@ -45,14 +45,134 @@ use super::onef1b::state_aware_1f1b_agendas;
 use super::{Op, OpKind, ScheduledOp, Timeline};
 use crate::chunk::ChunkSet;
 use crate::runtime::{
-    ActivationHandoff, Backend, ChunkInputs, GradHandoff, ReferenceBackend, StageBackend,
-    StageCache,
+    ActivationHandoff, Backend, ChunkInputs, GradHandoff, Manifest, ReferenceBackend,
+    StageBackend, StageCache,
 };
+use crate::util::fault;
 use crate::util::pool::BufferPool;
 
-/// How long a stage waits on a boundary channel before declaring the
-/// pipeline wedged — malformed agendas fail loudly instead of hanging CI.
-const HANDOFF_TIMEOUT: Duration = Duration::from_secs(60);
+/// Handoff deadlines never drop below this, however small the problem —
+/// a loaded CI box must not produce false wedge reports.
+const HANDOFF_TIMEOUT_FLOOR: Duration = Duration::from_secs(60);
+/// And never above this: a genuinely wedged pipeline should fail within
+/// the hour even for huge configurations.
+const HANDOFF_TIMEOUT_CAP: Duration = Duration::from_secs(3600);
+
+/// Tuning knobs for one executor run.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ExecOptions {
+    /// How long a stage waits on a boundary channel before declaring the
+    /// pipeline wedged. `None` derives a deadline from the cost model via
+    /// [`derived_handoff_timeout`] (floor 60s); the CLI exposes an
+    /// override as `--handoff-timeout-secs`.
+    pub handoff_timeout: Option<Duration>,
+}
+
+/// Bounded-backoff retry for supervised execution. The default policy
+/// (`max_retries: 0`) fails fast; `--max-retries` opts into recovery.
+#[derive(Clone, Copy, Debug)]
+pub struct RetryPolicy {
+    /// Retries after the first failed attempt (0 = fail fast).
+    pub max_retries: u32,
+    /// Sleep before the first retry; doubles per retry up to the cap.
+    pub backoff: Duration,
+    pub backoff_cap: Duration,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_retries: 0,
+            backoff: Duration::from_millis(50),
+            backoff_cap: Duration::from_secs(2),
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// Fail-fast convenience used by non-CLI callers.
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    pub fn with_retries(max_retries: u32) -> Self {
+        RetryPolicy { max_retries, ..Self::default() }
+    }
+}
+
+/// Handoff deadline scaled from the cost model's view of the work between
+/// two handoffs: every pipeline item costs at most one forward + backward
+/// + recompute over all layers (~3 · 24·h² FLOPs per token-layer), and a
+/// stage blocked on a neighbor can at worst be waiting behind the whole
+/// batch's worth of such ops. Dividing by an intentionally pessimistic
+/// 100 MFLOP/s floor rate keeps the deadline generous on slow shared CI
+/// hardware; the [`HANDOFF_TIMEOUT_FLOOR`]/[`HANDOFF_TIMEOUT_CAP`] clamps
+/// bound it to [60s, 1h].
+pub fn derived_handoff_timeout(m: &Manifest, num_items: usize) -> Duration {
+    let h = m.hidden_size as f64;
+    let per_token_layer = 24.0 * h * h;
+    let flops = 3.0 * per_token_layer
+        * m.num_layers as f64
+        * m.chunk_size as f64
+        * num_items.max(1) as f64;
+    let secs = (flops / 1e8)
+        .clamp(HANDOFF_TIMEOUT_FLOOR.as_secs_f64(), HANDOFF_TIMEOUT_CAP.as_secs_f64());
+    Duration::from_secs_f64(secs)
+}
+
+/// Render a panic payload for error messages.
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Run `f` under supervision: a failed attempt (error *or* panic) is
+/// retried with bounded exponential backoff up to `retry.max_retries`
+/// times. Returns the value plus how many retries were consumed.
+///
+/// Recovery is exact by construction: the executor's attempts are pure
+/// functions of (params, chunk set, items) — stage threads are joined by
+/// `std::thread::scope` before an attempt returns and channels die with
+/// it, so a retry starts from a clean slate and the recovered result is
+/// bit-identical to a fault-free run (the determinism-lattice contract).
+pub fn supervise<T>(
+    label: &str,
+    retry: &RetryPolicy,
+    mut f: impl FnMut() -> anyhow::Result<T>,
+) -> anyhow::Result<(T, u32)> {
+    let mut backoff = retry.backoff;
+    let mut retries = 0u32;
+    loop {
+        let attempt = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f()))
+            .unwrap_or_else(|payload| {
+                Err(anyhow::anyhow!("{label} panicked: {}", panic_message(payload.as_ref())))
+            });
+        match attempt {
+            Ok(v) => return Ok((v, retries)),
+            Err(e) if retries < retry.max_retries => {
+                retries += 1;
+                crate::warn_!(
+                    "{label}: attempt {retries}/{} failed ({e:#}); retrying in {:?}",
+                    retry.max_retries + 1,
+                    backoff
+                );
+                std::thread::sleep(backoff);
+                backoff = (backoff * 2).min(retry.backoff_cap);
+            }
+            Err(e) => {
+                return Err(e.context(format!(
+                    "{label}: failed after {} attempt(s)",
+                    retries + 1
+                )))
+            }
+        }
+    }
+}
 
 /// Everything the executor needs to run one chunk (pipeline item) besides
 /// the KV plumbing it owns.
@@ -99,6 +219,18 @@ pub fn execute_state_aware(
     k: usize,
     p: usize,
 ) -> anyhow::Result<ExecOutcome> {
+    execute_state_aware_with(backend, set, items, k, p, ExecOptions::default())
+}
+
+/// [`execute_state_aware`] with explicit [`ExecOptions`].
+pub fn execute_state_aware_with(
+    backend: &ReferenceBackend,
+    set: &ChunkSet,
+    items: &[ExecItem],
+    k: usize,
+    p: usize,
+    opts: ExecOptions,
+) -> anyhow::Result<ExecOutcome> {
     anyhow::ensure!(
         set.chunks.len() == items.len(),
         "chunk set has {} chunks but {} exec items were given",
@@ -110,7 +242,24 @@ pub fn execute_state_aware(
     // executes its agenda strictly in order, and the agenda emits units in
     // an edge-consistent order (the simulator relies on the same fact for
     // progress).
-    execute_agendas(backend, &agendas, items)
+    execute_agendas_with(backend, &agendas, items, opts)
+}
+
+/// Supervised [`execute_state_aware_with`]: stage failures (panic or
+/// handoff deadline) retry the whole micro-step under `retry`. Returns
+/// the outcome plus the number of retries consumed.
+pub fn execute_state_aware_supervised(
+    backend: &ReferenceBackend,
+    set: &ChunkSet,
+    items: &[ExecItem],
+    k: usize,
+    p: usize,
+    opts: ExecOptions,
+    retry: &RetryPolicy,
+) -> anyhow::Result<(ExecOutcome, u32)> {
+    supervise("pipeline executor", retry, || {
+        execute_state_aware_with(backend, set, items, k, p, opts)
+    })
 }
 
 /// Execute explicit per-stage agendas (the executor's core). Exposed so
@@ -119,6 +268,16 @@ pub fn execute_agendas(
     backend: &ReferenceBackend,
     agendas: &[Vec<Op>],
     items: &[ExecItem],
+) -> anyhow::Result<ExecOutcome> {
+    execute_agendas_with(backend, agendas, items, ExecOptions::default())
+}
+
+/// [`execute_agendas`] with explicit [`ExecOptions`].
+pub fn execute_agendas_with(
+    backend: &ReferenceBackend,
+    agendas: &[Vec<Op>],
+    items: &[ExecItem],
+    opts: ExecOptions,
 ) -> anyhow::Result<ExecOutcome> {
     let p = agendas.len();
     anyhow::ensure!(p >= 1, "need at least one stage");
@@ -156,20 +315,44 @@ pub fn execute_agendas(
 
     let retain = &retain;
     let epoch = Instant::now();
+    let handoff_timeout = opts
+        .handoff_timeout
+        .unwrap_or_else(|| derived_handoff_timeout(backend.manifest(), items.len()));
+    // `thread::scope` is the teardown guarantee the supervisor builds on:
+    // every stage thread is joined before this function returns, however
+    // it failed, and the boundary channels die with the scope — a retry
+    // never races a leaked thread from a previous attempt.
     let results: Vec<anyhow::Result<StageResult>> = std::thread::scope(|scope| {
         let mut handles = Vec::with_capacity(p);
         let chans = act_tx.into_iter().zip(act_rx).zip(grad_tx).zip(grad_rx);
         for (s, (((atx, arx), gtx), grx)) in chans.enumerate() {
             let agenda = &agendas[s];
             handles.push(scope.spawn(move || {
-                run_stage(backend, s, p, agenda, items, retain, atx, arx, gtx, grx, epoch)
+                run_stage(
+                    backend,
+                    s,
+                    p,
+                    agenda,
+                    items,
+                    retain,
+                    atx,
+                    arx,
+                    gtx,
+                    grx,
+                    epoch,
+                    handoff_timeout,
+                )
             }));
         }
         handles
             .into_iter()
             .map(|h| {
-                h.join()
-                    .unwrap_or_else(|_| Err(anyhow::anyhow!("stage thread panicked")))
+                h.join().unwrap_or_else(|payload| {
+                    Err(anyhow::anyhow!(
+                        "stage thread panicked: {}",
+                        panic_message(payload.as_ref())
+                    ))
+                })
             })
             .collect()
     });
@@ -228,19 +411,34 @@ pub fn execute_replica_groups(
     k: usize,
     p: usize,
 ) -> anyhow::Result<Vec<ExecOutcome>> {
+    execute_replica_groups_with(backend, replicas, k, p, ExecOptions::default())
+}
+
+/// [`execute_replica_groups`] with explicit [`ExecOptions`].
+pub fn execute_replica_groups_with(
+    backend: &ReferenceBackend,
+    replicas: &[ReplicaSpec],
+    k: usize,
+    p: usize,
+    opts: ExecOptions,
+) -> anyhow::Result<Vec<ExecOutcome>> {
     anyhow::ensure!(!replicas.is_empty(), "need at least one replica group");
     let results: Vec<anyhow::Result<ExecOutcome>> = std::thread::scope(|scope| {
         let handles: Vec<_> = replicas
             .iter()
             .map(|r| {
-                scope.spawn(move || execute_state_aware(backend, &r.set, &r.items, k, p))
+                scope.spawn(move || execute_state_aware_with(backend, &r.set, &r.items, k, p, opts))
             })
             .collect();
         handles
             .into_iter()
             .map(|h| {
-                h.join()
-                    .unwrap_or_else(|_| Err(anyhow::anyhow!("replica thread panicked")))
+                h.join().unwrap_or_else(|payload| {
+                    Err(anyhow::anyhow!(
+                        "replica thread panicked: {}",
+                        panic_message(payload.as_ref())
+                    ))
+                })
             })
             .collect()
     });
@@ -249,6 +447,24 @@ pub fn execute_replica_groups(
         .enumerate()
         .map(|(r, res)| res.map_err(|e| e.context(format!("dp rank {r}"))))
         .collect()
+}
+
+/// Supervised [`execute_replica_groups_with`]: any rank failing (panic or
+/// handoff deadline) retries the whole replica micro-step under `retry`.
+/// All ranks rerun together so the deterministic rank-ordered reduction
+/// sees a consistent set of outcomes — recovered gradients stay
+/// bit-identical to a fault-free run.
+pub fn execute_replica_groups_supervised(
+    backend: &ReferenceBackend,
+    replicas: &[ReplicaSpec],
+    k: usize,
+    p: usize,
+    opts: ExecOptions,
+    retry: &RetryPolicy,
+) -> anyhow::Result<(Vec<ExecOutcome>, u32)> {
+    supervise("replica group executor", retry, || {
+        execute_replica_groups_with(backend, replicas, k, p, opts)
+    })
 }
 
 /// Per-stage results funneled back to the coordinator.
@@ -276,12 +492,17 @@ impl<K: Ord + Copy + std::fmt::Debug, T> Inbox<K, T> {
     }
 
     /// Receive the message with key `want`, buffering everything else.
+    /// `op` is the waiting stage's current agenda op, so a timeout names
+    /// exactly who is stuck on what.
+    #[allow(clippy::too_many_arguments)]
     fn recv_for(
         &mut self,
         want: K,
         key_of: impl Fn(&T) -> K,
         stage: usize,
         what: &str,
+        op: Op,
+        timeout: Duration,
     ) -> anyhow::Result<T> {
         if let Some(msg) = self.pending.remove(&want) {
             return Ok(msg);
@@ -291,13 +512,16 @@ impl<K: Ord + Copy + std::fmt::Debug, T> Inbox<K, T> {
             .as_ref()
             .ok_or_else(|| anyhow::anyhow!("stage {stage}: no {what} channel for {want:?}"))?;
         loop {
-            let msg = rx.recv_timeout(HANDOFF_TIMEOUT).map_err(|e| match e {
+            let msg = rx.recv_timeout(timeout).map_err(|e| match e {
                 RecvTimeoutError::Timeout => anyhow::anyhow!(
-                    "stage {stage}: timed out waiting for the {what} of {want:?} \
-                     (deadlocked agendas?)"
+                    "stage {stage}: timed out after {timeout:?} waiting for the {what} of \
+                     item {} at op {op:?} (deadlocked agendas or a wedged neighbor?)",
+                    op.item
                 ),
                 RecvTimeoutError::Disconnected => anyhow::anyhow!(
-                    "stage {stage}: neighbor exited before sending the {what} of {want:?}"
+                    "stage {stage}: neighbor exited before sending the {what} of item {} \
+                     at op {op:?}",
+                    op.item
                 ),
             })?;
             let key = key_of(&msg);
@@ -325,6 +549,7 @@ fn run_stage(
     grad_tx: Option<Sender<GradHandoff>>,
     grad_rx: Option<Receiver<GradHandoff>>,
     epoch: Instant,
+    handoff_timeout: Duration,
 ) -> anyhow::Result<StageResult> {
     let stage = StageBackend::new(backend, s, p)?;
     let m = backend.manifest();
@@ -353,6 +578,9 @@ fn run_stage(
     let mut arena = BufferPool::new(4);
 
     for &op in agenda {
+        // Fault site: one evaluation per agenda op on every stage, so an
+        // armed occurrence kills exactly one op mid-step.
+        fault::maybe_panic(fault::STAGE_PANIC);
         let item = &items[op.item];
         match op.kind {
             OpKind::Fwd | OpKind::RecomputeFwd => {
@@ -365,6 +593,8 @@ fn run_stage(
                         |h| (h.item, h.recompute),
                         s,
                         "activation",
+                        op,
+                        handoff_timeout,
                     )?;
                     Some(h.x)
                 };
@@ -418,6 +648,9 @@ fn run_stage(
                     let x = out.x_out.ok_or_else(|| {
                         anyhow::anyhow!("stage {s}: interior stage produced no activation")
                     })?;
+                    // Fault site: delay a handoff to simulate a straggler
+                    // stage (drives the timeout path in tests).
+                    fault::maybe_sleep_ms(fault::HANDOFF_DELAY, 100);
                     tx.send(ActivationHandoff { item: op.item, recompute, x })
                         .map_err(|_| anyhow::anyhow!("stage {s}: downstream stage hung up"))?;
                 }
@@ -426,7 +659,14 @@ fn run_stage(
                 let d_x_out = if stage.is_last() {
                     None
                 } else {
-                    let h = grad_in.recv_for(op.item, |h| h.item, s, "gradient")?;
+                    let h = grad_in.recv_for(
+                        op.item,
+                        |h| h.item,
+                        s,
+                        "gradient",
+                        op,
+                        handoff_timeout,
+                    )?;
                     Some(h.d_x)
                 };
                 let start = epoch.elapsed().as_secs_f64();
@@ -470,6 +710,7 @@ fn run_stage(
                     let d_x = out.d_x_in.ok_or_else(|| {
                         anyhow::anyhow!("stage {s}: interior stage produced no input cotangent")
                     })?;
+                    fault::maybe_sleep_ms(fault::HANDOFF_DELAY, 100);
                     tx.send(GradHandoff { item: op.item, d_x })
                         .map_err(|_| anyhow::anyhow!("stage {s}: upstream stage hung up"))?;
                 }
@@ -729,5 +970,122 @@ mod tests {
         let agendas = vec![vec![Op::bwd(0), Op::fwd(0)]];
         let err = execute_agendas(&b, &agendas, &items).unwrap_err();
         assert!(err.to_string().contains("stage 0"), "{err:#}");
+    }
+
+    #[test]
+    fn deadlocked_agendas_time_out_naming_stage_op_and_item() {
+        // Stage 0 sends item 0 downstream then waits for its gradient;
+        // stage 1 waits for item 1's activation, which never comes. Both
+        // directions are wedged — the deadline must fire with a message
+        // naming the waiting stage, its op, and the item.
+        let b = backend(8, 1);
+        let batch =
+            vec![Sequence { id: 0, len: 8 }, Sequence { id: 1, len: 8 }];
+        let set = construct_chunks(&batch, 8);
+        let items = exec_items(&b, &set, &batch);
+        let agendas = vec![vec![Op::fwd(0), Op::bwd(0)], vec![Op::fwd(1)]];
+        let opts =
+            ExecOptions { handoff_timeout: Some(Duration::from_millis(200)) };
+        let err = execute_agendas_with(&b, &agendas, &items, opts).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("timed out"), "{msg}");
+        assert!(msg.contains("stage"), "{msg}");
+        assert!(msg.contains("item"), "{msg}");
+        assert!(msg.contains("Bwd") || msg.contains("Fwd"), "{msg}");
+    }
+
+    #[test]
+    fn derived_timeout_has_a_floor_and_a_cap() {
+        let b = backend(8, 1);
+        let m = b.manifest();
+        // A tiny problem sits on the 60s floor.
+        assert_eq!(derived_handoff_timeout(m, 1), Duration::from_secs(60));
+        // An absurdly large one is capped at an hour.
+        assert_eq!(
+            derived_handoff_timeout(m, usize::MAX / 2),
+            Duration::from_secs(3600)
+        );
+    }
+
+    #[test]
+    fn supervise_retries_until_success_and_counts_attempts() {
+        let mut calls = 0u32;
+        let (value, retries) =
+            supervise("flaky", &RetryPolicy::with_retries(3), || {
+                calls += 1;
+                if calls < 3 {
+                    anyhow::bail!("transient failure {calls}");
+                }
+                Ok(41 + 1)
+            })
+            .unwrap();
+        assert_eq!(value, 42);
+        assert_eq!(retries, 2);
+        assert_eq!(calls, 3);
+    }
+
+    #[test]
+    fn supervise_recovers_from_panics_too() {
+        let mut calls = 0u32;
+        let (value, retries) =
+            supervise("panicky", &RetryPolicy::with_retries(1), || {
+                calls += 1;
+                if calls == 1 {
+                    panic!("injected chaos");
+                }
+                Ok("ok")
+            })
+            .unwrap();
+        assert_eq!(value, "ok");
+        assert_eq!(retries, 1);
+    }
+
+    #[test]
+    fn supervise_exhausts_retries_with_context() {
+        let err = supervise("doomed", &RetryPolicy::with_retries(2), || {
+            Err::<(), _>(anyhow::anyhow!("always fails"))
+        })
+        .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("doomed"), "{msg}");
+        assert!(msg.contains("3 attempt"), "{msg}");
+        assert!(msg.contains("always fails"), "{msg}");
+    }
+
+    #[test]
+    fn supervise_fail_fast_by_default() {
+        let mut calls = 0u32;
+        let err = supervise("no-retry", &RetryPolicy::default(), || {
+            calls += 1;
+            Err::<(), _>(anyhow::anyhow!("boom"))
+        })
+        .unwrap_err();
+        assert_eq!(calls, 1);
+        assert!(format!("{err:#}").contains("1 attempt"));
+    }
+
+    #[test]
+    fn supervised_execution_matches_unsupervised_bit_for_bit() {
+        let b = backend(8, 2);
+        let batch = vec![
+            Sequence { id: 0, len: 16 },
+            Sequence { id: 1, len: 8 },
+        ];
+        let set = construct_chunks(&batch, 8);
+        let items = exec_items(&b, &set, &batch);
+        let base = execute_state_aware(&b, &set, &items, 1, 2).unwrap();
+        let (sup, retries) = execute_state_aware_supervised(
+            &b,
+            &set,
+            &items,
+            1,
+            2,
+            ExecOptions::default(),
+            &RetryPolicy::with_retries(2),
+        )
+        .unwrap();
+        assert_eq!(retries, 0, "no fault, no retries");
+        assert_eq!(sup.grads, base.grads, "supervision must not perturb results");
+        assert_eq!(sup.loss_sum.to_bits(), base.loss_sum.to_bits());
     }
 }

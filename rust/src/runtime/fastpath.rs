@@ -113,6 +113,10 @@ fn run_parts(s: &Shared<'_>) {
         if pi >= s.parts {
             break;
         }
+        // Fault site: one evaluation per part, on whichever thread pulls
+        // it — exercises both the worker-death path (`Pending::drain`
+        // panics in the caller) and the direct calling-thread panic.
+        crate::util::fault::maybe_panic(crate::util::fault::POOL_PANIC);
         (s.f)(pi);
     }
 }

@@ -33,7 +33,7 @@
 #![allow(clippy::too_many_arguments, clippy::needless_range_loop)]
 
 use std::ops::Range;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Mutex;
 
 use super::fastpath::{self, FastPath};
@@ -91,6 +91,11 @@ pub struct ReferenceBackend {
     /// is bit-identical to serial by construction (see `runtime/fastpath`):
     /// output-row partitioning with per-element op order preserved.
     fast: Option<FastPath>,
+    /// Set once if a parallel kernel ever panics (a dead pool worker, or an
+    /// injected `fastpath.pool_panic`): all later kernels take the scalar
+    /// path. Degrading instead of crashing is safe precisely because the
+    /// two paths are bit-identical.
+    fast_degraded: AtomicBool,
 }
 
 /// Per-layer forward caches consumed by the reverse pass.
@@ -240,7 +245,14 @@ impl ReferenceBackend {
                 manifest.params[*idx].name
             );
         }
-        Ok(Self { manifest, dims, params: None, calls: AtomicU64::new(0), fast: None })
+        Ok(Self {
+            manifest,
+            dims,
+            params: None,
+            calls: AtomicU64::new(0),
+            fast: None,
+            fast_degraded: AtomicBool::new(false),
+        })
     }
 
     /// Enable the parallel fast path. Worker count comes from
@@ -251,11 +263,18 @@ impl ReferenceBackend {
     /// never change (the CI determinism job enforces this byte-for-byte).
     pub fn enable_fast_path(&mut self) {
         self.fast = Some(FastPath::new());
+        self.fast_degraded.store(false, Ordering::Relaxed);
     }
 
     /// Enable the fast path with an explicit worker count (tests, benches).
     pub fn enable_fast_path_with_threads(&mut self, threads: usize) {
         self.fast = Some(FastPath::with_threads(threads));
+        self.fast_degraded.store(false, Ordering::Relaxed);
+    }
+
+    /// Has the fast path been permanently disabled by a worker panic?
+    pub fn fast_path_degraded(&self) -> bool {
+        self.fast_degraded.load(Ordering::Relaxed)
     }
 
     fn params_ref(&self) -> anyhow::Result<&Vec<Vec<f64>>> {
@@ -263,45 +282,119 @@ impl ReferenceBackend {
     }
 
     // --- kernel dispatch: serial oracle or the parallel fast path ---------
+    //
+    // Every dispatch site is written as "try the fast path, fall back to
+    // the serial oracle". A panic escaping a parallel kernel — an injected
+    // `fastpath.pool_panic` or a genuinely dead pool worker — is caught in
+    // `catch_fast`, degrades the backend to the scalar path for good, and
+    // the same call completes serially. Kernels that *accumulate* into
+    // caller-owned buffers snapshot them first so a partially-applied
+    // parallel region can be rolled back before the serial rerun; the
+    // snapshot is one buffer copy per call, ~1/T of the kernel's own work.
+
+    /// Fast path to use for the next kernel call, if any.
+    fn active_fast(&self) -> Option<&FastPath> {
+        match &self.fast {
+            Some(fp) if !self.fast_degraded.load(Ordering::Relaxed) => Some(fp),
+            _ => None,
+        }
+    }
+
+    /// Run one parallel kernel, catching any panic that escapes it. On
+    /// panic: log once, set the degraded flag, and return `None` so the
+    /// caller reruns the kernel serially. This is memory-safe because
+    /// `FastPath::for_parts` joins every spawned job before a panic
+    /// propagates out of it — no worker still borrows the kernel's buffers
+    /// by the time we catch.
+    fn catch_fast<T>(&self, kernel: &'static str, par: impl FnOnce() -> T) -> Option<T> {
+        match std::panic::catch_unwind(std::panic::AssertUnwindSafe(par)) {
+            Ok(out) => Some(out),
+            Err(payload) => {
+                let msg = payload
+                    .downcast_ref::<&str>()
+                    .map(|s| s.to_string())
+                    .or_else(|| payload.downcast_ref::<String>().cloned())
+                    .unwrap_or_else(|| "non-string panic payload".to_string());
+                if !self.fast_degraded.swap(true, Ordering::SeqCst) {
+                    crate::warn_!(
+                        "fast path disabled after panic in kernel `{kernel}`: {msg}; \
+                         continuing on the scalar path (bit-identical, slower)"
+                    );
+                }
+                None
+            }
+        }
+    }
 
     fn mm(&self, x: &[f64], w: &[f64], t: usize, a: usize, b: usize) -> Vec<f64> {
-        match &self.fast {
-            Some(fp) => fastpath::par_matmul(fp, x, w, t, a, b),
-            None => matmul(x, w, t, a, b),
+        if let Some(fp) = self.active_fast() {
+            if let Some(out) = self.catch_fast("matmul", || fastpath::par_matmul(fp, x, w, t, a, b))
+            {
+                return out;
+            }
         }
+        matmul(x, w, t, a, b)
     }
 
     fn mm_nt(&self, dy: &[f64], w: &[f64], t: usize, a: usize, b: usize) -> Vec<f64> {
-        match &self.fast {
-            Some(fp) => fastpath::par_matmul_nt(fp, dy, w, t, a, b),
-            None => matmul_nt(dy, w, t, a, b),
+        if let Some(fp) = self.active_fast() {
+            if let Some(out) =
+                self.catch_fast("matmul_nt", || fastpath::par_matmul_nt(fp, dy, w, t, a, b))
+            {
+                return out;
+            }
         }
+        matmul_nt(dy, w, t, a, b)
     }
 
     fn acc_tn(&self, x: &[f64], dy: &[f64], t: usize, a: usize, b: usize, dw: &mut [f64]) {
-        match &self.fast {
-            Some(fp) => fastpath::par_accum_tn(fp, x, dy, t, a, b, dw),
-            None => accum_tn(x, dy, t, a, b, dw),
+        if let Some(fp) = self.active_fast() {
+            // `+=` accumulator: roll back to the pre-call state if the
+            // parallel region died after updating only some parts.
+            let snap = dw[..a * b].to_vec();
+            if self
+                .catch_fast("accum_tn", || fastpath::par_accum_tn(fp, x, dy, t, a, b, dw))
+                .is_some()
+            {
+                return;
+            }
+            dw[..a * b].copy_from_slice(&snap);
         }
+        accum_tn(x, dy, t, a, b, dw);
     }
 
     fn rope(&self, xs: &mut [f64], pos: &[i32], heads: usize, t: usize, d: usize, inverse: bool) {
-        match &self.fast {
-            Some(fp) => rope_apply_par(fp, xs, pos, heads, t, d, inverse),
-            None => rope_apply(xs, pos, heads, t, d, inverse),
+        if let Some(fp) = self.active_fast() {
+            // In-place rotation is not idempotent: restore before rerunning
+            // serially so no row gets rotated twice.
+            let snap = xs.to_vec();
+            if self
+                .catch_fast("rope", || rope_apply_par(fp, xs, pos, heads, t, d, inverse))
+                .is_some()
+            {
+                return;
+            }
+            xs.copy_from_slice(&snap);
         }
+        rope_apply(xs, pos, heads, t, d, inverse);
     }
 
     /// `act = silu(gate) * up` elementwise over `n` entries.
     fn silu_mul(&self, gate: &[f64], up: &[f64], n: usize) -> Vec<f64> {
         let mut act = vec![0.0f64; n];
-        match &self.fast {
-            Some(fp) => fastpath::par_fill(fp, &mut act, 8, |idx| silu(gate[idx]) * up[idx]),
-            None => {
-                for idx in 0..n {
-                    act[idx] = silu(gate[idx]) * up[idx];
-                }
+        if let Some(fp) = self.active_fast() {
+            if self
+                .catch_fast("silu_mul", || {
+                    fastpath::par_fill(fp, &mut act, 8, |idx| silu(gate[idx]) * up[idx])
+                })
+                .is_some()
+            {
+                return act;
             }
+            // Write-once buffer: the serial loop overwrites every entry.
+        }
+        for idx in 0..n {
+            act[idx] = silu(gate[idx]) * up[idx];
         }
         act
     }
@@ -315,15 +408,18 @@ impl ReferenceBackend {
             let sg = sigmoid(g);
             (d_act[idx] * up[idx] * (sg * (1.0 + g * (1.0 - sg))), d_act[idx] * (g * sg))
         };
-        match &self.fast {
-            Some(fp) => fastpath::par_fill2(fp, &mut d_gate, &mut d_up, 16, f),
-            None => {
-                for idx in 0..n {
-                    let (dg, du) = f(idx);
-                    d_gate[idx] = dg;
-                    d_up[idx] = du;
-                }
+        if let Some(fp) = self.active_fast() {
+            if self
+                .catch_fast("silu_bwd", || fastpath::par_fill2(fp, &mut d_gate, &mut d_up, 16, &f))
+                .is_some()
+            {
+                return (d_gate, d_up);
             }
+        }
+        for idx in 0..n {
+            let (dg, du) = f(idx);
+            d_gate[idx] = dg;
+            d_up[idx] = du;
         }
         (d_gate, d_up)
     }
@@ -522,10 +618,12 @@ impl ReferenceBackend {
         scale: f64,
         s_buf: &mut [f64],
     ) -> (Vec<f64>, Vec<f64>) {
-        if let Some(fp) = &self.fast {
-            return attn_fwd_par(
-                fp, q, k_full, v_full, pos, seg, k_pos, k_seg, heads, t, s_len, d, scale,
-            );
+        if let Some(fp) = self.active_fast() {
+            if let Some(out) = self.catch_fast("attn_fwd", || {
+                attn_fwd_par(fp, q, k_full, v_full, pos, seg, k_pos, k_seg, heads, t, s_len, d, scale)
+            }) {
+                return out;
+            }
         }
         let hh = heads * d;
         let mut probs = vec![0.0f64; heads * t * s_len];
@@ -591,8 +689,20 @@ impl ReferenceBackend {
         let embed = &params[P_EMBED];
         let (xf, inv_f) = rmsnorm_fwd(x_out, &params[P_LN_F], t, hh);
         let mut probs_v = vec![0.0f64; t * v];
-        let (loss_sum, n_tok) = match &self.fast {
-            Some(fp) => head_fwd_rows_par(fp, embed, &xf, targets, t, hh, v, &mut probs_v),
+        let mut fast_out = None;
+        if let Some(fp) = self.active_fast() {
+            fast_out = self.catch_fast("head_fwd", || {
+                head_fwd_rows_par(fp, embed, &xf, targets, t, hh, v, &mut probs_v)
+            });
+            if fast_out.is_none() {
+                // Discard any partially-written rows before the serial rerun.
+                for p in probs_v.iter_mut() {
+                    *p = 0.0;
+                }
+            }
+        }
+        let (loss_sum, n_tok) = match fast_out {
+            Some(out) => out,
             None => head_fwd_rows(embed, &xf, targets, t, hh, v, &mut probs_v),
         };
         Ok((loss_sum, n_tok, HeadCache { xf, inv_f, probs_v }))
@@ -636,21 +746,35 @@ impl ReferenceBackend {
         // Loss -> logits -> (xf, embed). Tied head: logits = xf @ embed^T.
         let embed = &params[P_EMBED];
         let mut d_xf = vec![0.0f64; t * hh];
-        match &self.fast {
-            Some(fp) => head_bwd_rows_par(
-                fp,
-                embed,
-                head,
-                targets,
-                t,
-                hh,
-                v,
-                &mut d_xf,
-                &mut d_params[P_EMBED],
-            ),
-            None => {
-                head_bwd_rows(embed, head, targets, t, hh, v, &mut d_xf, &mut d_params[P_EMBED])
+        let mut done = false;
+        if let Some(fp) = self.active_fast() {
+            // Both outputs accumulate with `+=`: snapshot the embed-grad
+            // section and re-zero the fresh `d_xf` if the region dies.
+            let snap = d_params[P_EMBED].clone();
+            done = self
+                .catch_fast("head_bwd", || {
+                    head_bwd_rows_par(
+                        fp,
+                        embed,
+                        head,
+                        targets,
+                        t,
+                        hh,
+                        v,
+                        &mut d_xf,
+                        &mut d_params[P_EMBED],
+                    )
+                })
+                .is_some();
+            if !done {
+                d_params[P_EMBED].copy_from_slice(&snap);
+                for x in d_xf.iter_mut() {
+                    *x = 0.0;
+                }
             }
+        }
+        if !done {
+            head_bwd_rows(embed, head, targets, t, hh, v, &mut d_xf, &mut d_params[P_EMBED]);
         }
 
         // ln_f backward. (No key-metadata rebuild is needed anywhere below:
@@ -827,8 +951,12 @@ impl ReferenceBackend {
         scale: f64,
         d_p_buf: &mut [f64],
     ) -> (Vec<f64>, Vec<f64>, Vec<f64>) {
-        if let Some(fp) = &self.fast {
-            return attn_bwd_par(fp, lc, d_attn_flat, heads, t, s_len, d, hh, scale);
+        if let Some(fp) = self.active_fast() {
+            if let Some(out) = self.catch_fast("attn_bwd", || {
+                attn_bwd_par(fp, lc, d_attn_flat, heads, t, s_len, d, hh, scale)
+            }) {
+                return out;
+            }
         }
         let mut d_q = vec![0.0f64; heads * t * d];
         let mut d_k_full = vec![0.0f64; heads * s_len * d];
@@ -1134,7 +1262,7 @@ impl Backend for ReferenceBackend {
     }
 
     fn fast_path_active(&self) -> bool {
-        self.fast.is_some()
+        self.fast.is_some() && !self.fast_degraded.load(Ordering::Relaxed)
     }
 }
 
@@ -2033,5 +2161,40 @@ mod tests {
             .map(|(a, b)| (a - b).abs())
             .fold(0f64, f64::max);
         assert!(max_err < 1e-9, "d_kv_in err {max_err}");
+    }
+
+    /// A fast-path worker panic — at whatever kernel the armed occurrence
+    /// lands in — must degrade the backend to the scalar path and still
+    /// produce bit-identical results: pure kernels rerun serially, and the
+    /// accumulating ones (accum_tn, rope, head_bwd) roll back their
+    /// partial writes first.
+    #[cfg(feature = "fault-inject")]
+    #[test]
+    fn injected_pool_panic_degrades_to_scalar_bit_identically() {
+        use crate::util::fault;
+        let _g = fault::TEST_REGISTRY_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        let slow = backend(16, 2);
+        let (tokens, targets, pos, seg) = seq_inputs(32, 5);
+        let want = slow.full_step(32, &tokens, &targets, &pos, &seg).unwrap();
+        // Early, mid-forward, and mid-backward part evaluations.
+        for occurrence in [1u64, 17, 97] {
+            fault::install(fault::FaultPlan::new(9).arm(fault::POOL_PANIC, occurrence));
+            let fast = fast_backend(16, 2, 4);
+            let got = fast.full_step(32, &tokens, &targets, &pos, &seg).unwrap();
+            assert!(fast.fast_path_degraded(), "occurrence {occurrence} must fire");
+            assert!(!fast.fast_path_active(), "degraded backend reports scalar path");
+            assert_eq!(
+                want.loss_sum.to_bits(),
+                got.loss_sum.to_bits(),
+                "occurrence {occurrence}: loss differs from the scalar oracle"
+            );
+            for (pi, (x, y)) in want.d_params.iter().zip(&got.d_params).enumerate() {
+                assert!(
+                    x.iter().zip(y).all(|(u, v)| u.to_bits() == v.to_bits()),
+                    "occurrence {occurrence}: param {pi} differs from the scalar oracle"
+                );
+            }
+        }
+        fault::clear();
     }
 }

@@ -285,6 +285,58 @@ impl SweepEngine {
         }
         Ok(results)
     }
+
+    /// Crash-resumable sweep: evaluate scenarios one at a time, appending
+    /// each finished scenario's rendered artifact entry to the journal at
+    /// `journal_path` (fsynced per append). On rerun, scenarios whose
+    /// config fingerprint already appears in the journal are skipped and
+    /// their journaled render reused verbatim. Returns rendered entries in
+    /// scenario order, ready for [`super::output::doc_from_scenarios`] —
+    /// the assembled document is byte-identical to an uninterrupted
+    /// [`super::output::to_json`] over [`SweepEngine::run`], because each
+    /// scenario's batches come from its own seeded sampler (no cross-
+    /// scenario state to lose).
+    pub fn run_resumable(
+        &self,
+        scenarios: &[Scenario],
+        journal_path: &std::path::Path,
+    ) -> anyhow::Result<Vec<crate::util::json::Json>> {
+        use super::journal;
+        let done = journal::load(journal_path)?;
+        let mut out = Vec::with_capacity(scenarios.len());
+        let mut skipped = 0usize;
+        for s in scenarios {
+            let fp = journal::fingerprint(s);
+            if let Some(e) = done.iter().find(|e| e.fingerprint == fp) {
+                skipped += 1;
+                out.push(e.scenario.clone());
+                continue;
+            }
+            let results = self.run(std::slice::from_ref(s))?;
+            let rendered = super::output::scenario_json(&results[0]);
+            journal::append(
+                journal_path,
+                &journal::JournalEntry {
+                    fingerprint: fp,
+                    name: s.name.clone(),
+                    scenario: rendered.clone(),
+                },
+            )?;
+            // Deterministic kill site for the resumability tests and the CI
+            // fault matrix: dies *after* the journal append — the moment an
+            // external kill would be most tempted to lose work.
+            crate::util::fault::maybe_abort(crate::util::fault::SWEEP_KILL);
+            out.push(rendered);
+        }
+        if skipped > 0 {
+            crate::info!(
+                "sweep journal {}: reused {skipped}/{} completed scenario(s)",
+                journal_path.display(),
+                scenarios.len()
+            );
+        }
+        Ok(out)
+    }
 }
 
 /// The additive `dp_imbalance` metric for one scenario (None when dp <= 1):
@@ -586,6 +638,44 @@ mod tests {
             assert_eq!(a.candidates, b.candidates, "{}", a.scenario.name);
             assert_eq!(a.dp_imbalance, b.dp_imbalance, "{}", a.scenario.name);
         }
+    }
+
+    #[test]
+    fn resumable_run_is_byte_identical_to_uninterrupted() {
+        let scenarios = tiny_scenarios();
+        let dir = std::env::temp_dir().join("chunkflow_resumable_sweep_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let journal = dir.join("bench.journal");
+        let engine = SweepEngine::serial();
+        let uninterrupted =
+            crate::sweep::output::to_json(&engine.run(&scenarios).unwrap(), None);
+        // "Crash" after two scenarios: only those land in the journal.
+        let partial = engine.run_resumable(&scenarios[..2], &journal).unwrap();
+        assert_eq!(partial.len(), 2);
+        // The rerun reuses both journaled entries and finishes the rest;
+        // the reassembled document must match the uninterrupted bytes.
+        let entries = engine.run_resumable(&scenarios, &journal).unwrap();
+        let doc = crate::sweep::output::doc_from_scenarios(entries, None);
+        assert_eq!(
+            doc.pretty(),
+            uninterrupted.pretty(),
+            "resumed sweep artifact must be byte-identical"
+        );
+        // A config change (different seed) invalidates the journal entry:
+        // its fingerprint no longer matches, so the scenario re-runs
+        // instead of reusing a stale result.
+        let mut reseeded = scenarios.clone();
+        for s in &mut reseeded {
+            s.seed += 1;
+        }
+        let fresh = engine.run_resumable(&reseeded, &journal).unwrap();
+        let fresh_doc = crate::sweep::output::doc_from_scenarios(fresh, None);
+        assert_eq!(
+            fresh_doc.pretty(),
+            crate::sweep::output::to_json(&engine.run(&reseeded).unwrap(), None).pretty()
+        );
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

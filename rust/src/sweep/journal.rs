@@ -1,0 +1,200 @@
+//! Crash-resumable sweep journal.
+//!
+//! [`SweepEngine::run_resumable`](super::SweepEngine::run_resumable) appends
+//! one JSON line per *completed* scenario — its config fingerprint plus the
+//! fully rendered [`output::scenario_json`](super::output::scenario_json)
+//! entry — to a `.partial` file, fsyncing after each append. A rerun after a
+//! crash loads the journal, skips every scenario whose fingerprint is
+//! present, and reuses the journaled render verbatim, so the reassembled
+//! `BENCH_chunkflow.json` is byte-identical to an uninterrupted run.
+//!
+//! The journal is append-only, so the only damage a crash can inflict is a
+//! torn *last* line: [`load`] drops it (that scenario just re-runs) but
+//! refuses files with damage anywhere else — those are not journals.
+
+use std::io::Write;
+use std::path::Path;
+
+use crate::util::crc::crc32;
+use crate::util::json::Json;
+
+use super::scenario::Scenario;
+
+/// One completed scenario: its config fingerprint, its name (for logs), and
+/// its rendered artifact entry.
+#[derive(Clone, Debug)]
+pub struct JournalEntry {
+    pub fingerprint: String,
+    pub name: String,
+    pub scenario: Json,
+}
+
+/// Deterministic fingerprint of everything a scenario's result depends on
+/// (sweeps are pure functions of this description — the engine's
+/// determinism contract). Any config change — a different seed, an edited
+/// candidate grid — changes the fingerprint, so a stale journal entry is
+/// never reused for a different workload.
+pub fn fingerprint(s: &Scenario) -> String {
+    let candidates: Vec<Json> = s
+        .candidates
+        .iter()
+        .map(|&(cs, k)| Json::Arr(vec![Json::num(cs as f64), Json::num(k as f64)]))
+        .collect();
+    let desc = Json::obj(vec![
+        ("name", Json::str(s.name.clone())),
+        ("model", Json::str(s.model.name.clone())),
+        ("parallel", Json::str(s.parallel.paper_format())),
+        ("dp", Json::num(s.parallel.dp as f64)),
+        ("context_length", Json::num(s.context_length as f64)),
+        ("distribution", Json::str(s.distribution.clone())),
+        ("global_batch_size", Json::num(s.global_batch_size as f64)),
+        ("iters", Json::num(s.iters as f64)),
+        ("seed", Json::num(s.seed as f64)),
+        ("candidates", Json::Arr(candidates)),
+    ]);
+    format!("{:08x}", crc32(desc.dump().as_bytes()))
+}
+
+fn parse_entry(line: &str) -> anyhow::Result<JournalEntry> {
+    let j = Json::parse(line)?;
+    let fingerprint = j.req_str("fingerprint")?.to_string();
+    let name = j.req_str("name")?.to_string();
+    let scenario = j
+        .get("scenario")
+        .cloned()
+        .ok_or_else(|| anyhow::anyhow!("missing `scenario`"))?;
+    Ok(JournalEntry { fingerprint, name, scenario })
+}
+
+/// Load a journal. A missing file is an empty journal; a torn last line is
+/// dropped with a warning (its scenario re-runs); damage anywhere *before*
+/// the last line is an error — append-only writes cannot produce it.
+pub fn load(path: &Path) -> anyhow::Result<Vec<JournalEntry>> {
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(Vec::new()),
+        Err(e) => return Err(anyhow::Error::from(e).context(format!("reading {}", path.display()))),
+    };
+    let lines: Vec<&str> = text.split('\n').collect();
+    let mut entries = Vec::new();
+    for (i, raw) in lines.iter().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() {
+            continue;
+        }
+        match parse_entry(line) {
+            Ok(entry) => entries.push(entry),
+            Err(e) => {
+                let is_last = lines[i + 1..].iter().all(|l| l.trim().is_empty());
+                anyhow::ensure!(
+                    is_last,
+                    "corrupt sweep journal {} at line {}: {e:#}",
+                    path.display(),
+                    i + 1
+                );
+                crate::warn_!(
+                    "dropping torn last line of sweep journal {} ({e:#}); \
+                     its scenario will re-run",
+                    path.display()
+                );
+            }
+        }
+    }
+    Ok(entries)
+}
+
+/// Append one entry as a single JSON line and fsync, so a completed
+/// scenario survives any later crash.
+pub fn append(path: &Path, entry: &JournalEntry) -> anyhow::Result<()> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    let line = Json::obj(vec![
+        ("fingerprint", Json::str(entry.fingerprint.clone())),
+        ("name", Json::str(entry.name.clone())),
+        ("scenario", entry.scenario.clone()),
+    ])
+    .dump();
+    let mut f = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+    f.write_all(line.as_bytes())?;
+    f.write_all(b"\n")?;
+    f.flush()?;
+    f.sync_all()?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("chunkflow_journal_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    fn entry(fp: &str, name: &str) -> JournalEntry {
+        JournalEntry {
+            fingerprint: fp.to_string(),
+            name: name.to_string(),
+            scenario: Json::obj(vec![("name", Json::str(name.to_string()))]),
+        }
+    }
+
+    #[test]
+    fn roundtrips_appended_entries_in_order() {
+        let path = tmp("roundtrip.journal");
+        let _ = std::fs::remove_file(&path);
+        assert!(load(&path).unwrap().is_empty(), "missing file = empty journal");
+        append(&path, &entry("aaaa", "first")).unwrap();
+        append(&path, &entry("bbbb", "second")).unwrap();
+        let got = load(&path).unwrap();
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[0].fingerprint, "aaaa");
+        assert_eq!(got[1].name, "second");
+        assert_eq!(got[1].scenario.req_str("name").unwrap(), "second");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn torn_last_line_is_dropped_but_earlier_damage_errors() {
+        let path = tmp("torn.journal");
+        let _ = std::fs::remove_file(&path);
+        append(&path, &entry("aaaa", "first")).unwrap();
+        // Simulate a crash mid-append: a second line missing its tail.
+        let mut text = std::fs::read_to_string(&path).unwrap();
+        text.push_str("{\"fingerprint\": \"bbbb\", \"name\": \"sec");
+        std::fs::write(&path, &text).unwrap();
+        let got = load(&path).unwrap();
+        assert_eq!(got.len(), 1, "torn tail dropped, intact prefix kept");
+        assert_eq!(got[0].fingerprint, "aaaa");
+        // Damage before the last line is not a torn append — refuse it.
+        let good = Json::obj(vec![
+            ("fingerprint", Json::str("cccc")),
+            ("name", Json::str("third")),
+            ("scenario", Json::obj(vec![])),
+        ])
+        .dump();
+        std::fs::write(&path, format!("not json at all\n{good}\n")).unwrap();
+        assert!(load(&path).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn fingerprint_tracks_every_result_relevant_field() {
+        let base = Scenario::smoke().remove(0);
+        let fp = fingerprint(&base);
+        assert_eq!(fp, fingerprint(&base.clone()), "fingerprint is deterministic");
+        let mut seeded = base.clone();
+        seeded.seed += 1;
+        assert_ne!(fp, fingerprint(&seeded), "seed changes the fingerprint");
+        let mut grid = base.clone();
+        grid.candidates.push((123, 4));
+        assert_ne!(fp, fingerprint(&grid), "candidate grid changes the fingerprint");
+        let mut ctx = base;
+        ctx.context_length *= 2;
+        assert_ne!(fp, fingerprint(&ctx), "context length changes the fingerprint");
+    }
+}

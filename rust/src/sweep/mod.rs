@@ -1,6 +1,6 @@
 //! The scenario-sweep subsystem: the measurement backbone of the repo.
 //!
-//! Three pieces:
+//! Four pieces:
 //! - [`scenario`] — the registry of named workloads (paper Table 6 model ×
 //!   context matrix plus long-tail SFT / continual pre-training /
 //!   uniform-length distributions);
@@ -10,11 +10,15 @@
 //!   (the same primitive `tune::GridSearch` and the `report` generators run
 //!   on);
 //! - [`output`] — deterministic, schema-versioned `BENCH_chunkflow.json`
-//!   emission, the machine-readable perf trajectory CI archives.
+//!   emission, the machine-readable perf trajectory CI archives;
+//! - [`journal`] — the crash-resumable per-scenario journal behind
+//!   [`SweepEngine::run_resumable`]: an interrupted sweep reruns only the
+//!   missing scenarios and still emits byte-identical artifact bytes.
 //!
 //! `cargo run --release -- sweep --scenario smoke` is the CI entrypoint.
 
 pub mod engine;
+pub mod journal;
 pub mod output;
 pub mod probe;
 pub mod scenario;
@@ -23,7 +27,8 @@ pub use engine::{
     CandidateResult, DpImbalance, Parallelism, ScenarioResult, SweepEngine, UnitMetrics,
 };
 pub use output::{
-    compare_scenarios, to_json, validate, write_bench_json, DEFAULT_BENCH_PATH, SCHEMA_VERSION,
+    compare_scenarios, doc_from_scenarios, scenario_json, to_json, validate, write_bench_json,
+    DEFAULT_BENCH_PATH, SCHEMA_VERSION,
 };
 pub use probe::{attach_measured_exec, measure_scenario, MeasuredExec};
 pub use scenario::Scenario;

@@ -30,87 +30,92 @@ fn metrics_json(m: &UnitMetrics) -> Json {
     ])
 }
 
-/// Render sweep results (plus optional micro-benchmark rows from
-/// [`crate::util::bench::Bencher::to_json`]) as the versioned document.
-pub fn to_json(results: &[ScenarioResult], micro_benchmarks: Option<Json>) -> Json {
-    let scenarios = results
+/// Render one scenario's result as its artifact entry. Split out of
+/// [`to_json`] so the crash-resumable sweep can journal each scenario's
+/// *rendered* entry the moment it finishes — reassembling journaled entries
+/// with [`doc_from_scenarios`] is then byte-identical to an uninterrupted
+/// [`to_json`] run.
+pub fn scenario_json(r: &ScenarioResult) -> Json {
+    let s = &r.scenario;
+    let candidates: Vec<Json> = r
+        .candidates
         .iter()
-        .map(|r| {
-            let s = &r.scenario;
-            let candidates: Vec<Json> = r
-                .candidates
-                .iter()
-                .map(|c| {
-                    Json::obj(vec![
-                        ("chunk_size", Json::num(c.chunk_size as f64)),
-                        ("k", Json::num(c.k as f64)),
-                        ("feasible", Json::Bool(c.feasible)),
-                        ("metrics", metrics_json(&c.metrics)),
-                    ])
-                })
-                .collect();
-            let best = r
-                .best()
-                .map(|b| {
-                    Json::obj(vec![
-                        ("chunk_size", Json::num(b.chunk_size as f64)),
-                        ("k", Json::num(b.k as f64)),
-                        ("iteration_seconds", Json::num(b.metrics.iteration_seconds)),
-                    ])
-                })
-                .unwrap_or(Json::Null);
-            let mut fields = vec![
-                ("name", Json::str(s.name.clone())),
-                ("model", Json::str(s.model.name.clone())),
-                ("parallel", Json::str(s.parallel.paper_format())),
-                ("context_length", Json::num(s.context_length as f64)),
-                ("distribution", Json::str(s.distribution.clone())),
-                ("global_batch_size", Json::num(s.global_batch_size as f64)),
-                ("iters", Json::num(s.iters as f64)),
-                ("seed", Json::num(s.seed as f64)),
-                ("baseline", metrics_json(&r.baseline)),
-                ("candidates", Json::Arr(candidates)),
-                ("best", best),
-                (
-                    "speedup",
-                    r.speedup().map(Json::num).unwrap_or(Json::Null),
-                ),
-            ];
-            // Optional executor probe (`--measure-exec`): measured bubble
-            // ratio next to the predicted one. Additive — absent in the
-            // default artifact, and never compared by `benchdiff` (its
-            // wall-clock component is nondeterministic by nature).
-            if let Some(me) = &r.measured_exec {
-                fields.push((
-                    "measured_exec",
-                    Json::obj(vec![
-                        ("stages", Json::num(me.stages as f64)),
-                        ("chunk_size", Json::num(me.chunk_size as f64)),
-                        ("k", Json::num(me.k as f64)),
-                        ("context_length", Json::num(me.context_length as f64)),
-                        ("global_batch_size", Json::num(me.global_batch_size as f64)),
-                        ("bubble_ratio_measured", Json::num(me.bubble_ratio_measured)),
-                        ("bubble_ratio_predicted", Json::num(me.bubble_ratio_predicted)),
-                        ("act_peak_chunks", Json::num(me.act_peak_chunks as f64)),
-                    ]),
-                ));
-            }
-            // Additive DP load-imbalance block: present only for dp > 1
-            // scenarios, so every existing scenario's bytes are unchanged;
-            // `benchdiff` ignores it (it only diffs baseline/best/speedup).
-            if let Some(di) = &r.dp_imbalance {
-                fields.push((
-                    "dp_imbalance",
-                    Json::obj(vec![
-                        ("dp", Json::num(di.dp as f64)),
-                        ("round_robin", Json::num(di.round_robin)),
-                        ("chunk_balanced", Json::num(di.chunk_balanced)),
-                    ]),
-                ));
-            }
-            Json::obj(fields)
+        .map(|c| {
+            Json::obj(vec![
+                ("chunk_size", Json::num(c.chunk_size as f64)),
+                ("k", Json::num(c.k as f64)),
+                ("feasible", Json::Bool(c.feasible)),
+                ("metrics", metrics_json(&c.metrics)),
+            ])
         })
         .collect();
+    let best = r
+        .best()
+        .map(|b| {
+            Json::obj(vec![
+                ("chunk_size", Json::num(b.chunk_size as f64)),
+                ("k", Json::num(b.k as f64)),
+                ("iteration_seconds", Json::num(b.metrics.iteration_seconds)),
+            ])
+        })
+        .unwrap_or(Json::Null);
+    let mut fields = vec![
+        ("name", Json::str(s.name.clone())),
+        ("model", Json::str(s.model.name.clone())),
+        ("parallel", Json::str(s.parallel.paper_format())),
+        ("context_length", Json::num(s.context_length as f64)),
+        ("distribution", Json::str(s.distribution.clone())),
+        ("global_batch_size", Json::num(s.global_batch_size as f64)),
+        ("iters", Json::num(s.iters as f64)),
+        ("seed", Json::num(s.seed as f64)),
+        ("baseline", metrics_json(&r.baseline)),
+        ("candidates", Json::Arr(candidates)),
+        ("best", best),
+        (
+            "speedup",
+            r.speedup().map(Json::num).unwrap_or(Json::Null),
+        ),
+    ];
+    // Optional executor probe (`--measure-exec`): measured bubble
+    // ratio next to the predicted one. Additive — absent in the
+    // default artifact, and never compared by `benchdiff` (its
+    // wall-clock component is nondeterministic by nature).
+    if let Some(me) = &r.measured_exec {
+        fields.push((
+            "measured_exec",
+            Json::obj(vec![
+                ("stages", Json::num(me.stages as f64)),
+                ("chunk_size", Json::num(me.chunk_size as f64)),
+                ("k", Json::num(me.k as f64)),
+                ("context_length", Json::num(me.context_length as f64)),
+                ("global_batch_size", Json::num(me.global_batch_size as f64)),
+                ("bubble_ratio_measured", Json::num(me.bubble_ratio_measured)),
+                ("bubble_ratio_predicted", Json::num(me.bubble_ratio_predicted)),
+                ("act_peak_chunks", Json::num(me.act_peak_chunks as f64)),
+            ]),
+        ));
+    }
+    // Additive DP load-imbalance block: present only for dp > 1
+    // scenarios, so every existing scenario's bytes are unchanged;
+    // `benchdiff` ignores it (it only diffs baseline/best/speedup).
+    if let Some(di) = &r.dp_imbalance {
+        fields.push((
+            "dp_imbalance",
+            Json::obj(vec![
+                ("dp", Json::num(di.dp as f64)),
+                ("round_robin", Json::num(di.round_robin)),
+                ("chunk_balanced", Json::num(di.chunk_balanced)),
+            ]),
+        ));
+    }
+    Json::obj(fields)
+}
+
+/// Assemble the versioned document from already-rendered scenario entries
+/// (in scenario order). [`to_json`] is `doc_from_scenarios` over fresh
+/// [`scenario_json`] renders; the resumable sweep calls it over a mix of
+/// journaled and fresh entries instead.
+pub fn doc_from_scenarios(scenarios: Vec<Json>, micro_benchmarks: Option<Json>) -> Json {
     let mut fields = vec![
         ("schema_version", Json::num(SCHEMA_VERSION as f64)),
         ("generator", Json::str("chunkflow-sweep")),
@@ -120,6 +125,12 @@ pub fn to_json(results: &[ScenarioResult], micro_benchmarks: Option<Json>) -> Js
         fields.push(("micro_benchmarks", micro));
     }
     Json::obj(fields)
+}
+
+/// Render sweep results (plus optional micro-benchmark rows from
+/// [`crate::util::bench::Bencher::to_json`]) as the versioned document.
+pub fn to_json(results: &[ScenarioResult], micro_benchmarks: Option<Json>) -> Json {
+    doc_from_scenarios(results.iter().map(scenario_json).collect(), micro_benchmarks)
 }
 
 /// Write the versioned document to `path`.

@@ -2,27 +2,46 @@
 //! (header JSON + raw little-endian f32 payloads) so long fine-tuning runs
 //! can resume — standard launcher functionality.
 //!
-//! Format v2 (current): header carries `version: 2` and `adam_t`, and the
-//! payload is params followed by the Adam first and second moments (same
-//! sizes as the params), so a restored run continues the exact optimizer
-//! trajectory. v1 files (params only) still load — the optimizer restarts.
+//! Format v3 (current): on top of v2 (Adam moments + `adam_t`), the header
+//! is followed by a 4-byte CRC-32 of the header bytes, and the header
+//! carries `section_crcs` — one CRC-32 per payload section (params, Adam
+//! m, Adam v) — so a torn or bit-rotted file is detected at load instead
+//! of silently corrupting a resumed run. Writes are crash-atomic: the tmp
+//! file is fsynced before `rename`, and the parent directory is fsynced
+//! after, so a power cut leaves either the old generation or the new one,
+//! never a hybrid. [`save_rotating`] keeps the last N generations in a
+//! directory and [`latest_valid`] walks them newest-first, skipping any
+//! that fail integrity checks — the recovery path `--resume` uses.
+//!
+//! v1 (params only) and v2 files still load; they simply have no CRCs to
+//! verify.
+//!
+//! Layout:
+//!
+//! ```text
+//! MAGIC "CHKFLOW1" | header_len u64 LE | header JSON | header CRC-32 (v3+)
+//!   | params f32 LE | [adam_m f32 LE | adam_v f32 LE]
+//! ```
 
 use std::io::{Read, Write};
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 use super::adam::AdamState;
 use crate::runtime::FlatParams;
+use crate::util::crc::{crc32, Crc32};
+use crate::util::fault;
 use crate::util::json::Json;
+use crate::util::rng::Rng;
 
 const MAGIC: &[u8; 8] = b"CHKFLOW1";
-const VERSION: u64 = 2;
+const VERSION: u64 = 3;
 
 /// Everything a checkpoint restores.
 #[derive(Clone, Debug)]
 pub struct TrainState {
     pub params: FlatParams,
     pub step: u64,
-    /// Present on v2 checkpoints saved with optimizer state.
+    /// Present on v2+ checkpoints saved with optimizer state.
     pub adam: Option<AdamState>,
 }
 
@@ -35,11 +54,25 @@ fn write_bufs(f: &mut impl Write, bufs: &[Vec<f32>]) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn read_bufs(f: &mut impl Read, sizes: &[usize]) -> anyhow::Result<Vec<Vec<f32>>> {
+/// CRC-32 of a section's on-disk byte stream (the little-endian f32s).
+fn crc_of_bufs(bufs: &[Vec<f32>]) -> u32 {
+    let mut c = Crc32::new();
+    for p in bufs {
+        for v in p {
+            c.update(&v.to_le_bytes());
+        }
+    }
+    c.finalize()
+}
+
+/// Read one section; returns the buffers plus the CRC-32 of the raw bytes.
+fn read_bufs(f: &mut impl Read, sizes: &[usize]) -> anyhow::Result<(Vec<Vec<f32>>, u32)> {
     let mut out = Vec::with_capacity(sizes.len());
+    let mut crc = Crc32::new();
     for &n in sizes {
         let mut bytes = vec![0u8; n * 4];
         f.read_exact(&mut bytes)?;
+        crc.update(&bytes);
         out.push(
             bytes
                 .chunks_exact(4)
@@ -47,11 +80,12 @@ fn read_bufs(f: &mut impl Read, sizes: &[usize]) -> anyhow::Result<Vec<Vec<f32>>
                 .collect(),
         );
     }
-    Ok(out)
+    Ok((out, crc.finalize()))
 }
 
-/// Write params (+ step counter + optional Adam state) to `path` atomically
-/// (tmp + rename).
+/// Write params (+ step counter + optional Adam state) to `path`
+/// crash-atomically: write tmp, fsync tmp, rename over `path`, fsync the
+/// parent directory (making the rename itself durable).
 pub fn save(
     path: &Path,
     params: &FlatParams,
@@ -73,6 +107,13 @@ pub fn save(
             );
         }
     }
+    // Section CRCs are computed in a pre-pass (cheap: pure memory reads) so
+    // the header can be written before the payload in a single stream.
+    let mut section_crcs = vec![crc_of_bufs(&params.0)];
+    if let Some(st) = adam {
+        section_crcs.push(crc_of_bufs(&st.m));
+        section_crcs.push(crc_of_bufs(&st.v));
+    }
     let header = Json::obj(vec![
         ("version", Json::num(VERSION as f64)),
         ("step", Json::num(step as f64)),
@@ -82,6 +123,10 @@ pub fn save(
         ),
         ("has_adam", Json::Bool(adam.is_some())),
         ("adam_t", Json::num(adam.map(|a| a.t).unwrap_or(0) as f64)),
+        (
+            "section_crcs",
+            Json::Arr(section_crcs.iter().map(|&c| Json::num(c as f64)).collect()),
+        ),
     ])
     .dump();
     let tmp = path.with_extension("tmp");
@@ -93,20 +138,67 @@ pub fn save(
         f.write_all(MAGIC)?;
         f.write_all(&(header.len() as u64).to_le_bytes())?;
         f.write_all(header.as_bytes())?;
+        f.write_all(&crc32(header.as_bytes()).to_le_bytes())?;
         write_bufs(&mut f, &params.0)?;
         if let Some(st) = adam {
             write_bufs(&mut f, &st.m)?;
             write_bufs(&mut f, &st.v)?;
         }
         f.flush()?;
+        // fsync the tmp file before the rename: rename-then-crash must not
+        // expose a named checkpoint whose blocks never hit the disk.
+        f.into_inner()?.sync_all()?;
     }
     std::fs::rename(&tmp, path)?;
+    // fsync the directory so the rename (the commit point) is durable too.
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::File::open(parent)?.sync_all()?;
+        }
+    }
+    apply_write_faults(path)?;
     Ok(())
 }
 
-/// Load a checkpoint (v1 or v2).
+/// Fault-injection hook simulating torn writes / media corruption on the
+/// just-committed checkpoint. Compiles to nothing without `fault-inject`.
+fn apply_write_faults(path: &Path) -> anyhow::Result<()> {
+    if let Some(f) = fault::fire(fault::CKPT_TRUNCATE) {
+        let len = std::fs::metadata(path)?.len();
+        let keep = f.param.unwrap_or_else(|| Rng::new(f.seed).gen_range(len.max(1))).min(len);
+        let file = std::fs::OpenOptions::new().write(true).open(path)?;
+        file.set_len(keep)?;
+        file.sync_all()?;
+        crate::warn_!(
+            "injected fault: truncated checkpoint {} from {len} to {keep} bytes",
+            path.display()
+        );
+    }
+    if let Some(f) = fault::fire(fault::CKPT_BITFLIP) {
+        let len = std::fs::metadata(path)?.len();
+        if len > 0 {
+            let mut rng = Rng::new(f.seed);
+            let pos = f.param.unwrap_or_else(|| rng.gen_range(len)).min(len - 1);
+            let bit = (rng.gen_range(8)) as u8;
+            let mut bytes = std::fs::read(path)?;
+            bytes[pos as usize] ^= 1 << bit;
+            std::fs::write(path, &bytes)?;
+            crate::warn_!(
+                "injected fault: flipped bit {bit} of byte {pos} in checkpoint {}",
+                path.display()
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Load a checkpoint (v1, v2, or v3). Corrupt or torn files of any
+/// version return a clean `Err` — this function never panics on bad
+/// input, which is what lets [`latest_valid`] probe candidates safely.
 pub fn load(path: &Path) -> anyhow::Result<TrainState> {
-    let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+    let file = std::fs::File::open(path)?;
+    let file_len = file.metadata()?.len();
+    let mut f = std::io::BufReader::new(file);
     let mut magic = [0u8; 8];
     f.read_exact(&mut magic)?;
     anyhow::ensure!(&magic == MAGIC, "not a chunkflow checkpoint");
@@ -123,23 +215,137 @@ pub fn load(path: &Path) -> anyhow::Result<TrainState> {
         version <= VERSION,
         "checkpoint version {version} is newer than supported {VERSION}"
     );
+    let mut consumed = 8 + 8 + hlen as u64;
+    if version >= 3 {
+        // Verify the header's own CRC before trusting any field in it —
+        // in particular before allocating payload buffers from its sizes.
+        let mut crc4 = [0u8; 4];
+        f.read_exact(&mut crc4)?;
+        consumed += 4;
+        let want = u32::from_le_bytes(crc4);
+        let got = crc32(&hbuf);
+        anyhow::ensure!(
+            got == want,
+            "checkpoint header CRC mismatch (stored {want:#010x}, computed {got:#010x})"
+        );
+    }
     let step = header.req_u64("step")?;
-    let sizes: Vec<usize> = header
+    let sizes_arr = header
         .get("param_sizes")
         .and_then(|s| s.as_arr())
-        .ok_or_else(|| anyhow::anyhow!("missing param_sizes"))?
-        .iter()
-        .filter_map(|v| v.as_usize())
-        .collect();
-    let params = FlatParams(read_bufs(&mut f, &sizes)?);
-    let adam = if header.opt_bool("has_adam", false) {
-        let m = read_bufs(&mut f, &sizes)?;
-        let v = read_bufs(&mut f, &sizes)?;
+        .ok_or_else(|| anyhow::anyhow!("missing param_sizes"))?;
+    let sizes: Vec<usize> = sizes_arr.iter().filter_map(|v| v.as_usize()).collect();
+    anyhow::ensure!(sizes.len() == sizes_arr.len(), "non-numeric entry in param_sizes");
+    let has_adam = header.opt_bool("has_adam", false);
+    // Bound the payload by the actual file size before allocating, so a
+    // garbage v1/v2 header (no CRC to catch it) cannot demand an absurd
+    // allocation or a long doomed read.
+    let section_bytes: u64 = sizes.iter().map(|&n| n as u64 * 4).sum();
+    let num_sections = if has_adam { 3 } else { 1 };
+    anyhow::ensure!(
+        consumed + section_bytes * num_sections <= file_len,
+        "checkpoint truncated: header promises {} payload bytes but only {} remain",
+        section_bytes * num_sections,
+        file_len - consumed.min(file_len)
+    );
+    let expected_crcs: Option<Vec<u32>> = header.get("section_crcs").and_then(|s| s.as_arr()).map(
+        |arr| arr.iter().filter_map(|v| v.as_u64().map(|c| c as u32)).collect(),
+    );
+    let check = |section: usize, name: &str, got: u32| -> anyhow::Result<()> {
+        if let Some(crcs) = &expected_crcs {
+            let want = *crcs
+                .get(section)
+                .ok_or_else(|| anyhow::anyhow!("missing section_crcs[{section}] ({name})"))?;
+            anyhow::ensure!(
+                got == want,
+                "checkpoint section `{name}` CRC mismatch (stored {want:#010x}, computed {got:#010x})"
+            );
+        }
+        Ok(())
+    };
+    let (params, crc) = read_bufs(&mut f, &sizes)?;
+    check(0, "params", crc)?;
+    let params = FlatParams(params);
+    let adam = if has_adam {
+        let (m, crc_m) = read_bufs(&mut f, &sizes)?;
+        check(1, "adam_m", crc_m)?;
+        let (v, crc_v) = read_bufs(&mut f, &sizes)?;
+        check(2, "adam_v", crc_v)?;
         Some(AdamState { m, v, t: header.opt_u64("adam_t", 0) })
     } else {
         None
     };
     Ok(TrainState { params, step, adam })
+}
+
+/// Filename for a rotation generation, ordered lexicographically by step.
+fn generation_name(step: u64) -> String {
+    format!("step-{step:010}.ckpt")
+}
+
+/// Enumerate rotation generations in `dir`, sorted ascending by step.
+fn generations(dir: &Path) -> anyhow::Result<Vec<(u64, PathBuf)>> {
+    let mut out = Vec::new();
+    if !dir.exists() {
+        return Ok(out);
+    }
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else { continue };
+        let Some(step) = name
+            .strip_prefix("step-")
+            .and_then(|s| s.strip_suffix(".ckpt"))
+            .and_then(|s| s.parse::<u64>().ok())
+        else {
+            continue;
+        };
+        out.push((step, entry.path()));
+    }
+    out.sort();
+    Ok(out)
+}
+
+/// Save a rotation generation `step-NNNNNNNNNN.ckpt` under `dir`, then
+/// prune the oldest generations so at most `keep` remain. Returns the
+/// path written.
+pub fn save_rotating(
+    dir: &Path,
+    params: &FlatParams,
+    step: u64,
+    adam: Option<&AdamState>,
+    keep: usize,
+) -> anyhow::Result<PathBuf> {
+    anyhow::ensure!(keep >= 1, "checkpoint rotation must keep at least 1 generation");
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(generation_name(step));
+    save(&path, params, step, adam)?;
+    let gens = generations(dir)?;
+    if gens.len() > keep {
+        for (_, old) in &gens[..gens.len() - keep] {
+            std::fs::remove_file(old)?;
+        }
+        std::fs::File::open(dir)?.sync_all()?;
+    }
+    Ok(path)
+}
+
+/// Find the newest generation in `dir` that loads cleanly, skipping (with
+/// a logged warning) any that are corrupt or torn. Returns `None` when no
+/// valid checkpoint exists.
+pub fn latest_valid(dir: &Path) -> anyhow::Result<Option<(PathBuf, TrainState)>> {
+    for (_, path) in generations(dir)?.into_iter().rev() {
+        match load(&path) {
+            Ok(state) => return Ok(Some((path, state))),
+            Err(e) => {
+                crate::warn_!(
+                    "checkpoint {} failed integrity checks, falling back a generation: {e}",
+                    path.display()
+                );
+            }
+        }
+    }
+    Ok(None)
 }
 
 #[cfg(test)]
@@ -161,10 +367,16 @@ mod tests {
         }
     }
 
+    fn tmp_dir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("chunkflow_ckpt_test").join(name);
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
     #[test]
     fn roundtrip_params_only() {
-        let dir = std::env::temp_dir().join("chunkflow_ckpt_test");
-        let path = dir.join("a.ckpt");
+        let path = tmp_dir("roundtrip_a").join("a.ckpt");
         let p = params();
         save(&path, &p, 42, None).unwrap();
         let state = load(&path).unwrap();
@@ -175,8 +387,7 @@ mod tests {
 
     #[test]
     fn roundtrip_with_adam_state() {
-        let dir = std::env::temp_dir().join("chunkflow_ckpt_test");
-        let path = dir.join("b.ckpt");
+        let path = tmp_dir("roundtrip_b").join("b.ckpt");
         let p = params();
         let st = adam_state();
         save(&path, &p, 7, Some(&st)).unwrap();
@@ -189,10 +400,9 @@ mod tests {
 
     #[test]
     fn v1_files_load_without_adam() {
-        // A v1 checkpoint: same magic + header without version/has_adam.
-        let dir = std::env::temp_dir().join("chunkflow_ckpt_test");
-        std::fs::create_dir_all(&dir).unwrap();
-        let path = dir.join("v1.ckpt");
+        // A v1 checkpoint: same magic + header without version/has_adam,
+        // and no header CRC trailer.
+        let path = tmp_dir("v1").join("v1.ckpt");
         let p = params();
         let header = Json::obj(vec![
             ("step", Json::num(3.0)),
@@ -216,19 +426,47 @@ mod tests {
     }
 
     #[test]
+    fn v2_files_load_without_crc_checks() {
+        // A v2 checkpoint: version 2, Adam payload, no CRCs anywhere.
+        let path = tmp_dir("v2").join("v2.ckpt");
+        let p = params();
+        let st = adam_state();
+        let header = Json::obj(vec![
+            ("version", Json::num(2.0)),
+            ("step", Json::num(11.0)),
+            (
+                "param_sizes",
+                Json::Arr(p.0.iter().map(|q| Json::num(q.len() as f64)).collect()),
+            ),
+            ("has_adam", Json::Bool(true)),
+            ("adam_t", Json::num(st.t as f64)),
+        ])
+        .dump();
+        let mut f = std::io::BufWriter::new(std::fs::File::create(&path).unwrap());
+        f.write_all(MAGIC).unwrap();
+        f.write_all(&(header.len() as u64).to_le_bytes()).unwrap();
+        f.write_all(header.as_bytes()).unwrap();
+        write_bufs(&mut f, &p.0).unwrap();
+        write_bufs(&mut f, &st.m).unwrap();
+        write_bufs(&mut f, &st.v).unwrap();
+        f.flush().unwrap();
+        drop(f);
+        let state = load(&path).unwrap();
+        assert_eq!(state.step, 11);
+        assert_eq!(state.params.0, p.0);
+        assert_eq!(state.adam.expect("adam"), st);
+    }
+
+    #[test]
     fn rejects_garbage() {
-        let dir = std::env::temp_dir().join("chunkflow_ckpt_test");
-        std::fs::create_dir_all(&dir).unwrap();
-        let path = dir.join("bad.ckpt");
+        let path = tmp_dir("garbage").join("bad.ckpt");
         std::fs::write(&path, b"definitely not a checkpoint").unwrap();
         assert!(load(&path).is_err());
     }
 
     #[test]
     fn rejects_future_version() {
-        let dir = std::env::temp_dir().join("chunkflow_ckpt_test");
-        std::fs::create_dir_all(&dir).unwrap();
-        let path = dir.join("future.ckpt");
+        let path = tmp_dir("future").join("future.ckpt");
         let header = Json::obj(vec![
             ("version", Json::num(99.0)),
             ("step", Json::num(0.0)),
@@ -246,9 +484,28 @@ mod tests {
     }
 
     #[test]
+    fn rejects_payload_larger_than_file() {
+        // A v1-style header promising a petabyte of params must fail the
+        // size sanity check, not attempt the allocation.
+        let path = tmp_dir("huge").join("huge.ckpt");
+        let header = Json::obj(vec![
+            ("step", Json::num(0.0)),
+            ("param_sizes", Json::Arr(vec![Json::num(1e15)])),
+        ])
+        .dump();
+        let mut f = std::io::BufWriter::new(std::fs::File::create(&path).unwrap());
+        f.write_all(MAGIC).unwrap();
+        f.write_all(&(header.len() as u64).to_le_bytes()).unwrap();
+        f.write_all(header.as_bytes()).unwrap();
+        f.flush().unwrap();
+        drop(f);
+        let err = load(&path).unwrap_err().to_string();
+        assert!(err.contains("truncated"), "{err}");
+    }
+
+    #[test]
     fn mismatched_adam_state_rejected_at_save() {
-        let dir = std::env::temp_dir().join("chunkflow_ckpt_test");
-        let path = dir.join("mismatch.ckpt");
+        let path = tmp_dir("mismatch").join("mismatch.ckpt");
         let p = params();
         let mut st = adam_state();
         st.m.pop();
@@ -257,8 +514,7 @@ mod tests {
 
     #[test]
     fn overwrite_is_atomic_and_latest_wins() {
-        let dir = std::env::temp_dir().join("chunkflow_ckpt_test");
-        let path = dir.join("c.ckpt");
+        let path = tmp_dir("overwrite").join("c.ckpt");
         save(&path, &params(), 1, None).unwrap();
         let mut p2 = params();
         p2.0[0][0] = 999.0;
@@ -267,5 +523,112 @@ mod tests {
         assert_eq!(state.step, 2);
         assert_eq!(state.params.0[0][0], 999.0);
         assert!(state.adam.is_some());
+    }
+
+    #[test]
+    fn payload_corruption_is_detected() {
+        let path = tmp_dir("corrupt_payload").join("c.ckpt");
+        save(&path, &params(), 5, Some(&adam_state())).unwrap();
+        let clean = std::fs::read(&path).unwrap();
+        // Flip a payload byte in each section; the per-section CRC must
+        // name the right section.
+        let header_end = clean.len() - 3 * (100 + 7) * 4;
+        for (section, name) in [(0usize, "params"), (1, "adam_m"), (2, "adam_v")] {
+            let mut bytes = clean.clone();
+            let pos = header_end + section * (100 + 7) * 4 + 13;
+            bytes[pos] ^= 0x40;
+            std::fs::write(&path, &bytes).unwrap();
+            let err = load(&path).unwrap_err().to_string();
+            assert!(err.contains(name), "section {section}: {err}");
+        }
+    }
+
+    #[test]
+    fn fuzz_truncations_and_bitflips_never_panic() {
+        // Satellite: truncate at every section boundary (and a sweep of
+        // other lengths), and flip seeded random bits; `load` must always
+        // return a clean Err, never panic, never succeed on corrupt data.
+        let dir = tmp_dir("fuzz");
+        let path = dir.join("f.ckpt");
+        save(&path, &params(), 9, Some(&adam_state())).unwrap();
+        let clean = std::fs::read(&path).unwrap();
+        let section = (100 + 7) * 4;
+        let header_end = clean.len() - 3 * section;
+        let boundaries = [
+            0,
+            8,                   // after magic
+            16,                  // after header length
+            header_end - 4,      // after header JSON (before header CRC)
+            header_end,          // after header CRC
+            header_end + section,
+            header_end + 2 * section,
+        ];
+        for &cut in &boundaries {
+            std::fs::write(&path, &clean[..cut]).unwrap();
+            assert!(load(&path).is_err(), "truncation at {cut} must fail");
+        }
+        // Sweep every 37th length too, to hit mid-section tears.
+        for cut in (0..clean.len()).step_by(37) {
+            std::fs::write(&path, &clean[..cut]).unwrap();
+            assert!(load(&path).is_err(), "truncation at {cut} must fail");
+        }
+        // Seeded single-bit flips across the whole file.
+        let mut rng = Rng::new(0xFA57_F00D);
+        for _ in 0..200 {
+            let pos = rng.gen_range(clean.len() as u64) as usize;
+            let bit = rng.gen_range(8) as u8;
+            let mut bytes = clean.clone();
+            bytes[pos] ^= 1 << bit;
+            std::fs::write(&path, &bytes).unwrap();
+            assert!(load(&path).is_err(), "bit flip at byte {pos} bit {bit} must fail");
+        }
+        // The pristine bytes still load.
+        std::fs::write(&path, &clean).unwrap();
+        assert!(load(&path).is_ok());
+    }
+
+    #[test]
+    fn rotation_keeps_last_n_generations() {
+        let dir = tmp_dir("rotate");
+        for step in 1..=5 {
+            save_rotating(&dir, &params(), step, None, 3).unwrap();
+        }
+        let gens = generations(&dir).unwrap();
+        let steps: Vec<u64> = gens.iter().map(|(s, _)| *s).collect();
+        assert_eq!(steps, vec![3, 4, 5]);
+        let (path, state) = latest_valid(&dir).unwrap().expect("some generation");
+        assert_eq!(state.step, 5);
+        assert!(path.ends_with("step-0000000005.ckpt"));
+    }
+
+    #[test]
+    fn latest_valid_falls_back_over_corrupt_generations() {
+        let dir = tmp_dir("fallback");
+        for step in 1..=3 {
+            save_rotating(&dir, &params(), step, Some(&adam_state()), 3).unwrap();
+        }
+        // Tear the newest generation and bit-rot the middle one.
+        let newest = dir.join(generation_name(3));
+        let bytes = std::fs::read(&newest).unwrap();
+        std::fs::write(&newest, &bytes[..bytes.len() / 2]).unwrap();
+        let mid = dir.join(generation_name(2));
+        let mut bytes = std::fs::read(&mid).unwrap();
+        let last = bytes.len() - 10;
+        bytes[last] ^= 0x01;
+        std::fs::write(&mid, &bytes).unwrap();
+        let (path, state) = latest_valid(&dir).unwrap().expect("generation 1 survives");
+        assert_eq!(state.step, 1);
+        assert!(path.ends_with(generation_name(1).as_str()));
+        // With every generation corrupt, resume reports none rather than
+        // loading garbage.
+        let oldest = dir.join(generation_name(1));
+        std::fs::write(&oldest, b"CHKFLOW1 but not really").unwrap();
+        assert!(latest_valid(&dir).unwrap().is_none());
+    }
+
+    #[test]
+    fn latest_valid_on_missing_dir_is_none() {
+        let dir = tmp_dir("missing").join("never_created");
+        assert!(latest_valid(&dir).unwrap().is_none());
     }
 }

@@ -38,11 +38,12 @@ pub use adam::{Adam, AdamState};
 
 use std::collections::BTreeMap;
 use std::path::Path;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::chunk::{construct_chunks, Chunk, ChunkKind, ChunkSet};
 use crate::config::TrainConfig;
 use crate::data::{BatchSampler, LengthDistribution, SyntheticCorpus};
+use crate::pipeline::{ExecOptions, RetryPolicy};
 use crate::runtime::{Backend, ChunkInputs, FlatParams, ReferenceBackend, Runtime, Scalar};
 use crate::schedule::{schedule_group, validate_group_plan, ChunkOp};
 use crate::state::{OffloadStore, StateKey, StateStore};
@@ -168,6 +169,9 @@ pub struct StepMetrics {
     /// Whether the backend ran its parallel fast path this step (the
     /// reference backend's `--fast-path`; always false on PJRT).
     pub fast_path: bool,
+    /// Supervised-executor retries this step took to complete (0 on the
+    /// fault-free path; nonzero only under `--max-retries` recovery).
+    pub retries: u64,
 }
 
 /// Result of gradient accumulation over one batch (`compute_gradients`).
@@ -201,6 +205,12 @@ pub struct Trainer<B: Backend = Runtime> {
     /// KV residency budget: when set, dependent groups run over a
     /// disk-spilling [`OffloadStore`] instead of the in-memory StateStore.
     offload_budget: Option<u64>,
+    /// Supervisor policy for the threaded execution paths (`--max-retries`).
+    /// The default fails fast, exactly as before supervision existed.
+    retry: RetryPolicy,
+    /// Stage-handoff deadline override (`--handoff-timeout-secs`); `None`
+    /// derives one from the cost model.
+    handoff_timeout: Option<Duration>,
     pub history: Vec<StepMetrics>,
 }
 
@@ -255,8 +265,34 @@ impl<B: Backend> Trainer<B> {
             corpus,
             step: 0,
             offload_budget: None,
+            retry: RetryPolicy::none(),
+            handoff_timeout: None,
             history: Vec::new(),
         })
+    }
+
+    /// Optimizer steps completed so far (restored by checkpoints).
+    pub fn step(&self) -> u64 {
+        self.step
+    }
+
+    /// Supervisor retry budget for the threaded execution paths
+    /// (`--max-retries`): a stage/replica panic or a handoff timeout tears
+    /// the micro-step down cleanly and reruns it, up to this many times.
+    /// Retries are bit-identical to an untroubled run because gradient
+    /// computation is a pure function of (params, batch).
+    pub fn set_retry_policy(&mut self, retry: RetryPolicy) {
+        self.retry = retry;
+    }
+
+    /// Override the stage-handoff deadline (`--handoff-timeout-secs`);
+    /// `None` restores the cost-model-derived default.
+    pub fn set_handoff_timeout(&mut self, timeout: Option<Duration>) {
+        self.handoff_timeout = timeout;
+    }
+
+    fn exec_options(&self) -> ExecOptions {
+        ExecOptions { handoff_timeout: self.handoff_timeout }
     }
 
     /// Bound resident KV bytes (`--offload-budget-bytes`): when set, each
@@ -400,6 +436,7 @@ impl<B: Backend> Trainer<B> {
             measured_bubble_ratio: None,
             predicted_bubble_ratio: None,
             fast_path: self.backend.fast_path_active(),
+            retries: 0,
         };
         crate::info!(
             "step {:>4} | loss/tok {:.4} | tokens {:>6} | chunks {:>3} | {:>5.2}s | gnorm {:.3}",
@@ -521,6 +558,13 @@ impl<B: Backend> Trainer<B> {
     /// continuation is bit-identical to the uninterrupted run.
     pub fn load_checkpoint(&mut self, path: &std::path::Path) -> anyhow::Result<()> {
         let state = checkpoint::load(path)?;
+        self.apply_checkpoint_state(state)
+    }
+
+    /// Install an already-loaded checkpoint (see [`Trainer::load_checkpoint`];
+    /// split out so `--resume` can apply whatever generation
+    /// [`checkpoint::latest_valid`] found).
+    pub fn apply_checkpoint_state(&mut self, state: checkpoint::TrainState) -> anyhow::Result<()> {
         anyhow::ensure!(
             state.params.0.len() == self.params.0.len(),
             "checkpoint param arity mismatch"
@@ -574,6 +618,7 @@ impl<B: Backend> Trainer<B> {
                         ("stages", Json::num(m.stages as f64)),
                         ("dp", Json::num(m.dp as f64)),
                         ("fast_path", Json::Bool(m.fast_path)),
+                        ("retries", Json::num(m.retries as f64)),
                     ];
                     if let Some(i) = m.dp_imbalance {
                         fields.push(("dp_imbalance", Json::num(i)));
@@ -602,6 +647,8 @@ pub struct PipelineStepReport {
     pub predicted_bubble_ratio: f64,
     pub act_peak_chunks: usize,
     pub kv_peak_bytes: u64,
+    /// Supervisor retries the micro-step needed (0 when fault-free).
+    pub retries: u32,
 }
 
 impl Trainer<ReferenceBackend> {
@@ -622,7 +669,15 @@ impl Trainer<ReferenceBackend> {
         let k = (self.config.chunkflow.k.max(1)) as usize;
 
         let items = crate::pipeline::build_exec_items(&self.backend, &set, &tokens, &seq_len);
-        let out = crate::pipeline::execute_state_aware(&self.backend, &set, &items, k, stages)?;
+        let (out, retries) = crate::pipeline::execute_state_aware_supervised(
+            &self.backend,
+            &set,
+            &items,
+            k,
+            stages,
+            self.exec_options(),
+            &self.retry,
+        )?;
         // The simulator's prediction for the exact same chunk set and
         // schedule, under the paper's cost assumptions.
         let predicted =
@@ -636,6 +691,7 @@ impl Trainer<ReferenceBackend> {
             predicted_bubble_ratio: predicted.bubble_ratio(),
             act_peak_chunks: out.act_peak_chunks,
             kv_peak_bytes: out.kv_peak_bytes,
+            retries,
         };
         let acc = GradAccum {
             loss_sum: out.loss_sum,
@@ -676,6 +732,7 @@ impl Trainer<ReferenceBackend> {
             measured_bubble_ratio: Some(report.measured_bubble_ratio),
             predicted_bubble_ratio: Some(report.predicted_bubble_ratio),
             fast_path: self.backend.fast_path_active(),
+            retries: report.retries as u64,
         };
         crate::info!(
             "step {:>4} | loss/tok {:.4} | stages {} | bubble {:>5.1}% measured / {:>5.1}% predicted | {:>5.2}s",
@@ -775,8 +832,15 @@ impl Trainer<ReferenceBackend> {
             // only units that arrive out of order — peak memory is the
             // pending set, not one buffer per unit.
             let n_units = assign.units.len();
-            let folded: anyhow::Result<(Vec<Vec<f64>>, f64, f64, u64, usize)> =
-                std::thread::scope(|scope| {
+            // Supervised: a rank-thread panic (or poisoned send) surfaces
+            // as an error here, the scope has already joined every thread,
+            // and the whole micro-step reruns from pristine inputs — unit
+            // gradients are pure functions, so the retry is bit-identical.
+            let (folded, retries) = crate::pipeline::supervise(
+                "dp unit executor",
+                &self.retry,
+                || {
+                    std::thread::scope(|scope| {
                     let (assign, set, tokens, seq_len) = (&assign, &set, &tokens, &seq_len);
                     let (tx, rx) = std::sync::mpsc::channel::<(usize, UnitGrad)>();
                     let mut handles = Vec::with_capacity(dp);
@@ -823,8 +887,10 @@ impl Trainer<ReferenceBackend> {
                     }
                     anyhow::ensure!(next == n_units, "unit assigned to no rank");
                     Ok((grads, loss_sum, tok_sum, kv_peak, act_peak))
-                });
-            let (grads, loss_sum, tok_sum, kv_peak, act_peak) = folded?;
+                    })
+                },
+            )?;
+            let (grads, loss_sum, tok_sum, kv_peak, act_peak) = folded;
             let acc = GradAccum {
                 loss_sum,
                 tok_sum,
@@ -840,6 +906,7 @@ impl Trainer<ReferenceBackend> {
                 dp_imbalance: assign.imbalance(),
                 measured_bubble_ratio: None,
                 predicted_bubble_ratio: None,
+                retries,
             };
             return Ok((acc, report));
         }
@@ -857,8 +924,14 @@ impl Trainer<ReferenceBackend> {
                 crate::pipeline::ReplicaSpec { set: rank_set, items }
             })
             .collect();
-        let outcomes =
-            crate::pipeline::execute_replica_groups(&self.backend, &replicas, k, stages)?;
+        let (outcomes, retries) = crate::pipeline::execute_replica_groups_supervised(
+            &self.backend,
+            &replicas,
+            k,
+            stages,
+            self.exec_options(),
+            &self.retry,
+        )?;
         let (mut loss_sum, mut tok_sum) = (0.0f64, 0.0f64);
         let (mut kv_peak, mut act_peak) = (0u64, 0usize);
         let (mut measured, mut predicted) = (0.0f64, 0.0f64);
@@ -897,6 +970,7 @@ impl Trainer<ReferenceBackend> {
             dp_imbalance: assign.imbalance(),
             measured_bubble_ratio: Some(measured),
             predicted_bubble_ratio: Some(predicted),
+            retries,
         };
         Ok((acc, report))
     }
@@ -928,6 +1002,7 @@ impl Trainer<ReferenceBackend> {
             measured_bubble_ratio: report.measured_bubble_ratio,
             predicted_bubble_ratio: report.predicted_bubble_ratio,
             fast_path: self.backend.fast_path_active(),
+            retries: report.retries as u64,
         };
         crate::info!(
             "step {:>4} | loss/tok {:.4} | dp {} x stages {} | imbalance {:.3} | {:>5.2}s | gnorm {:.3}",
@@ -950,6 +1025,79 @@ impl Trainer<ReferenceBackend> {
         }
         Ok(())
     }
+
+    /// Run training in `mode`, checkpointing on the `ckpt` cadence and —
+    /// when `resume` is set — first restoring the newest *valid* generation
+    /// in `ckpt.dir` (corrupt or torn files are skipped; see
+    /// [`checkpoint::latest_valid`]). Steps already covered by the restored
+    /// checkpoint are not re-run; because batches, optimizer state, and the
+    /// executor are all deterministic, the resumed run's parameters are
+    /// bit-identical to an uninterrupted run of the same config.
+    pub fn train_with_recovery(
+        &mut self,
+        mode: TrainMode,
+        ckpt: Option<&CheckpointPolicy>,
+        resume: bool,
+    ) -> anyhow::Result<()> {
+        if resume {
+            let policy = ckpt.ok_or_else(|| {
+                anyhow::anyhow!("--resume needs a checkpoint directory to resume from")
+            })?;
+            match checkpoint::latest_valid(&policy.dir)? {
+                Some((path, state)) => {
+                    crate::info!("resuming from {} (step {})", path.display(), state.step);
+                    self.apply_checkpoint_state(state)?;
+                }
+                None => {
+                    crate::info!(
+                        "no valid checkpoint under {}; starting from scratch",
+                        policy.dir.display()
+                    );
+                }
+            }
+        }
+        let total = self.config.steps;
+        while self.step < total {
+            match mode {
+                TrainMode::Single => self.train_step()?,
+                TrainMode::Pipelined { stages } => self.train_step_pipelined(stages)?,
+                TrainMode::Dp { dp, stages } => self.train_step_dp(dp, stages)?,
+            };
+            if let Some(policy) = ckpt {
+                let due = policy.every > 0 && self.step % policy.every == 0;
+                if due || self.step >= total {
+                    let path = checkpoint::save_rotating(
+                        &policy.dir,
+                        &self.params,
+                        self.step,
+                        Some(&self.adam.export_state()),
+                        policy.keep,
+                    )?;
+                    crate::info!("checkpointed step {} -> {}", self.step, path.display());
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Where and how often [`Trainer::train_with_recovery`] checkpoints.
+#[derive(Clone, Debug)]
+pub struct CheckpointPolicy {
+    /// Directory holding rotating `step-*.ckpt` generations.
+    pub dir: std::path::PathBuf,
+    /// Checkpoint every N steps (0 = only at the end of training).
+    pub every: u64,
+    /// Generations to keep; older ones are pruned after each save.
+    pub keep: usize,
+}
+
+/// Which step function [`Trainer::train_with_recovery`] drives.
+#[derive(Clone, Copy, Debug)]
+pub enum TrainMode {
+    Single,
+    Pipelined { stages: usize },
+    Dp { dp: usize, stages: usize },
 }
 
 /// One unit's independent gradient contribution (see
@@ -973,6 +1121,8 @@ pub struct DpStepReport {
     pub measured_bubble_ratio: Option<f64>,
     /// Worst per-rank predicted bubble ratio (stages > 1 only).
     pub predicted_bubble_ratio: Option<f64>,
+    /// Supervisor retries the micro-step needed (0 when fault-free).
+    pub retries: u32,
 }
 
 /// Deterministic fixed-order gradient all-reduce: a binary tree sum in rank

@@ -1,0 +1,100 @@
+//! CRC-32 (IEEE 802.3 polynomial, the zlib/`cksum -o3` variant), implemented
+//! in-tree because the crates.io registry is unavailable. Used for checkpoint
+//! section integrity (`train::checkpoint` format v3) and sweep-journal
+//! fingerprints (`sweep::journal`).
+
+/// Table-driven CRC-32 with the reflected polynomial `0xEDB88320`.
+///
+/// Incremental: feed bytes with [`Crc32::update`], read the digest with
+/// [`Crc32::finalize`]. One-shot callers can use [`crc32`].
+pub struct Crc32 {
+    state: u32,
+}
+
+/// 256-entry lookup table for the reflected IEEE polynomial, built at
+/// compile time so the runtime cost is one table index per byte.
+const TABLE: [u32; 256] = build_table();
+
+const fn build_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut crc = i as u32;
+        let mut bit = 0;
+        while bit < 8 {
+            crc = if crc & 1 != 0 { (crc >> 1) ^ 0xEDB8_8320 } else { crc >> 1 };
+            bit += 1;
+        }
+        table[i] = crc;
+        i += 1;
+    }
+    table
+}
+
+impl Crc32 {
+    pub fn new() -> Self {
+        Crc32 { state: 0xFFFF_FFFF }
+    }
+
+    pub fn update(&mut self, bytes: &[u8]) {
+        let mut s = self.state;
+        for &b in bytes {
+            s = TABLE[((s ^ b as u32) & 0xFF) as usize] ^ (s >> 8);
+        }
+        self.state = s;
+    }
+
+    pub fn finalize(&self) -> u32 {
+        self.state ^ 0xFFFF_FFFF
+    }
+}
+
+impl Default for Crc32 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// One-shot CRC-32 of a byte slice.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = Crc32::new();
+    c.update(bytes);
+    c.finalize()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // The canonical check value for CRC-32/ISO-HDLC.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+        assert_eq!(crc32(b"The quick brown fox jumps over the lazy dog"), 0x414F_A339);
+    }
+
+    #[test]
+    fn incremental_matches_one_shot() {
+        let data = b"chunkflow checkpoint section";
+        let whole = crc32(data);
+        let mut inc = Crc32::new();
+        for chunk in data.chunks(5) {
+            inc.update(chunk);
+        }
+        assert_eq!(inc.finalize(), whole);
+    }
+
+    #[test]
+    fn detects_single_bit_flips() {
+        let data: Vec<u8> = (0u16..512).map(|i| (i % 251) as u8).collect();
+        let base = crc32(&data);
+        for pos in [0usize, 1, 255, 511] {
+            for bit in 0..8 {
+                let mut corrupt = data.clone();
+                corrupt[pos] ^= 1 << bit;
+                assert_ne!(crc32(&corrupt), base, "flip at byte {pos} bit {bit} undetected");
+            }
+        }
+    }
+}

@@ -1,0 +1,346 @@
+//! Deterministic, seeded fault injection.
+//!
+//! A [`FaultPlan`] arms named *sites* — places in the runtime that have
+//! volunteered to fail — at specific occurrence counts. Sites call
+//! [`fire`] (or the [`maybe_panic`] / [`maybe_sleep_ms`] / [`maybe_abort`]
+//! conveniences) every time execution passes them; the global registry
+//! counts occurrences per site and reports a hit when the armed count is
+//! reached. Firing decisions and any random choices made by the fault
+//! (byte positions for a bit flip, truncation points) derive from the
+//! plan's seed, so a fault run is exactly reproducible.
+//!
+//! **Zero-cost when disabled:** unless the crate is built with the
+//! `fault-inject` feature, every function here is an `#[inline(always)]`
+//! no-op (`fire` returns `None` unconditionally), so production builds
+//! carry no locks, no counters, and no branches at the injection sites.
+//!
+//! Known sites (see the README "Fault tolerance" section for the table):
+//!
+//! | site                  | effect when fired                              |
+//! |-----------------------|------------------------------------------------|
+//! | `exec.stage_panic`    | panics the pipeline stage thread mid-op        |
+//! | `exec.handoff_delay`  | sleeps before a stage handoff send             |
+//! | `ckpt.truncate`       | truncates the checkpoint file after rename     |
+//! | `ckpt.bitflip`        | flips one bit of the checkpoint after rename   |
+//! | `fastpath.pool_panic` | panics inside a fast-path worker part          |
+//! | `sweep.kill`          | aborts the process after a sweep journal write |
+
+/// Pipeline stage-thread panic, evaluated once per agenda op.
+pub const STAGE_PANIC: &str = "exec.stage_panic";
+/// Delay before a stage handoff send; `param` is the delay in millis.
+pub const HANDOFF_DELAY: &str = "exec.handoff_delay";
+/// Truncate the checkpoint file post-rename; `param` is bytes to keep
+/// (seeded choice when absent).
+pub const CKPT_TRUNCATE: &str = "ckpt.truncate";
+/// Flip one bit of the checkpoint file post-rename at a seeded position.
+pub const CKPT_BITFLIP: &str = "ckpt.bitflip";
+/// Panic inside a fast-path worker, evaluated once per part execution.
+pub const POOL_PANIC: &str = "fastpath.pool_panic";
+/// `std::process::abort()` after a sweep journal append (kill -9 stand-in).
+pub const SWEEP_KILL: &str = "sweep.kill";
+
+/// Env var holding a fault plan spec for CLI-driven injection, e.g.
+/// `CHUNKFLOW_FAULT_PLAN="exec.stage_panic@2;ckpt.truncate@1:64"`.
+pub const ENV_PLAN: &str = "CHUNKFLOW_FAULT_PLAN";
+/// Env var overriding the plan seed (default [`DEFAULT_SEED`]).
+pub const ENV_SEED: &str = "CHUNKFLOW_FAULT_SEED";
+/// Seed used when none is given explicitly.
+pub const DEFAULT_SEED: u64 = 0xC0FF_EE00;
+
+/// One armed fault: fire at the `occurrence`-th (1-based) evaluation of
+/// `site`, with an optional site-specific parameter.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FaultSpec {
+    pub site: String,
+    pub occurrence: u64,
+    pub param: Option<u64>,
+}
+
+/// A deterministic set of armed faults plus the seed their random choices
+/// derive from. Parsing and construction are always compiled (they are
+/// cheap and keep CLI/plan handling testable); only the *registry* that
+/// makes sites actually fire is feature-gated.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    pub seed: u64,
+    pub specs: Vec<FaultSpec>,
+}
+
+impl FaultPlan {
+    pub fn new(seed: u64) -> Self {
+        FaultPlan { seed, specs: Vec::new() }
+    }
+
+    /// Arm `site` to fire at its `occurrence`-th (1-based) evaluation.
+    pub fn arm(mut self, site: &str, occurrence: u64) -> Self {
+        self.specs.push(FaultSpec { site: site.to_string(), occurrence, param: None });
+        self
+    }
+
+    /// Like [`FaultPlan::arm`] with a site-specific parameter (delay
+    /// millis, truncation length, ...).
+    pub fn arm_with(mut self, site: &str, occurrence: u64, param: u64) -> Self {
+        self.specs.push(FaultSpec { site: site.to_string(), occurrence, param: Some(param) });
+        self
+    }
+
+    /// Does this plan arm `site` at exactly this `occurrence`?
+    pub fn should_fire(&self, site: &str, occurrence: u64) -> Option<&FaultSpec> {
+        self.specs.iter().find(|s| s.site == site && s.occurrence == occurrence)
+    }
+
+    /// Parse `"site@occurrence[:param];..."`, e.g.
+    /// `"exec.stage_panic@2;exec.handoff_delay@1:250"`.
+    pub fn parse(spec: &str, seed: u64) -> anyhow::Result<Self> {
+        let mut plan = FaultPlan::new(seed);
+        for part in spec.split(';').map(str::trim).filter(|p| !p.is_empty()) {
+            let (site, rest) = part
+                .split_once('@')
+                .ok_or_else(|| anyhow::anyhow!("fault spec `{part}`: expected site@occurrence"))?;
+            let (occ_str, param) = match rest.split_once(':') {
+                Some((o, p)) => {
+                    let p = p
+                        .parse::<u64>()
+                        .map_err(|_| anyhow::anyhow!("fault spec `{part}`: bad param `{p}`"))?;
+                    (o, Some(p))
+                }
+                None => (rest, None),
+            };
+            let occurrence = occ_str
+                .parse::<u64>()
+                .map_err(|_| anyhow::anyhow!("fault spec `{part}`: bad occurrence `{occ_str}`"))?;
+            anyhow::ensure!(occurrence >= 1, "fault spec `{part}`: occurrence is 1-based");
+            anyhow::ensure!(!site.is_empty(), "fault spec `{part}`: empty site");
+            plan.specs.push(FaultSpec { site: site.to_string(), occurrence, param });
+        }
+        Ok(plan)
+    }
+}
+
+/// Details of a fault that just fired, handed to the injection site so it
+/// can act deterministically.
+#[derive(Clone, Copy, Debug)]
+pub struct Fired {
+    /// Which evaluation of the site this was (1-based).
+    pub occurrence: u64,
+    /// The spec's optional parameter.
+    pub param: Option<u64>,
+    /// Seed derived from (plan seed, site, occurrence) for any random
+    /// choice the fault makes (e.g. which byte to flip).
+    pub seed: u64,
+}
+
+#[cfg(feature = "fault-inject")]
+mod active {
+    use super::{FaultPlan, Fired};
+    use std::collections::BTreeMap;
+    use std::sync::Mutex;
+
+    struct Registry {
+        plan: FaultPlan,
+        counts: BTreeMap<String, u64>,
+    }
+
+    static REGISTRY: Mutex<Option<Registry>> = Mutex::new(None);
+
+    /// Install `plan` as the process-global fault plan, resetting all
+    /// occurrence counters.
+    pub fn install(plan: FaultPlan) {
+        let mut reg = REGISTRY.lock().unwrap_or_else(|p| p.into_inner());
+        *reg = Some(Registry { plan, counts: BTreeMap::new() });
+    }
+
+    /// Disarm all faults and reset counters.
+    pub fn clear() {
+        let mut reg = REGISTRY.lock().unwrap_or_else(|p| p.into_inner());
+        *reg = None;
+    }
+
+    /// Install a plan from `CHUNKFLOW_FAULT_PLAN` / `CHUNKFLOW_FAULT_SEED`
+    /// if set; no-op otherwise. Lets CI drive the `chunkflow` binary.
+    pub fn install_from_env() -> anyhow::Result<()> {
+        let Ok(spec) = std::env::var(super::ENV_PLAN) else { return Ok(()) };
+        let seed = match std::env::var(super::ENV_SEED) {
+            Ok(s) => s
+                .parse::<u64>()
+                .map_err(|_| anyhow::anyhow!("{}: bad seed `{s}`", super::ENV_SEED))?,
+            Err(_) => super::DEFAULT_SEED,
+        };
+        let plan = FaultPlan::parse(&spec, seed)?;
+        crate::info!("fault injection armed from {}: {:?}", super::ENV_PLAN, plan.specs);
+        install(plan);
+        Ok(())
+    }
+
+    /// Count one evaluation of `site`; returns `Some` when an armed
+    /// occurrence is reached.
+    pub fn fire(site: &str) -> Option<Fired> {
+        let mut guard = REGISTRY.lock().unwrap_or_else(|p| p.into_inner());
+        let reg = guard.as_mut()?;
+        let count = reg.counts.entry(site.to_string()).or_insert(0);
+        *count += 1;
+        let occurrence = *count;
+        let spec = reg.plan.should_fire(site, occurrence)?;
+        let param = spec.param;
+        // Mix (seed, site, occurrence) through SplitMix64 so every fired
+        // fault gets an independent, reproducible random stream.
+        let mixed = reg.plan.seed
+            ^ ((crate::util::crc::crc32(site.as_bytes()) as u64) << 32)
+            ^ occurrence;
+        let seed = crate::util::rng::SplitMix64::new(mixed).next_u64();
+        Some(Fired { occurrence, param, seed })
+    }
+}
+
+#[cfg(not(feature = "fault-inject"))]
+mod active {
+    use super::{FaultPlan, Fired};
+
+    #[inline(always)]
+    pub fn install(_plan: FaultPlan) {}
+
+    #[inline(always)]
+    pub fn clear() {}
+
+    pub fn install_from_env() -> anyhow::Result<()> {
+        if std::env::var(super::ENV_PLAN).is_ok() {
+            crate::warn_!(
+                "{} is set but this build has no fault injection; \
+                 rebuild with --features fault-inject",
+                super::ENV_PLAN
+            );
+        }
+        Ok(())
+    }
+
+    #[inline(always)]
+    pub fn fire(_site: &str) -> Option<Fired> {
+        None
+    }
+}
+
+pub use active::{clear, fire, install, install_from_env};
+
+/// Serializes unit tests — in any module of this crate — that install the
+/// process-global registry. Integration tests get their own process each,
+/// but unit tests share one binary and run on parallel threads.
+#[cfg(all(test, feature = "fault-inject"))]
+pub(crate) static TEST_REGISTRY_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+/// Is fault injection compiled into this build?
+pub const fn enabled() -> bool {
+    cfg!(feature = "fault-inject")
+}
+
+/// Panic with a recognizable message if `site` fires.
+#[inline(always)]
+pub fn maybe_panic(site: &str) {
+    if let Some(f) = fire(site) {
+        panic!("injected fault: {site} (occurrence {})", f.occurrence);
+    }
+}
+
+/// Sleep `param` millis (or `default_ms`) if `site` fires.
+#[inline(always)]
+pub fn maybe_sleep_ms(site: &str, default_ms: u64) {
+    if let Some(f) = fire(site) {
+        let ms = f.param.unwrap_or(default_ms);
+        crate::warn_!("injected fault: {site} sleeping {ms}ms (occurrence {})", f.occurrence);
+        std::thread::sleep(std::time::Duration::from_millis(ms));
+    }
+}
+
+/// Abort the process (no unwinding, no cleanup — a `kill -9` stand-in) if
+/// `site` fires.
+#[inline(always)]
+pub fn maybe_abort(site: &str) {
+    if let Some(f) = fire(site) {
+        eprintln!("injected fault: {site} aborting process (occurrence {})", f.occurrence);
+        std::process::abort();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_plan_specs() {
+        let plan = FaultPlan::parse("exec.stage_panic@2; ckpt.truncate@1:64", 7).unwrap();
+        assert_eq!(plan.seed, 7);
+        assert_eq!(plan.specs.len(), 2);
+        assert_eq!(plan.specs[0].site, "exec.stage_panic");
+        assert_eq!(plan.specs[0].occurrence, 2);
+        assert_eq!(plan.specs[0].param, None);
+        assert_eq!(plan.specs[1].site, "ckpt.truncate");
+        assert_eq!(plan.specs[1].occurrence, 1);
+        assert_eq!(plan.specs[1].param, Some(64));
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        assert!(FaultPlan::parse("no-at-sign", 0).is_err());
+        assert!(FaultPlan::parse("site@zero:5", 0).is_err());
+        assert!(FaultPlan::parse("site@0", 0).is_err());
+        assert!(FaultPlan::parse("@1", 0).is_err());
+        assert!(FaultPlan::parse("site@1:notanum", 0).is_err());
+        // Empty plans are fine (nothing armed).
+        assert!(FaultPlan::parse("", 0).unwrap().specs.is_empty());
+    }
+
+    #[test]
+    fn should_fire_matches_exact_occurrence() {
+        let plan = FaultPlan::new(0).arm("a", 2).arm_with("b", 1, 9);
+        assert!(plan.should_fire("a", 1).is_none());
+        assert!(plan.should_fire("a", 2).is_some());
+        assert!(plan.should_fire("a", 3).is_none());
+        assert_eq!(plan.should_fire("b", 1).unwrap().param, Some(9));
+        assert!(plan.should_fire("c", 1).is_none());
+    }
+
+    // Registry-backed tests live here (not in integration tests) so the
+    // process-global state is exercised under the same lock.
+    #[cfg(feature = "fault-inject")]
+    mod registry {
+        use super::super::*;
+
+        // The registry is process-global; serialize tests that touch it.
+        use super::super::TEST_REGISTRY_LOCK as LOCK;
+
+        #[test]
+        fn fires_on_nth_evaluation_only() {
+            let _g = LOCK.lock().unwrap_or_else(|p| p.into_inner());
+            install(FaultPlan::new(1).arm("t.site", 3));
+            assert!(fire("t.site").is_none());
+            assert!(fire("t.site").is_none());
+            let f = fire("t.site").expect("third evaluation fires");
+            assert_eq!(f.occurrence, 3);
+            assert!(fire("t.site").is_none());
+            clear();
+        }
+
+        #[test]
+        fn cleared_registry_never_fires() {
+            let _g = LOCK.lock().unwrap_or_else(|p| p.into_inner());
+            clear();
+            for _ in 0..4 {
+                assert!(fire("t.other").is_none());
+            }
+        }
+
+        #[test]
+        fn fired_seed_is_deterministic() {
+            let _g = LOCK.lock().unwrap_or_else(|p| p.into_inner());
+            install(FaultPlan::new(42).arm("t.seeded", 1));
+            let a = fire("t.seeded").unwrap();
+            install(FaultPlan::new(42).arm("t.seeded", 1));
+            let b = fire("t.seeded").unwrap();
+            assert_eq!(a.seed, b.seed);
+            // A different plan seed gives a different stream.
+            install(FaultPlan::new(43).arm("t.seeded", 1));
+            let c = fire("t.seeded").unwrap();
+            assert_ne!(a.seed, c.seed);
+            clear();
+        }
+    }
+}

@@ -4,6 +4,8 @@
 
 pub mod bench;
 pub mod cli;
+pub mod crc;
+pub mod fault;
 pub mod json;
 pub mod log;
 pub mod pool;

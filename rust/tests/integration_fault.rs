@@ -1,0 +1,250 @@
+//! Fault-tolerance integration (built only with `--features fault-inject`):
+//! the ISSUE's fault matrix, end to end.
+//!
+//! - an injected stage-thread panic mid micro-step is retried by the
+//!   supervisor and the recovered run's parameters are *bit-identical* to a
+//!   fault-free run (retries re-execute pure work from unchanged inputs);
+//! - an injected handoff delay past the deadline fails fast with an error
+//!   naming the waiting stage/op/item, and recovers bit-identically under
+//!   `--max-retries`;
+//! - a corrupted checkpoint generation is skipped by `--resume`, which
+//!   falls back one generation and still converges to bit-identical bytes;
+//! - a `sweep.kill` abort mid-sweep leaves a journal the rerun resumes
+//!   from, and the final artifact is byte-identical to an uninterrupted
+//!   sweep (CLI, via `CHUNKFLOW_FAULT_PLAN`).
+
+#![cfg(feature = "fault-inject")]
+
+mod common;
+
+use std::time::Duration;
+
+use chunkflow::pipeline::RetryPolicy;
+use chunkflow::train::{CheckpointPolicy, TrainMode, Trainer};
+use chunkflow::util::fault;
+use chunkflow::runtime::ReferenceBackend;
+
+use common::{mini_config, short_dist, trainer_with};
+
+/// The fault registry is process-global; every in-process test that
+/// installs a plan serializes on this (the CLI tests below use env plans in
+/// child processes and do not need it).
+static REGISTRY: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+fn fresh_trainer(steps: u64) -> Trainer<ReferenceBackend> {
+    let mut cfg = mini_config(16, 8, 2);
+    cfg.steps = steps;
+    cfg.global_batch_size = 4;
+    let ctx = cfg.context_length;
+    trainer_with(cfg, short_dist(ctx))
+}
+
+/// Deterministic byte snapshot of a trainer (params + step + Adam moments)
+/// through the checkpoint writer — the bit-identity oracle.
+fn state_bytes(tr: &Trainer<ReferenceBackend>, tag: &str) -> Vec<u8> {
+    let dir = std::env::temp_dir().join("chunkflow_it_fault_state");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join(format!("{tag}.ckpt"));
+    tr.save_checkpoint(&path).expect("save state snapshot");
+    let bytes = std::fs::read(&path).unwrap();
+    let _ = std::fs::remove_file(&path);
+    bytes
+}
+
+#[test]
+fn injected_stage_panic_is_retried_bit_identically() {
+    let _g = REGISTRY.lock().unwrap_or_else(|p| p.into_inner());
+    // Fault-free oracle: two dp=2, stages=2 steps.
+    let mut clean = fresh_trainer(2);
+    clean.train_step_dp(2, 2).expect("clean step 1");
+    clean.train_step_dp(2, 2).expect("clean step 2");
+    let want = state_bytes(&clean, "clean-dp");
+
+    // Same run with one stage-thread panic injected mid step 1. The
+    // supervisor must retry the whole micro-step and land on the same bits.
+    fault::install(fault::FaultPlan::new(1).arm(fault::STAGE_PANIC, 3));
+    let mut faulty = fresh_trainer(2);
+    faulty.set_retry_policy(RetryPolicy::with_retries(2));
+    let m1 = faulty.train_step_dp(2, 2).expect("supervised step 1");
+    let m2 = faulty.train_step_dp(2, 2).expect("supervised step 2");
+    fault::clear();
+    assert!(
+        m1.retries + m2.retries >= 1,
+        "the armed panic must have cost at least one retry"
+    );
+    assert_eq!(
+        state_bytes(&faulty, "faulty-dp"),
+        want,
+        "recovered dp run must be bit-identical to the fault-free run"
+    );
+
+    // Without a retry budget the same fault is a clean error, not a hang.
+    fault::install(fault::FaultPlan::new(1).arm(fault::STAGE_PANIC, 3));
+    let mut failfast = fresh_trainer(2);
+    let err = failfast.train_step_dp(2, 2).expect_err("fail-fast surfaces the panic");
+    fault::clear();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("injected fault"), "{msg}");
+}
+
+#[test]
+fn injected_handoff_delay_times_out_then_recovers_under_retry() {
+    let _g = REGISTRY.lock().unwrap_or_else(|p| p.into_inner());
+    // Fault-free pipelined oracle.
+    let mut clean = fresh_trainer(1);
+    clean.train_step_pipelined(2).expect("clean pipelined step");
+    let want = state_bytes(&clean, "clean-pipe");
+
+    // A 400ms straggler handoff against a 50ms deadline: fail-fast mode
+    // must produce a diagnosable timeout naming who waited on what.
+    fault::install(fault::FaultPlan::new(2).arm_with(fault::HANDOFF_DELAY, 1, 400));
+    let mut failfast = fresh_trainer(1);
+    failfast.set_handoff_timeout(Some(Duration::from_millis(50)));
+    let err = failfast.train_step_pipelined(2).expect_err("deadline must fire");
+    fault::clear();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("timed out"), "{msg}");
+    assert!(msg.contains("stage"), "{msg}");
+    assert!(msg.contains("item"), "{msg}");
+
+    // With a retry budget, the delay (armed for occurrence 1 only) is gone
+    // on the second attempt and the step completes bit-identically.
+    fault::install(fault::FaultPlan::new(2).arm_with(fault::HANDOFF_DELAY, 1, 400));
+    let mut retried = fresh_trainer(1);
+    retried.set_handoff_timeout(Some(Duration::from_millis(50)));
+    retried.set_retry_policy(RetryPolicy::with_retries(2));
+    let m = retried.train_step_pipelined(2).expect("supervised pipelined step");
+    fault::clear();
+    assert!(m.retries >= 1, "the straggler must have cost a retry");
+    assert_eq!(
+        state_bytes(&retried, "retried-pipe"),
+        want,
+        "recovered pipelined run must be bit-identical to the fault-free run"
+    );
+}
+
+#[test]
+fn resume_skips_corrupt_generation_and_stays_bit_identical() {
+    // No fault plan needed: corruption is applied directly to the file.
+    let base = std::env::temp_dir().join("chunkflow_it_fault_resume");
+    let _ = std::fs::remove_dir_all(&base);
+    let ckpt_name = |step: u64| format!("step-{step:010}.ckpt");
+
+    // Uninterrupted oracle: 4 steps, checkpointing every step.
+    let dir_a = base.join("uninterrupted");
+    let policy_a = CheckpointPolicy { dir: dir_a.clone(), every: 1, keep: 4 };
+    let mut clean = fresh_trainer(4);
+    clean.train_with_recovery(TrainMode::Single, Some(&policy_a), false).expect("clean run");
+    let want = std::fs::read(dir_a.join(ckpt_name(4))).expect("final clean checkpoint");
+
+    // Interrupted run: 2 steps land on disk, then the newest generation is
+    // corrupted (a torn write) before the resume.
+    let dir_b = base.join("resumed");
+    let policy_b = CheckpointPolicy { dir: dir_b.clone(), every: 1, keep: 4 };
+    let mut first = fresh_trainer(2);
+    first.train_with_recovery(TrainMode::Single, Some(&policy_b), false).expect("first half");
+    let torn = dir_b.join(ckpt_name(2));
+    let bytes = std::fs::read(&torn).unwrap();
+    std::fs::write(&torn, &bytes[..bytes.len() / 2]).unwrap();
+
+    // --resume must fall back to generation 1 (step-2 is torn), replay
+    // steps 2..4 and finish on the exact same bytes as the clean run.
+    let mut resumed = fresh_trainer(4);
+    resumed
+        .train_with_recovery(TrainMode::Single, Some(&policy_b), true)
+        .expect("resumed run");
+    assert_eq!(resumed.step(), 4);
+    let got = std::fs::read(dir_b.join(ckpt_name(4))).expect("final resumed checkpoint");
+    assert_eq!(got, want, "resume across a torn checkpoint must be bit-identical");
+    let _ = std::fs::remove_dir_all(&base);
+}
+
+// ----- CLI surface (fault plans via CHUNKFLOW_FAULT_PLAN) -------------------
+
+fn chunkflow_bin() -> std::process::Command {
+    std::process::Command::new(env!("CARGO_BIN_EXE_chunkflow"))
+}
+
+fn train_args(out: &std::path::Path) -> Vec<String> {
+    [
+        "train", "--backend", "reference", "--model", "tiny", "--context", "256",
+        "--chunk-size", "128", "--k", "1", "--dp", "2", "--stages", "2", "--steps", "1",
+        "--batch", "4", "--out",
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .chain([out.to_str().unwrap().to_string()])
+    .collect()
+}
+
+#[test]
+fn cli_stage_panic_needs_max_retries_to_survive() {
+    let dir = std::env::temp_dir().join("chunkflow_it_fault_cli_train");
+    std::fs::create_dir_all(&dir).unwrap();
+    // Armed panic + no retry budget: the run fails with the injected panic.
+    let out = chunkflow_bin()
+        .args(train_args(&dir.join("h1.json")))
+        .env("CHUNKFLOW_FAULT_PLAN", "exec.stage_panic@2")
+        .output()
+        .expect("spawn chunkflow");
+    assert!(!out.status.success(), "fail-fast run must fail");
+    // Same plan + --max-retries: the supervisor absorbs it.
+    let out = chunkflow_bin()
+        .args(train_args(&dir.join("h2.json")))
+        .args(["--max-retries", "2"])
+        .env("CHUNKFLOW_FAULT_PLAN", "exec.stage_panic@2")
+        .output()
+        .expect("spawn chunkflow");
+    assert!(
+        out.status.success(),
+        "stdout: {}\nstderr: {}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn cli_sweep_killed_mid_run_resumes_byte_identically() {
+    let dir = std::env::temp_dir().join("chunkflow_it_fault_cli_sweep");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let clean = dir.join("clean.json");
+    let resumed = dir.join("resumed.json");
+    let scenario = "smoke-7b-32K-eval";
+
+    let run = |path: &std::path::Path, plan: Option<&str>| {
+        let mut cmd = chunkflow_bin();
+        cmd.args([
+            "sweep", "--scenario", scenario, "--serial", "--out", path.to_str().unwrap(),
+        ]);
+        if let Some(p) = plan {
+            cmd.env("CHUNKFLOW_FAULT_PLAN", p);
+        }
+        cmd.output().expect("spawn chunkflow sweep")
+    };
+
+    // Uninterrupted reference artifact.
+    let out = run(&clean, None);
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+
+    // Killed run: aborts right after journaling the scenario — the artifact
+    // is never written but the journal survives.
+    let out = run(&resumed, Some("sweep.kill@1"));
+    assert!(!out.status.success(), "the injected abort must kill the sweep");
+    assert!(!resumed.exists(), "killed sweep must not have written the artifact");
+    let journal = std::path::PathBuf::from(format!("{}.partial", resumed.display()));
+    assert!(journal.exists(), "journal must survive the abort");
+
+    // Rerun without the plan: reuses the journal, writes the artifact,
+    // retires the journal — and the bytes match the uninterrupted run.
+    let out = run(&resumed, None);
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    assert!(!journal.exists(), "journal must be retired after success");
+    assert_eq!(
+        std::fs::read(&resumed).unwrap(),
+        std::fs::read(&clean).unwrap(),
+        "resumed sweep artifact must be byte-identical to the uninterrupted one"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
