@@ -46,15 +46,21 @@ impl RecomputeGranularity {
     }
 }
 
-/// `<TP, SP, PP>` + DP + recompute. SP in the paper's tables always equals
-/// TP (Megatron-style sequence parallelism over the TP group), so we keep a
-/// single `tp_sp` degree and a flag.
+/// `<TP, SP, PP>` + DP + recompute.
+///
+/// `sp` is the chunk-aware sequence-parallel degree: the number of ranks a
+/// *long* (dependent) chunk's query rows are ring-sharded across. It is an
+/// independent axis (`sp = 1` means off), unlike Megatron-style SP, which
+/// is glued to the TP group and adds no ranks — the paper's Table-3 tuples
+/// print `SP == TP` for exactly that reason, and our cost/memory models
+/// already fold that flavor into the `/tp` terms.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct ParallelConfig {
-    /// Tensor-parallel degree (== sequence-parallel degree when sp enabled).
+    /// Tensor-parallel degree.
     pub tp: u64,
-    /// Sequence parallelism enabled (Megatron SP over the TP group).
-    pub sp: bool,
+    /// Chunk-aware sequence-parallel degree (ring shards per long chunk;
+    /// 1 = off). Short/standalone chunks never shard — see [`Self::sp_shards`].
+    pub sp: u64,
     /// Pipeline-parallel degree (number of stages).
     pub pp: u64,
     /// Data-parallel degree.
@@ -64,23 +70,41 @@ pub struct ParallelConfig {
 
 impl ParallelConfig {
     pub fn new(tp: u64, pp: u64, recompute: RecomputeGranularity) -> Self {
-        Self { tp, sp: true, pp, dp: 1, recompute }
+        Self { tp, sp: 1, pp, dp: 1, recompute }
     }
 
-    /// Total GPUs this strategy occupies.
+    /// Total GPUs this strategy occupies. Ring SP shards a chunk across
+    /// `sp` additional ranks, so the degree multiplies the world size.
     pub fn world_size(&self) -> u64 {
-        self.tp * self.pp * self.dp
+        self.tp * self.sp.max(1) * self.pp * self.dp
     }
 
-    /// Format like the paper: `<4,4,4,selective>`.
+    /// Ring shards a chunk of `tokens` query rows splits into: dependent
+    /// (long-sequence) chunks shard `sp` ways, capped by the row count;
+    /// standalone (short) chunks stay whole — the per-chunk heterogeneity
+    /// FlexSP exploits. This single rule is shared by the cost model, the
+    /// memory model, the simulator, and the trainer, so they can never
+    /// disagree about which chunks shard.
+    pub fn sp_shards(&self, dependent: bool, tokens: u64) -> u64 {
+        if dependent {
+            self.sp.max(1).min(tokens.max(1))
+        } else {
+            1
+        }
+    }
+
+    /// Format like the paper: `<4,4,4,selective>`. The SP slot is the
+    /// actual sequence-parallel degree (1 when off) — it used to echo `tp`
+    /// unconditionally, silently claiming Megatron SP on configs that never
+    /// enabled any sequence parallelism.
     pub fn paper_format(&self) -> String {
-        format!("<{},{},{},{}>", self.tp, self.tp, self.pp, self.recompute.as_str())
+        format!("<{},{},{},{}>", self.tp, self.sp.max(1), self.pp, self.recompute.as_str())
     }
 
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("tp", Json::num(self.tp as f64)),
-            ("sp", Json::Bool(self.sp)),
+            ("sp", Json::num(self.sp as f64)),
             ("pp", Json::num(self.pp as f64)),
             ("dp", Json::num(self.dp as f64)),
             ("recompute", Json::str(self.recompute.as_str())),
@@ -88,9 +112,18 @@ impl ParallelConfig {
     }
 
     pub fn from_json(j: &Json) -> anyhow::Result<Self> {
+        // Back-compat: `sp` used to be a bool glued to the TP group
+        // (degree-free); either legacy value maps to "no chunk-aware SP".
+        let sp = match j.get("sp") {
+            Some(Json::Bool(_)) | None => 1,
+            Some(v) => v
+                .as_f64()
+                .map(|x| x as u64)
+                .ok_or_else(|| anyhow::anyhow!("`sp` must be a number (or legacy bool)"))?,
+        };
         Ok(Self {
             tp: j.req_u64("tp")?,
-            sp: j.opt_bool("sp", true),
+            sp: sp.max(1),
             pp: j.req_u64("pp")?,
             dp: j.opt_u64("dp", 1),
             recompute: RecomputeGranularity::parse(j.opt_str("recompute", "selective"))?,
@@ -108,14 +141,31 @@ mod tests {
         assert_eq!(p.world_size(), 16);
         p.dp = 2;
         assert_eq!(p.world_size(), 32);
+        p.sp = 4;
+        assert_eq!(p.world_size(), 128, "ring SP ranks multiply the world");
     }
 
     #[test]
-    fn paper_format_matches_table3() {
+    fn paper_format_prints_actual_sp_degree() {
+        // Re-pinned for the SP-slot fix: the second slot is the real SP
+        // degree, not an echo of TP. Chunk-aware SP off prints 1.
         let p = ParallelConfig::new(4, 4, RecomputeGranularity::Full);
-        assert_eq!(p.paper_format(), "<4,4,4,full>");
-        let p = ParallelConfig::new(8, 4, RecomputeGranularity::Selective);
-        assert_eq!(p.paper_format(), "<8,8,4,selective>");
+        assert_eq!(p.paper_format(), "<4,1,4,full>");
+        let mut p = ParallelConfig::new(8, 4, RecomputeGranularity::Selective);
+        assert_eq!(p.paper_format(), "<8,1,4,selective>");
+        p.sp = 4;
+        assert_eq!(p.paper_format(), "<8,4,4,selective>");
+    }
+
+    #[test]
+    fn sp_shards_rule() {
+        let mut p = ParallelConfig::new(1, 1, RecomputeGranularity::Selective);
+        p.sp = 4;
+        assert_eq!(p.sp_shards(true, 8192), 4, "long chunks shard sp ways");
+        assert_eq!(p.sp_shards(false, 8192), 1, "short chunks stay whole");
+        assert_eq!(p.sp_shards(true, 3), 3, "shards never exceed query rows");
+        p.sp = 1;
+        assert_eq!(p.sp_shards(true, 8192), 1, "sp=1 is a no-op");
     }
 
     #[test]
@@ -144,7 +194,22 @@ mod tests {
 
     #[test]
     fn json_roundtrip() {
-        let p = ParallelConfig { tp: 8, sp: true, pp: 4, dp: 2, recompute: RecomputeGranularity::Full };
+        let p = ParallelConfig { tp: 8, sp: 4, pp: 4, dp: 2, recompute: RecomputeGranularity::Full };
         assert_eq!(ParallelConfig::from_json(&p.to_json()).unwrap(), p);
+    }
+
+    #[test]
+    fn json_accepts_legacy_bool_sp() {
+        // Pre-degree artifacts/checkpoints serialized `sp` as a bool; both
+        // legacy values mean "no chunk-aware SP" (degree 1).
+        for legacy in ["true", "false"] {
+            let j = Json::parse(&format!(
+                r#"{{"tp": 4, "sp": {legacy}, "pp": 2, "dp": 1, "recompute": "selective"}}"#
+            ))
+            .unwrap();
+            let p = ParallelConfig::from_json(&j).unwrap();
+            assert_eq!(p.sp, 1);
+            assert_eq!(p.tp, 4);
+        }
     }
 }

@@ -31,6 +31,8 @@ fn flags() -> Vec<FlagSpec> {
         flag("k", true, "retention budget K"),
         flag("stages", true, "pipeline stages for train (reference backend; default 1)"),
         flag("dp", true, "data-parallel replica groups for train (reference backend; default 1)"),
+        flag("sp", true, "sequence-parallel ring degree; shards long chunks (default 1)"),
+        flag("joint", false, "tune: search the joint (ChunkSize, K, dp, pp, sp) space"),
         flag("offload-budget-bytes", true, "KV residency budget; spill coldest chunk KV to disk"),
         flag("fast-path", false, "parallel reference-backend kernels (RAYON_NUM_THREADS caps)"),
         flag("min-fastpath-speedup", true, "benchdiff: minimum runtime/*_fast pair speedup"),
@@ -133,6 +135,8 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     anyhow::ensure!(stages >= 1, "--stages must be >= 1");
     let dp = args.get_usize("dp", 1)?;
     anyhow::ensure!(dp >= 1, "--dp must be >= 1");
+    let sp = args.get_u64("sp", 1)?;
+    anyhow::ensure!(sp >= 1, "--sp must be >= 1");
     let offload_budget = match args.get("offload-budget-bytes") {
         Some(s) => Some(
             chunkflow::util::cli::parse_size(s)
@@ -182,6 +186,7 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
             let mut parallel =
                 ParallelConfig::new(1, stages as u64, RecomputeGranularity::Selective);
             parallel.dp = dp as u64;
+            parallel.sp = sp;
             cfg.parallel = parallel;
             let max_chunks = cfg.context_length.div_ceil(chunk_size) as usize;
             let manifest = Manifest::for_reference(&cfg.model, chunk_size as usize, max_chunks)?;
@@ -190,6 +195,7 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
                 backend.enable_fast_path();
             }
             let mut trainer = Trainer::with_backend(backend, cfg, dist)?;
+            trainer.set_sp(sp);
             if let Some(budget) = offload_budget {
                 trainer.set_offload_budget(Some(budget));
             }
@@ -233,6 +239,10 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
             anyhow::ensure!(
                 dp <= 1,
                 "data-parallel mode (--dp > 1) requires --backend reference"
+            );
+            anyhow::ensure!(
+                sp <= 1,
+                "sequence-parallel mode (--sp > 1) requires --backend reference"
             );
             anyhow::ensure!(
                 offload_budget.is_none(),
@@ -305,11 +315,16 @@ fn cmd_report(args: &Args) -> anyhow::Result<()> {
 }
 
 fn parallel_from(args: &Args) -> anyhow::Result<ParallelConfig> {
-    Ok(ParallelConfig::new(
+    let mut p = ParallelConfig::new(
         args.get_u64("tp", 4)?,
         args.get_u64("pp", 4)?,
         RecomputeGranularity::parse(args.get_or("recompute", "selective"))?,
-    ))
+    );
+    p.sp = args.get_u64("sp", 1)?;
+    anyhow::ensure!(p.sp >= 1, "--sp must be >= 1");
+    p.dp = args.get_u64("dp", 1)?;
+    anyhow::ensure!(p.dp >= 1, "--dp must be >= 1");
+    Ok(p)
 }
 
 fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
@@ -537,6 +552,9 @@ fn cmd_tune(args: &Args) -> anyhow::Result<()> {
         gs.global_batch_size = 64;
         gs.iters = 1;
     }
+    if args.get_bool("joint") {
+        return tune_joint(&gs, args);
+    }
     let points = gs.run();
     println!(
         "{:>10} {:>4} {:>14} {:>10} {:>12} {:>6}",
@@ -570,6 +588,68 @@ fn cmd_tune(args: &Args) -> anyhow::Result<()> {
                         ("k", Json::num(p.k as f64)),
                         ("seconds", Json::num(p.avg_iteration_seconds)),
                         ("feasible", Json::Bool(p.feasible)),
+                    ])
+                })
+                .collect(),
+        );
+        j.write_file(std::path::Path::new(out))?;
+    }
+    Ok(())
+}
+
+/// `tune --joint`: sweep (dp, pp, sp) strategy candidates around the flag
+/// values and rank each strategy's best feasible (ChunkSize, K) point.
+fn tune_joint(gs: &GridSearch, args: &Args) -> anyhow::Result<()> {
+    let axis = |v: u64| -> Vec<u64> {
+        let mut c = vec![1, 2, 4];
+        if !c.contains(&v) {
+            c.push(v);
+            c.sort_unstable();
+        }
+        c
+    };
+    let dps = axis(gs.parallel.dp);
+    let pps = axis(gs.parallel.pp);
+    let sps = axis(gs.parallel.sp);
+    let ranked = gs.run_joint(&dps, &pps, &sps, &SweepEngine::auto());
+    println!(
+        "{:>4} {:>4} {:>4} {:>10} {:>4} {:>14} {:>12}",
+        "dp", "pp", "sp", "ChunkSize", "K", "iter seconds", "peak mem"
+    );
+    for jp in &ranked {
+        println!(
+            "{:>4} {:>4} {:>4} {:>10} {:>4} {:>14.3} {:>12}",
+            jp.parallel.dp,
+            jp.parallel.pp,
+            jp.parallel.sp,
+            chunkflow::util::format_tokens(jp.point.chunk_size),
+            jp.point.k,
+            jp.point.avg_iteration_seconds,
+            chunkflow::util::format_bytes(jp.point.peak_memory_bytes)
+        );
+    }
+    if let Some(best) = ranked.first() {
+        println!(
+            "\nbest: dp {} pp {} sp {} at ({}, {})",
+            best.parallel.dp,
+            best.parallel.pp,
+            best.parallel.sp,
+            chunkflow::util::format_tokens(best.point.chunk_size),
+            best.point.k
+        );
+    }
+    if let Some(out) = args.get("out") {
+        let j = Json::Arr(
+            ranked
+                .iter()
+                .map(|jp| {
+                    Json::obj(vec![
+                        ("dp", Json::num(jp.parallel.dp as f64)),
+                        ("pp", Json::num(jp.parallel.pp as f64)),
+                        ("sp", Json::num(jp.parallel.sp as f64)),
+                        ("chunk_size", Json::num(jp.point.chunk_size as f64)),
+                        ("k", Json::num(jp.point.k as f64)),
+                        ("seconds", Json::num(jp.point.avg_iteration_seconds)),
                     ])
                 })
                 .collect(),

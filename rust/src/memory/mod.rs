@@ -165,6 +165,26 @@ impl MemoryModel {
             + self.kv_state_bytes(context_length.saturating_sub(chunk_size))
     }
 
+    /// [`Self::chunkflow_peak`] under this strategy's sequence-parallel
+    /// degree. `sp <= 1` delegates verbatim (the sp=1 bit-identity
+    /// contract). For `sp > 1` the peak case is a dependent group filling
+    /// the context — exactly the chunks the shard rule
+    /// ([`ParallelConfig::sp_shards`]) ring-shards — so each rank retains
+    /// `1/sp` of a live chunk's query-row activations and `1/sp` of the KV
+    /// state (ring attention keeps KV sharded; blocks stream through
+    /// transiently during the exchange).
+    pub fn chunkflow_peak_sp(&self, chunk_size: u64, k: u64, context_length: u64) -> u64 {
+        let sp = self.parallel.sp.max(1);
+        if sp <= 1 {
+            return self.chunkflow_peak(chunk_size, k, context_length);
+        }
+        let shard_rows = chunk_size.div_ceil(sp);
+        let kv_tokens = context_length.saturating_sub(chunk_size).div_ceil(sp);
+        self.fixed_bytes()
+            + self.chunkflow_activation_bytes(shard_rows, k)
+            + self.kv_state_bytes(kv_tokens)
+    }
+
     /// Does a peak fit on the GPU?
     pub fn fits(&self, peak_bytes: u64) -> bool {
         peak_bytes <= GPU_CAPACITY
@@ -334,6 +354,25 @@ mod tests {
         let peak = m.baseline_pipeline_peak(&in_flight);
         assert!(peak <= m.fixed_bytes() + acts + lm_max, "never above the old sum");
         assert!(peak >= m.fixed_bytes() + acts, "stage 0 holds the full window");
+    }
+
+    #[test]
+    fn sp_peak_identity_at_sp1_and_shrinks_at_sp4() {
+        let m = table5_model(); // sp = 1
+        for (ctx, chunk) in [(32 * 1024u64, 2 * 1024u64), (256 * 1024, 8 * 1024)] {
+            assert_eq!(
+                m.chunkflow_peak_sp(chunk, 2, ctx),
+                m.chunkflow_peak(chunk, 2, ctx),
+                "sp=1 must be the exact pre-SP peak"
+            );
+        }
+        let mut sharded = table5_model();
+        sharded.parallel.sp = 4;
+        let p1 = m.chunkflow_peak_sp(8 * 1024, 2, 256 * 1024);
+        let p4 = sharded.chunkflow_peak_sp(8 * 1024, 2, 256 * 1024);
+        assert!(p4 < p1, "ring shards split activations and KV: {p4} vs {p1}");
+        // The variable components shard; the fixed bytes do not.
+        assert!(p4 > sharded.fixed_bytes());
     }
 
     #[test]

@@ -43,7 +43,7 @@ use std::time::{Duration, Instant};
 
 use super::onef1b::state_aware_1f1b_agendas;
 use super::{Op, OpKind, ScheduledOp, Timeline};
-use crate::chunk::ChunkSet;
+use crate::chunk::{Chunk, ChunkKind, ChunkSet, Segment};
 use crate::runtime::{
     ActivationHandoff, Backend, ChunkInputs, GradHandoff, Manifest, ReferenceBackend,
     StageBackend, StageCache,
@@ -759,6 +759,109 @@ pub fn build_exec_items(
             ExecItem { inputs, prefix_items }
         })
         .collect()
+}
+
+/// [`build_exec_items`] under chunk-aware sequence parallelism: every
+/// dependent chunk with more than one shard (the
+/// [`crate::config::ParallelConfig::sp_shards`] rule — short/standalone
+/// chunks never shard) expands into `shards` consecutive exec items, each a
+/// full fixed-shape chunk whose live extent is the unsharded chunk's rows
+/// `[0, hi)` with loss masked to the shard's owned rows `[lo, hi)`
+/// ([`crate::train::sp_shard_inputs`]). Returns the *expanded* chunk set
+/// (shard chunks re-indexed within their group; each shard chunk's segment
+/// is the owned row range, so schedules and cost proxies see the sharded
+/// work) alongside its items, so the executor runs unchanged.
+///
+/// Why this is exact: only the LAST shard of each chunk appears in any
+/// prefix chain — its forward input equals the unsharded chunk's (targets
+/// never affect KV), so its stored per-stage KV is the exact prefix block,
+/// `prefix_len = index·C` stays bucket-valid, and every later chunk's KV
+/// cotangent routes to that one full-row item. Non-last shards get a zero
+/// KV cotangent automatically (nothing scatters to them) and contribute
+/// exactly their owned loss rows' gradients. Loss rows thus partition and
+/// the KV chain is untouched; the sum matches the unsharded run up to
+/// float re-association (gated at 1e-6). `sp <= 1` returns the original
+/// set and [`build_exec_items`]'s items verbatim — the bit-identity
+/// contract.
+pub fn build_exec_items_sp(
+    backend: &ReferenceBackend,
+    set: &ChunkSet,
+    tokens: &BTreeMap<u64, Vec<u32>>,
+    seq_len: &BTreeMap<u64, u64>,
+    sp: u64,
+) -> (ChunkSet, Vec<ExecItem>) {
+    if sp <= 1 {
+        return (set.clone(), build_exec_items(backend, set, tokens, seq_len));
+    }
+    let c = backend.manifest().chunk_size;
+    // Expanded per-sequence chunk counts (for the shard chunks' re-indexed
+    // `num_chunks`).
+    let mut expanded_count: BTreeMap<u64, usize> = BTreeMap::new();
+    for ch in &set.chunks {
+        if let ChunkKind::Dependent { seq_id, .. } = ch.kind {
+            let shards = sp.min(ch.total_len().max(1)) as usize;
+            *expanded_count.entry(seq_id).or_insert(0) += shards;
+        }
+    }
+    let mut chunks: Vec<Chunk> = Vec::new();
+    let mut items: Vec<ExecItem> = Vec::new();
+    // Per sequence: new ids of the last shards of chunks 0..i (the prefix
+    // chain every shard of chunk i consumes) and the running shard index.
+    let mut last_shards: BTreeMap<u64, Vec<usize>> = BTreeMap::new();
+    let mut next_index: BTreeMap<u64, usize> = BTreeMap::new();
+    for ch in &set.chunks {
+        match ch.kind {
+            ChunkKind::Standalone => {
+                let inputs =
+                    crate::train::chunk_inputs_for::<f64>(ch, c, tokens, seq_len, 0);
+                chunks.push(Chunk {
+                    id: chunks.len(),
+                    kind: ChunkKind::Standalone,
+                    segments: ch.segments.clone(),
+                });
+                items.push(ExecItem { inputs, prefix_items: Vec::new() });
+            }
+            ChunkKind::Dependent { seq_id, .. } => {
+                let total_len = ch.total_len() as usize;
+                let shards = (sp as usize).min(total_len.max(1));
+                let prefix_items = last_shards.entry(seq_id).or_default().clone();
+                let full = crate::train::chunk_inputs_for::<f64>(
+                    ch,
+                    c,
+                    tokens,
+                    seq_len,
+                    prefix_items.len() * c,
+                );
+                let num_chunks = expanded_count[&seq_id];
+                let seg0 = ch.segments[0];
+                let rows = total_len.div_ceil(shards);
+                for s in 0..shards {
+                    let lo = s * rows;
+                    let hi = ((s + 1) * rows).min(total_len);
+                    let id = chunks.len();
+                    let index = next_index.entry(seq_id).or_insert(0);
+                    chunks.push(Chunk {
+                        id,
+                        kind: ChunkKind::Dependent { seq_id, index: *index, num_chunks },
+                        segments: vec![Segment {
+                            seq_id,
+                            offset: seg0.offset + lo as u64,
+                            len: (hi - lo) as u64,
+                        }],
+                    });
+                    *index += 1;
+                    let inputs = if shards == 1 {
+                        full.clone()
+                    } else {
+                        crate::train::sp_shard_inputs(&full, total_len, lo, hi)
+                    };
+                    items.push(ExecItem { inputs, prefix_items: prefix_items.clone() });
+                }
+                last_shards.get_mut(&seq_id).unwrap().push(chunks.len() - 1);
+            }
+        }
+    }
+    (ChunkSet { chunk_size: set.chunk_size, chunks }, items)
 }
 
 /// Scatter a stage-local `d_kv_in` ([Lr, 2, P, H, D]) into the pending KV

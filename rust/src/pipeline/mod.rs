@@ -26,7 +26,8 @@ pub mod interleaved;
 pub mod onef1b;
 
 pub use exec::{
-    build_exec_items, derived_handoff_timeout, execute_agendas, execute_agendas_with,
+    build_exec_items, build_exec_items_sp, derived_handoff_timeout, execute_agendas,
+    execute_agendas_with,
     execute_replica_groups, execute_replica_groups_supervised, execute_replica_groups_with,
     execute_state_aware, execute_state_aware_supervised, execute_state_aware_with, supervise,
     ExecItem, ExecOptions, ExecOutcome, ReplicaSpec, RetryPolicy,

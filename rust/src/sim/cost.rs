@@ -4,8 +4,16 @@
 //! context ending at `ctx_end`:
 //!
 //! ```text
-//! t_fwd = flops(tokens, ctx_end) / (peak_flops × TP×PP × eff(tokens))
+//! t_fwd = flops(tokens, ctx_end) / (peak_flops × TP × eff(tokens))
 //! ```
+//!
+//! `t_fwd` is the whole-pipeline traversal time (all layers, TP-sharded);
+//! each of the PP stages holds `1/PP` of the layers, so the intended
+//! identity is `fwd_seconds == PP × stage_costs.fwd` — per-stage time is
+//! `flops / (peak_flops × TP×PP × eff)`. (An earlier revision divided by
+//! `TP×PP` in `fwd_seconds` *and* by `PP` again in `stage_costs`, costing
+//! pipeline stages `flops/(TP·PP²)` — a PP double-count; PP = 1 was, and
+//! stays, unaffected.)
 //!
 //! - `flops` comes from `ModelSpec::fwd_flops` (dense 2·P·T term plus the
 //!   causal-attention term, so long-context chunks correctly cost more);
@@ -32,6 +40,11 @@ pub const PEAK_FLOPS: f64 = 312e12;
 /// Effective per-GPU all-reduce bus bandwidth (bytes/s) for the DP gradient
 /// synchronization barrier — NVLink/NVSwitch-class.
 pub const DP_ALLREDUCE_BYTES_PER_SEC: f64 = 100e9;
+
+/// Effective per-GPU bandwidth (bytes/s) for the ring-attention KV exchange
+/// between sequence-parallel shards — same NVLink/NVSwitch class as the DP
+/// all-reduce bus.
+pub const SP_RING_BYTES_PER_SEC: f64 = 100e9;
 
 #[derive(Clone, Debug)]
 pub struct CostModel {
@@ -60,10 +73,14 @@ impl CostModel {
         self.eff_max * (1.0 - (-t / self.t_half).exp())
     }
 
-    /// Forward seconds (whole pipeline; divide by PP for per-stage).
+    /// Forward seconds for the whole pipeline traversal (every layer,
+    /// TP-sharded). PP does not appear here: pipelining partitions the
+    /// layers across stages, it does not add compute — see [`Self::stage_costs`]
+    /// for the per-stage share and the module docs for the identity
+    /// `fwd_seconds == PP × stage_costs.fwd`.
     pub fn fwd_seconds(&self, tokens: u64, ctx_end: u64) -> f64 {
         let flops = self.model.fwd_flops(tokens, ctx_end);
-        let cluster = PEAK_FLOPS * (self.parallel.tp * self.parallel.pp) as f64;
+        let cluster = PEAK_FLOPS * self.parallel.tp as f64;
         flops / (cluster * self.efficiency(tokens))
     }
 
@@ -74,13 +91,58 @@ impl CostModel {
     }
 
     /// Per-stage pipeline costs for a micro-batch (`tokens` new tokens whose
-    /// attention context ends at `ctx_end`).
+    /// attention context ends at `ctx_end`): each stage holds `1/PP` of the
+    /// layers, so it pays `1/PP` of the whole-pipeline time.
     pub fn stage_costs(&self, tokens: u64, ctx_end: u64) -> OpCosts {
         let pp = self.parallel.pp as f64;
         OpCosts {
             fwd: self.fwd_seconds(tokens, ctx_end) / pp,
             bwd: self.bwd_seconds(tokens, ctx_end) / pp,
         }
+    }
+
+    /// Per-stage costs for one ring shard of a chunk split `shards` ways
+    /// across sequence-parallel ranks. `shards <= 1` is exactly
+    /// [`Self::stage_costs`] (the sp=1 bit-identity contract). For
+    /// `shards > 1` the shards run concurrently, so wall-clock per shard is
+    ///
+    /// - compute: `1/shards` of the chunk's flops, but at the *lower* GPU
+    ///   efficiency of the per-shard row count (the anti-scaling term that
+    ///   keeps the tuner from sharding short chunks), plus
+    /// - comm: the ring KV exchange ([`Self::sp_ring_seconds`]) — once on
+    ///   the forward, twice on the backward (dKV travels the ring back and
+    ///   the recompute re-consumes the KV).
+    pub fn sp_stage_costs(&self, tokens: u64, ctx_end: u64, shards: u64) -> OpCosts {
+        if shards <= 1 {
+            return self.stage_costs(tokens, ctx_end);
+        }
+        let s = shards as f64;
+        let rows = tokens.div_ceil(shards);
+        let flops = self.model.fwd_flops(tokens, ctx_end);
+        let cluster = PEAK_FLOPS * self.parallel.tp as f64;
+        let fwd_whole = flops / (cluster * s * self.efficiency(rows));
+        let pp = self.parallel.pp as f64;
+        let comm = self.sp_ring_seconds(tokens, shards);
+        OpCosts {
+            fwd: fwd_whole / pp + comm,
+            bwd: fwd_whole * (2.0 + self.parallel.recompute.backward_extra_fwd()) / pp
+                + 2.0 * comm,
+        }
+    }
+
+    /// Seconds one sequence-parallel rank spends in the ring-attention KV
+    /// exchange for a chunk of `tokens` rows split `shards` ways: over the
+    /// `shards - 1` ring steps each rank receives `(shards-1)/shards` of the
+    /// chunk's KV bytes (its own shard never moves), with the per-rank KV
+    /// already sharded `TP×PP` ways exactly as the memory model accounts it.
+    /// `shards <= 1` pays exactly nothing (sp=1 bit-identity).
+    pub fn sp_ring_seconds(&self, tokens: u64, shards: u64) -> f64 {
+        if shards <= 1 {
+            return 0.0;
+        }
+        let kv_bytes = self.model.kv_bytes_per_token() as f64 * tokens as f64
+            / (self.parallel.tp * self.parallel.pp) as f64;
+        (shards - 1) as f64 / shards as f64 * kv_bytes / SP_RING_BYTES_PER_SEC
     }
 
     /// Seconds for an optimizer step + gradient all-reduce etc. — modeled as
@@ -173,11 +235,72 @@ mod tests {
             ModelSpec::preset("qwen2.5-7b").unwrap(),
             ParallelConfig::new(4, 4, RecomputeGranularity::Selective),
         );
-        // Same total flops, but m4 has 4x the GPUs: per-stage cost is the
-        // whole-pipeline time divided by PP.
+        // Each of m4's stages holds a quarter of the layers.
         let c1 = m1.stage_costs(4096, 4096);
         let c4 = m4.stage_costs(4096, 4096);
         assert!(c4.fwd < c1.fwd);
+        // Re-pinned after the PP double-count fix: the whole-pipeline time
+        // is PP-invariant (pipelining partitions layers, it adds no FLOPs),
+        // and per-stage is exactly the whole divided by PP.
+        assert_eq!(m1.fwd_seconds(4096, 4096), m4.fwd_seconds(4096, 4096));
+        assert!((m4.fwd_seconds(4096, 4096) - 4.0 * c4.fwd).abs() < 1e-12);
+        assert!((m4.bwd_seconds(4096, 4096) - 4.0 * c4.bwd).abs() < 1e-12);
+        assert_eq!(c4.fwd, c1.fwd / 4.0);
+    }
+
+    #[test]
+    fn sp_stage_costs_identity_at_one_shard() {
+        // shards = 1 must reproduce stage_costs bit for bit — the sp=1
+        // contract everything downstream (sim, tuner, sweep bytes) rests on.
+        let m = cm(RecomputeGranularity::Selective);
+        for (tokens, ctx) in [(256u64, 256u64), (8192, 8192), (8192, 131072)] {
+            let plain = m.stage_costs(tokens, ctx);
+            let sp1 = m.sp_stage_costs(tokens, ctx, 1);
+            assert_eq!(plain.fwd.to_bits(), sp1.fwd.to_bits());
+            assert_eq!(plain.bwd.to_bits(), sp1.bwd.to_bits());
+        }
+        assert_eq!(m.sp_ring_seconds(8192, 1), 0.0);
+    }
+
+    #[test]
+    fn sp_sharding_helps_long_chunks_not_short_ones() {
+        let m = cm(RecomputeGranularity::Selective);
+        // A long chunk (32K rows) sharded 4 ways beats running it whole:
+        // per-shard efficiency is still near-saturated and the ring comm is
+        // small against the compute.
+        let whole = m.sp_stage_costs(32 * 1024, 32 * 1024, 1);
+        let sharded = m.sp_stage_costs(32 * 1024, 32 * 1024, 4);
+        assert!(
+            sharded.fwd < whole.fwd && sharded.bwd < whole.bwd,
+            "sp4 on 32K rows: {:.4}s vs {:.4}s",
+            sharded.fwd,
+            whole.fwd
+        );
+        // A short chunk (512 rows) sharded 4 ways loses: 128-row shards fall
+        // off the efficiency curve faster than the 4x flops split pays —
+        // exactly why the shard rule leaves standalone chunks whole.
+        let s_whole = m.sp_stage_costs(512, 512, 1);
+        let s_shard = m.sp_stage_costs(512, 512, 4);
+        assert!(
+            s_shard.fwd > 0.5 * s_whole.fwd,
+            "short shards must not look free: {:.6}s vs {:.6}s",
+            s_shard.fwd,
+            s_whole.fwd
+        );
+    }
+
+    #[test]
+    fn sp_ring_comm_grows_with_shards_and_tokens() {
+        let m = cm(RecomputeGranularity::Selective);
+        let t2 = m.sp_ring_seconds(8192, 2);
+        let t4 = m.sp_ring_seconds(8192, 4);
+        assert!(t2 > 0.0 && t4 > t2, "ring volume grows like (s-1)/s");
+        assert!(m.sp_ring_seconds(16384, 4) > t4, "more KV, more exchange");
+        // Bounded by the full KV transit time.
+        let bound = m.model.kv_bytes_per_token() as f64 * 8192.0
+            / (m.parallel.tp * m.parallel.pp) as f64
+            / SP_RING_BYTES_PER_SEC;
+        assert!(t4 < bound);
     }
 
     #[test]

@@ -193,7 +193,10 @@ fn chunkset_timeline(set: &ChunkSet, cost: &CostModel, k: usize) -> anyhow::Resu
         let tokens = c.total_len();
         // Dependent chunks attend to their stored prefix too.
         let ctx_end = c.prefix_len() + tokens;
-        cost.stage_costs(tokens, ctx_end)
+        // Chunk-aware SP: long (dependent) chunks ring-shard `sp` ways,
+        // short chunks stay whole; at sp=1 this is `stage_costs` verbatim.
+        let shards = cost.parallel.sp_shards(c.is_dependent(), tokens);
+        cost.sp_stage_costs(tokens, ctx_end, shards)
     };
     onef1b::simulate_state_aware(set, k, p, cost_of)
 }
@@ -395,5 +398,61 @@ mod tests {
         let r = simulate_chunkflow_iteration(&[], &c, 8192, 1).unwrap();
         assert_eq!(r.num_items, 0);
         assert!(r.iteration_seconds >= c.optimizer_seconds() + c.dp_allreduce_seconds());
+    }
+
+    // ----- chunk-aware sequence parallelism ---------------------------------
+
+    fn cost_sp(pp: u64, sp: u64) -> CostModel {
+        let mut parallel = ParallelConfig::new(4, pp, RecomputeGranularity::Selective);
+        parallel.sp = sp;
+        CostModel::new(ModelSpec::preset("qwen2.5-7b").unwrap(), parallel)
+    }
+
+    #[test]
+    fn explicit_sp1_is_bit_identical_to_default() {
+        // sp defaults to 1; setting it explicitly must route through the
+        // identical per-chunk cost code (the bit-identity lattice).
+        let batch = eval_batch(32 * 1024, 128);
+        let base = cost(2, RecomputeGranularity::Selective);
+        let sp1 = cost_sp(2, 1);
+        let a = simulate_chunkflow_iteration(&batch, &base, 8192, 2).unwrap();
+        let b = simulate_chunkflow_iteration(&batch, &sp1, 8192, 2).unwrap();
+        assert_eq!(a.iteration_seconds.to_bits(), b.iteration_seconds.to_bits());
+        assert_eq!(a.bubble_ratio.to_bits(), b.bubble_ratio.to_bits());
+    }
+
+    #[test]
+    fn sp_speeds_up_long_sequence_batches() {
+        // A batch dominated by dependent chunks: sharding their rows 4 ways
+        // (compute / 4 + ring comm) must beat the unsharded timeline, but
+        // never superlinearly.
+        let mut batch = eval_batch(32 * 1024, 64);
+        for s in batch.iter_mut().take(16) {
+            s.len = 32 * 1024; // force long, multi-chunk sequences
+        }
+        let t1 = simulate_chunkflow_iteration(&batch, &cost_sp(2, 1), 8192, 2).unwrap();
+        let t4 = simulate_chunkflow_iteration(&batch, &cost_sp(2, 4), 8192, 2).unwrap();
+        assert!(
+            t4.iteration_seconds < t1.iteration_seconds,
+            "sp=4 {} vs sp=1 {}",
+            t4.iteration_seconds,
+            t1.iteration_seconds
+        );
+        assert!(t4.iteration_seconds > t1.iteration_seconds / 5.0, "no superlinear scaling");
+        // Chunk counts are unchanged — SP shards rows, not the chunk set.
+        assert_eq!(t4.num_items, t1.num_items);
+    }
+
+    #[test]
+    fn sp_leaves_short_only_batches_alone() {
+        // All-short batches have no dependent chunks, so sp has nothing to
+        // shard and the timeline is bit-identical.
+        let mut batch = eval_batch(32 * 1024, 64);
+        for s in batch.iter_mut() {
+            s.len = s.len.min(4 * 1024); // below the 8K ChunkSize
+        }
+        let a = simulate_chunkflow_iteration(&batch, &cost_sp(2, 1), 8192, 2).unwrap();
+        let b = simulate_chunkflow_iteration(&batch, &cost_sp(2, 4), 8192, 2).unwrap();
+        assert_eq!(a.iteration_seconds.to_bits(), b.iteration_seconds.to_bits());
     }
 }

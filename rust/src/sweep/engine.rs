@@ -84,6 +84,25 @@ pub struct DpImbalance {
     pub chunk_balanced: f64,
 }
 
+/// Additive per-scenario sequence-parallel sharding metric, emitted only
+/// for sp > 1 scenarios (existing sp = 1 artifacts stay byte-identical):
+/// how many chunks actually shard under the per-chunk rule
+/// ([`crate::config::ParallelConfig::sp_shards`] — dependent chunks shard,
+/// standalone chunks stay whole) at the scenario's first candidate
+/// ChunkSize, plus the modeled per-iteration ring-KV exchange time, both
+/// averaged over the scenario's batches. `benchdiff` never compares it.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SpSharding {
+    pub sp: u64,
+    /// Mean chunks per iteration that shard (dependent, sp_shards > 1).
+    pub sharded_chunks: f64,
+    /// Mean chunks per iteration in total.
+    pub total_chunks: f64,
+    /// Mean per-iteration seconds spent in the forward ring-KV exchange
+    /// across all sharded chunks ([`CostModel::sp_ring_seconds`]).
+    pub ring_comm_seconds: f64,
+}
+
 /// Everything measured for one scenario.
 #[derive(Clone, Debug)]
 pub struct ScenarioResult {
@@ -96,6 +115,9 @@ pub struct ScenarioResult {
     /// DP load-imbalance metric; Some only when the scenario's strategy has
     /// dp > 1 (additive — absent entries keep old artifact bytes).
     pub dp_imbalance: Option<DpImbalance>,
+    /// SP sharding metric; Some only when the scenario's strategy has
+    /// sp > 1 (additive — absent entries keep old artifact bytes).
+    pub sp_sharding: Option<SpSharding>,
 }
 
 impl ScenarioResult {
@@ -281,6 +303,7 @@ impl SweepEngine {
                 candidates,
                 measured_exec: None,
                 dp_imbalance: dp_imbalance_for(s, &batches[i])?,
+                sp_sharding: sp_sharding_for(s, &batches[i]),
             });
         }
         Ok(results)
@@ -364,6 +387,39 @@ fn dp_imbalance_for(
     }))
 }
 
+/// The additive `sp_sharding` metric for one scenario (None when sp <= 1):
+/// deterministic — a pure function of the scenario's sampled batches and
+/// its first candidate ChunkSize (the sharding rule is K-invariant, like
+/// chunk construction itself).
+fn sp_sharding_for(s: &Scenario, batches: &[Vec<Sequence>]) -> Option<SpSharding> {
+    let parallel = s.chunkflow_parallel();
+    if parallel.sp <= 1 || batches.is_empty() {
+        return None;
+    }
+    let chunk_size = s.candidates.first().map(|&(cs, _)| cs).unwrap_or(8 * 1024);
+    let cost = CostModel::new(s.model.clone(), parallel.clone());
+    let (mut sharded, mut total, mut comm) = (0.0f64, 0.0f64, 0.0f64);
+    for batch in batches {
+        let set = construct_chunks(batch, chunk_size);
+        for c in &set.chunks {
+            total += 1.0;
+            let tokens = c.total_len();
+            let shards = parallel.sp_shards(c.is_dependent(), tokens);
+            if shards > 1 {
+                sharded += 1.0;
+                comm += cost.sp_ring_seconds(tokens, shards);
+            }
+        }
+    }
+    let n = batches.len() as f64;
+    Some(SpSharding {
+        sp: parallel.sp,
+        sharded_chunks: sharded / n,
+        total_chunks: total / n,
+        ring_comm_seconds: comm / n,
+    })
+}
+
 /// What one fan-out unit evaluates on one (scenario, batch) pair.
 #[derive(Clone, Copy, Debug)]
 enum UnitKind {
@@ -405,8 +461,11 @@ impl BatchAcc {
 }
 
 fn chunkflow_peak(s: &Scenario, chunk_size: u64, k: u64) -> u64 {
+    // sp-aware: shards long-chunk activations and held KV across the ring
+    // (`chunkflow_peak_sp` delegates to `chunkflow_peak` verbatim at
+    // sp = 1, so sp-free scenario artifacts keep their exact bytes).
     MemoryModel::new(s.model.clone(), s.chunkflow_parallel())
-        .chunkflow_peak(chunk_size, k, s.context_length)
+        .chunkflow_peak_sp(chunk_size, k, s.context_length)
 }
 
 /// One baseline work unit: simulate one batch and report its in-flight peak.
@@ -637,6 +696,56 @@ mod tests {
             assert_eq!(a.baseline, b.baseline, "{}", a.scenario.name);
             assert_eq!(a.candidates, b.candidates, "{}", a.scenario.name);
             assert_eq!(a.dp_imbalance, b.dp_imbalance, "{}", a.scenario.name);
+        }
+    }
+
+    #[test]
+    fn sp_scenarios_carry_sharding_metric() {
+        let scenarios = tiny_scenarios();
+        let results = SweepEngine::serial().run(&scenarios).unwrap();
+        for r in &results {
+            if r.scenario.parallel.sp > 1 {
+                let sh = r
+                    .sp_sharding
+                    .as_ref()
+                    .unwrap_or_else(|| panic!("{}: missing sp_sharding", r.scenario.name));
+                assert_eq!(sh.sp, r.scenario.parallel.sp);
+                assert!(sh.total_chunks > 0.0);
+                assert!(
+                    sh.sharded_chunks > 0.0 && sh.sharded_chunks <= sh.total_chunks,
+                    "{}: {} of {} chunks shard",
+                    r.scenario.name,
+                    sh.sharded_chunks,
+                    sh.total_chunks
+                );
+                assert!(sh.ring_comm_seconds > 0.0);
+            } else {
+                assert!(
+                    r.sp_sharding.is_none(),
+                    "{}: sp=1 scenarios must stay metric-free (artifact bytes)",
+                    r.scenario.name
+                );
+            }
+        }
+        assert!(
+            results.iter().any(|r| r.sp_sharding.is_some()),
+            "smoke set must exercise an sp scenario"
+        );
+    }
+
+    #[test]
+    fn sp_scenario_results_are_deterministic_across_engines() {
+        let scenarios: Vec<Scenario> = tiny_scenarios()
+            .into_iter()
+            .filter(|s| s.parallel.sp > 1)
+            .collect();
+        assert!(!scenarios.is_empty());
+        let serial = SweepEngine::serial().run(&scenarios).unwrap();
+        let parallel = SweepEngine::with_threads(4).run(&scenarios).unwrap();
+        for (a, b) in serial.iter().zip(&parallel) {
+            assert_eq!(a.baseline, b.baseline, "{}", a.scenario.name);
+            assert_eq!(a.candidates, b.candidates, "{}", a.scenario.name);
+            assert_eq!(a.sp_sharding, b.sp_sharding, "{}", a.scenario.name);
         }
     }
 

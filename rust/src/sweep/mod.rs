@@ -24,7 +24,8 @@ pub mod probe;
 pub mod scenario;
 
 pub use engine::{
-    CandidateResult, DpImbalance, Parallelism, ScenarioResult, SweepEngine, UnitMetrics,
+    CandidateResult, DpImbalance, Parallelism, ScenarioResult, SpSharding, SweepEngine,
+    UnitMetrics,
 };
 pub use output::{
     compare_scenarios, doc_from_scenarios, scenario_json, to_json, validate, write_bench_json,

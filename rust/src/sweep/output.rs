@@ -108,6 +108,20 @@ pub fn scenario_json(r: &ScenarioResult) -> Json {
             ]),
         ));
     }
+    // Additive SP sharding block: present only for sp > 1 scenarios, so
+    // every existing scenario's bytes are unchanged; `benchdiff` ignores
+    // it (it only diffs baseline/best/speedup).
+    if let Some(sh) = &r.sp_sharding {
+        fields.push((
+            "sp_sharding",
+            Json::obj(vec![
+                ("sp", Json::num(sh.sp as f64)),
+                ("sharded_chunks", Json::num(sh.sharded_chunks)),
+                ("total_chunks", Json::num(sh.total_chunks)),
+                ("ring_comm_seconds", Json::num(sh.ring_comm_seconds)),
+            ]),
+        ));
+    }
     Json::obj(fields)
 }
 
@@ -193,6 +207,25 @@ pub fn validate(doc: &Json) -> anyhow::Result<usize> {
                     "{name}: dp_imbalance.{field} = {v} below 1.0 (max/mean ratio)"
                 );
             }
+        }
+        // Optional SP sharding block (schema v1 addition, sp > 1 scenarios
+        // only): sharded chunks are a subset of all chunks, and the ring
+        // exchange costs real time whenever anything shards.
+        if let Some(sh) = s.get("sp_sharding") {
+            anyhow::ensure!(
+                sh.req_u64("sp")? >= 2,
+                "{name}: sp_sharding.sp must be >= 2"
+            );
+            let sharded = sh.req_f64("sharded_chunks")?;
+            let total = sh.req_f64("total_chunks")?;
+            anyhow::ensure!(
+                sharded >= 0.0 && total > 0.0 && sharded <= total,
+                "{name}: sp_sharding chunk counts malformed ({sharded} of {total})"
+            );
+            anyhow::ensure!(
+                sh.req_f64("ring_comm_seconds")? >= 0.0,
+                "{name}: sp_sharding.ring_comm_seconds must be non-negative"
+            );
         }
         // Optional executor-probe block (schema v1 addition): when present
         // it must carry the measured/predicted bubble pair and a sane
@@ -420,6 +453,56 @@ mod tests {
         }
         let err = validate(&bad).unwrap_err().to_string();
         assert!(err.contains("round_robin"), "{err}");
+    }
+
+    #[test]
+    fn sp_sharding_block_is_additive_and_validated() {
+        let results = SweepEngine::serial().run(&Scenario::smoke()).unwrap();
+        let j = to_json(&results, None);
+        assert_eq!(validate(&j).unwrap(), results.len());
+        // sp scenarios carry the block; sp=1 scenarios must not (their
+        // serialized bytes are what the bench-smoke drift check pins).
+        for (r, s) in results.iter().zip(j.get("scenarios").unwrap().as_arr().unwrap()) {
+            assert_eq!(
+                s.get("sp_sharding").is_some(),
+                r.scenario.parallel.sp > 1,
+                "{}",
+                r.scenario.name
+            );
+        }
+        // benchdiff never compares the block: stripping it from one side
+        // still passes (it only diffs baseline/best/speedup).
+        let mut stripped = j.clone();
+        if let Json::Obj(o) = &mut stripped {
+            if let Some(Json::Arr(scenarios)) = o.get_mut("scenarios") {
+                for s in scenarios.iter_mut() {
+                    if let Json::Obj(so) = s {
+                        so.remove("sp_sharding");
+                    }
+                }
+            }
+        }
+        assert_eq!(compare_scenarios(&j, &stripped).unwrap(), results.len());
+        // A malformed block (more sharded than total chunks) is rejected.
+        let mut bad = j.clone();
+        if let Json::Obj(o) = &mut bad {
+            if let Some(Json::Arr(scenarios)) = o.get_mut("scenarios") {
+                for s in scenarios.iter_mut() {
+                    if let Json::Obj(so) = s {
+                        if let Some(block) = so.get_mut("sp_sharding") {
+                            *block = Json::obj(vec![
+                                ("sp", Json::num(2.0)),
+                                ("sharded_chunks", Json::num(9.0)),
+                                ("total_chunks", Json::num(4.0)),
+                                ("ring_comm_seconds", Json::num(0.001)),
+                            ]);
+                        }
+                    }
+                }
+            }
+        }
+        let err = validate(&bad).unwrap_err().to_string();
+        assert!(err.contains("chunk counts"), "{err}");
     }
 
     #[test]

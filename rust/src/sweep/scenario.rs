@@ -86,6 +86,16 @@ impl Scenario {
         s
     }
 
+    /// Derive an sp > 1 variant of a scenario: same workload, ring
+    /// sequence parallelism sharding the long (dependent) chunks (so the
+    /// sweep exercises the SP-aware cost path and the artifact carries the
+    /// additive `sp_sharding` block).
+    fn with_sp(mut s: Scenario, sp: u64) -> Scenario {
+        s.name = format!("{}-sp{sp}", s.name);
+        s.parallel.sp = sp;
+        s
+    }
+
     /// The default candidate grid around the paper's tuned point: the tuned
     /// `(ChunkSize, K)` itself plus the constant-`ChunkSize*K` extremes of
     /// Table 6, deduplicated.
@@ -162,6 +172,30 @@ impl Scenario {
             ),
             8,
         ));
+        // Sequence-parallel variants (FlexSP/FPDT): long chunks shard sp
+        // ways across a KV ring while short chunks stay whole.
+        out.push(Self::with_sp(
+            Self::paper(
+                "qwen2.5-7b",
+                32 * K,
+                "longtail-sft",
+                128,
+                2,
+                Self::default_candidates("qwen2.5-7b", 32 * K),
+            ),
+            4,
+        ));
+        out.push(Self::with_sp(
+            Self::paper(
+                "qwen2.5-7b",
+                256 * K,
+                "eval",
+                128,
+                2,
+                Self::default_candidates("qwen2.5-7b", 256 * K),
+            ),
+            4,
+        ));
         out
     }
 
@@ -183,6 +217,13 @@ impl Scenario {
             // the `dp_imbalance` artifact block; the three original smoke
             // scenarios above keep byte-identical artifact entries.
             shrink(Self::with_dp(
+                Self::paper("qwen2.5-7b", 32 * K, "eval", 32, 1, vec![]),
+                2,
+            )),
+            // Additive sp scenario: exercises the SP-aware cost path and
+            // the `sp_sharding` artifact block; earlier smoke scenarios
+            // keep byte-identical artifact entries.
+            shrink(Self::with_sp(
                 Self::paper("qwen2.5-7b", 32 * K, "eval", 32, 1, vec![]),
                 2,
             )),
@@ -248,8 +289,8 @@ mod tests {
 
     #[test]
     fn select_resolves_names_and_rejects_unknown() {
-        assert_eq!(Scenario::select("smoke").unwrap().len(), 4);
-        assert!(Scenario::select("paper").unwrap().len() >= 11);
+        assert_eq!(Scenario::select("smoke").unwrap().len(), 5);
+        assert!(Scenario::select("paper").unwrap().len() >= 13);
         let one = Scenario::select("7b-32K-eval").unwrap();
         assert_eq!(one.len(), 1);
         assert!(Scenario::select("not-a-scenario").is_err());
@@ -271,11 +312,41 @@ mod tests {
             .iter()
             .filter(|s| !s.name.contains("-dp"))
             .all(|s| s.parallel.dp == 1));
-        // The smoke set carries exactly one dp scenario, appended last.
+        // The smoke set carries exactly one dp scenario (fourth slot, after
+        // the three original distribution-family scenarios).
         let smoke = Scenario::smoke();
-        assert_eq!(smoke.last().unwrap().name, "smoke-7b-32K-eval-dp2");
-        assert_eq!(smoke.last().unwrap().parallel.dp, 2);
+        assert_eq!(smoke[3].name, "smoke-7b-32K-eval-dp2");
+        assert_eq!(smoke[3].parallel.dp, 2);
         assert!(smoke[..3].iter().all(|s| s.parallel.dp == 1));
+    }
+
+    #[test]
+    fn sp_scenarios_registered_with_sp_strategy() {
+        let all = Scenario::registry();
+        let sp4 = all
+            .iter()
+            .find(|s| s.name == "7b-32K-longtail-sft-sp4")
+            .expect("sp4 longtail scenario");
+        assert_eq!(sp4.parallel.sp, 4);
+        assert_eq!(
+            sp4.parallel.world_size(),
+            sp4.parallel.tp * sp4.parallel.pp * 4
+        );
+        let sp4_long = all
+            .iter()
+            .find(|s| s.name == "7b-256K-eval-sp4")
+            .expect("sp4 256K scenario");
+        assert_eq!(sp4_long.parallel.sp, 4);
+        // Non-sp scenarios stay at sp = 1 (artifact bytes unchanged).
+        assert!(all
+            .iter()
+            .filter(|s| !s.name.contains("-sp"))
+            .all(|s| s.parallel.sp == 1));
+        // The smoke set carries exactly one sp scenario, appended last.
+        let smoke = Scenario::smoke();
+        assert_eq!(smoke.last().unwrap().name, "smoke-7b-32K-eval-sp2");
+        assert_eq!(smoke.last().unwrap().parallel.sp, 2);
+        assert!(smoke[..4].iter().all(|s| s.parallel.sp == 1));
     }
 
     #[test]

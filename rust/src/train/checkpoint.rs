@@ -27,6 +27,7 @@ use std::io::{Read, Write};
 use std::path::{Path, PathBuf};
 
 use super::adam::AdamState;
+use crate::config::ParallelConfig;
 use crate::runtime::FlatParams;
 use crate::util::crc::{crc32, Crc32};
 use crate::util::fault;
@@ -43,6 +44,10 @@ pub struct TrainState {
     pub step: u64,
     /// Present on v2+ checkpoints saved with optimizer state.
     pub adam: Option<AdamState>,
+    /// Topology provenance: the parallel configuration the run that wrote
+    /// this checkpoint executed under. Additive header field — older
+    /// checkpoints load as `None` and skip the `--resume` topology check.
+    pub parallel: Option<ParallelConfig>,
 }
 
 fn write_bufs(f: &mut impl Write, bufs: &[Vec<f32>]) -> anyhow::Result<()> {
@@ -91,6 +96,7 @@ pub fn save(
     params: &FlatParams,
     step: u64,
     adam: Option<&AdamState>,
+    parallel: Option<&ParallelConfig>,
 ) -> anyhow::Result<()> {
     if let Some(st) = adam {
         anyhow::ensure!(
@@ -114,7 +120,7 @@ pub fn save(
         section_crcs.push(crc_of_bufs(&st.m));
         section_crcs.push(crc_of_bufs(&st.v));
     }
-    let header = Json::obj(vec![
+    let mut header_fields = vec![
         ("version", Json::num(VERSION as f64)),
         ("step", Json::num(step as f64)),
         (
@@ -127,8 +133,13 @@ pub fn save(
             "section_crcs",
             Json::Arr(section_crcs.iter().map(|&c| Json::num(c as f64)).collect()),
         ),
-    ])
-    .dump();
+    ];
+    // Topology provenance is additive: readers that predate it ignore the
+    // field, and its absence loads as `None` (no `--resume` check).
+    if let Some(p) = parallel {
+        header_fields.push(("parallel", p.to_json()));
+    }
+    let header = Json::obj(header_fields).dump();
     let tmp = path.with_extension("tmp");
     if let Some(parent) = path.parent() {
         std::fs::create_dir_all(parent)?;
@@ -275,7 +286,14 @@ pub fn load(path: &Path) -> anyhow::Result<TrainState> {
     } else {
         None
     };
-    Ok(TrainState { params, step, adam })
+    let parallel = match header.get("parallel") {
+        Some(p) => Some(
+            ParallelConfig::from_json(p)
+                .map_err(|e| anyhow::anyhow!("checkpoint `parallel` provenance: {e}"))?,
+        ),
+        None => None,
+    };
+    Ok(TrainState { params, step, adam, parallel })
 }
 
 /// Filename for a rotation generation, ordered lexicographically by step.
@@ -314,12 +332,13 @@ pub fn save_rotating(
     params: &FlatParams,
     step: u64,
     adam: Option<&AdamState>,
+    parallel: Option<&ParallelConfig>,
     keep: usize,
 ) -> anyhow::Result<PathBuf> {
     anyhow::ensure!(keep >= 1, "checkpoint rotation must keep at least 1 generation");
     std::fs::create_dir_all(dir)?;
     let path = dir.join(generation_name(step));
-    save(&path, params, step, adam)?;
+    save(&path, params, step, adam, parallel)?;
     let gens = generations(dir)?;
     if gens.len() > keep {
         for (_, old) in &gens[..gens.len() - keep] {
@@ -378,7 +397,7 @@ mod tests {
     fn roundtrip_params_only() {
         let path = tmp_dir("roundtrip_a").join("a.ckpt");
         let p = params();
-        save(&path, &p, 42, None).unwrap();
+        save(&path, &p, 42, None, None).unwrap();
         let state = load(&path).unwrap();
         assert_eq!(state.step, 42);
         assert_eq!(p.0, state.params.0);
@@ -390,12 +409,28 @@ mod tests {
         let path = tmp_dir("roundtrip_b").join("b.ckpt");
         let p = params();
         let st = adam_state();
-        save(&path, &p, 7, Some(&st)).unwrap();
+        save(&path, &p, 7, Some(&st), None).unwrap();
         let state = load(&path).unwrap();
         assert_eq!(state.step, 7);
         assert_eq!(p.0, state.params.0);
         let restored = state.adam.expect("adam state");
         assert_eq!(restored, st);
+    }
+
+    #[test]
+    fn roundtrip_with_parallel_provenance() {
+        use crate::config::RecomputeGranularity;
+        let path = tmp_dir("roundtrip_p").join("p.ckpt");
+        let p = params();
+        let mut topo = ParallelConfig::new(1, 2, RecomputeGranularity::Selective);
+        topo.dp = 2;
+        topo.sp = 4;
+        save(&path, &p, 5, None, Some(&topo)).unwrap();
+        let state = load(&path).unwrap();
+        assert_eq!(state.parallel.as_ref(), Some(&topo));
+        // Provenance-free saves (and pre-provenance files) load as None.
+        save(&path, &p, 6, None, None).unwrap();
+        assert!(load(&path).unwrap().parallel.is_none());
     }
 
     #[test]
@@ -509,16 +544,16 @@ mod tests {
         let p = params();
         let mut st = adam_state();
         st.m.pop();
-        assert!(save(&path, &p, 1, Some(&st)).is_err());
+        assert!(save(&path, &p, 1, Some(&st), None).is_err());
     }
 
     #[test]
     fn overwrite_is_atomic_and_latest_wins() {
         let path = tmp_dir("overwrite").join("c.ckpt");
-        save(&path, &params(), 1, None).unwrap();
+        save(&path, &params(), 1, None, None).unwrap();
         let mut p2 = params();
         p2.0[0][0] = 999.0;
-        save(&path, &p2, 2, Some(&adam_state())).unwrap();
+        save(&path, &p2, 2, Some(&adam_state()), None).unwrap();
         let state = load(&path).unwrap();
         assert_eq!(state.step, 2);
         assert_eq!(state.params.0[0][0], 999.0);
@@ -528,7 +563,7 @@ mod tests {
     #[test]
     fn payload_corruption_is_detected() {
         let path = tmp_dir("corrupt_payload").join("c.ckpt");
-        save(&path, &params(), 5, Some(&adam_state())).unwrap();
+        save(&path, &params(), 5, Some(&adam_state()), None).unwrap();
         let clean = std::fs::read(&path).unwrap();
         // Flip a payload byte in each section; the per-section CRC must
         // name the right section.
@@ -550,7 +585,7 @@ mod tests {
         // return a clean Err, never panic, never succeed on corrupt data.
         let dir = tmp_dir("fuzz");
         let path = dir.join("f.ckpt");
-        save(&path, &params(), 9, Some(&adam_state())).unwrap();
+        save(&path, &params(), 9, Some(&adam_state()), None).unwrap();
         let clean = std::fs::read(&path).unwrap();
         let section = (100 + 7) * 4;
         let header_end = clean.len() - 3 * section;
@@ -591,7 +626,7 @@ mod tests {
     fn rotation_keeps_last_n_generations() {
         let dir = tmp_dir("rotate");
         for step in 1..=5 {
-            save_rotating(&dir, &params(), step, None, 3).unwrap();
+            save_rotating(&dir, &params(), step, None, None, 3).unwrap();
         }
         let gens = generations(&dir).unwrap();
         let steps: Vec<u64> = gens.iter().map(|(s, _)| *s).collect();
@@ -605,7 +640,7 @@ mod tests {
     fn latest_valid_falls_back_over_corrupt_generations() {
         let dir = tmp_dir("fallback");
         for step in 1..=3 {
-            save_rotating(&dir, &params(), step, Some(&adam_state()), 3).unwrap();
+            save_rotating(&dir, &params(), step, Some(&adam_state()), None, 3).unwrap();
         }
         // Tear the newest generation and bit-rot the middle one.
         let newest = dir.join(generation_name(3));

@@ -157,6 +157,8 @@ pub struct StepMetrics {
     pub stages: usize,
     /// Data-parallel replica groups this step executed on (1 = no DP).
     pub dp: usize,
+    /// Chunk-aware sequence-parallel degree this step ran under (1 = off).
+    pub sp: u64,
     /// DP mode only: max/mean token-load ratio of the chunk-balanced rank
     /// assignment this step ran under (1.0 = perfectly balanced).
     pub dp_imbalance: Option<f64>,
@@ -211,6 +213,10 @@ pub struct Trainer<B: Backend = Runtime> {
     /// Stage-handoff deadline override (`--handoff-timeout-secs`); `None`
     /// derives one from the cost model.
     handoff_timeout: Option<Duration>,
+    /// Chunk-aware sequence-parallel degree (`--sp`): dependent chunks'
+    /// backward query rows split across this many shard calls over the
+    /// KV-prefix seam. 1 = off (the pre-SP code path, bit for bit).
+    sp: u64,
     pub history: Vec<StepMetrics>,
 }
 
@@ -267,6 +273,7 @@ impl<B: Backend> Trainer<B> {
             offload_budget: None,
             retry: RetryPolicy::none(),
             handoff_timeout: None,
+            sp: 1,
             history: Vec::new(),
         })
     }
@@ -289,6 +296,24 @@ impl<B: Backend> Trainer<B> {
     /// `None` restores the cost-model-derived default.
     pub fn set_handoff_timeout(&mut self, timeout: Option<Duration>) {
         self.handoff_timeout = timeout;
+    }
+
+    /// Chunk-aware sequence-parallel degree (`--sp`): long (dependent)
+    /// chunks' backward calls split their query rows across `sp` shards
+    /// over the existing KV-prefix seam (the single-rule sharding decision
+    /// lives in [`crate::config::ParallelConfig::sp_shards`]: short chunks
+    /// never shard, shards never exceed a chunk's live rows). Each shard's
+    /// loss-row and KV-cotangent ownership partitions the unsharded call,
+    /// so the summed gradients match up to float re-association (gated at
+    /// 1e-6 by `tests/integration_sp.rs`); `sp = 1` takes today's code
+    /// path bit for bit.
+    pub fn set_sp(&mut self, sp: u64) {
+        self.sp = sp.max(1);
+    }
+
+    /// The configured sequence-parallel degree (1 = off).
+    pub fn sp(&self) -> u64 {
+        self.sp
     }
 
     fn exec_options(&self) -> ExecOptions {
@@ -432,6 +457,7 @@ impl<B: Backend> Trainer<B> {
             act_peak_chunks: acc.act_peak_chunks,
             stages: 1,
             dp: 1,
+            sp: self.sp,
             dp_imbalance: None,
             measured_bubble_ratio: None,
             predicted_bubble_ratio: None,
@@ -512,14 +538,49 @@ impl<B: Backend> Trainer<B> {
                     // prefix KV just in time for the fused recompute.
                     let kv_in = store.prefix(seq_id, i, num_layers, c, hd)?;
                     let inputs = self.chunk_inputs(group[i], tokens, seq_len, prefix);
-                    let inputs = ChunkInputs { kv_in, ..inputs };
-                    let out = self.backend.chunk_vjp(&inputs, &g_kv[i])?;
-                    accumulate(grads, &out.d_params);
-                    loss += out.loss_sum;
-                    toks += out.n_tok;
-                    // Scatter d_kv_in ([L, 2, prefix, H, D]) into earlier
-                    // chunks' pending gradients ([L, 2, C, H, D] each).
-                    scatter_kv_grad(&out.d_kv_in, &mut g_kv[..i], num_layers, prefix, c, hd);
+                    let total_len = group[i].total_len() as usize;
+                    let shards =
+                        self.sp.max(1).min(total_len.max(1) as u64) as usize;
+                    if shards <= 1 {
+                        let inputs = ChunkInputs { kv_in, ..inputs };
+                        let out = self.backend.chunk_vjp(&inputs, &g_kv[i])?;
+                        accumulate(grads, &out.d_params);
+                        loss += out.loss_sum;
+                        toks += out.n_tok;
+                        // Scatter d_kv_in ([L, 2, prefix, H, D]) into earlier
+                        // chunks' pending gradients ([L, 2, C, H, D] each).
+                        scatter_kv_grad(&out.d_kv_in, &mut g_kv[..i], num_layers, prefix, c, hd);
+                    } else {
+                        // Chunk-aware SP: shard the backward's query rows.
+                        // Shard s owns live rows [lo, hi): its inputs keep
+                        // rows [0, hi) verbatim (causality — those rows'
+                        // activations are what the unsharded call computes
+                        // for them) with loss masked to the owned rows, and
+                        // its KV cotangent is the owned rows' slice of
+                        // g_kv[i]. Loss rows and cotangent rows partition
+                        // across shards, so the ascending-order sum equals
+                        // the unsharded call up to float re-association.
+                        let rows = total_len.div_ceil(shards);
+                        for s in 0..shards {
+                            let lo = s * rows;
+                            let hi = ((s + 1) * rows).min(total_len);
+                            let mut si = sp_shard_inputs(&inputs, total_len, lo, hi);
+                            si.kv_in = kv_in.clone();
+                            let g_own = sp_shard_g_kv(&g_kv[i], num_layers, c, hd, lo, hi);
+                            let out = self.backend.chunk_vjp(&si, &g_own)?;
+                            accumulate(grads, &out.d_params);
+                            loss += out.loss_sum;
+                            toks += out.n_tok;
+                            scatter_kv_grad(
+                                &out.d_kv_in,
+                                &mut g_kv[..i],
+                                num_layers,
+                                prefix,
+                                c,
+                                hd,
+                            );
+                        }
+                    }
                 }
             }
         }
@@ -546,9 +607,11 @@ impl<B: Backend> Trainer<B> {
         Ok(())
     }
 
-    /// Save parameters + step counter + Adam state.
+    /// Save parameters + step counter + Adam state. No topology provenance
+    /// is recorded here — this ad-hoc save path has no [`TrainMode`] in
+    /// hand; the recovery loop ([`Trainer::train_with_recovery`]) records it.
     pub fn save_checkpoint(&self, path: &std::path::Path) -> anyhow::Result<()> {
-        checkpoint::save(path, &self.params, self.step, Some(&self.adam.export_state()))
+        checkpoint::save(path, &self.params, self.step, Some(&self.adam.export_state()), None)
     }
 
     /// Restore parameters, step counter, Adam moments (when the checkpoint
@@ -620,6 +683,9 @@ impl<B: Backend> Trainer<B> {
                         ("fast_path", Json::Bool(m.fast_path)),
                         ("retries", Json::num(m.retries as f64)),
                     ];
+                    if m.sp > 1 {
+                        fields.push(("sp", Json::num(m.sp as f64)));
+                    }
                     if let Some(i) = m.dp_imbalance {
                         fields.push(("dp_imbalance", Json::num(i)));
                     }
@@ -667,8 +733,18 @@ impl Trainer<ReferenceBackend> {
         anyhow::ensure!(stages >= 1, "need at least one pipeline stage");
         let (set, tokens, seq_len) = self.prepare_batch(batch);
         let k = (self.config.chunkflow.k.max(1)) as usize;
+        let orig_chunks = set.chunks.len();
 
-        let items = crate::pipeline::build_exec_items(&self.backend, &set, &tokens, &seq_len);
+        // Under `--sp`, long chunks expand into shard items (see
+        // `pipeline::build_exec_items_sp`); the executor and the simulator
+        // both run the expanded set. sp=1 takes the pre-SP builder verbatim.
+        let (set, items) = if self.sp > 1 {
+            crate::pipeline::build_exec_items_sp(&self.backend, &set, &tokens, &seq_len, self.sp)
+        } else {
+            let items =
+                crate::pipeline::build_exec_items(&self.backend, &set, &tokens, &seq_len);
+            (set, items)
+        };
         let (out, retries) = crate::pipeline::execute_state_aware_supervised(
             &self.backend,
             &set,
@@ -697,7 +773,7 @@ impl Trainer<ReferenceBackend> {
             loss_sum: out.loss_sum,
             tok_sum: out.tok_sum,
             grads: out.grads,
-            chunks: set.chunks.len(),
+            chunks: orig_chunks,
             kv_peak_bytes: out.kv_peak_bytes,
             kv_resident_peak_bytes: out.kv_peak_bytes,
             act_peak_chunks: out.act_peak_chunks,
@@ -728,6 +804,7 @@ impl Trainer<ReferenceBackend> {
             act_peak_chunks: acc.act_peak_chunks,
             stages,
             dp: 1,
+            sp: self.sp,
             dp_imbalance: None,
             measured_bubble_ratio: Some(report.measured_bubble_ratio),
             predicted_bubble_ratio: Some(report.predicted_bubble_ratio),
@@ -915,13 +992,24 @@ impl Trainer<ReferenceBackend> {
         let replicas: Vec<crate::pipeline::ReplicaSpec> = (0..dp)
             .map(|r| {
                 let rank_set = assign.rank_chunk_set(&set, r);
-                let items = crate::pipeline::build_exec_items(
-                    &self.backend,
-                    &rank_set,
-                    &tokens,
-                    &seq_len,
-                );
-                crate::pipeline::ReplicaSpec { set: rank_set, items }
+                if self.sp > 1 {
+                    let (rank_set, items) = crate::pipeline::build_exec_items_sp(
+                        &self.backend,
+                        &rank_set,
+                        &tokens,
+                        &seq_len,
+                        self.sp,
+                    );
+                    crate::pipeline::ReplicaSpec { set: rank_set, items }
+                } else {
+                    let items = crate::pipeline::build_exec_items(
+                        &self.backend,
+                        &rank_set,
+                        &tokens,
+                        &seq_len,
+                    );
+                    crate::pipeline::ReplicaSpec { set: rank_set, items }
+                }
             })
             .collect();
         let (outcomes, retries) = crate::pipeline::execute_replica_groups_supervised(
@@ -998,6 +1086,7 @@ impl Trainer<ReferenceBackend> {
             act_peak_chunks: acc.act_peak_chunks,
             stages,
             dp,
+            sp: self.sp,
             dp_imbalance: Some(report.dp_imbalance),
             measured_bubble_ratio: report.measured_bubble_ratio,
             predicted_bubble_ratio: report.predicted_bubble_ratio,
@@ -1026,6 +1115,28 @@ impl Trainer<ReferenceBackend> {
         Ok(())
     }
 
+    /// The [`crate::config::ParallelConfig`] a [`TrainMode`] plus the
+    /// configured `--sp` degree describe — recorded into checkpoints as
+    /// provenance and validated against it on `--resume`. The reference
+    /// trainer has no tensor parallelism and its recompute behavior is
+    /// fixed by Algorithm 2, so `tp`/`recompute` are the defaults; only
+    /// `dp`/`pp`/`sp` vary with the CLI flags (and only they are compared).
+    fn topology_for(&self, mode: TrainMode) -> crate::config::ParallelConfig {
+        let (dp, stages) = match mode {
+            TrainMode::Single => (1, 1),
+            TrainMode::Pipelined { stages } => (1, stages),
+            TrainMode::Dp { dp, stages } => (dp, stages),
+        };
+        let mut p = crate::config::ParallelConfig::new(
+            1,
+            stages as u64,
+            crate::config::RecomputeGranularity::Selective,
+        );
+        p.dp = dp as u64;
+        p.sp = self.sp;
+        p
+    }
+
     /// Run training in `mode`, checkpointing on the `ckpt` cadence and —
     /// when `resume` is set — first restoring the newest *valid* generation
     /// in `ckpt.dir` (corrupt or torn files are skipped; see
@@ -1039,12 +1150,36 @@ impl Trainer<ReferenceBackend> {
         ckpt: Option<&CheckpointPolicy>,
         resume: bool,
     ) -> anyhow::Result<()> {
+        let topology = self.topology_for(mode);
         if resume {
             let policy = ckpt.ok_or_else(|| {
                 anyhow::anyhow!("--resume needs a checkpoint directory to resume from")
             })?;
             match checkpoint::latest_valid(&policy.dir)? {
                 Some((path, state)) => {
+                    // Fail fast on a topology change: the checkpoint records
+                    // the `ParallelConfig` it was written under, and resuming
+                    // under different --dp/--stages/--sp would silently
+                    // change the training trajectory. Pre-provenance
+                    // checkpoints (no `parallel` header) skip the check.
+                    if let Some(prev) = &state.parallel {
+                        anyhow::ensure!(
+                            prev.dp == topology.dp
+                                && prev.pp == topology.pp
+                                && prev.sp == topology.sp,
+                            "checkpoint {} was written under --dp {} --stages {} --sp {}, \
+                             but this run is --dp {} --stages {} --sp {}; rerun with the \
+                             matching flags (or point --checkpoint-dir at a fresh \
+                             directory) instead of resuming under a different topology",
+                            path.display(),
+                            prev.dp,
+                            prev.pp,
+                            prev.sp,
+                            topology.dp,
+                            topology.pp,
+                            topology.sp
+                        );
+                    }
                     crate::info!("resuming from {} (step {})", path.display(), state.step);
                     self.apply_checkpoint_state(state)?;
                 }
@@ -1071,6 +1206,7 @@ impl Trainer<ReferenceBackend> {
                         &self.params,
                         self.step,
                         Some(&self.adam.export_state()),
+                        Some(&topology),
                         policy.keep,
                     )?;
                     crate::info!("checkpointed step {} -> {}", self.step, path.display());
@@ -1224,6 +1360,67 @@ pub fn chunk_inputs_for<E>(
         pos[sl] = 1_000_000 + i as i32;
     }
     ChunkInputs { tokens: toks, targets, pos, seg, kv_in: Vec::new(), prefix_len: prefix }
+}
+
+/// One SP shard's view of a chunk backward: live rows `[0, hi)` are kept
+/// verbatim (causal attention means the backend computes the exact same
+/// activations for them as the unsharded call), loss is masked to the owned
+/// rows `[lo, hi)`, and — on non-last shards — rows beyond `hi` are
+/// re-padded exactly like [`chunk_inputs_for`] pads a partial chunk, so the
+/// shard is a valid fixed-shape chunk whose live extent is `[0, hi)`.
+/// `kv_in` is left empty for the caller to attach (the prefix is shared by
+/// every shard — the "ring" all shards read around).
+pub fn sp_shard_inputs<E>(
+    full: &ChunkInputs<E>,
+    total_len: usize,
+    lo: usize,
+    hi: usize,
+) -> ChunkInputs<E> {
+    let c = full.tokens.len();
+    debug_assert!(lo < hi && hi <= total_len && total_len <= c);
+    let mut tokens = full.tokens.clone();
+    let mut targets = full.targets.clone();
+    let mut pos = full.pos.clone();
+    let mut seg = full.seg.clone();
+    for t in targets[..lo].iter_mut() {
+        *t = -1;
+    }
+    for t in targets[hi..].iter_mut() {
+        *t = -1;
+    }
+    if hi < total_len {
+        for (j, sl) in (hi..c).enumerate() {
+            tokens[sl] = 0;
+            pos[sl] = 1_000_000 + j as i32;
+            seg[sl] = -1;
+        }
+    }
+    ChunkInputs { tokens, targets, pos, seg, kv_in: Vec::new(), prefix_len: full.prefix_len }
+}
+
+/// One SP shard's slice of a chunk's pending KV cotangent: rows `[lo, hi)`
+/// of every `[L, 2, C, H, D]` block kept, everything else zero — each shard
+/// owns its rows' cotangent, so the shards' `<g_own, kv_own>` terms
+/// partition the unsharded one.
+pub fn sp_shard_g_kv<E: Scalar>(
+    g_kv: &[E],
+    num_layers: usize,
+    chunk: usize,
+    hd: usize,
+    lo: usize,
+    hi: usize,
+) -> Vec<E> {
+    let block = chunk * hd;
+    let l2 = num_layers * 2;
+    debug_assert_eq!(g_kv.len(), l2 * block);
+    debug_assert!(lo <= hi && hi <= chunk);
+    let mut out = vec![E::ZERO; g_kv.len()];
+    for b in 0..l2 {
+        let off = b * block;
+        out[off + lo * hd..off + hi * hd]
+            .copy_from_slice(&g_kv[off + lo * hd..off + hi * hd]);
+    }
+    out
 }
 
 /// Layout-aware prefix concat: interleaves per-chunk [L, 2, C, H, D] blocks

@@ -126,7 +126,7 @@ impl GridSearch {
             Vec::with_capacity(self.chunk_sizes.len() * self.ks.len());
         for (ci, &chunk_size) in self.chunk_sizes.iter().enumerate() {
             for (ki, &k) in self.ks.iter().enumerate() {
-                let peak = mm.chunkflow_peak(chunk_size, k, self.context_length);
+                let peak = mm.chunkflow_peak_sp(chunk_size, k, self.context_length);
                 let (mut total, mut bubbles) = (0.0, 0.0);
                 for b in 0..self.iters {
                     let r = &per_unit[ci * self.iters + b][ki];
@@ -160,7 +160,7 @@ impl GridSearch {
     /// measure the memoization win.
     pub fn evaluate(&self, chunk_size: u64, k: u64) -> GridPoint {
         let mm = MemoryModel::new(self.model.clone(), self.parallel.clone());
-        let peak = mm.chunkflow_peak(chunk_size, k, self.context_length);
+        let peak = mm.chunkflow_peak_sp(chunk_size, k, self.context_length);
         let feasible = peak <= GPU_CAPACITY;
         let cost = CostModel::new(self.model.clone(), self.parallel.clone());
         let mut sampler = BatchSampler::new(
@@ -192,6 +192,55 @@ impl GridSearch {
     pub fn best(&self) -> Option<GridPoint> {
         self.run().into_iter().find(|p| p.feasible)
     }
+
+    /// Sweep the joint (ChunkSize, K, dp, pp, sp) space: run the full
+    /// (ChunkSize, K) grid once per parallel-strategy candidate and return
+    /// each strategy's best feasible point, ranked by iteration time.
+    ///
+    /// Strategies whose entire grid is memory-infeasible are dropped — they
+    /// have no point worth reporting. The per-strategy grids reuse the
+    /// memoized [`GridSearch::run_on`] path, so every returned point is
+    /// bit-identical to evaluating it in isolation under that strategy.
+    pub fn run_joint(
+        &self,
+        dps: &[u64],
+        pps: &[u64],
+        sps: &[u64],
+        engine: &SweepEngine,
+    ) -> Vec<JointPoint> {
+        let mut out = Vec::new();
+        for &dp in dps {
+            for &pp in pps {
+                for &sp in sps {
+                    let mut g = self.clone();
+                    g.parallel.dp = dp.max(1);
+                    g.parallel.pp = pp.max(1);
+                    g.parallel.sp = sp.max(1);
+                    if let Some(point) =
+                        g.run_on(engine).into_iter().find(|p| p.feasible)
+                    {
+                        out.push(JointPoint { parallel: g.parallel.clone(), point });
+                    }
+                }
+            }
+        }
+        out.sort_by(|a, b| {
+            a.point
+                .avg_iteration_seconds
+                .partial_cmp(&b.point.avg_iteration_seconds)
+                .unwrap()
+        });
+        out
+    }
+}
+
+/// One parallel-strategy candidate from [`GridSearch::run_joint`]: the
+/// (dp, pp, sp) combination plus the best feasible (ChunkSize, K) point its
+/// grid produced.
+#[derive(Clone, Debug)]
+pub struct JointPoint {
+    pub parallel: ParallelConfig,
+    pub point: GridPoint,
 }
 
 #[cfg(test)]
@@ -300,6 +349,84 @@ mod tests {
                 p.avg_iteration_seconds,
                 q1.avg_iteration_seconds
             );
+        }
+    }
+
+    #[test]
+    fn sp_grid_keeps_memoization_bit_identical_and_speeds_up() {
+        // The tuner is SP-aware through `CostModel::sp_stage_costs` (long
+        // dependent chunks shard across the ring) and
+        // `MemoryModel::chunkflow_peak_sp` (activation rows and held KV
+        // shard by sp). An sp > 1 grid must (a) still satisfy the
+        // memoization contract, and (b) predict faster iterations than the
+        // same grid at sp = 1 wherever long chunks dominate.
+        let mut g = search();
+        g.parallel.sp = 4;
+        let pts = g.run_on(&SweepEngine::serial());
+        for p in &pts {
+            let q = g.evaluate(p.chunk_size, p.k);
+            assert_eq!(
+                p.avg_iteration_seconds, q.avg_iteration_seconds,
+                "sp=4 ({}, {}) drifted",
+                p.chunk_size, p.k
+            );
+            assert_eq!(p.peak_memory_bytes, q.peak_memory_bytes);
+            assert_eq!(p.feasible, q.feasible);
+        }
+        // At 256K context every sequence longer than ChunkSize yields
+        // dependent chunks, so sharding them must win on every point.
+        let g1 = search();
+        for p in &pts {
+            let q1 = g1.evaluate(p.chunk_size, p.k);
+            assert!(
+                p.avg_iteration_seconds < q1.avg_iteration_seconds,
+                "sp=4 ({}, {}) {} not faster than sp=1 {}",
+                p.chunk_size,
+                p.k,
+                p.avg_iteration_seconds,
+                q1.avg_iteration_seconds
+            );
+            // Sharding also lowers the modeled peak: more points fit.
+            assert!(p.peak_memory_bytes <= q1.peak_memory_bytes);
+        }
+    }
+
+    #[test]
+    fn sp1_grid_is_bit_identical_to_pre_sp_path() {
+        // sp = 1 must not perturb the tuner at all: chunkflow_peak_sp
+        // delegates to chunkflow_peak and sp_stage_costs to stage_costs.
+        let g = search();
+        assert_eq!(g.parallel.sp, 1);
+        let pts = g.run_on(&SweepEngine::serial());
+        let mm = MemoryModel::new(g.model.clone(), g.parallel.clone());
+        for p in &pts {
+            assert_eq!(
+                p.peak_memory_bytes,
+                mm.chunkflow_peak(p.chunk_size, p.k, g.context_length)
+            );
+        }
+    }
+
+    #[test]
+    fn joint_search_ranks_strategies_and_prefers_sp_for_long_context() {
+        let g = search();
+        let ranked = g.run_joint(&[1], &[4], &[1, 4], &SweepEngine::serial());
+        assert_eq!(ranked.len(), 2, "both strategies have feasible points");
+        for w in ranked.windows(2) {
+            assert!(
+                w[0].point.avg_iteration_seconds <= w[1].point.avg_iteration_seconds
+            );
+        }
+        assert_eq!(
+            ranked[0].parallel.sp, 4,
+            "at 256K context the sp=4 strategy must rank first"
+        );
+        // Each strategy's point matches an isolated evaluation under it.
+        for jp in &ranked {
+            let mut gj = g.clone();
+            gj.parallel = jp.parallel.clone();
+            let q = gj.evaluate(jp.point.chunk_size, jp.point.k);
+            assert_eq!(jp.point.avg_iteration_seconds, q.avg_iteration_seconds);
         }
     }
 

@@ -1,0 +1,274 @@
+//! Chunk-aware sequence parallelism integration (Layer 3 against the
+//! `--sp` masked shard-call path in `train::run_group`, the expanded
+//! exec-item builder `pipeline::build_exec_items_sp`, and the replica
+//! combination of both):
+//!
+//! - SP conformance — `--sp S` gradients match the unchunked
+//!   full-sequence oracle to 1e-6 over a (ChunkSize, K, S) grid including
+//!   K < N, on the single-stage, stage-parallel, and data-parallel paths;
+//! - the sp=1 contract — `set_sp(1)` is *bit-identical* to a trainer that
+//!   never heard of SP, across dp ∈ {1, 2} × stages ∈ {1, 2};
+//! - determinism — repeated sp>1 runs produce the same bits;
+//! - the CLI surface: `train --sp 2 --stages 2` runs end to end, the
+//!   history records the sp degree only when sp > 1, PJRT rejects `--sp`,
+//!   and `--resume` under a different `--sp` fails fast on the
+//!   checkpoint's recorded topology.
+
+mod common;
+
+use chunkflow::data::Sequence;
+use chunkflow::train::{CheckpointPolicy, TrainMode};
+
+use common::{max_rel_err, mini_config, oracle_grads, short_dist, trainer_with};
+
+/// Same mixed batch as the DP suite: a 5-chunk dependent group (K < N at
+/// ChunkSize 16), short packable sequences, and 2-/3-chunk groups — every
+/// unit kind at once, so SP shards some chunks and leaves others whole.
+fn mixed_batch() -> Vec<Sequence> {
+    vec![
+        Sequence { id: 1, len: 70 },
+        Sequence { id: 2, len: 12 },
+        Sequence { id: 3, len: 20 },
+        Sequence { id: 4, len: 48 },
+        Sequence { id: 5, len: 9 },
+        Sequence { id: 6, len: 33 },
+    ]
+}
+
+#[test]
+fn sp_gradients_match_oracle_across_grid() {
+    // The acceptance bar: sharded-query gradients agree with the unchunked
+    // oracle to 1e-6 over (ChunkSize, K, sp) including K < N (the 70-token
+    // sequence is 5 chunks at ChunkSize 16, so K ∈ {1, 2} forces eviction
+    // + recompute under sharding too).
+    let batch = mixed_batch();
+    for (chunk, k) in [(16u64, 1u64), (16, 2), (16, 8), (32, 1)] {
+        let cfg = mini_config(chunk, 128 / chunk as usize, k);
+        let ctx = cfg.context_length;
+        let mut tr = trainer_with(cfg, short_dist(ctx));
+        let (loss_o, ntok_o, grads_o) = oracle_grads(&tr, &batch);
+        for sp in [1u64, 2, 4] {
+            tr.set_sp(sp);
+            let acc = tr.compute_gradients(&batch).expect("sp grads");
+            assert_eq!(acc.tok_sum, ntok_o, "chunk={chunk} K={k} sp={sp}");
+            assert!(
+                (acc.loss_sum - loss_o).abs() / loss_o.abs() < 1e-9,
+                "chunk={chunk} K={k} sp={sp}: loss {} vs oracle {loss_o}",
+                acc.loss_sum
+            );
+            let rel = max_rel_err(&acc.grads, &grads_o);
+            assert!(rel < 1e-6, "chunk={chunk} K={k} sp={sp}: rel err {rel}");
+        }
+    }
+}
+
+#[test]
+fn sp_pipelined_and_dp_paths_match_oracle() {
+    // The stage-parallel executor runs the *expanded* exec-item set (each
+    // long chunk becomes `shards` consecutive items) and the DP path runs
+    // that expansion inside every replica group — all of it must still
+    // land on the oracle.
+    let batch = mixed_batch();
+    let cfg = mini_config(16, 8, 2);
+    let ctx = cfg.context_length;
+    let mut tr = trainer_with(cfg, short_dist(ctx));
+    let (loss_o, ntok_o, grads_o) = oracle_grads(&tr, &batch);
+    for sp in [2u64, 4] {
+        tr.set_sp(sp);
+        for stages in [1usize, 2] {
+            let (acc, rep) =
+                tr.compute_gradients_pipelined(&batch, stages).expect("sp pipelined");
+            assert_eq!(acc.tok_sum, ntok_o, "sp={sp} P={stages}");
+            assert!(
+                (acc.loss_sum - loss_o).abs() / loss_o.abs() < 1e-9,
+                "sp={sp} P={stages}: loss {} vs oracle {loss_o}",
+                acc.loss_sum
+            );
+            let rel = max_rel_err(&acc.grads, &grads_o);
+            assert!(rel < 1e-6, "sp={sp} P={stages}: rel err {rel}");
+            assert_eq!(rep.stages, stages);
+            // Chunk accounting reports *logical* chunks, not shard items.
+            assert_eq!(acc.chunks, tr.compute_gradients(&batch).unwrap().chunks);
+            for dp in [1usize, 2] {
+                let (acc, _) =
+                    tr.compute_gradients_dp(&batch, dp, stages).expect("sp dp grads");
+                assert_eq!(acc.tok_sum, ntok_o, "sp={sp} dp={dp} P={stages}");
+                let rel = max_rel_err(&acc.grads, &grads_o);
+                assert!(rel < 1e-6, "sp={sp} dp={dp} P={stages}: rel err {rel}");
+            }
+        }
+    }
+}
+
+#[test]
+fn sp1_bit_identical_to_pre_sp_path_across_lattice() {
+    // The compatibility tentpole: sp=1 must take the pre-SP code verbatim.
+    // A trainer that explicitly sets sp=1 produces the exact same bits as
+    // one that never touched the knob, on every execution path we ship:
+    // dp ∈ {1, 2} × stages ∈ {1, 2} plus the classic single-stage loop.
+    let batch = mixed_batch();
+    let cfg = mini_config(16, 8, 2);
+    let ctx = cfg.context_length;
+    let base = trainer_with(cfg.clone(), short_dist(ctx));
+    let mut sp1 = trainer_with(cfg, short_dist(ctx));
+    sp1.set_sp(1);
+
+    let a = base.compute_gradients(&batch).expect("base grads");
+    let b = sp1.compute_gradients(&batch).expect("sp1 grads");
+    assert_eq!(a.grads, b.grads, "single-stage sp=1 must be bit-identical");
+    assert_eq!(a.loss_sum, b.loss_sum);
+    assert_eq!(a.kv_peak_bytes, b.kv_peak_bytes);
+
+    for stages in [1usize, 2] {
+        let (a, _) = base.compute_gradients_pipelined(&batch, stages).expect("base");
+        let (b, _) = sp1.compute_gradients_pipelined(&batch, stages).expect("sp1");
+        assert_eq!(a.grads, b.grads, "P={stages}: pipelined sp=1 bit-identity");
+        assert_eq!(a.loss_sum, b.loss_sum);
+        for dp in [1usize, 2] {
+            let (a, _) = base.compute_gradients_dp(&batch, dp, stages).expect("base");
+            let (b, _) = sp1.compute_gradients_dp(&batch, dp, stages).expect("sp1");
+            assert_eq!(a.grads, b.grads, "dp={dp} P={stages}: dp sp=1 bit-identity");
+            assert_eq!(a.loss_sum, b.loss_sum);
+        }
+    }
+}
+
+#[test]
+fn sp_runs_are_deterministic() {
+    let batch = mixed_batch();
+    let cfg = mini_config(16, 8, 1);
+    let ctx = cfg.context_length;
+    let mut tr = trainer_with(cfg, short_dist(ctx));
+    tr.set_sp(2);
+    let a = tr.compute_gradients(&batch).expect("run a");
+    let b = tr.compute_gradients(&batch).expect("run b");
+    assert_eq!(a.grads, b.grads, "sharded runs must reproduce bit for bit");
+    assert_eq!(a.loss_sum, b.loss_sum);
+    for stages in [1usize, 2] {
+        let (a, _) = tr.compute_gradients_pipelined(&batch, stages).expect("run a");
+        let (b, _) = tr.compute_gradients_pipelined(&batch, stages).expect("run b");
+        assert_eq!(a.grads, b.grads, "stages={stages}: expanded runs must reproduce");
+    }
+}
+
+#[test]
+fn sp_train_step_records_degree_only_when_on() {
+    // History JSON stays byte-stable for sp-free runs: the "sp" key is
+    // emitted only when the step actually ran sharded.
+    let mut cfg = mini_config(16, 8, 1);
+    cfg.steps = 2;
+    cfg.global_batch_size = 4;
+    let ctx = cfg.context_length;
+
+    let mut plain = trainer_with(cfg.clone(), short_dist(ctx));
+    let m = plain.train_step().expect("plain step");
+    assert_eq!(m.sp, 1);
+    let json = plain.loss_history_json().dump();
+    assert!(!json.contains("\"sp\""), "sp-free history must not mention sp: {json}");
+
+    let mut sharded = trainer_with(cfg, short_dist(ctx));
+    sharded.set_sp(2);
+    let m1 = sharded.train_step().expect("sp step");
+    assert_eq!(m1.sp, 2);
+    assert!(m1.loss_per_token.is_finite() && m1.loss_per_token > 0.0);
+    let m2 = sharded.train_step_pipelined(2).expect("sp staged step");
+    assert_eq!(m2.sp, 2);
+    assert_eq!(m2.stages, 2);
+    let json = sharded.loss_history_json().dump();
+    assert!(json.contains("\"sp\""), "{json}");
+}
+
+#[test]
+fn sp_resume_rejects_topology_change() {
+    // Satellite: checkpoints record the ParallelConfig they were written
+    // under; resuming with a different --sp fails fast and says so.
+    let dir = std::env::temp_dir().join("chunkflow_it_sp_resume");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let policy = CheckpointPolicy { dir: dir.clone(), every: 0, keep: 2 };
+
+    let mut cfg = mini_config(16, 8, 1);
+    cfg.steps = 1;
+    cfg.global_batch_size = 2;
+    let ctx = cfg.context_length;
+
+    let mut writer = trainer_with(cfg.clone(), short_dist(ctx));
+    writer.set_sp(2);
+    writer
+        .train_with_recovery(TrainMode::Pipelined { stages: 2 }, Some(&policy), false)
+        .expect("sp=2 training run");
+
+    let mut wrong = trainer_with(cfg.clone(), short_dist(ctx));
+    wrong.set_sp(1);
+    let err = wrong
+        .train_with_recovery(TrainMode::Pipelined { stages: 2 }, Some(&policy), true)
+        .expect_err("sp mismatch must fail");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("--sp"), "error must name the flag: {msg}");
+
+    let mut matching = trainer_with(cfg, short_dist(ctx));
+    matching.set_sp(2);
+    matching
+        .train_with_recovery(TrainMode::Pipelined { stages: 2 }, Some(&policy), true)
+        .expect("matching topology resumes");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ----- CLI surface ----------------------------------------------------------
+
+fn chunkflow_bin() -> std::process::Command {
+    std::process::Command::new(env!("CARGO_BIN_EXE_chunkflow"))
+}
+
+#[test]
+fn cli_train_with_sp_runs_end_to_end() {
+    let dir = std::env::temp_dir().join("chunkflow_it_sp_cli");
+    std::fs::create_dir_all(&dir).unwrap();
+    let out_path = dir.join("history.json");
+    let out = chunkflow_bin()
+        .args([
+            "train",
+            "--backend",
+            "reference",
+            "--model",
+            "tiny",
+            "--context",
+            "256",
+            "--chunk-size",
+            "128",
+            "--k",
+            "1",
+            "--sp",
+            "2",
+            "--stages",
+            "2",
+            "--steps",
+            "1",
+            "--batch",
+            "4",
+            "--out",
+            out_path.to_str().unwrap(),
+        ])
+        .output()
+        .expect("spawn chunkflow");
+    assert!(
+        out.status.success(),
+        "stdout: {}\nstderr: {}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let history = std::fs::read_to_string(&out_path).unwrap();
+    assert!(history.contains("\"sp\""), "{history}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn cli_sp_rejected_on_pjrt_backend() {
+    let out = chunkflow_bin()
+        .args(["train", "--backend", "pjrt", "--sp", "2", "--model", "tiny"])
+        .output()
+        .expect("spawn chunkflow");
+    assert!(!out.status.success());
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("--sp") || stderr.contains("reference"), "stderr: {stderr}");
+}
