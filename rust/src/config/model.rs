@@ -29,19 +29,27 @@ impl ModelSpec {
         self.hidden_size / self.num_heads
     }
 
-    /// Total parameter count.
-    pub fn param_count(&self) -> u64 {
+    /// Parameters of ONE decoder layer: attention + SwiGLU MLP + the
+    /// layer's two RMSNorms. `param_count` is exactly
+    /// `layer_param_count * L + final_norm + embed (+ lm_head)`.
+    pub fn layer_param_count(&self) -> u64 {
         let h = self.hidden_size;
         let kv = self.num_kv_heads * self.head_dim();
         // Attention: Q (h*h) + K,V (h*kv each) + O (h*h); Qwen uses QKV bias.
         let attn = h * h + 2 * h * kv + h * h + (h + 2 * kv);
         // SwiGLU MLP: gate + up (h*i each) + down (i*h).
         let mlp = 3 * h * self.intermediate_size;
-        // Two RMSNorm weights per layer plus final norm.
-        let norms = 2 * h * self.num_layers + h;
-        let embed = self.vocab_size * h;
-        let lm_head = if self.tie_embeddings { 0 } else { self.vocab_size * h };
-        (attn + mlp) * self.num_layers + norms + embed + lm_head
+        attn + mlp + 2 * h
+    }
+
+    /// Total parameter count.
+    pub fn param_count(&self) -> u64 {
+        // Per-layer blocks (incl. the two per-layer norms) plus final norm.
+        let norms_final = self.hidden_size;
+        let embed = self.vocab_size * self.hidden_size;
+        let lm_head =
+            if self.tie_embeddings { 0 } else { self.vocab_size * self.hidden_size };
+        self.layer_param_count() * self.num_layers + norms_final + embed + lm_head
     }
 
     /// Bytes of one token's KV cache across all layers (bf16 = 2 bytes).
@@ -61,6 +69,25 @@ impl ModelSpec {
         let attn =
             4.0 * tokens as f64 * ctx_avg * self.hidden_size as f64 * self.num_layers as f64;
         dense + attn
+    }
+
+    /// Forward FLOPs of ONE decoder layer (its dense matmuls plus its share
+    /// of the causal-attention term) — the per-stage building block of the
+    /// elastic-partition cost model (`sim::cost::partition_stage_costs`).
+    pub fn layer_fwd_flops(&self, tokens: u64, ctx_end: u64) -> f64 {
+        let dense = 2.0 * self.layer_param_count() as f64 * tokens as f64;
+        let ctx_avg = (ctx_end as f64 + (ctx_end - tokens) as f64) / 2.0;
+        dense + 4.0 * tokens as f64 * ctx_avg * self.hidden_size as f64
+    }
+
+    /// Forward FLOPs of the LM-head matmul ([T, h] × [h, V]) the LAST
+    /// pipeline stage pays on top of its layers — the head side of the
+    /// embed/head stage asymmetry (the embedding lookup is a gather, ~0
+    /// FLOPs, so stage 0 carries no analogous surcharge). Counted whether
+    /// or not the head weights are tied: tying shares parameters, not
+    /// compute.
+    pub fn head_fwd_flops(&self, tokens: u64) -> f64 {
+        2.0 * self.vocab_size as f64 * self.hidden_size as f64 * tokens as f64
     }
 
     pub fn to_json(&self) -> Json {

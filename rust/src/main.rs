@@ -30,6 +30,8 @@ fn flags() -> Vec<FlagSpec> {
         flag("chunk-size", true, "ChunkSize in tokens (e.g. 8K)"),
         flag("k", true, "retention budget K"),
         flag("stages", true, "pipeline stages for train (reference backend; default 1)"),
+        flag("partition", true, "uneven per-stage layer counts, e.g. 6,4,2 (train; default equal)"),
+        flag("policy", true, "pipeline schedule policy: state-aware-1f1b (default) | chunk-interleaved"),
         flag("dp", true, "data-parallel replica groups for train (reference backend; default 1)"),
         flag("sp", true, "sequence-parallel ring degree; shards long chunks (default 1)"),
         flag("joint", false, "tune: search the joint (ChunkSize, K, dp, pp, sp) space"),
@@ -131,8 +133,19 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     cfg.artifacts_dir = args.get_or("artifacts", "artifacts").to_string();
     let k = args.get_u64("k", 1)?;
     anyhow::ensure!(k >= 1, "--k must be >= 1");
-    let stages = args.get_usize("stages", 1)?;
-    anyhow::ensure!(stages >= 1, "--stages must be >= 1");
+    let stages = match (args.get("stages"), args.get("partition")) {
+        // --partition alone implies the stage count it spells out.
+        (None, Some(spec)) => spec.split(',').filter(|t| !t.trim().is_empty()).count(),
+        _ => args.get_usize("stages", 1)?,
+    };
+    anyhow::ensure!(
+        stages >= 1,
+        "--stages must be >= 1 (a pipeline with zero stages cannot run anything)"
+    );
+    let policy = match args.get("policy") {
+        Some(name) => chunkflow::pipeline::PolicyKind::by_name(name)?,
+        None => chunkflow::pipeline::PolicyKind::default(),
+    };
     let dp = args.get_usize("dp", 1)?;
     anyhow::ensure!(dp >= 1, "--dp must be >= 1");
     let sp = args.get_u64("sp", 1)?;
@@ -182,6 +195,30 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
             // to choose; the in-memory manifest's buckets cover the context.
             let chunk_size = args.get_u64("chunk-size", 256)?;
             anyhow::ensure!(chunk_size >= 1, "--chunk-size must be >= 1");
+            // Degenerate-partition fail-fast: every stage needs at least one
+            // layer, and an explicit partition must agree with --stages and
+            // cover the model exactly (StagePartition::parse checks the
+            // rest, naming the offending stage).
+            let num_layers = cfg.model.num_layers as usize;
+            anyhow::ensure!(
+                stages <= num_layers,
+                "--stages {stages} exceeds the {} layers of `{}`: at least one \
+                 stage would be left with zero layers",
+                num_layers,
+                cfg.model.name
+            );
+            let partition = match args.get("partition") {
+                Some(spec) => {
+                    let part = chunkflow::runtime::StagePartition::parse(spec, num_layers)?;
+                    anyhow::ensure!(
+                        part.num_stages() == stages,
+                        "--partition `{spec}` describes {} stage(s) but --stages is {stages}",
+                        part.num_stages()
+                    );
+                    Some(part)
+                }
+                None => None,
+            };
             cfg.chunkflow = ChunkFlowParams::new(chunk_size, k);
             let mut parallel =
                 ParallelConfig::new(1, stages as u64, RecomputeGranularity::Selective);
@@ -196,6 +233,8 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
             }
             let mut trainer = Trainer::with_backend(backend, cfg, dist)?;
             trainer.set_sp(sp);
+            trainer.set_partition(partition);
+            trainer.set_policy(policy);
             if let Some(budget) = offload_budget {
                 trainer.set_offload_budget(Some(budget));
             }
@@ -235,6 +274,12 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
             anyhow::ensure!(
                 stages <= 1,
                 "pipeline mode (--stages > 1) requires --backend reference"
+            );
+            anyhow::ensure!(
+                args.get("partition").is_none()
+                    && policy == chunkflow::pipeline::PolicyKind::default(),
+                "--partition/--policy configure the pipeline executor and \
+                 require --backend reference"
             );
             anyhow::ensure!(
                 dp <= 1,
@@ -416,6 +461,16 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
                     100.0 * me.bubble_ratio_predicted
                 );
             }
+            if let Some(el) = r.elastic_pipeline.as_ref().and_then(|ep| ep.measured.as_ref()) {
+                println!(
+                    "  {:<28} elastic {} / {} -> bubble {:>5.1}% equal / {:>5.1}% elastic (measured)",
+                    "", // continuation line under the scenario name above
+                    el.partition,
+                    el.policy,
+                    100.0 * el.measured_bubble_equal,
+                    100.0 * el.measured_bubble_elastic
+                );
+            }
         }
         println!();
         results.iter().map(sweep::scenario_json).collect()
@@ -487,6 +542,28 @@ fn cmd_benchdiff(args: &Args) -> anyhow::Result<()> {
         );
     } else {
         println!("OK: {n} scenario(s) compared, no baseline/best/speedup drift");
+    }
+    // Schedule-quality report (informational, never gating): per-scenario
+    // bubble-ratio movement next to the speedup numbers. The gate above
+    // already pins these byte-exactly; this makes movement readable.
+    let drift = sweep::bubble_drift(&old_doc, &new_doc);
+    if !drift.is_empty() {
+        println!(
+            "\n{:<28} {:>18} {:>18}",
+            "bubble ratio", "baseline old->new", "best old->new"
+        );
+        let fmt_pair = |old: Option<f64>, new: Option<f64>| match (old, new) {
+            (Some(o), Some(w)) => format!("{:>7.1}% ->{:>6.1}%", 100.0 * o, 100.0 * w),
+            _ => "-".into(),
+        };
+        for row in &drift {
+            println!(
+                "{:<28} {:>18} {:>18}",
+                row.name,
+                fmt_pair(Some(row.baseline_old), Some(row.baseline_new)),
+                fmt_pair(row.best_old, row.best_new)
+            );
+        }
     }
     if let Some(floor) = args.get("min-fastpath-speedup") {
         let floor: f64 = floor
@@ -613,12 +690,23 @@ fn tune_joint(gs: &GridSearch, args: &Args) -> anyhow::Result<()> {
     let sps = axis(gs.parallel.sp);
     let ranked = gs.run_joint(&dps, &pps, &sps, &SweepEngine::auto());
     println!(
-        "{:>4} {:>4} {:>4} {:>10} {:>4} {:>14} {:>12}",
-        "dp", "pp", "sp", "ChunkSize", "K", "iter seconds", "peak mem"
+        "{:>4} {:>4} {:>4} {:>10} {:>4} {:>14} {:>12}  {}",
+        "dp", "pp", "sp", "ChunkSize", "K", "iter seconds", "peak mem", "elastic pipeline"
     );
     for jp in &ranked {
+        let elastic = match &jp.elastic {
+            Some(e) => format!(
+                "{} / {} (bubble {:.1}% -> {:.1}%)",
+                e.partition_string(),
+                e.policy.name(),
+                100.0 * e.bubble_equal,
+                100.0 * e.bubble_elastic
+            ),
+            None if jp.parallel.pp > 1 => "equal split optimal".to_string(),
+            None => "-".to_string(),
+        };
         println!(
-            "{:>4} {:>4} {:>4} {:>10} {:>4} {:>14.3} {:>12}",
+            "{:>4} {:>4} {:>4} {:>10} {:>4} {:>14.3} {:>12}  {elastic}",
             jp.parallel.dp,
             jp.parallel.pp,
             jp.parallel.sp,
@@ -637,20 +725,43 @@ fn tune_joint(gs: &GridSearch, args: &Args) -> anyhow::Result<()> {
             chunkflow::util::format_tokens(best.point.chunk_size),
             best.point.k
         );
+        if let Some(e) = &best.elastic {
+            println!(
+                "      with --partition {} --policy {} (simulated bubble {:.1}% -> {:.1}%)",
+                e.partition_string(),
+                e.policy.name(),
+                100.0 * e.bubble_equal,
+                100.0 * e.bubble_elastic
+            );
+        }
     }
     if let Some(out) = args.get("out") {
         let j = Json::Arr(
             ranked
                 .iter()
                 .map(|jp| {
-                    Json::obj(vec![
+                    let mut fields = vec![
                         ("dp", Json::num(jp.parallel.dp as f64)),
                         ("pp", Json::num(jp.parallel.pp as f64)),
                         ("sp", Json::num(jp.parallel.sp as f64)),
                         ("chunk_size", Json::num(jp.point.chunk_size as f64)),
                         ("k", Json::num(jp.point.k as f64)),
                         ("seconds", Json::num(jp.point.avg_iteration_seconds)),
-                    ])
+                    ];
+                    // Additive elastic refinement (pp > 1 strategies with a
+                    // strict simulated win only).
+                    if let Some(e) = &jp.elastic {
+                        fields.push((
+                            "elastic",
+                            Json::obj(vec![
+                                ("partition", Json::str(e.partition_string())),
+                                ("policy", Json::str(e.policy.name().to_string())),
+                                ("bubble_equal", Json::num(e.bubble_equal)),
+                                ("bubble_elastic", Json::num(e.bubble_elastic)),
+                            ]),
+                        ));
+                    }
+                    Json::obj(fields)
                 })
                 .collect(),
         );

@@ -41,12 +41,12 @@ use std::collections::BTreeMap;
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
 use std::time::{Duration, Instant};
 
-use super::onef1b::state_aware_1f1b_agendas;
+use super::policy::PolicyKind;
 use super::{Op, OpKind, ScheduledOp, Timeline};
 use crate::chunk::{Chunk, ChunkKind, ChunkSet, Segment};
 use crate::runtime::{
     ActivationHandoff, Backend, ChunkInputs, GradHandoff, Manifest, ReferenceBackend,
-    StageBackend, StageCache,
+    StageBackend, StageCache, StagePartition,
 };
 use crate::util::fault;
 use crate::util::pool::BufferPool;
@@ -59,13 +59,20 @@ const HANDOFF_TIMEOUT_FLOOR: Duration = Duration::from_secs(60);
 const HANDOFF_TIMEOUT_CAP: Duration = Duration::from_secs(3600);
 
 /// Tuning knobs for one executor run.
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Debug, Default)]
 pub struct ExecOptions {
     /// How long a stage waits on a boundary channel before declaring the
     /// pipeline wedged. `None` derives a deadline from the cost model via
     /// [`derived_handoff_timeout`] (floor 60s); the CLI exposes an
     /// override as `--handoff-timeout-secs`.
     pub handoff_timeout: Option<Duration>,
+    /// Uneven stage partition (`--partition a,b,c`). `None` runs the equal
+    /// partition — the exact pre-elastic layer ranges, bit for bit.
+    pub partition: Option<StagePartition>,
+    /// Agenda-generating schedule policy for `execute_state_aware*`. The
+    /// default ([`PolicyKind::StateAware1F1B`]) produces agendas
+    /// bit-identical to the pre-policy path.
+    pub policy: PolicyKind,
 }
 
 /// Bounded-backoff retry for supervised execution. The default policy
@@ -237,11 +244,11 @@ pub fn execute_state_aware_with(
         set.chunks.len(),
         items.len()
     );
-    let (agendas, _edges) = state_aware_1f1b_agendas(set, k, p);
+    let (agendas, _edges) = opts.policy.agendas(set, k, p);
     // Same-stage precedence edges are satisfied by construction: each stage
-    // executes its agenda strictly in order, and the agenda emits units in
-    // an edge-consistent order (the simulator relies on the same fact for
-    // progress).
+    // executes its agenda strictly in order, and every policy emits units
+    // in an edge-consistent order (the simulator relies on the same fact
+    // for progress).
     execute_agendas_with(backend, &agendas, items, opts)
 }
 
@@ -258,7 +265,7 @@ pub fn execute_state_aware_supervised(
     retry: &RetryPolicy,
 ) -> anyhow::Result<(ExecOutcome, u32)> {
     supervise("pipeline executor", retry, || {
-        execute_state_aware_with(backend, set, items, k, p, opts)
+        execute_state_aware_with(backend, set, items, k, p, opts.clone())
     })
 }
 
@@ -289,6 +296,26 @@ pub fn execute_agendas_with(
             items.len()
         );
     }
+    // Resolve the stage partition: explicit (elastic) or equal. The equal
+    // resolution produces the exact `stage_layer_range` ranges
+    // `StageBackend::new` derived before partitions were pluggable.
+    let num_layers = backend.manifest().num_layers;
+    let partition = match &opts.partition {
+        Some(part) => {
+            anyhow::ensure!(
+                part.num_stages() == p,
+                "partition has {} stages but {p} agendas were given",
+                part.num_stages()
+            );
+            anyhow::ensure!(
+                part.num_layers() == num_layers,
+                "partition covers {} layers but the model has {num_layers}",
+                part.num_layers()
+            );
+            part.clone()
+        }
+        None => StagePartition::equal(num_layers, p)?,
+    };
     // Retention policy, derived from the agendas themselves: a chunk whose
     // agenda carries a recompute-forward was discarded at first forward.
     // (The recompute set is identical on every stage by construction.)
@@ -327,11 +354,13 @@ pub fn execute_agendas_with(
         let chans = act_tx.into_iter().zip(act_rx).zip(grad_tx).zip(grad_rx);
         for (s, (((atx, arx), gtx), grx)) in chans.enumerate() {
             let agenda = &agendas[s];
+            let layers = partition.range(s);
             handles.push(scope.spawn(move || {
                 run_stage(
                     backend,
                     s,
                     p,
+                    layers,
                     agenda,
                     items,
                     retain,
@@ -423,11 +452,14 @@ pub fn execute_replica_groups_with(
     opts: ExecOptions,
 ) -> anyhow::Result<Vec<ExecOutcome>> {
     anyhow::ensure!(!replicas.is_empty(), "need at least one replica group");
+    let opts = &opts;
     let results: Vec<anyhow::Result<ExecOutcome>> = std::thread::scope(|scope| {
         let handles: Vec<_> = replicas
             .iter()
             .map(|r| {
-                scope.spawn(move || execute_state_aware_with(backend, &r.set, &r.items, k, p, opts))
+                scope.spawn(move || {
+                    execute_state_aware_with(backend, &r.set, &r.items, k, p, opts.clone())
+                })
             })
             .collect();
         handles
@@ -463,7 +495,7 @@ pub fn execute_replica_groups_supervised(
     retry: &RetryPolicy,
 ) -> anyhow::Result<(Vec<ExecOutcome>, u32)> {
     supervise("replica group executor", retry, || {
-        execute_replica_groups_with(backend, replicas, k, p, opts)
+        execute_replica_groups_with(backend, replicas, k, p, opts.clone())
     })
 }
 
@@ -541,6 +573,7 @@ fn run_stage(
     backend: &ReferenceBackend,
     s: usize,
     p: usize,
+    layers: std::ops::Range<usize>,
     agenda: &[Op],
     items: &[ExecItem],
     retain: &[bool],
@@ -551,7 +584,7 @@ fn run_stage(
     epoch: Instant,
     handoff_timeout: Duration,
 ) -> anyhow::Result<StageResult> {
-    let stage = StageBackend::new(backend, s, p)?;
+    let stage = StageBackend::with_layers(backend, s, p, layers)?;
     let m = backend.manifest();
     let c = m.chunk_size;
     let hd = m.num_heads * m.head_dim;
@@ -1087,8 +1120,10 @@ mod tests {
         let set = construct_chunks(&batch, 8);
         let items = exec_items(&b, &set, &batch);
         let agendas = vec![vec![Op::fwd(0), Op::bwd(0)], vec![Op::fwd(1)]];
-        let opts =
-            ExecOptions { handoff_timeout: Some(Duration::from_millis(200)) };
+        let opts = ExecOptions {
+            handoff_timeout: Some(Duration::from_millis(200)),
+            ..Default::default()
+        };
         let err = execute_agendas_with(&b, &agendas, &items, opts).unwrap_err();
         let msg = format!("{err:#}");
         assert!(msg.contains("timed out"), "{msg}");
@@ -1165,6 +1200,140 @@ mod tests {
         .unwrap_err();
         assert_eq!(calls, 1);
         assert!(format!("{err:#}").contains("1 attempt"));
+    }
+
+    /// Like [`backend`] but with 4 layers, so 2-stage partitions can be
+    /// genuinely uneven.
+    fn deep_backend(chunk: usize, max_chunks: usize) -> ReferenceBackend {
+        let spec = ModelSpec {
+            name: "exec-deep".into(),
+            hidden_size: 16,
+            num_layers: 4,
+            num_heads: 2,
+            num_kv_heads: 2,
+            intermediate_size: 24,
+            vocab_size: 32,
+            tie_embeddings: true,
+        };
+        let manifest = Manifest::for_reference(&spec, chunk, max_chunks).unwrap();
+        let mut b = ReferenceBackend::new(manifest).unwrap();
+        let params = init_params(&b.manifest, 11);
+        b.set_params(&params).unwrap();
+        b
+    }
+
+    #[test]
+    fn explicit_equal_partition_is_bit_identical_to_default() {
+        let b = deep_backend(8, 2);
+        let batch = vec![Sequence { id: 0, len: 16 }, Sequence { id: 1, len: 8 }];
+        let set = construct_chunks(&batch, 8);
+        let items = exec_items(&b, &set, &batch);
+        let base = execute_state_aware(&b, &set, &items, 1, 2).unwrap();
+        let opts = ExecOptions {
+            partition: Some(StagePartition::equal(4, 2).unwrap()),
+            ..Default::default()
+        };
+        let out = execute_state_aware_with(&b, &set, &items, 1, 2, opts).unwrap();
+        assert_eq!(out.grads, base.grads, "equal partition must be the default path, bit for bit");
+        assert_eq!(out.loss_sum.to_bits(), base.loss_sum.to_bits());
+        assert_eq!(out.op_log, base.op_log);
+    }
+
+    #[test]
+    fn uneven_partition_reproduces_single_stage_gradients() {
+        // Real uneven stages through the executor: [3,1], [1,3] and
+        // [2,1,1] splits must reproduce the monolithic K < N chain.
+        let b = deep_backend(8, 4);
+        let batch = vec![Sequence { id: 7, len: 32 }]; // 4 dependent chunks
+        let set = construct_chunks(&batch, 8);
+        let items = exec_items(&b, &set, &batch);
+        let base = execute_state_aware(&b, &set, &items, 1, 1).unwrap();
+        for counts in [vec![3usize, 1], vec![1, 3], vec![2, 1, 1]] {
+            let p = counts.len();
+            let opts = ExecOptions {
+                partition: Some(StagePartition::from_counts(&counts, 4).unwrap()),
+                ..Default::default()
+            };
+            let out = execute_state_aware_with(&b, &set, &items, 1, p, opts).unwrap();
+            assert!(
+                (out.loss_sum - base.loss_sum).abs() < 1e-9,
+                "{counts:?} loss {} vs {}",
+                out.loss_sum,
+                base.loss_sum
+            );
+            for (pi, (got, want)) in out.grads.iter().zip(&base.grads).enumerate() {
+                let max_ref = want.iter().fold(0.0f64, |a, &x| a.max(x.abs())).max(1e-12);
+                let max_err =
+                    got.iter().zip(want).map(|(x, y)| (x - y).abs()).fold(0.0f64, f64::max);
+                assert!(
+                    max_err / max_ref < 1e-9,
+                    "{counts:?} param {pi} rel err {}",
+                    max_err / max_ref
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn partition_stage_count_mismatch_fails_fast() {
+        let b = deep_backend(8, 1);
+        let batch = vec![Sequence { id: 0, len: 8 }];
+        let set = construct_chunks(&batch, 8);
+        let items = exec_items(&b, &set, &batch);
+        let opts = ExecOptions {
+            partition: Some(StagePartition::from_counts(&[3, 1], 4).unwrap()),
+            ..Default::default()
+        };
+        let err = execute_state_aware_with(&b, &set, &items, 1, 3, opts).unwrap_err();
+        assert!(format!("{err:#}").contains("2 stages"), "{err:#}");
+    }
+
+    #[test]
+    fn every_policy_executes_in_agenda_order_with_matching_gradients() {
+        // The policy conformance suite: for each registered policy the
+        // executor's per-stage op log equals the policy's agendas, and the
+        // gradients match the single-stage run.
+        use crate::pipeline::policy::PolicyKind;
+        let b = deep_backend(8, 4);
+        let batch = vec![
+            Sequence { id: 7, len: 24 }, // 3 dependent chunks
+            Sequence { id: 8, len: 8 },
+            Sequence { id: 9, len: 8 },
+        ];
+        let set = construct_chunks(&batch, 8);
+        let items = exec_items(&b, &set, &batch);
+        let base = execute_state_aware(&b, &set, &items, 1, 1).unwrap();
+        for kind in PolicyKind::ALL {
+            for p in [2usize, 3] {
+                let (agendas, _) = kind.agendas(&set, 1, p);
+                let opts = ExecOptions { policy: kind, ..Default::default() };
+                let out = execute_state_aware_with(&b, &set, &items, 1, p, opts).unwrap();
+                for (s, log) in out.op_log.iter().enumerate() {
+                    assert_eq!(
+                        log, &agendas[s],
+                        "{kind:?} p={p}: stage {s} executed its agenda in order"
+                    );
+                }
+                assert!(
+                    (out.loss_sum - base.loss_sum).abs() < 1e-9,
+                    "{kind:?} p={p} loss"
+                );
+                for (pi, (got, want)) in out.grads.iter().zip(&base.grads).enumerate() {
+                    let max_ref =
+                        want.iter().fold(0.0f64, |a, &x| a.max(x.abs())).max(1e-12);
+                    let max_err = got
+                        .iter()
+                        .zip(want)
+                        .map(|(x, y)| (x - y).abs())
+                        .fold(0.0f64, f64::max);
+                    assert!(
+                        max_err / max_ref < 1e-9,
+                        "{kind:?} p={p} param {pi} rel err {}",
+                        max_err / max_ref
+                    );
+                }
+            }
+        }
     }
 
     #[test]

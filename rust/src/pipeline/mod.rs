@@ -24,6 +24,7 @@
 pub mod exec;
 pub mod interleaved;
 pub mod onef1b;
+pub mod policy;
 
 pub use exec::{
     build_exec_items, build_exec_items_sp, derived_handoff_timeout, execute_agendas,
@@ -35,6 +36,7 @@ pub use exec::{
 pub use interleaved::simulate_interleaved;
 
 pub use onef1b::{standard_1f1b_agendas, state_aware_1f1b_agendas, PipelineItem};
+pub use policy::{simulate_policy, ChunkInterleaved, PolicyKind, SchedulePolicy, StateAware1F1B};
 
 /// Operation kinds on the pipeline.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
@@ -166,9 +168,25 @@ pub fn simulate(
     costs: &[OpCosts],
     extra_edges: &ExtraEdges,
 ) -> anyhow::Result<Timeline> {
+    simulate_stagewise(agendas, costs.len(), |_s, op| costs[op.item], extra_edges)
+}
+
+/// [`simulate`] with per-(stage, op) costs — the generalization uneven
+/// stage partitions need: a stage's time for an op depends on its layer
+/// share (and the head/embedding it may carry), not only on the item.
+/// `simulate` delegates here with the stage-uniform closure
+/// `|_, op| costs[op.item]`; the op visit order, dependency checks and
+/// float operations are identical, so stage-uniform timelines are
+/// bit-identical to the pre-generalization simulator.
+pub fn simulate_stagewise(
+    agendas: &[Vec<Op>],
+    num_items: usize,
+    cost_of: impl Fn(usize, Op) -> OpCosts,
+    extra_edges: &ExtraEdges,
+) -> anyhow::Result<Timeline> {
     let p = agendas.len();
     anyhow::ensure!(p >= 1, "need at least one stage");
-    let n = costs.len();
+    let n = num_items;
     for op in agendas.iter().flatten() {
         anyhow::ensure!(
             op.item < n,
@@ -241,9 +259,10 @@ pub fn simulate(
                     break;
                 }
                 let start = ready.max(stage_free[s]);
+                let c = cost_of(s, op);
                 let cost = match op.kind {
-                    OpKind::Fwd | OpKind::RecomputeFwd => costs[op.item].fwd,
-                    OpKind::Bwd => costs[op.item].bwd,
+                    OpKind::Fwd | OpKind::RecomputeFwd => c.fwd,
+                    OpKind::Bwd => c.bwd,
                 };
                 let end = start + cost;
                 stage_free[s] = end;
@@ -366,7 +385,7 @@ mod tests {
     fn prop_simulated_stage_order_equals_agenda_order() {
         // The conformance property the executor relies on: the simulator
         // executes each stage's agenda strictly in order, for random
-        // (sequence lengths, P, K) under the state-aware policy.
+        // (sequence lengths, P, K) under EVERY registered schedule policy.
         use crate::chunk::construct_chunks;
         use crate::data::Sequence;
         use crate::util::prop::{check, ensure, gen_pair, gen_u64, gen_usize, gen_vec};
@@ -381,7 +400,6 @@ mod tests {
                 .map(|(i, &len)| Sequence { id: i as u64, len })
                 .collect();
             let set = construct_chunks(&batch, 8);
-            let (agendas, edges) = onef1b::state_aware_1f1b_agendas(&set, *k, *p);
             let costs: Vec<OpCosts> = set
                 .chunks
                 .iter()
@@ -390,14 +408,17 @@ mod tests {
                     OpCosts { fwd: len, bwd: 2.0 * len }
                 })
                 .collect();
-            let t = simulate(&agendas, &costs, &edges).map_err(|e| e.to_string())?;
-            for s in 0..*p {
-                let executed: Vec<Op> =
-                    t.ops.iter().filter(|o| o.stage == s).map(|o| o.op).collect();
-                ensure(
-                    executed == agendas[s],
-                    "per-stage executed op order equals the agenda",
-                )?;
+            for kind in policy::PolicyKind::ALL {
+                let (agendas, edges) = kind.agendas(&set, *k, *p);
+                let t = simulate(&agendas, &costs, &edges).map_err(|e| e.to_string())?;
+                for s in 0..*p {
+                    let executed: Vec<Op> =
+                        t.ops.iter().filter(|o| o.stage == s).map(|o| o.op).collect();
+                    ensure(
+                        executed == agendas[s],
+                        "per-stage executed op order equals the agenda",
+                    )?;
+                }
             }
             Ok(())
         });

@@ -53,6 +53,20 @@ pub fn state_aware_1f1b_agendas(
     k: usize,
     p: usize,
 ) -> (Vec<Vec<Op>>, ExtraEdges) {
+    let (fwd_list, bwd_units, edges) = state_aware_units(set, k);
+    (build_agendas(&fwd_list, &bwd_units, p), edges)
+}
+
+/// The state-aware schedule's stage-independent ingredients: the forward
+/// stream, the backward units ([B] or [RF, B], Algorithm-2 ordered within
+/// each dependent group), and the same-stage precedence edges. Every
+/// schedule policy built on the state-aware backward semantics
+/// (`pipeline::policy`) shares these and differs only in how a stage
+/// interleaves them.
+pub(crate) fn state_aware_units(
+    set: &ChunkSet,
+    k: usize,
+) -> (Vec<Op>, Vec<Vec<Op>>, ExtraEdges) {
     let m = set.chunks.len();
     let fwd_list: Vec<Op> = (0..m).map(Op::fwd).collect();
 
@@ -118,7 +132,7 @@ pub fn state_aware_1f1b_agendas(
     let bwd_units: Vec<Vec<Op>> =
         order.into_iter().map(|i| unit_of_chunk[i].take().unwrap()).collect();
 
-    (build_agendas(&fwd_list, &bwd_units, p), edges)
+    (fwd_list, bwd_units, edges)
 }
 
 /// Shared skeleton: warmup forwards, then 1F1B alternation, then drain.
@@ -127,7 +141,23 @@ pub fn state_aware_1f1b_agendas(
 /// whose forward has not been emitted yet on this stage (the group's last
 /// chunk backs up first); in that case forwards are pulled ahead — the
 /// state-aware schedule's deviation from plain 1F1B.
-fn build_agendas(fwd_list: &[Op], bwd_units: &[Vec<Op>], p: usize) -> Vec<Vec<Op>> {
+pub(crate) fn build_agendas(fwd_list: &[Op], bwd_units: &[Vec<Op>], p: usize) -> Vec<Vec<Op>> {
+    build_agendas_with_depth(fwd_list, bwd_units, p, 0)
+}
+
+/// [`build_agendas`] with `extra` additional warmup forwards per stage —
+/// the ZB-style bubble-filling knob of `pipeline::policy`'s
+/// chunk-interleaved policy. `extra = 0` is the plain 1F1B skeleton, op
+/// for op. Warmup depth stays monotone decreasing in the stage index
+/// (`p - s + extra`), which is what keeps the cross-stage dependency chain
+/// deadlock-free for any `extra`; the price of depth is `extra` more live
+/// activation caches per stage.
+pub(crate) fn build_agendas_with_depth(
+    fwd_list: &[Op],
+    bwd_units: &[Vec<Op>],
+    p: usize,
+    extra: usize,
+) -> Vec<Vec<Op>> {
     let m = fwd_list.len();
     // Position of each item's forward in fwd_list (identity here, but keep
     // it explicit for clarity).
@@ -138,7 +168,7 @@ fn build_agendas(fwd_list: &[Op], bwd_units: &[Vec<Op>], p: usize) -> Vec<Vec<Op
     };
     (0..p)
         .map(|s| {
-            let warmup = (p - s).min(m);
+            let warmup = (p - s + extra).min(m);
             let mut agenda: Vec<Op> = fwd_list[..warmup].to_vec();
             let mut fi = warmup;
             let mut bi = 0;

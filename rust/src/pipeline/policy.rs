@@ -1,0 +1,276 @@
+//! Pluggable pipeline schedule policies.
+//!
+//! A [`SchedulePolicy`] is an *agenda generator*: given a chunk set, the
+//! retention budget K and a stage count P it produces the per-stage ordered
+//! op lists plus same-stage precedence edges — the exact format both
+//! `pipeline::simulate` and `pipeline::exec::execute_agendas` consume
+//! (the standing "agendas are the single scheduling source of truth"
+//! contract). The executor and the simulator therefore run ANY policy
+//! without modification, and the executed-order == agenda conformance
+//! property holds for every implementation by construction.
+//!
+//! Shipped policies:
+//!
+//! - [`StateAware1F1B`] — the paper's §4.3 schedule, delegating to
+//!   [`state_aware_1f1b_agendas`] verbatim (the default; agendas are
+//!   bit-identical to the pre-policy path).
+//! - [`ChunkInterleaved`] — a ZB-style bubble-filling variant over the same
+//!   Algorithm-2 backward units: every stage warms up
+//!   `P - s + DEPTH` forwards instead of `P - s`, pulling more forwards
+//!   ahead of the backward stream. On variable-length chunk streams this
+//!   fills the stalls upstream stages spend waiting for a long chunk's
+//!   backward cotangent, at the price of `DEPTH` extra live activation
+//!   caches per stage — exactly the memory-for-bubbles trade InfiniPipe
+//!   and the zero-bubble schedules make. Whether it wins is
+//!   workload-dependent; the tuner decides per scenario.
+
+use super::onef1b::{build_agendas_with_depth, state_aware_1f1b_agendas, state_aware_units};
+use super::{ExtraEdges, Op, OpCosts, Timeline};
+use crate::chunk::ChunkSet;
+
+/// An agenda generator: one pipeline schedule, consumable by both the
+/// simulator and the executor.
+pub trait SchedulePolicy {
+    /// Stable identifier (the `--policy` flag value and the JSON field).
+    fn name(&self) -> &'static str;
+
+    /// Per-stage agendas + same-stage precedence edges for a chunk set
+    /// under retention budget `k` on `p` stages.
+    fn agendas(&self, set: &ChunkSet, k: usize, p: usize) -> (Vec<Vec<Op>>, ExtraEdges);
+}
+
+/// The paper's state-aware 1F1B (§4.3) — the default policy. Delegates to
+/// [`state_aware_1f1b_agendas`], so its agendas are bit-identical to the
+/// pre-policy code path.
+pub struct StateAware1F1B;
+
+impl SchedulePolicy for StateAware1F1B {
+    fn name(&self) -> &'static str {
+        "state-aware-1f1b"
+    }
+
+    fn agendas(&self, set: &ChunkSet, k: usize, p: usize) -> (Vec<Vec<Op>>, ExtraEdges) {
+        state_aware_1f1b_agendas(set, k, p)
+    }
+}
+
+/// ZB-style chunk-interleaved variant: same forward order, same
+/// Algorithm-2 backward units and edges, deeper warmup (see module docs).
+pub struct ChunkInterleaved;
+
+/// Extra warmup forwards per stage for [`ChunkInterleaved`]. Two is the
+/// smallest depth that lets a stage ride out one long chunk's backward
+/// stall without going idle on typical longtail streams.
+pub const CHUNK_INTERLEAVE_DEPTH: usize = 2;
+
+impl SchedulePolicy for ChunkInterleaved {
+    fn name(&self) -> &'static str {
+        "chunk-interleaved"
+    }
+
+    fn agendas(&self, set: &ChunkSet, k: usize, p: usize) -> (Vec<Vec<Op>>, ExtraEdges) {
+        let (fwd_list, bwd_units, edges) = state_aware_units(set, k);
+        (build_agendas_with_depth(&fwd_list, &bwd_units, p, CHUNK_INTERLEAVE_DEPTH), edges)
+    }
+}
+
+/// Value-type handle for the registered policies — what flows through
+/// `ExecOptions`, the tuner's search space and the sweep artifact.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord)]
+pub enum PolicyKind {
+    #[default]
+    StateAware1F1B,
+    ChunkInterleaved,
+}
+
+impl PolicyKind {
+    /// Every registered policy, in search order (default first).
+    pub const ALL: [PolicyKind; 2] = [PolicyKind::StateAware1F1B, PolicyKind::ChunkInterleaved];
+
+    pub fn as_policy(self) -> &'static dyn SchedulePolicy {
+        match self {
+            PolicyKind::StateAware1F1B => &StateAware1F1B,
+            PolicyKind::ChunkInterleaved => &ChunkInterleaved,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        self.as_policy().name()
+    }
+
+    /// Inverse of [`Self::name`] — the `--policy` flag parser.
+    pub fn by_name(name: &str) -> anyhow::Result<Self> {
+        Self::ALL
+            .into_iter()
+            .find(|k| k.name() == name)
+            .ok_or_else(|| {
+                let names: Vec<&str> = Self::ALL.iter().map(|k| k.name()).collect();
+                anyhow::anyhow!("unknown schedule policy {name:?} (valid: {})", names.join(", "))
+            })
+    }
+
+    pub fn agendas(self, set: &ChunkSet, k: usize, p: usize) -> (Vec<Vec<Op>>, ExtraEdges) {
+        self.as_policy().agendas(set, k, p)
+    }
+}
+
+/// Simulate a policy's schedule with per-(stage, chunk) costs — the
+/// stage-aware generalization of `onef1b::simulate_state_aware` that
+/// uneven partitions need (a stage's cost now depends on its layer share).
+pub fn simulate_policy(
+    policy: PolicyKind,
+    set: &ChunkSet,
+    k: usize,
+    p: usize,
+    cost_of: impl Fn(usize, usize) -> OpCosts,
+) -> anyhow::Result<Timeline> {
+    let (agendas, edges) = policy.agendas(set, k, p);
+    super::simulate_stagewise(&agendas, set.chunks.len(), |s, op| cost_of(s, op.item), &edges)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chunk::construct_chunks;
+    use crate::data::Sequence;
+
+    fn unit_costs(set: &ChunkSet) -> impl Fn(usize, usize) -> OpCosts + '_ {
+        |_s, id| {
+            let len = set.chunks[id].total_len() as f64;
+            OpCosts { fwd: len, bwd: 2.0 * len }
+        }
+    }
+
+    #[test]
+    fn default_policy_agendas_are_bit_identical_to_state_aware() {
+        let batch = vec![
+            Sequence { id: 0, len: 17 },
+            Sequence { id: 1, len: 4 },
+            Sequence { id: 2, len: 30 },
+        ];
+        let set = construct_chunks(&batch, 8);
+        for (k, p) in [(1usize, 1usize), (1, 3), (2, 4)] {
+            let (a, e) = PolicyKind::StateAware1F1B.agendas(&set, k, p);
+            let (a0, e0) = state_aware_1f1b_agendas(&set, k, p);
+            assert_eq!(a, a0, "k={k} p={p}");
+            assert_eq!(e, e0, "k={k} p={p}");
+        }
+    }
+
+    #[test]
+    fn policy_names_round_trip() {
+        for kind in PolicyKind::ALL {
+            assert_eq!(PolicyKind::by_name(kind.name()).unwrap(), kind);
+        }
+        let err = PolicyKind::by_name("zb-2p").unwrap_err().to_string();
+        assert!(err.contains("state-aware-1f1b"), "{err}");
+        assert_eq!(PolicyKind::default(), PolicyKind::StateAware1F1B);
+    }
+
+    #[test]
+    fn interleaved_policy_executes_every_op_once_per_stage() {
+        let batch = vec![
+            Sequence { id: 0, len: 16 }, // 2 dependent chunks
+            Sequence { id: 1, len: 8 },
+            Sequence { id: 2, len: 8 },
+        ];
+        let set = construct_chunks(&batch, 8);
+        for p in [1usize, 2, 4] {
+            let t = simulate_policy(PolicyKind::ChunkInterleaved, &set, 1, p, unit_costs(&set))
+                .unwrap();
+            for s in 0..p {
+                for c in 0..set.chunks.len() {
+                    let fwd = t
+                        .ops
+                        .iter()
+                        .filter(|o| {
+                            o.stage == s
+                                && o.op.item == c
+                                && o.op.kind == crate::pipeline::OpKind::Fwd
+                        })
+                        .count();
+                    let bwd = t
+                        .ops
+                        .iter()
+                        .filter(|o| {
+                            o.stage == s
+                                && o.op.item == c
+                                && o.op.kind == crate::pipeline::OpKind::Bwd
+                        })
+                        .count();
+                    assert_eq!(fwd, 1, "p={p} chunk {c} fwd on stage {s}");
+                    assert_eq!(bwd, 1, "p={p} chunk {c} bwd on stage {s}");
+                }
+            }
+        }
+    }
+
+    // Degenerate cases, mirroring `simulate_interleaved`'s suite.
+
+    #[test]
+    fn p1_single_microbatch_degenerates_to_sequential() {
+        let batch = vec![Sequence { id: 0, len: 8 }];
+        let set = construct_chunks(&batch, 8);
+        for kind in PolicyKind::ALL {
+            let t = simulate_policy(kind, &set, 1, 1, unit_costs(&set)).unwrap();
+            assert_eq!(t.ops.len(), 2, "{kind:?}: one fwd + one bwd");
+            assert_eq!(t.makespan, 8.0 + 16.0, "{kind:?}");
+            assert_eq!(t.bubble_ratio(), 0.0, "{kind:?}: single stage has no bubbles");
+        }
+    }
+
+    #[test]
+    fn single_microbatch_multi_stage_is_valid() {
+        let batch = vec![Sequence { id: 0, len: 8 }];
+        let set = construct_chunks(&batch, 8);
+        for kind in PolicyKind::ALL {
+            let t = simulate_policy(kind, &set, 1, 4, unit_costs(&set)).unwrap();
+            assert_eq!(t.ops.len(), 8, "{kind:?}: fwd+bwd on each of 4 stages");
+            assert!(t.bubble_ratio() > 0.0, "{kind:?}: one micro-batch cannot fill 4 stages");
+        }
+    }
+
+    #[test]
+    fn empty_chunkset_yields_empty_timeline() {
+        let set = construct_chunks(&[], 8);
+        for kind in PolicyKind::ALL {
+            let t = simulate_policy(kind, &set, 1, 3, unit_costs(&set)).unwrap();
+            assert_eq!(t.ops.len(), 0, "{kind:?}");
+            assert_eq!(t.makespan, 0.0, "{kind:?}");
+            assert_eq!(t.bubble_ratio(), 0.0, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn interleaved_warmup_is_deeper_but_op_multiset_matches() {
+        let batch: Vec<Sequence> = (0..6).map(|i| Sequence { id: i, len: 8 }).collect();
+        let set = construct_chunks(&batch, 8);
+        let (default_a, _) = PolicyKind::StateAware1F1B.agendas(&set, 1, 3);
+        let (deep_a, _) = PolicyKind::ChunkInterleaved.agendas(&set, 1, 3);
+        for s in 0..3 {
+            // Same ops overall, different interleaving.
+            let mut d: Vec<Op> = default_a[s].clone();
+            let mut z: Vec<Op> = deep_a[s].clone();
+            d.sort();
+            z.sort();
+            assert_eq!(d, z, "stage {s} op multiset");
+            // Deeper warmup: the interleaved agenda front-loads forwards.
+            let lead = |a: &[Op]| {
+                a.iter().take_while(|o| o.kind == crate::pipeline::OpKind::Fwd).count()
+            };
+            assert!(
+                lead(&deep_a[s]) >= lead(&default_a[s]),
+                "stage {s}: interleaved warmup at least as deep"
+            );
+        }
+        assert!(
+            deep_a.iter().zip(&default_a).any(|(z, d)| {
+                let lead = |a: &Vec<Op>| {
+                    a.iter().take_while(|o| o.kind == crate::pipeline::OpKind::Fwd).count()
+                };
+                lead(z) > lead(d)
+            }),
+            "some stage actually warms up deeper"
+        );
+    }
+}

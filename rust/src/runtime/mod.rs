@@ -49,7 +49,9 @@ pub use manifest::{Manifest, ParamSpec};
 #[cfg(feature = "pjrt")]
 pub use pjrt::Runtime;
 pub use reference::{ReferenceBackend, StageBwdOut, StageCache, StageFwdOut};
-pub use stage::{stage_layer_range, ActivationHandoff, GradHandoff, StageBackend};
+pub use stage::{
+    stage_layer_range, ActivationHandoff, GradHandoff, StageBackend, StagePartition,
+};
 
 /// Element type of KV-state and gradient buffers: f32 on the PJRT runtime,
 /// f64 on the reference backend. The arithmetic bounds (`AddAssign`, `Mul`)

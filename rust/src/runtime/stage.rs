@@ -42,6 +42,115 @@ pub fn stage_layer_range(num_layers: usize, num_stages: usize, stage: usize) -> 
     (stage * num_layers / num_stages)..((stage + 1) * num_layers / num_stages)
 }
 
+/// An arbitrary uneven contiguous stage partition: `ranges[s]` is the layer
+/// range stage `s` owns. Invariant (checked at every constructor): the
+/// ranges tile `0..num_layers` exactly — `ranges[0].start == 0`, each range
+/// starts where the previous ended, and the last ends at `num_layers`.
+/// Empty ranges are legal (the equal partition produces them when
+/// P > L); *user-specified* partitions reject them with a diagnostic naming
+/// the offending stage ([`Self::from_counts`] / [`Self::parse`]).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct StagePartition {
+    ranges: Vec<Range<usize>>,
+}
+
+impl StagePartition {
+    /// Today's balanced partition — stage `s` owns [`stage_layer_range`].
+    /// This is the bit-identity anchor: an executor run under
+    /// `Some(equal(L, P))` takes the exact layer ranges the pre-elastic
+    /// path derived.
+    pub fn equal(num_layers: usize, num_stages: usize) -> anyhow::Result<Self> {
+        anyhow::ensure!(num_stages >= 1, "need at least one pipeline stage");
+        let ranges =
+            (0..num_stages).map(|s| stage_layer_range(num_layers, num_stages, s)).collect();
+        Self::from_ranges(ranges, num_layers)
+    }
+
+    /// Build from per-stage layer counts (`[10, 6, 6, 6]`). Zero counts are
+    /// rejected with the stage named — an explicitly requested empty stage
+    /// is a configuration error, not a relay.
+    pub fn from_counts(counts: &[usize], num_layers: usize) -> anyhow::Result<Self> {
+        anyhow::ensure!(!counts.is_empty(), "partition needs at least one stage");
+        for (s, &c) in counts.iter().enumerate() {
+            anyhow::ensure!(c > 0, "partition leaves stage {s} with zero layers");
+        }
+        let total: usize = counts.iter().sum();
+        anyhow::ensure!(
+            total == num_layers,
+            "partition layers sum to {total} but the model has {num_layers} layers"
+        );
+        let mut ranges = Vec::with_capacity(counts.len());
+        let mut start = 0usize;
+        for &c in counts {
+            ranges.push(start..start + c);
+            start += c;
+        }
+        Self::from_ranges(ranges, num_layers)
+    }
+
+    /// Parse a `--partition a,b,c` spec against the model's layer count,
+    /// with diagnostics naming the offending stage.
+    pub fn parse(spec: &str, num_layers: usize) -> anyhow::Result<Self> {
+        let counts: Vec<usize> = spec
+            .split(',')
+            .enumerate()
+            .map(|(s, tok)| {
+                tok.trim().parse::<usize>().map_err(|_| {
+                    anyhow::anyhow!("--partition stage {s}: invalid layer count {tok:?}")
+                })
+            })
+            .collect::<anyhow::Result<_>>()?;
+        Self::from_counts(&counts, num_layers)
+    }
+
+    /// Validated constructor: the ranges must tile `0..num_layers`.
+    pub fn from_ranges(ranges: Vec<Range<usize>>, num_layers: usize) -> anyhow::Result<Self> {
+        anyhow::ensure!(!ranges.is_empty(), "partition needs at least one stage");
+        let mut expect = 0usize;
+        for (s, r) in ranges.iter().enumerate() {
+            anyhow::ensure!(
+                r.start == expect && r.end >= r.start,
+                "partition stage {s} covers {:?} but the previous stage ended at {expect}",
+                r
+            );
+            expect = r.end;
+        }
+        anyhow::ensure!(
+            expect == num_layers,
+            "partition covers {expect} layers but the model has {num_layers}"
+        );
+        Ok(Self { ranges })
+    }
+
+    pub fn num_stages(&self) -> usize {
+        self.ranges.len()
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.ranges.last().map_or(0, |r| r.end)
+    }
+
+    pub fn range(&self, stage: usize) -> Range<usize> {
+        self.ranges[stage].clone()
+    }
+
+    /// Per-stage layer counts.
+    pub fn counts(&self) -> Vec<usize> {
+        self.ranges.iter().map(|r| r.len()).collect()
+    }
+
+    /// `"a,b,c"` — the `--partition` round-trip form.
+    pub fn describe(&self) -> String {
+        self.counts().iter().map(|c| c.to_string()).collect::<Vec<_>>().join(",")
+    }
+
+    /// True iff this is exactly the balanced [`Self::equal`] partition.
+    pub fn is_equal(&self) -> bool {
+        let (l, p) = (self.num_layers(), self.num_stages());
+        self.ranges.iter().enumerate().all(|(s, r)| *r == stage_layer_range(l, p, s))
+    }
+}
+
 /// Activation handed from stage `s` to `s + 1` for one pipeline op.
 #[derive(Clone, Debug)]
 pub struct ActivationHandoff {
@@ -78,15 +187,47 @@ impl<'a> StageBackend<'a> {
         stage: usize,
         num_stages: usize,
     ) -> anyhow::Result<Self> {
+        let layers = stage_layer_range(backend.manifest.num_layers, num_stages, stage);
+        Self::with_layers(backend, stage, num_stages, layers)
+    }
+
+    /// A stage owning an explicit (possibly uneven) layer range — the
+    /// elastic-partition entry point. [`Self::new`] is exactly
+    /// `with_layers(.., stage_layer_range(..))`.
+    pub fn with_layers(
+        backend: &'a ReferenceBackend,
+        stage: usize,
+        num_stages: usize,
+        layers: Range<usize>,
+    ) -> anyhow::Result<Self> {
         anyhow::ensure!(num_stages >= 1, "need at least one stage");
         anyhow::ensure!(stage < num_stages, "stage {stage} out of {num_stages}");
-        let layers = stage_layer_range(backend.manifest.num_layers, num_stages, stage);
+        anyhow::ensure!(
+            layers.start <= layers.end && layers.end <= backend.manifest.num_layers,
+            "stage {stage} layer range {layers:?} exceeds the model's {} layers",
+            backend.manifest.num_layers
+        );
         Ok(Self { backend, stage, num_stages, layers })
     }
 
-    /// All stages of a `p`-way partition, in order.
+    /// All stages of a `p`-way equal partition, in order.
     pub fn partition(backend: &'a ReferenceBackend, p: usize) -> anyhow::Result<Vec<Self>> {
         (0..p).map(|s| Self::new(backend, s, p)).collect()
+    }
+
+    /// All stages of an explicit [`StagePartition`], in order.
+    pub fn partition_with(
+        backend: &'a ReferenceBackend,
+        part: &StagePartition,
+    ) -> anyhow::Result<Vec<Self>> {
+        anyhow::ensure!(
+            part.num_layers() == backend.manifest.num_layers,
+            "partition covers {} layers but the model has {}",
+            part.num_layers(),
+            backend.manifest.num_layers
+        );
+        let p = part.num_stages();
+        (0..p).map(|s| Self::with_layers(backend, s, p, part.range(s))).collect()
     }
 
     pub fn is_first(&self) -> bool {
@@ -181,6 +322,106 @@ mod tests {
                 covered.extend(r);
             }
             assert_eq!(covered, (0..l).collect::<Vec<_>>(), "L={l} P={p}");
+        }
+    }
+
+    #[test]
+    fn prop_stage_partition_covers_all_layers_exactly_once() {
+        // Any StagePartition — equal or random-uneven counts — tiles
+        // 0..L exactly once and contiguously; describe() round-trips
+        // through parse().
+        use crate::util::prop::{check, ensure, gen_pair, gen_usize, gen_vec};
+        let gen = gen_pair(gen_vec(gen_usize(1, 9), 1, 8), gen_usize(1, 8));
+        check(200, gen, |(counts, p)| {
+            let l: usize = counts.iter().sum();
+            for part in [
+                StagePartition::from_counts(counts, l).map_err(|e| e.to_string())?,
+                StagePartition::equal(l, *p).map_err(|e| e.to_string())?,
+            ] {
+                let covered: Vec<usize> =
+                    (0..part.num_stages()).flat_map(|s| part.range(s)).collect();
+                ensure(
+                    covered == (0..l).collect::<Vec<_>>(),
+                    "partition covers all layers exactly once, contiguously",
+                )?;
+                ensure(part.num_layers() == l, "num_layers matches the cover")?;
+            }
+            let part = StagePartition::from_counts(counts, l).map_err(|e| e.to_string())?;
+            let reparsed =
+                StagePartition::parse(&part.describe(), l).map_err(|e| e.to_string())?;
+            ensure(reparsed == part, "describe()/parse() round-trip")?;
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn degenerate_partitions_are_rejected_naming_the_stage() {
+        let err = StagePartition::parse("2,0,2", 4).unwrap_err().to_string();
+        assert!(err.contains("stage 1") && err.contains("zero layers"), "{err}");
+        let err = StagePartition::parse("2,x", 4).unwrap_err().to_string();
+        assert!(err.contains("stage 1") && err.contains("invalid"), "{err}");
+        let err = StagePartition::parse("2,3", 4).unwrap_err().to_string();
+        assert!(err.contains("sum to 5") && err.contains("4 layers"), "{err}");
+        assert!(StagePartition::parse("", 4).is_err());
+    }
+
+    #[test]
+    fn equal_partition_matches_stage_layer_range_and_is_equal() {
+        for (l, p) in [(28usize, 4usize), (4, 2), (2, 4), (5, 3)] {
+            let part = StagePartition::equal(l, p).unwrap();
+            for s in 0..p {
+                assert_eq!(part.range(s), stage_layer_range(l, p, s), "L={l} P={p} s={s}");
+            }
+            assert!(part.is_equal());
+        }
+        assert!(!StagePartition::from_counts(&[3, 1], 4).unwrap().is_equal());
+    }
+
+    #[test]
+    fn uneven_staged_forward_backward_matches_monolithic_chunk_vjp() {
+        // Same bitwise contract as the equal-partition test below, over
+        // explicitly uneven partitions: the stage pieces ARE the monolithic
+        // program however the layers are split.
+        let (b, _params) = mini_backend(4);
+        let c = b.manifest.chunk_size;
+        let inputs = crate::runtime::ChunkInputs::<f64> {
+            tokens: (0..c as i32).map(|i| i % 32).collect(),
+            targets: (0..c as i32).map(|i| (i + 1) % 32).collect(),
+            pos: (0..c as i32).collect(),
+            seg: vec![0; c],
+            kv_in: Vec::new(),
+            prefix_len: 0,
+        };
+        let g_zero = vec![0.0f64; b.kv_elements(c)];
+        let mono = b.chunk_vjp(&inputs, &g_zero).unwrap();
+
+        for counts in [vec![3usize, 1], vec![1, 3], vec![2, 1, 1], vec![1, 2, 1]] {
+            let part = StagePartition::from_counts(&counts, 4).unwrap();
+            let stages = StageBackend::partition_with(&b, &part).unwrap();
+            let mut x: Option<Vec<f64>> = None;
+            let mut caches = Vec::new();
+            for st in &stages {
+                let stage_inputs = ChunkInputs { kv_in: Vec::new(), ..inputs.clone() };
+                let out = st.forward(&stage_inputs, x.take()).unwrap();
+                x = out.x_out;
+                caches.push(out.cache);
+            }
+            let loss: f64 = caches.last().unwrap().loss_sum();
+            assert_eq!(loss.to_bits(), mono.loss_sum.to_bits(), "{counts:?} loss");
+
+            let mut d_params = b.zero_grads();
+            let mut d_x: Option<Vec<f64>> = None;
+            for (st, cache) in stages.iter().zip(&caches).rev() {
+                let stage_inputs = ChunkInputs { kv_in: Vec::new(), ..inputs.clone() };
+                let g_kv = vec![0.0f64; st.kv_elements(c)];
+                let out = st
+                    .backward(&stage_inputs, cache, d_x.take(), &g_kv, &mut d_params)
+                    .unwrap();
+                d_x = out.d_x_in;
+            }
+            for (pi, (got, want)) in d_params.iter().zip(&mono.d_params).enumerate() {
+                assert_eq!(got, want, "{counts:?} param {pi} grads");
+            }
         }
     }
 

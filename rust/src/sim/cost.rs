@@ -130,6 +130,48 @@ impl CostModel {
         }
     }
 
+    /// Per-stage costs under an ARBITRARY layer split: the stage owns
+    /// `layers_in_stage` of the model's layers and, when it is the last
+    /// stage, additionally pays the LM-head matmul
+    /// ([`ModelSpec::head_fwd_flops`] — the embed/head asymmetry that makes
+    /// equal partitions systematically overload the boundary stages). SP is
+    /// honored exactly as [`Self::sp_stage_costs`]: `shards > 1` runs the
+    /// chunk at per-shard row efficiency plus this stage's share of the
+    /// ring-KV exchange.
+    ///
+    /// This decomposition is the elastic-partition search's objective and
+    /// is used for BOTH the equal and the uneven candidate, so the
+    /// comparison is apples to apples; the default scenario paths keep
+    /// using [`Self::stage_costs`] (whole / PP), which is what keeps
+    /// pre-elastic artifact bytes unchanged.
+    pub fn partition_stage_costs(
+        &self,
+        tokens: u64,
+        ctx_end: u64,
+        shards: u64,
+        layers_in_stage: usize,
+        last_stage: bool,
+    ) -> OpCosts {
+        let flops = layers_in_stage as f64 * self.model.layer_fwd_flops(tokens, ctx_end)
+            + if last_stage { self.model.head_fwd_flops(tokens) } else { 0.0 };
+        let cluster = PEAK_FLOPS * self.parallel.tp as f64;
+        let bwd_mult = 2.0 + self.parallel.recompute.backward_extra_fwd();
+        if shards <= 1 {
+            let fwd = flops / (cluster * self.efficiency(tokens));
+            return OpCosts { fwd, bwd: fwd * bwd_mult };
+        }
+        let s = shards as f64;
+        let rows = tokens.div_ceil(shards);
+        let fwd = flops / (cluster * s * self.efficiency(rows));
+        // This stage's share of the ring exchange: its layers' KV only.
+        let kv_bytes = self.model.kv_bytes_per_token() as f64 * tokens as f64
+            * layers_in_stage as f64
+            / self.model.num_layers.max(1) as f64
+            / self.parallel.tp as f64;
+        let comm = (shards - 1) as f64 / s * kv_bytes / SP_RING_BYTES_PER_SEC;
+        OpCosts { fwd: fwd + comm, bwd: fwd * bwd_mult + 2.0 * comm }
+    }
+
     /// Seconds one sequence-parallel rank spends in the ring-attention KV
     /// exchange for a chunk of `tokens` rows split `shards` ways: over the
     /// `shards - 1` ring steps each rank receives `(shards-1)/shards` of the
@@ -301,6 +343,57 @@ mod tests {
             / (m.parallel.tp * m.parallel.pp) as f64
             / SP_RING_BYTES_PER_SEC;
         assert!(t4 < bound);
+    }
+
+    #[test]
+    fn partition_costs_capture_the_head_asymmetry() {
+        let m = cm(RecomputeGranularity::Selective);
+        // Same layer count: the last stage (LM head) costs strictly more.
+        let mid = m.partition_stage_costs(8192, 8192, 1, 7, false);
+        let last = m.partition_stage_costs(8192, 8192, 1, 7, true);
+        assert!(last.fwd > mid.fwd && last.bwd > mid.bwd);
+        // More layers, more time; zero layers on a relay stage is free.
+        let big = m.partition_stage_costs(8192, 8192, 1, 10, false);
+        assert!(big.fwd > mid.fwd);
+        let relay = m.partition_stage_costs(8192, 8192, 1, 0, false);
+        assert_eq!(relay.fwd, 0.0);
+        // The head surcharge is exactly head_fwd_flops' share — removing it
+        // from the last stage reproduces the interior-stage cost.
+        let head_secs = m.model.head_fwd_flops(8192)
+            / (PEAK_FLOPS * m.parallel.tp as f64 * m.efficiency(8192));
+        assert!((last.fwd - mid.fwd - head_secs).abs() < 1e-12);
+    }
+
+    #[test]
+    fn partition_costs_sum_tracks_stage_costs_scale() {
+        // The per-layer decomposition is a different accounting than
+        // fwd_flops (the embedding gather is not charged), so equal-split
+        // partition costs need not equal stage_costs bit for bit — but the
+        // totals must be the same order: within 20% for a 7B at 8K tokens.
+        let m = CostModel::new(
+            ModelSpec::preset("qwen2.5-7b").unwrap(),
+            ParallelConfig::new(4, 4, RecomputeGranularity::Selective),
+        );
+        let l = m.model.num_layers as usize;
+        let per = l / 4;
+        let total: f64 = (0..4)
+            .map(|s| m.partition_stage_costs(8192, 8192, 1, per, s == 3).fwd)
+            .sum();
+        let whole = m.fwd_seconds(8192, 8192);
+        assert!(
+            (total - whole).abs() / whole < 0.2,
+            "decomposed total {total} vs whole-pipeline {whole}"
+        );
+    }
+
+    #[test]
+    fn partition_costs_sp_shards_like_sp_stage_costs() {
+        let m = cm(RecomputeGranularity::Selective);
+        // Sharding a long chunk 4 ways helps an interior stage, same shape
+        // as sp_stage_costs; shards = 1 pays no comm at all.
+        let whole = m.partition_stage_costs(32 * 1024, 32 * 1024, 1, 7, false);
+        let sharded = m.partition_stage_costs(32 * 1024, 32 * 1024, 4, 7, false);
+        assert!(sharded.fwd < whole.fwd && sharded.bwd < whole.bwd);
     }
 
     #[test]

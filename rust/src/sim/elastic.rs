@@ -1,0 +1,366 @@
+//! Elastic pipeline search: uneven stage partitions + schedule policies,
+//! co-optimized against the simulated critical path.
+//!
+//! Equal layer splits systematically overload the boundary stages: the last
+//! stage carries the LM head (a `[T, h] × [h, V]` matmul worth several
+//! layers of compute on real vocabularies), so the pipeline's critical path
+//! is gated by whichever stage the fixed split leaves heaviest — the
+//! InfiniPipe observation. This module searches uneven contiguous
+//! partitions (bounded exhaustive for P ≤ 4, greedy layer rebalancing
+//! above) and the registered schedule policies
+//! (`pipeline::policy::PolicyKind`) to minimize the *simulated* makespan of
+//! the actual chunk set, using the per-stage cost decomposition
+//! [`CostModel::partition_stage_costs`] (embed/head asymmetry, DP/SP-aware:
+//! with dp > 1 every rank runs the same partition and the objective is the
+//! slowest rank's makespan plus all ranks' bubbles, exactly like the
+//! iteration simulator).
+//!
+//! The search never touches the default paths: scenario metrics keep using
+//! `CostModel::stage_costs`, and a [`search_elastic`] result is `None`
+//! whenever the equal partition under the default policy is already
+//! optimal — the additive-block contract of `BENCH_chunkflow.json`.
+
+use crate::chunk::ChunkSet;
+use crate::pipeline::{simulate_policy, OpCosts, PolicyKind};
+
+use super::e2e::dp_rank_sets;
+use super::CostModel;
+
+/// How far (in layers, each way) the bounded-exhaustive search lets a stage
+/// deviate from its equal share when P ≤ 4.
+const EXHAUSTIVE_DELTA: i64 = 2;
+
+/// A searched (partition, policy) choice with its predicted metrics
+/// against the equal-partition + default-policy baseline.
+#[derive(Clone, Debug)]
+pub struct ElasticChoice {
+    pub pp: usize,
+    /// Per-stage layer counts of the chosen partition.
+    pub partition: Vec<usize>,
+    pub policy: PolicyKind,
+    /// Simulated bubble ratio of the equal partition under the default
+    /// state-aware 1F1B policy (the baseline everything is compared to).
+    pub bubble_equal: f64,
+    pub bubble_elastic: f64,
+    pub makespan_equal: f64,
+    pub makespan_elastic: f64,
+}
+
+impl ElasticChoice {
+    /// `"10,6,6,6"` — the `--partition` flag form.
+    pub fn partition_string(&self) -> String {
+        self.partition.iter().map(|c| c.to_string()).collect::<Vec<_>>().join(",")
+    }
+
+    /// Strictly better than the baseline on BOTH the critical path and the
+    /// bubble ratio — the emission bar for the `elastic_pipeline` block.
+    pub fn is_win(&self) -> bool {
+        self.makespan_elastic < self.makespan_equal && self.bubble_elastic < self.bubble_equal
+    }
+}
+
+/// Per-chunk linear cost coefficients: `partition_stage_costs` is exactly
+/// linear in the stage's layer count with an additive head term, so one
+/// evaluation per chunk covers every candidate partition.
+struct ChunkCoef {
+    fwd_per_layer: f64,
+    bwd_per_layer: f64,
+    fwd_head: f64,
+    bwd_head: f64,
+}
+
+fn chunk_coefs(cost: &CostModel, set: &ChunkSet) -> Vec<ChunkCoef> {
+    set.chunks
+        .iter()
+        .map(|c| {
+            let tokens = c.total_len();
+            let ctx_end = c.prefix_len() + tokens;
+            let shards = cost.parallel.sp_shards(c.is_dependent(), tokens);
+            let layer = cost.partition_stage_costs(tokens, ctx_end, shards, 1, false);
+            let head = cost.partition_stage_costs(tokens, ctx_end, shards, 0, true);
+            ChunkCoef {
+                fwd_per_layer: layer.fwd,
+                bwd_per_layer: layer.bwd,
+                fwd_head: head.fwd,
+                bwd_head: head.bwd,
+            }
+        })
+        .collect()
+}
+
+/// Simulated (makespan, aggregate bubble ratio) of `counts` + `policy` over
+/// the rank-local chunk sets (all ranks share one partition; the makespan
+/// is the slowest rank's, total execution time spans all `p·dp` devices —
+/// the iteration simulator's aggregation).
+fn evaluate(
+    counts: &[usize],
+    policy: PolicyKind,
+    rank_sets: &[&ChunkSet],
+    rank_coefs: &[Vec<ChunkCoef>],
+    k: usize,
+) -> anyhow::Result<(f64, f64)> {
+    let p = counts.len();
+    let (mut makespan, mut busy, mut any) = (0.0f64, 0.0f64, false);
+    for (set, coefs) in rank_sets.iter().zip(rank_coefs) {
+        if set.chunks.is_empty() {
+            continue;
+        }
+        any = true;
+        let cost_of = |stage: usize, item: usize| -> OpCosts {
+            let c = &coefs[item];
+            let layers = counts[stage] as f64;
+            let head = if stage == p - 1 { 1.0 } else { 0.0 };
+            OpCosts {
+                fwd: layers * c.fwd_per_layer + head * c.fwd_head,
+                bwd: layers * c.bwd_per_layer + head * c.bwd_head,
+            }
+        };
+        let t = simulate_policy(policy, set, k, p, cost_of)?;
+        makespan = makespan.max(t.makespan);
+        busy += t.busy;
+    }
+    if !any {
+        return Ok((0.0, 0.0));
+    }
+    let total = makespan * (p * rank_sets.len()) as f64;
+    let bubble = if total == 0.0 { 0.0 } else { (total - busy) / total };
+    Ok((makespan, bubble))
+}
+
+/// Candidate partitions around the equal split: bounded exhaustive
+/// (every stage within ±[`EXHAUSTIVE_DELTA`] layers of its equal share)
+/// for P ≤ 4; for deeper pipelines, greedy rebalancing from the equal
+/// split (the caller moves layers one at a time via [`rebalance_moves`]).
+fn exhaustive_candidates(equal: &[usize], num_layers: usize) -> Vec<Vec<usize>> {
+    let p = equal.len();
+    let mut out = Vec::new();
+    let mut counts = vec![0usize; p];
+    // Odometer over the first p-1 stages' deltas; the last stage absorbs
+    // the remainder.
+    let span = (2 * EXHAUSTIVE_DELTA + 1) as usize;
+    let combos = span.pow((p - 1) as u32);
+    for mut ix in 0..combos {
+        let mut sum = 0usize;
+        let mut ok = true;
+        for s in 0..p - 1 {
+            let delta = (ix % span) as i64 - EXHAUSTIVE_DELTA;
+            ix /= span;
+            let c = equal[s] as i64 + delta;
+            if c < 1 {
+                ok = false;
+                break;
+            }
+            counts[s] = c as usize;
+            sum += c as usize;
+        }
+        if !ok || sum >= num_layers {
+            continue;
+        }
+        counts[p - 1] = num_layers - sum;
+        if counts[p - 1] >= 1 {
+            out.push(counts.clone());
+        }
+    }
+    out
+}
+
+/// All single-layer moves from one stage to another (contiguity is
+/// preserved automatically — a partition is just its counts).
+fn rebalance_moves(counts: &[usize]) -> Vec<Vec<usize>> {
+    let p = counts.len();
+    let mut out = Vec::new();
+    for from in 0..p {
+        if counts[from] <= 1 {
+            continue;
+        }
+        for to in 0..p {
+            if to == from {
+                continue;
+            }
+            let mut next = counts.to_vec();
+            next[from] -= 1;
+            next[to] += 1;
+            out.push(next);
+        }
+    }
+    out
+}
+
+/// Search uneven partitions and schedule policies for a chunk set under
+/// retention budget `k`. Returns `None` when pp ≤ 1, when the model has
+/// fewer layers than stages (no positive uneven split exists), when the
+/// set is empty, or when the equal partition under the default policy is
+/// not strictly beaten on both makespan and bubble ratio.
+pub fn search_elastic(
+    cost: &CostModel,
+    set: &ChunkSet,
+    k: usize,
+) -> anyhow::Result<Option<ElasticChoice>> {
+    let p = cost.parallel.pp as usize;
+    let num_layers = cost.model.num_layers as usize;
+    if p <= 1 || num_layers < p || set.chunks.is_empty() {
+        return Ok(None);
+    }
+
+    // DP-aware evaluation sets: the rank-local shards when dp > 1 (all
+    // ranks run the same partition), the whole set otherwise.
+    let shards = dp_rank_sets(set, cost);
+    let rank_sets: Vec<&ChunkSet> =
+        if shards.is_empty() { vec![set] } else { shards.iter().collect() };
+    let rank_coefs: Vec<Vec<ChunkCoef>> =
+        rank_sets.iter().map(|s| chunk_coefs(cost, s)).collect();
+
+    let equal: Vec<usize> = (0..p)
+        .map(|s| crate::runtime::stage_layer_range(num_layers, p, s).len())
+        .collect();
+    let default = PolicyKind::default();
+    let (makespan_equal, bubble_equal) =
+        evaluate(&equal, default, &rank_sets, &rank_coefs, k)?;
+
+    // Partition search under the default policy.
+    let mut best_counts = equal.clone();
+    let mut best_makespan = makespan_equal;
+    if p <= 4 {
+        for counts in exhaustive_candidates(&equal, num_layers) {
+            let (m, _) = evaluate(&counts, default, &rank_sets, &rank_coefs, k)?;
+            if m < best_makespan {
+                best_makespan = m;
+                best_counts = counts;
+            }
+        }
+    } else {
+        // Greedy: move one layer at a time while the critical path improves.
+        let mut improved = true;
+        let mut rounds = 0;
+        while improved && rounds < 2 * num_layers {
+            improved = false;
+            rounds += 1;
+            for counts in rebalance_moves(&best_counts) {
+                let (m, _) = evaluate(&counts, default, &rank_sets, &rank_coefs, k)?;
+                if m < best_makespan {
+                    best_makespan = m;
+                    best_counts = counts;
+                    improved = true;
+                }
+            }
+        }
+    }
+
+    // Policy co-search on the two interesting partitions.
+    let mut best: Option<(Vec<usize>, PolicyKind, f64, f64)> = None;
+    for counts in [&equal, &best_counts] {
+        for policy in PolicyKind::ALL {
+            let (m, b) = evaluate(counts, policy, &rank_sets, &rank_coefs, k)?;
+            if best.as_ref().map_or(true, |(_, _, bm, _)| m < *bm) {
+                best = Some((counts.clone(), policy, m, b));
+            }
+        }
+    }
+    let (partition, policy, makespan_elastic, bubble_elastic) = best.unwrap();
+
+    let choice = ElasticChoice {
+        pp: p,
+        partition,
+        policy,
+        bubble_equal,
+        bubble_elastic,
+        makespan_equal,
+        makespan_elastic,
+    };
+    Ok(if choice.is_win() { Some(choice) } else { None })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chunk::construct_chunks;
+    use crate::config::{ModelSpec, ParallelConfig, RecomputeGranularity};
+    use crate::data::Sequence;
+
+    fn cm(pp: u64) -> CostModel {
+        let parallel = ParallelConfig::new(4, pp, RecomputeGranularity::Selective);
+        CostModel::new(ModelSpec::preset("qwen2.5-7b").unwrap(), parallel)
+    }
+
+    fn longtailish_batch() -> Vec<Sequence> {
+        // A few long sequences over a short-tail floor — the regime where
+        // stage imbalance shows up as bubbles.
+        let mut batch: Vec<Sequence> = (0..12).map(|i| Sequence { id: i, len: 4096 }).collect();
+        batch.push(Sequence { id: 100, len: 65536 });
+        batch.push(Sequence { id: 101, len: 32768 });
+        batch
+    }
+
+    #[test]
+    fn pp1_and_empty_sets_yield_none() {
+        let set = construct_chunks(&longtailish_batch(), 8192);
+        assert!(search_elastic(&cm(1), &set, 2).unwrap().is_none());
+        let empty = construct_chunks(&[], 8192);
+        assert!(search_elastic(&cm(4), &empty, 2).unwrap().is_none());
+    }
+
+    #[test]
+    fn search_beats_equal_partition_on_a_longtail_set() {
+        // The head asymmetry alone makes the equal split suboptimal for a
+        // 7B (the LM head is worth ~2 layers of compute): the search must
+        // find a partition + policy that strictly improves both metrics.
+        let set = construct_chunks(&longtailish_batch(), 8192);
+        let choice = search_elastic(&cm(4), &set, 2)
+            .unwrap()
+            .expect("elastic search should beat the equal split here");
+        assert!(choice.is_win());
+        assert!(choice.makespan_elastic < choice.makespan_equal);
+        assert!(choice.bubble_elastic < choice.bubble_equal);
+        assert_eq!(choice.partition.iter().sum::<usize>(), 28);
+        assert!(choice.partition.iter().all(|&c| c >= 1));
+        // The last stage should shed layers to pay for the head.
+        assert!(
+            choice.partition[3] < 7,
+            "expected the head-bearing stage to hold fewer layers, got {:?}",
+            choice.partition
+        );
+    }
+
+    #[test]
+    fn choice_partition_string_is_flag_compatible() {
+        let choice = ElasticChoice {
+            pp: 4,
+            partition: vec![8, 7, 7, 6],
+            policy: PolicyKind::StateAware1F1B,
+            bubble_equal: 0.4,
+            bubble_elastic: 0.3,
+            makespan_equal: 10.0,
+            makespan_elastic: 9.0,
+        };
+        assert_eq!(choice.partition_string(), "8,7,7,6");
+        assert!(choice.is_win());
+        let part =
+            crate::runtime::StagePartition::parse(&choice.partition_string(), 28).unwrap();
+        assert_eq!(part.counts(), vec![8, 7, 7, 6]);
+    }
+
+    #[test]
+    fn greedy_path_handles_deep_pipelines() {
+        // p = 6 exercises the greedy rebalancer; the result must be a valid
+        // positive partition whenever a win is found.
+        let set = construct_chunks(&longtailish_batch(), 8192);
+        if let Some(choice) = search_elastic(&cm(6), &set, 2).unwrap() {
+            assert_eq!(choice.partition.len(), 6);
+            assert_eq!(choice.partition.iter().sum::<usize>(), 28);
+            assert!(choice.partition.iter().all(|&c| c >= 1));
+            assert!(choice.is_win());
+        }
+    }
+
+    #[test]
+    fn dp_aware_search_runs_on_rank_shards() {
+        let mut cost = cm(4);
+        cost.parallel.dp = 2;
+        let set = construct_chunks(&longtailish_batch(), 8192);
+        // Must not error; emission still requires a strict win.
+        let r = search_elastic(&cost, &set, 2).unwrap();
+        if let Some(choice) = r {
+            assert!(choice.is_win());
+        }
+    }
+}

@@ -5,8 +5,10 @@
 pub mod cost;
 pub mod dp;
 pub mod e2e;
+pub mod elastic;
 
 pub use cost::CostModel;
+pub use elastic::{search_elastic, ElasticChoice};
 pub use dp::{
     assign_chunks, assign_sequences, dp_units, split_dp, DpAssignment, DpPolicy,
     DpSeqAssignment, DpSplit, DpUnit,

@@ -30,8 +30,8 @@ use crate::data::{BatchSampler, Sequence};
 use crate::memory::{MemoryModel, GPU_CAPACITY};
 use crate::sim::dp::{assign_chunks, assign_sequences, DpPolicy};
 use crate::sim::{
-    dp_rank_sets, simulate_baseline_iteration, simulate_chunkset_sharded, CostModel,
-    IterationResult,
+    dp_rank_sets, search_elastic, simulate_baseline_iteration, simulate_chunkset_sharded,
+    CostModel, IterationResult,
 };
 use crate::util::pool::ThreadPool;
 
@@ -103,6 +103,30 @@ pub struct SpSharding {
     pub ring_comm_seconds: f64,
 }
 
+/// Additive per-scenario elastic-pipeline block, emitted only when the
+/// uneven-partition + schedule-policy search ([`search_elastic`]) strictly
+/// beats the equal partition under the default state-aware 1F1B policy on a
+/// pp > 1 scenario (both simulated critical path and bubble ratio — with
+/// constant total busy time the two move together). Equal-partition wins
+/// emit nothing, so every pre-elastic scenario's artifact bytes are
+/// unchanged. `benchdiff`'s drift gate never compares it (it only diffs
+/// baseline/best/speedup); the separate bubble-drift report surfaces it.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ElasticPipeline {
+    pub pp: u64,
+    /// Chosen per-stage layer counts in `--partition` form, e.g. "9,7,7,5".
+    pub partition: String,
+    /// Chosen schedule policy name ([`crate::pipeline::PolicyKind`]).
+    pub policy: String,
+    /// Simulated bubble of the equal partition + default policy baseline.
+    pub predicted_bubble_equal: f64,
+    /// Simulated bubble of the chosen (partition, policy) — strictly lower.
+    pub predicted_bubble_elastic: f64,
+    /// Executor-probe measurement (attached only under `--measure-exec`;
+    /// wall-clock, so never part of the deterministic default artifact).
+    pub measured: Option<super::probe::MeasuredElastic>,
+}
+
 /// Everything measured for one scenario.
 #[derive(Clone, Debug)]
 pub struct ScenarioResult {
@@ -118,6 +142,10 @@ pub struct ScenarioResult {
     /// SP sharding metric; Some only when the scenario's strategy has
     /// sp > 1 (additive — absent entries keep old artifact bytes).
     pub sp_sharding: Option<SpSharding>,
+    /// Elastic-pipeline block; Some only when pp > 1 AND the partition/
+    /// policy search strictly wins (additive — equal-partition defaults
+    /// keep old artifact bytes).
+    pub elastic_pipeline: Option<ElasticPipeline>,
 }
 
 impl ScenarioResult {
@@ -304,6 +332,7 @@ impl SweepEngine {
                 measured_exec: None,
                 dp_imbalance: dp_imbalance_for(s, &batches[i])?,
                 sp_sharding: sp_sharding_for(s, &batches[i]),
+                elastic_pipeline: elastic_pipeline_for(s, &batches[i])?,
             });
         }
         Ok(results)
@@ -418,6 +447,33 @@ fn sp_sharding_for(s: &Scenario, batches: &[Vec<Sequence>]) -> Option<SpSharding
         total_chunks: total / n,
         ring_comm_seconds: comm / n,
     })
+}
+
+/// The additive `elastic_pipeline` block for one scenario (None when
+/// pp <= 1 or when the equal partition under the default policy is already
+/// optimal): deterministic — a pure function of the scenario's sampled
+/// batches, evaluated at the scenario's first candidate (ChunkSize, K) on
+/// batch 0, the same workload shape the `--measure-exec` probe mirrors.
+fn elastic_pipeline_for(
+    s: &Scenario,
+    batches: &[Vec<Sequence>],
+) -> anyhow::Result<Option<ElasticPipeline>> {
+    let parallel = s.chunkflow_parallel();
+    if parallel.pp <= 1 || batches.is_empty() {
+        return Ok(None);
+    }
+    let (chunk_size, k) = s.candidates.first().copied().unwrap_or((8 * 1024, 1));
+    let cost = CostModel::new(s.model.clone(), parallel.clone());
+    let set = construct_chunks(&batches[0], chunk_size);
+    let choice = search_elastic(&cost, &set, k as usize)?;
+    Ok(choice.map(|c| ElasticPipeline {
+        pp: parallel.pp,
+        partition: c.partition_string(),
+        policy: c.policy.name().to_string(),
+        predicted_bubble_equal: c.bubble_equal,
+        predicted_bubble_elastic: c.bubble_elastic,
+        measured: None,
+    }))
 }
 
 /// What one fan-out unit evaluates on one (scenario, batch) pair.
@@ -746,6 +802,61 @@ mod tests {
             assert_eq!(a.baseline, b.baseline, "{}", a.scenario.name);
             assert_eq!(a.candidates, b.candidates, "{}", a.scenario.name);
             assert_eq!(a.sp_sharding, b.sp_sharding, "{}", a.scenario.name);
+        }
+    }
+
+    #[test]
+    fn elastic_blocks_only_on_pp_scenarios_and_only_on_strict_wins() {
+        let scenarios = tiny_scenarios();
+        let results = SweepEngine::serial().run(&scenarios).unwrap();
+        for r in &results {
+            match &r.elastic_pipeline {
+                Some(ep) => {
+                    assert!(
+                        r.scenario.parallel.pp > 1,
+                        "{}: elastic block on a pp=1 scenario",
+                        r.scenario.name
+                    );
+                    assert_eq!(ep.pp, r.scenario.parallel.pp);
+                    assert!(
+                        ep.predicted_bubble_elastic < ep.predicted_bubble_equal,
+                        "{}: block emitted without a strict bubble win ({} vs {})",
+                        r.scenario.name,
+                        ep.predicted_bubble_elastic,
+                        ep.predicted_bubble_equal
+                    );
+                    // The chosen partition must be a valid --partition value
+                    // for the scenario's model.
+                    crate::runtime::StagePartition::parse(
+                        &ep.partition,
+                        r.scenario.model.num_layers as usize,
+                    )
+                    .unwrap();
+                    assert!(ep.measured.is_none(), "default run attaches no probe");
+                }
+                None => {}
+            }
+        }
+        assert!(
+            results
+                .iter()
+                .filter(|r| r.scenario.parallel.pp <= 1)
+                .all(|r| r.elastic_pipeline.is_none()),
+            "pp=1 scenarios must stay block-free (artifact bytes)"
+        );
+    }
+
+    #[test]
+    fn elastic_blocks_are_deterministic_across_engines() {
+        let scenarios: Vec<Scenario> = tiny_scenarios()
+            .into_iter()
+            .filter(|s| s.parallel.pp > 1)
+            .collect();
+        assert!(!scenarios.is_empty(), "smoke set must exercise a pp scenario");
+        let serial = SweepEngine::serial().run(&scenarios).unwrap();
+        let parallel = SweepEngine::with_threads(4).run(&scenarios).unwrap();
+        for (a, b) in serial.iter().zip(&parallel) {
+            assert_eq!(a.elastic_pipeline, b.elastic_pipeline, "{}", a.scenario.name);
         }
     }
 

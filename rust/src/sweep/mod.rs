@@ -24,12 +24,14 @@ pub mod probe;
 pub mod scenario;
 
 pub use engine::{
-    CandidateResult, DpImbalance, Parallelism, ScenarioResult, SpSharding, SweepEngine,
-    UnitMetrics,
+    CandidateResult, DpImbalance, ElasticPipeline, Parallelism, ScenarioResult, SpSharding,
+    SweepEngine, UnitMetrics,
 };
 pub use output::{
-    compare_scenarios, doc_from_scenarios, scenario_json, to_json, validate, write_bench_json,
-    DEFAULT_BENCH_PATH, SCHEMA_VERSION,
+    bubble_drift, compare_scenarios, doc_from_scenarios, scenario_json, to_json, validate,
+    write_bench_json, BubbleDrift, DEFAULT_BENCH_PATH, SCHEMA_VERSION,
 };
-pub use probe::{attach_measured_exec, measure_scenario, MeasuredExec};
+pub use probe::{
+    attach_measured_exec, measure_elastic, measure_scenario, MeasuredElastic, MeasuredExec,
+};
 pub use scenario::Scenario;

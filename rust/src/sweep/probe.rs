@@ -17,10 +17,14 @@
 use std::collections::BTreeMap;
 
 use crate::chunk::construct_chunks;
-use crate::config::ModelSpec;
+use crate::config::{ModelSpec, ParallelConfig, RecomputeGranularity};
 use crate::data::{BatchSampler, SyntheticCorpus};
-use crate::pipeline::{build_exec_items, execute_state_aware, onef1b, OpCosts};
-use crate::runtime::{Backend, Manifest, ReferenceBackend};
+use crate::pipeline::{
+    build_exec_items, execute_state_aware, execute_state_aware_with, onef1b, ExecOptions,
+    OpCosts,
+};
+use crate::runtime::{Backend, Manifest, ReferenceBackend, StagePartition};
+use crate::sim::{search_elastic, CostModel};
 use crate::train::init_params;
 
 use super::engine::ScenarioResult;
@@ -52,6 +56,25 @@ pub struct MeasuredExec {
     pub bubble_ratio_predicted: f64,
     /// Peak live activation caches on any single stage.
     pub act_peak_chunks: usize,
+}
+
+/// Measured elastic-pipeline stats for one scenario's probe: the same
+/// probe workload executed twice on a deliberately head-heavy mini model —
+/// once under the equal partition + default policy, once under the
+/// (partition, policy) the elastic search picks *at probe scale* — with the
+/// wall-clock bubble ratio of each side. The acceptance contract is
+/// directional (the measured bubble moves the way the simulator predicted),
+/// never numeric, because wall-clock is machine-dependent.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MeasuredElastic {
+    /// Probe-scale chosen per-stage layer counts, `--partition` form.
+    pub partition: String,
+    /// Probe-scale chosen schedule policy name.
+    pub policy: String,
+    /// Wall-clock bubble of the equal partition + default policy run.
+    pub measured_bubble_equal: f64,
+    /// Wall-clock bubble of the elastic (partition, policy) run.
+    pub measured_bubble_elastic: f64,
 }
 
 /// The reference mini model the probe executes (4 layers so stage
@@ -110,6 +133,79 @@ pub fn measure_scenario(s: &Scenario, best_k: Option<u64>) -> anyhow::Result<Mea
     })
 }
 
+/// The mini model the *elastic* probe executes: same 4-layer skeleton as
+/// [`probe_model`] but with a 2048-entry vocabulary, so the LM head on the
+/// last stage costs ~4 layer-equivalents of compute. That reproduces, at
+/// probe scale, the exact asymmetry the elastic search exists to fix — an
+/// equal layer split leaves the head-bearing stage on the critical path —
+/// and it does so in *real* executor wall-clock, not just in the cost
+/// model, because the reference backend genuinely pays the logits matmul
+/// and vocab-wide softmax on the last stage.
+fn elastic_probe_model() -> ModelSpec {
+    ModelSpec { name: "elastic-probe".into(), vocab_size: 2048, ..probe_model() }
+}
+
+/// Pipeline stages the elastic probe runs. Two, not the scenario's pp: the
+/// probe model has 4 layers, so 2 stages is the deepest pipeline where an
+/// uneven partition is non-degenerate (4 stages would force 1,1,1,1).
+const ELASTIC_PROBE_STAGES: usize = 2;
+
+/// Run the elastic probe for one scenario: search at probe scale, then
+/// execute the equal and elastic schedules back to back on the same
+/// backend and batch. Returns None when the scenario has pp <= 1 or the
+/// probe-scale search finds no strict win (nothing to measure against).
+pub fn measure_elastic(s: &Scenario, best_k: Option<u64>) -> anyhow::Result<Option<MeasuredElastic>> {
+    if s.parallel.pp <= 1 {
+        return Ok(None);
+    }
+    let stages = ELASTIC_PROBE_STAGES;
+    let k = best_k.unwrap_or(1).clamp(1, 4) as usize;
+    let model = elastic_probe_model();
+    let num_layers = model.num_layers as usize;
+
+    let batch_n = s.global_batch_size.min(PROBE_BATCH_CAP).max(1);
+    let mut sampler = BatchSampler::new(s.dist()?, PROBE_CONTEXT, batch_n, s.seed);
+    let batch = sampler.next_batch();
+    let set = construct_chunks(&batch, PROBE_CHUNK as u64);
+
+    // Search on the probe-scale cost model (probe model, probe pipeline
+    // depth) so the choice being measured is self-consistent with the
+    // workload being executed.
+    let parallel =
+        ParallelConfig::new(1, stages as u64, RecomputeGranularity::Selective);
+    let cost = CostModel::new(model.clone(), parallel);
+    let choice = match search_elastic(&cost, &set, k)? {
+        Some(c) => c,
+        None => return Ok(None),
+    };
+
+    let max_chunks = PROBE_CONTEXT as usize / PROBE_CHUNK;
+    let manifest = Manifest::for_reference(&model, PROBE_CHUNK, max_chunks)?;
+    let mut backend = ReferenceBackend::new(manifest)?;
+    backend.enable_fast_path();
+    backend.set_params(&init_params(&backend.manifest, s.seed ^ 0xE5EC))?;
+    let corpus = SyntheticCorpus::new(backend.manifest.vocab_size as u32, s.seed ^ 0xDA7A);
+    let tokens: BTreeMap<u64, Vec<u32>> =
+        batch.iter().map(|q| (q.id, corpus.generate(q.id, q.len))).collect();
+    let seq_len: BTreeMap<u64, u64> = batch.iter().map(|q| (q.id, q.len)).collect();
+    let items = build_exec_items(&backend, &set, &tokens, &seq_len);
+
+    let equal = execute_state_aware(&backend, &set, &items, k, stages)?;
+    let elastic_opts = ExecOptions {
+        partition: Some(StagePartition::from_counts(&choice.partition, num_layers)?),
+        policy: choice.policy,
+        ..Default::default()
+    };
+    let elastic =
+        execute_state_aware_with(&backend, &set, &items, k, stages, elastic_opts)?;
+    Ok(Some(MeasuredElastic {
+        partition: choice.partition_string(),
+        policy: choice.policy.name().to_string(),
+        measured_bubble_equal: equal.timeline.bubble_ratio(),
+        measured_bubble_elastic: elastic.timeline.bubble_ratio(),
+    }))
+}
+
 /// Attach probes to already-evaluated results — the `--measure-exec` pass.
 pub fn attach_measured_exec(results: &mut [ScenarioResult]) -> anyhow::Result<()> {
     for r in results.iter_mut() {
@@ -118,6 +214,16 @@ pub fn attach_measured_exec(results: &mut [ScenarioResult]) -> anyhow::Result<()
             measure_scenario(&r.scenario, best_k)
                 .map_err(|e| e.context(format!("executor probe for `{}`", r.scenario.name)))?,
         );
+        // The elastic probe rides along only where the full-scale search
+        // emitted a block (keeps the artifact additive and the pass cheap).
+        if r.elastic_pipeline.is_some() {
+            let me = measure_elastic(&r.scenario, best_k).map_err(|e| {
+                e.context(format!("elastic probe for `{}`", r.scenario.name))
+            })?;
+            if let Some(ep) = r.elastic_pipeline.as_mut() {
+                ep.measured = me;
+            }
+        }
     }
     Ok(())
 }
@@ -135,6 +241,27 @@ mod tests {
         assert!((0.0..=1.0).contains(&me.bubble_ratio_predicted), "{me:?}");
         assert!(me.act_peak_chunks >= 1, "{me:?}");
         assert_eq!(me.chunk_size, PROBE_CHUNK as u64);
+    }
+
+    #[test]
+    fn elastic_probe_none_on_pp1_and_some_on_pp_scenarios() {
+        let smoke = Scenario::smoke();
+        let flat = smoke.iter().find(|s| s.parallel.pp <= 1).unwrap();
+        assert_eq!(measure_elastic(flat, Some(2)).unwrap(), None);
+
+        let deep = smoke.iter().find(|s| s.parallel.pp > 1).expect("smoke has a pp scenario");
+        let me = measure_elastic(deep, Some(2))
+            .unwrap()
+            .expect("the head-heavy probe model must admit an uneven win");
+        assert!((0.0..=1.0).contains(&me.measured_bubble_equal), "{me:?}");
+        assert!((0.0..=1.0).contains(&me.measured_bubble_elastic), "{me:?}");
+        let counts = StagePartition::parse(&me.partition, 4).unwrap().counts();
+        assert_eq!(counts.len(), ELASTIC_PROBE_STAGES);
+        assert!(
+            counts[0] > counts[1],
+            "the probe's LM head costs ~4 layer-equivalents, so the search \
+             must shed layers from the head-bearing last stage: {me:?}"
+        );
     }
 
     #[test]

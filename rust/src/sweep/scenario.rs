@@ -196,6 +196,19 @@ impl Scenario {
             ),
             4,
         ));
+        // Elastic-pipeline scenario (InfiniPipe): a deep-pipeline long-tail
+        // workload — 7B @ 256K runs <4, 4> per Table 3, and the equal layer
+        // split leaves the head-bearing last stage on the critical path, so
+        // this is where the uneven-partition + policy search should emit
+        // the additive `elastic_pipeline` block.
+        out.push(Self::paper(
+            "qwen2.5-7b",
+            256 * K,
+            "longtail-sft",
+            128,
+            2,
+            Self::default_candidates("qwen2.5-7b", 256 * K),
+        ));
         out
     }
 
@@ -227,6 +240,11 @@ impl Scenario {
                 Self::paper("qwen2.5-7b", 32 * K, "eval", 32, 1, vec![]),
                 2,
             )),
+            // Additive pp scenario: 14B @ 32K runs <4, 4> per Table 3, so
+            // the smoke sweep exercises the pipeline-aware paths (and the
+            // elastic partition/policy search) on a long-tail workload too;
+            // earlier smoke scenarios keep byte-identical artifact entries.
+            shrink(Self::paper("qwen2.5-14b", 32 * K, "longtail-sft", 32, 1, vec![])),
         ]
     }
 
@@ -289,8 +307,8 @@ mod tests {
 
     #[test]
     fn select_resolves_names_and_rejects_unknown() {
-        assert_eq!(Scenario::select("smoke").unwrap().len(), 5);
-        assert!(Scenario::select("paper").unwrap().len() >= 13);
+        assert_eq!(Scenario::select("smoke").unwrap().len(), 6);
+        assert!(Scenario::select("paper").unwrap().len() >= 14);
         let one = Scenario::select("7b-32K-eval").unwrap();
         assert_eq!(one.len(), 1);
         assert!(Scenario::select("not-a-scenario").is_err());
@@ -342,11 +360,30 @@ mod tests {
             .iter()
             .filter(|s| !s.name.contains("-sp"))
             .all(|s| s.parallel.sp == 1));
-        // The smoke set carries exactly one sp scenario, appended last.
+        // The smoke set carries exactly one sp scenario (fifth slot).
         let smoke = Scenario::smoke();
-        assert_eq!(smoke.last().unwrap().name, "smoke-7b-32K-eval-sp2");
-        assert_eq!(smoke.last().unwrap().parallel.sp, 2);
+        assert_eq!(smoke[4].name, "smoke-7b-32K-eval-sp2");
+        assert_eq!(smoke[4].parallel.sp, 2);
         assert!(smoke[..4].iter().all(|s| s.parallel.sp == 1));
+    }
+
+    #[test]
+    fn pp_scenarios_registered_for_the_elastic_search() {
+        // Registry: the deep-pipeline long-tail scenario the elastic search
+        // targets runs <TP, PP> = <4, 4> (Table 3, 7B @ 256K).
+        let all = Scenario::registry();
+        let deep = all
+            .iter()
+            .find(|s| s.name == "7b-256K-longtail-sft")
+            .expect("deep-pipeline longtail scenario");
+        assert_eq!(deep.parallel.pp, 4);
+        assert_eq!(deep.distribution, "longtail-sft");
+        // Smoke: exactly one pp > 1 scenario, appended last so the earlier
+        // smoke scenarios keep byte-identical artifact entries.
+        let smoke = Scenario::smoke();
+        assert_eq!(smoke.last().unwrap().name, "smoke-14b-32K-longtail-sft");
+        assert_eq!(smoke.last().unwrap().parallel.pp, 4);
+        assert!(smoke[..5].iter().all(|s| s.parallel.pp == 1));
     }
 
     #[test]

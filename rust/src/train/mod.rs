@@ -43,8 +43,10 @@ use std::time::{Duration, Instant};
 use crate::chunk::{construct_chunks, Chunk, ChunkKind, ChunkSet};
 use crate::config::TrainConfig;
 use crate::data::{BatchSampler, LengthDistribution, SyntheticCorpus};
-use crate::pipeline::{ExecOptions, RetryPolicy};
-use crate::runtime::{Backend, ChunkInputs, FlatParams, ReferenceBackend, Runtime, Scalar};
+use crate::pipeline::{ExecOptions, PolicyKind, RetryPolicy};
+use crate::runtime::{
+    Backend, ChunkInputs, FlatParams, ReferenceBackend, Runtime, Scalar, StagePartition,
+};
 use crate::schedule::{schedule_group, validate_group_plan, ChunkOp};
 use crate::state::{OffloadStore, StateKey, StateStore};
 use crate::util::json::Json;
@@ -168,6 +170,13 @@ pub struct StepMetrics {
     /// Pipeline mode only: the simulator's predicted bubble ratio for the
     /// same chunk set and schedule (`pipeline::simulate`).
     pub predicted_bubble_ratio: Option<f64>,
+    /// Uneven stage partition this step ran under (`--partition` layer
+    /// counts, e.g. `"3,1"`); None on the equal-partition default, so
+    /// pre-elastic history bytes are unchanged.
+    pub partition: Option<String>,
+    /// Non-default schedule policy this step ran under (`--policy`); None
+    /// under state-aware 1F1B, keeping pre-elastic history bytes unchanged.
+    pub policy: Option<String>,
     /// Whether the backend ran its parallel fast path this step (the
     /// reference backend's `--fast-path`; always false on PJRT).
     pub fast_path: bool,
@@ -217,6 +226,12 @@ pub struct Trainer<B: Backend = Runtime> {
     /// backward query rows split across this many shard calls over the
     /// KV-prefix seam. 1 = off (the pre-SP code path, bit for bit).
     sp: u64,
+    /// Uneven stage partition for the pipelined paths (`--partition`);
+    /// `None` = equal split, today's code path bit for bit.
+    partition: Option<StagePartition>,
+    /// Schedule policy for the pipelined paths (`--policy`); the default
+    /// state-aware 1F1B is bit-identical to the pre-policy path.
+    policy: PolicyKind,
     pub history: Vec<StepMetrics>,
 }
 
@@ -274,6 +289,8 @@ impl<B: Backend> Trainer<B> {
             retry: RetryPolicy::none(),
             handoff_timeout: None,
             sp: 1,
+            partition: None,
+            policy: PolicyKind::default(),
             history: Vec::new(),
         })
     }
@@ -316,8 +333,39 @@ impl<B: Backend> Trainer<B> {
         self.sp
     }
 
+    /// Uneven stage partition for the pipelined paths (`--partition`): the
+    /// executor splits layers per these counts instead of the equal
+    /// `stage_layer_range` split. `None` (or an explicitly equal partition)
+    /// keeps the pre-elastic path bit for bit.
+    pub fn set_partition(&mut self, partition: Option<StagePartition>) {
+        self.partition = partition;
+    }
+
+    /// Schedule policy for the pipelined paths (`--policy`). The default
+    /// [`PolicyKind::StateAware1F1B`] is bit-identical to the pre-policy
+    /// code path; every policy's executed order is agenda-conformant.
+    pub fn set_policy(&mut self, policy: PolicyKind) {
+        self.policy = policy;
+    }
+
     fn exec_options(&self) -> ExecOptions {
-        ExecOptions { handoff_timeout: self.handoff_timeout }
+        ExecOptions {
+            handoff_timeout: self.handoff_timeout,
+            partition: self.partition.clone(),
+            policy: self.policy,
+        }
+    }
+
+    /// `--partition` layer counts for the history row; None when running
+    /// the (explicit or implicit) equal split, so default history bytes
+    /// are unchanged.
+    fn partition_label(&self) -> Option<String> {
+        self.partition.as_ref().filter(|p| !p.is_equal()).map(|p| p.describe())
+    }
+
+    /// Non-default `--policy` name for the history row.
+    fn policy_label(&self) -> Option<String> {
+        (self.policy != PolicyKind::default()).then(|| self.policy.name().to_string())
     }
 
     /// Bound resident KV bytes (`--offload-budget-bytes`): when set, each
@@ -461,6 +509,8 @@ impl<B: Backend> Trainer<B> {
             dp_imbalance: None,
             measured_bubble_ratio: None,
             predicted_bubble_ratio: None,
+            partition: None,
+            policy: None,
             fast_path: self.backend.fast_path_active(),
             retries: 0,
         };
@@ -695,6 +745,12 @@ impl<B: Backend> Trainer<B> {
                     if let Some(b) = m.predicted_bubble_ratio {
                         fields.push(("predicted_bubble_ratio", Json::num(b)));
                     }
+                    if let Some(p) = &m.partition {
+                        fields.push(("partition", Json::str(p.clone())));
+                    }
+                    if let Some(p) = &m.policy {
+                        fields.push(("policy", Json::str(p.clone())));
+                    }
                     Json::obj(fields)
                 })
                 .collect(),
@@ -718,6 +774,47 @@ pub struct PipelineStepReport {
 }
 
 impl Trainer<ReferenceBackend> {
+    /// The simulator's prediction for one pipelined chunk set under the
+    /// configured (partition, policy). The equal-partition default-policy
+    /// path is the exact pre-elastic `simulate_state_aware` call (bit
+    /// identity); an uneven partition scales each stage's
+    /// token-proportional cost by its layer share relative to the equal
+    /// split, and a non-default policy simulates that policy's agendas —
+    /// the same agendas the executor runs.
+    fn predicted_timeline(
+        &self,
+        set: &ChunkSet,
+        k: usize,
+        stages: usize,
+    ) -> anyhow::Result<crate::pipeline::Timeline> {
+        let default_path = self.policy == PolicyKind::default()
+            && self.partition.as_ref().map_or(true, |p| p.is_equal());
+        if default_path {
+            return crate::pipeline::onef1b::simulate_state_aware(set, k, stages, |id| {
+                let len = set.chunks[id].total_len() as f64;
+                crate::pipeline::OpCosts { fwd: len, bwd: 2.0 * len }
+            });
+        }
+        let num_layers = self.backend.manifest().num_layers;
+        let part = match &self.partition {
+            Some(p) => p.clone(),
+            None => StagePartition::equal(num_layers, stages)?,
+        };
+        anyhow::ensure!(
+            part.num_stages() == stages,
+            "partition `{}` has {} stages but the pipeline runs {stages}",
+            part.describe(),
+            part.num_stages()
+        );
+        let scale: Vec<f64> = (0..stages)
+            .map(|s| stages as f64 * part.range(s).len() as f64 / num_layers as f64)
+            .collect();
+        crate::pipeline::simulate_policy(self.policy, set, k, stages, |s, id| {
+            let len = set.chunks[id].total_len() as f64;
+            crate::pipeline::OpCosts { fwd: len * scale[s], bwd: 2.0 * len * scale[s] }
+        })
+    }
+
     /// Gradient accumulation over one batch through the stage-parallel
     /// pipeline executor: Algorithm 1 chunks the batch, the state-aware
     /// 1F1B agendas schedule it, and `pipeline::exec` runs those agendas
@@ -756,11 +853,7 @@ impl Trainer<ReferenceBackend> {
         )?;
         // The simulator's prediction for the exact same chunk set and
         // schedule, under the paper's cost assumptions.
-        let predicted =
-            crate::pipeline::onef1b::simulate_state_aware(&set, k, stages, |id| {
-                let len = set.chunks[id].total_len() as f64;
-                crate::pipeline::OpCosts { fwd: len, bwd: 2.0 * len }
-            })?;
+        let predicted = self.predicted_timeline(&set, k, stages)?;
         let report = PipelineStepReport {
             stages,
             measured_bubble_ratio: out.timeline.bubble_ratio(),
@@ -808,6 +901,8 @@ impl Trainer<ReferenceBackend> {
             dp_imbalance: None,
             measured_bubble_ratio: Some(report.measured_bubble_ratio),
             predicted_bubble_ratio: Some(report.predicted_bubble_ratio),
+            partition: self.partition_label(),
+            policy: self.policy_label(),
             fast_path: self.backend.fast_path_active(),
             retries: report.retries as u64,
         };
@@ -1030,15 +1125,7 @@ impl Trainer<ReferenceBackend> {
             kv_peak = kv_peak.max(out.kv_peak_bytes);
             act_peak = act_peak.max(out.act_peak_chunks);
             measured = measured.max(out.timeline.bubble_ratio());
-            let pred = crate::pipeline::onef1b::simulate_state_aware(
-                &replicas[r].set,
-                k,
-                stages,
-                |id| {
-                    let len = replicas[r].set.chunks[id].total_len() as f64;
-                    crate::pipeline::OpCosts { fwd: len, bwd: 2.0 * len }
-                },
-            )?;
+            let pred = self.predicted_timeline(&replicas[r].set, k, stages)?;
             predicted = predicted.max(pred.bubble_ratio());
             partials.push(out.grads);
         }
@@ -1090,6 +1177,8 @@ impl Trainer<ReferenceBackend> {
             dp_imbalance: Some(report.dp_imbalance),
             measured_bubble_ratio: report.measured_bubble_ratio,
             predicted_bubble_ratio: report.predicted_bubble_ratio,
+            partition: self.partition_label(),
+            policy: self.policy_label(),
             fast_path: self.backend.fast_path_active(),
             retries: report.retries as u64,
         };

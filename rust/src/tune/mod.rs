@@ -23,8 +23,8 @@ use crate::config::ParallelConfig;
 use crate::data::{BatchSampler, LengthDistribution, Sequence};
 use crate::memory::{MemoryModel, GPU_CAPACITY};
 use crate::sim::{
-    dp_rank_sets, simulate_chunkflow_iteration, simulate_chunkset_sharded, CostModel,
-    IterationResult,
+    dp_rank_sets, search_elastic, simulate_chunkflow_iteration, simulate_chunkset_sharded,
+    CostModel, ElasticChoice, IterationResult,
 };
 use crate::sweep::SweepEngine;
 
@@ -193,6 +193,27 @@ impl GridSearch {
         self.run().into_iter().find(|p| p.feasible)
     }
 
+    /// Elastic partition/policy search for this configuration at a chosen
+    /// grid point — None when pp <= 1 or the equal partition under the
+    /// default policy is already optimal. Evaluated on the search's first
+    /// sampled batch (the same stream every grid point averaged over).
+    pub fn elastic_at(&self, point: &GridPoint) -> Option<ElasticChoice> {
+        if self.parallel.pp <= 1 {
+            return None;
+        }
+        let mut sampler = BatchSampler::new(
+            LengthDistribution::evaluation_dataset(),
+            self.context_length,
+            self.global_batch_size,
+            self.seed,
+        );
+        let batch = sampler.next_batch();
+        let cost = CostModel::new(self.model.clone(), self.parallel.clone());
+        let set = construct_chunks(&batch, point.chunk_size);
+        search_elastic(&cost, &set, point.k as usize)
+            .expect("elastic search cannot fail on valid chunk sets")
+    }
+
     /// Sweep the joint (ChunkSize, K, dp, pp, sp) space: run the full
     /// (ChunkSize, K) grid once per parallel-strategy candidate and return
     /// each strategy's best feasible point, ranked by iteration time.
@@ -219,7 +240,16 @@ impl GridSearch {
                     if let Some(point) =
                         g.run_on(engine).into_iter().find(|p| p.feasible)
                     {
-                        out.push(JointPoint { parallel: g.parallel.clone(), point });
+                        // Co-optimize the pipeline axes at the strategy's
+                        // best (ChunkSize, K): uneven partition + schedule
+                        // policy, kept out of the ranking (the elastic win
+                        // refines a strategy, it does not reorder them).
+                        let elastic = g.elastic_at(&point);
+                        out.push(JointPoint {
+                            parallel: g.parallel.clone(),
+                            point,
+                            elastic,
+                        });
                     }
                 }
             }
@@ -241,6 +271,11 @@ impl GridSearch {
 pub struct JointPoint {
     pub parallel: ParallelConfig,
     pub point: GridPoint,
+    /// Elastic pipeline refinement for pp > 1 strategies: the uneven
+    /// partition + schedule policy that strictly beats the equal-partition
+    /// default on this strategy's best point, when one exists. Never
+    /// affects the ranking (strategies stay ordered by iteration time).
+    pub elastic: Option<ElasticChoice>,
 }
 
 #[cfg(test)]
@@ -428,6 +463,34 @@ mod tests {
             let q = gj.evaluate(jp.point.chunk_size, jp.point.k);
             assert_eq!(jp.point.avg_iteration_seconds, q.avg_iteration_seconds);
         }
+    }
+
+    #[test]
+    fn joint_search_attaches_elastic_refinement_on_pp_strategies() {
+        let g = search();
+        let ranked = g.run_joint(&[1], &[1, 4], &[1], &SweepEngine::serial());
+        // pp = 1 strategies (when feasible at all) never carry a block.
+        for jp in &ranked {
+            if jp.parallel.pp <= 1 {
+                assert!(jp.elastic.is_none(), "pp=1 strategy carries elastic block");
+            }
+        }
+        let deep = ranked
+            .iter()
+            .find(|jp| jp.parallel.pp == 4)
+            .expect("the <4,4> strategy has feasible points");
+        // qwen2.5-7b's untied LM head costs ~2 layer-equivalents, so the
+        // equal 7,7,7,7 split leaves the last stage on the critical path
+        // and the search must find a strictly better uneven partition.
+        let e = deep.elastic.as_ref().expect("elastic win at <4,4>");
+        assert!(e.is_win());
+        assert_eq!(e.pp, 4);
+        assert_eq!(e.partition.iter().sum::<usize>(), 28, "{e:?}");
+        assert!(e.partition.iter().all(|&c| c >= 1), "{e:?}");
+        assert!(
+            *e.partition.last().unwrap() < 7,
+            "the head-bearing last stage must shed layers: {e:?}"
+        );
     }
 
     #[test]
