@@ -113,8 +113,11 @@ mod tests {
         // top-conditional-choice accuracy must far exceed uniform 1/64.
         let c = SyntheticCorpus::new(64, 7);
         let seq = c.generate(3, 20_000);
-        use std::collections::HashMap;
-        let mut table: HashMap<(u32, u32), HashMap<u32, u32>> = HashMap::new();
+        // BTreeMap, not HashMap: the determinism lint (`chunkflow lint-src`)
+        // bans map types with nondeterministic iteration order everywhere in
+        // src/ so a hazard can never migrate into a bit-identity path.
+        use std::collections::BTreeMap;
+        let mut table: BTreeMap<(u32, u32), BTreeMap<u32, u32>> = BTreeMap::new();
         for w in seq.windows(3) {
             *table
                 .entry((w[0], w[1]))

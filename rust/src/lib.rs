@@ -17,7 +17,9 @@
 //!   scenario-sweep engine and its `BENCH_chunkflow.json` perf-trajectory
 //!   artifact ([`sweep`]), the trainer over pluggable execution backends
 //!   ([`runtime`] — the PJRT runtime and the pure-Rust reference backend —
-//!   and [`train`]) and the paper-artifact report generators ([`report`]).
+//!   and [`train`]) and the paper-artifact report generators ([`report`]),
+//!   plus the static schedule/memory verifier behind `chunkflow check`
+//!   ([`verify`]) and the in-tree determinism lint ([`lint`]).
 //! - **Layer 2** — `python/compile/model.py`: the chunked transformer
 //!   forward/backward in JAX, AOT-lowered to HLO text at build time.
 //! - **Layer 1** — `python/compile/kernels/chunk_attn.py`: the chunked
@@ -34,6 +36,7 @@ pub mod baseline;
 pub mod chunk;
 pub mod config;
 pub mod data;
+pub mod lint;
 pub mod memory;
 pub mod pipeline;
 pub mod report;
@@ -45,3 +48,4 @@ pub mod sweep;
 pub mod train;
 pub mod tune;
 pub mod util;
+pub mod verify;

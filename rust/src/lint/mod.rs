@@ -1,0 +1,522 @@
+//! Determinism lint — `chunkflow lint-src`.
+//!
+//! The repo's standing contracts (bit-identical lattices, byte-diffed
+//! `BENCH_chunkflow.json`, serial-vs-parallel sweep identity) die quietly
+//! the moment a nondeterminism source slips into a committed-artifact path.
+//! This is a token-level scanner over `rust/src/**` that flags the four
+//! hazard classes that have actually bitten projects like this one:
+//!
+//! | rule id            | hazard                                              |
+//! |--------------------|-----------------------------------------------------|
+//! | `map-iteration`    | `HashMap`/`HashSet` (iteration order is seeded per   |
+//! |                    | process; use `BTreeMap`/`BTreeSet`)                 |
+//! | `float-sort-unwrap`| `partial_cmp(..).unwrap()` on float sort keys       |
+//! |                    | (panics on NaN mid-sort; use `total_cmp`)           |
+//! | `wall-clock`       | `Instant::now`/`SystemTime` outside the timing      |
+//! |                    | utilities and probes                                |
+//! | `unseeded-rng`     | entropy-seeded RNG construction                     |
+//!
+//! The scanner strips comments, strings and char literals first, so prose
+//! mentioning `HashMap` never trips it. Audited exceptions live in
+//! `rust/lint-allow.toml`; CI runs the lint so any *new* hazard fails the
+//! build while the allowlist documents the old ones. Unused allowlist
+//! entries are themselves errors — the list can only shrink.
+
+use std::path::{Path, PathBuf};
+
+pub const RULE_MAP_ITER: &str = "map-iteration";
+pub const RULE_FLOAT_SORT: &str = "float-sort-unwrap";
+pub const RULE_WALL_CLOCK: &str = "wall-clock";
+pub const RULE_UNSEEDED_RNG: &str = "unseeded-rng";
+
+/// Files where wall-clock reads are the *point* (benchmark timing, log
+/// timestamps, hardware probes) — allowed without an allowlist entry.
+const WALL_CLOCK_FREE: &[&str] = &["util/bench.rs", "util/log.rs", "sweep/probe.rs"];
+
+/// One lint hit.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Finding {
+    /// Path relative to the scan root, with `/` separators.
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    pub rule: &'static str,
+    /// The offending token sequence.
+    pub snippet: String,
+}
+
+impl std::fmt::Display for Finding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.snippet)
+    }
+}
+
+/// An audited exception from `lint-allow.toml`.
+#[derive(Clone, Debug)]
+pub struct AllowEntry {
+    /// File suffix the entry covers (e.g. `src/train/mod.rs`).
+    pub file: String,
+    pub rule: String,
+    pub reason: String,
+}
+
+/// Parse the minimal TOML dialect the allowlist uses: `[[allow]]` tables
+/// with `key = "value"` lines. No dependencies, no general TOML.
+pub fn parse_allowlist(text: &str) -> anyhow::Result<Vec<AllowEntry>> {
+    let mut entries = Vec::new();
+    let mut current: Option<(String, String, String)> = None;
+    for (i, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        if line == "[[allow]]" {
+            if let Some(e) = current.take() {
+                entries.push(finish_entry(e, i)?);
+            }
+            current = Some((String::new(), String::new(), String::new()));
+            continue;
+        }
+        let Some((key, value)) = line.split_once('=') else {
+            anyhow::bail!("lint-allow.toml line {}: expected `key = \"value\"`", i + 1);
+        };
+        let value = value.trim();
+        anyhow::ensure!(
+            value.len() >= 2 && value.starts_with('"') && value.ends_with('"'),
+            "lint-allow.toml line {}: value must be a double-quoted string",
+            i + 1
+        );
+        let value = value[1..value.len() - 1].to_string();
+        let Some(entry) = current.as_mut() else {
+            anyhow::bail!("lint-allow.toml line {}: key outside an [[allow]] table", i + 1);
+        };
+        match key.trim() {
+            "file" => entry.0 = value,
+            "rule" => entry.1 = value,
+            "reason" => entry.2 = value,
+            other => anyhow::bail!("lint-allow.toml line {}: unknown key `{other}`", i + 1),
+        }
+    }
+    if let Some(e) = current.take() {
+        entries.push(finish_entry(e, text.lines().count())?);
+    }
+    Ok(entries)
+}
+
+fn finish_entry(
+    (file, rule, reason): (String, String, String),
+    line: usize,
+) -> anyhow::Result<AllowEntry> {
+    anyhow::ensure!(
+        !file.is_empty() && !rule.is_empty() && !reason.is_empty(),
+        "lint-allow.toml entry ending near line {line}: needs file, rule and reason"
+    );
+    Ok(AllowEntry { file, rule, reason })
+}
+
+/// A source token: identifier text plus its 1-based line.
+struct Tok {
+    text: String,
+    line: usize,
+}
+
+/// Strip comments (line + nested block), string literals (plain and raw)
+/// and char literals, then collect identifier-ish tokens and the `.`/`(`
+/// punctuation the rules need for adjacency checks.
+fn tokenize(src: &str) -> Vec<Tok> {
+    let b: Vec<char> = src.chars().collect();
+    let mut toks = Vec::new();
+    let mut i = 0;
+    let mut line = 1;
+    let n = b.len();
+    while i < n {
+        let c = b[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+        } else if c == '/' && i + 1 < n && b[i + 1] == '/' {
+            while i < n && b[i] != '\n' {
+                i += 1;
+            }
+        } else if c == '/' && i + 1 < n && b[i + 1] == '*' {
+            let mut depth = 1;
+            i += 2;
+            while i < n && depth > 0 {
+                if b[i] == '\n' {
+                    line += 1;
+                    i += 1;
+                } else if b[i] == '/' && i + 1 < n && b[i + 1] == '*' {
+                    depth += 1;
+                    i += 2;
+                } else if b[i] == '*' && i + 1 < n && b[i + 1] == '/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+        } else if c == 'r'
+            && i + 1 < n
+            && (b[i + 1] == '"' || b[i + 1] == '#')
+            && !prev_is_ident(&b, i)
+        {
+            // Raw string r"..." / r#"..."# (any number of #).
+            let mut j = i + 1;
+            let mut hashes = 0;
+            while j < n && b[j] == '#' {
+                hashes += 1;
+                j += 1;
+            }
+            if j < n && b[j] == '"' {
+                j += 1;
+                'raw: while j < n {
+                    if b[j] == '\n' {
+                        line += 1;
+                    }
+                    if b[j] == '"' {
+                        let mut k = 0;
+                        while k < hashes && j + 1 + k < n && b[j + 1 + k] == '#' {
+                            k += 1;
+                        }
+                        if k == hashes {
+                            j += 1 + hashes;
+                            break 'raw;
+                        }
+                    }
+                    j += 1;
+                }
+                i = j;
+            } else {
+                // `r` was just an identifier start (e.g. `rf`).
+                let start = i;
+                while i < n && (b[i].is_alphanumeric() || b[i] == '_') {
+                    i += 1;
+                }
+                toks.push(Tok { text: b[start..i].iter().collect(), line });
+            }
+        } else if c == '"' {
+            i += 1;
+            while i < n {
+                if b[i] == '\\' {
+                    i += 2;
+                } else if b[i] == '"' {
+                    i += 1;
+                    break;
+                } else {
+                    if b[i] == '\n' {
+                        line += 1;
+                    }
+                    i += 1;
+                }
+            }
+        } else if c == '\'' {
+            // Char literal or lifetime. A lifetime is `'` + ident not
+            // followed by a closing quote.
+            if i + 1 < n && b[i + 1] == '\\' {
+                i += 2;
+                while i < n && b[i] != '\'' {
+                    i += 1;
+                }
+                i += 1;
+            } else if i + 2 < n && b[i + 2] == '\'' {
+                i += 3;
+            } else {
+                // Lifetime: skip the quote, let the ident tokenize (it
+                // cannot collide with any rule pattern).
+                i += 1;
+            }
+        } else if c.is_alphabetic() || c == '_' {
+            let start = i;
+            while i < n && (b[i].is_alphanumeric() || b[i] == '_') {
+                i += 1;
+            }
+            toks.push(Tok { text: b[start..i].iter().collect(), line });
+        } else if c == '.' || c == '(' || c == ':' {
+            toks.push(Tok { text: c.to_string(), line });
+            i += 1;
+        } else {
+            if c == ';' {
+                toks.push(Tok { text: ";".to_string(), line });
+            }
+            i += 1;
+        }
+    }
+    toks
+}
+
+fn prev_is_ident(b: &[char], i: usize) -> bool {
+    i > 0 && (b[i - 1].is_alphanumeric() || b[i - 1] == '_')
+}
+
+/// Scan one file's source text. `rel` is the path relative to the scan
+/// root (used for the wall-clock default allowance).
+pub fn scan_source(rel: &str, src: &str) -> Vec<Finding> {
+    let toks = tokenize(src);
+    let mut findings = Vec::new();
+    let wall_clock_free = WALL_CLOCK_FREE.iter().any(|f| rel.ends_with(f));
+    let push = |out: &mut Vec<Finding>, line: usize, rule: &'static str, snippet: &str| {
+        out.push(Finding { file: rel.to_string(), line, rule, snippet: snippet.to_string() });
+    };
+    for (idx, tok) in toks.iter().enumerate() {
+        match tok.text.as_str() {
+            "HashMap" | "HashSet" => {
+                push(&mut findings, tok.line, RULE_MAP_ITER, &tok.text);
+            }
+            "partial_cmp" => {
+                // `partial_cmp` ... `unwrap`/`expect` before the next `;`
+                // is the NaN-panicking comparator idiom.
+                for next in &toks[idx + 1..] {
+                    match next.text.as_str() {
+                        ";" => break,
+                        "unwrap" | "expect" => {
+                            push(
+                                &mut findings,
+                                tok.line,
+                                RULE_FLOAT_SORT,
+                                "partial_cmp(..).unwrap()",
+                            );
+                            break;
+                        }
+                        _ => {}
+                    }
+                }
+            }
+            "Instant" | "SystemTime" if !wall_clock_free => {
+                // `Instant::now(` / `SystemTime::now(` (or any SystemTime
+                // read — `SystemTime` only appears to read wall time).
+                let is_now = toks[idx + 1..]
+                    .iter()
+                    .take(3)
+                    .any(|t| t.text == "now");
+                if tok.text == "SystemTime" || is_now {
+                    push(
+                        &mut findings,
+                        tok.line,
+                        RULE_WALL_CLOCK,
+                        &format!("{}::now()", tok.text),
+                    );
+                }
+            }
+            "thread_rng" | "from_entropy" | "from_os_rng" | "OsRng" => {
+                push(&mut findings, tok.line, RULE_UNSEEDED_RNG, &tok.text);
+            }
+            _ => {}
+        }
+    }
+    findings
+}
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> anyhow::Result<()> {
+    let mut entries: Vec<PathBuf> = std::fs::read_dir(dir)
+        .map_err(|e| anyhow::anyhow!("reading {}: {e}", dir.display()))?
+        .collect::<Result<Vec<_>, _>>()?
+        .into_iter()
+        .map(|e| e.path())
+        .collect();
+    entries.sort();
+    for path in entries {
+        if path.is_dir() {
+            collect_rs_files(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Outcome of a lint run: surviving findings plus allowlist accounting.
+#[derive(Debug)]
+pub struct LintReport {
+    /// Findings not covered by the allowlist — these fail the build.
+    pub findings: Vec<Finding>,
+    /// Findings suppressed by an allowlist entry.
+    pub allowed: Vec<(Finding, String)>,
+    /// Allowlist entries that matched nothing — also fail the build.
+    pub unused_allows: Vec<AllowEntry>,
+    pub files_scanned: usize,
+}
+
+impl LintReport {
+    pub fn is_clean(&self) -> bool {
+        self.findings.is_empty() && self.unused_allows.is_empty()
+    }
+}
+
+/// Scan every `.rs` file under `root` and apply the allowlist.
+pub fn lint_tree(root: &Path, allowlist: &[AllowEntry]) -> anyhow::Result<LintReport> {
+    anyhow::ensure!(root.is_dir(), "lint root {} is not a directory", root.display());
+    let mut files = Vec::new();
+    collect_rs_files(root, &mut files)?;
+    let mut findings = Vec::new();
+    let mut allowed = Vec::new();
+    let mut used = vec![false; allowlist.len()];
+    for path in &files {
+        let src = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        for f in scan_source(&rel, &src) {
+            // Allowlist entries name paths like `src/train/mod.rs`; match
+            // by suffix against the scan-relative path.
+            let hit = allowlist.iter().enumerate().find(|(_, a)| {
+                a.rule == f.rule && (a.file.ends_with(&f.file) || f.file.ends_with(&a.file))
+            });
+            match hit {
+                Some((i, a)) => {
+                    used[i] = true;
+                    allowed.push((f, a.reason.clone()));
+                }
+                None => findings.push(f),
+            }
+        }
+    }
+    let unused_allows = allowlist
+        .iter()
+        .zip(&used)
+        .filter(|(_, &u)| !u)
+        .map(|(a, _)| a.clone())
+        .collect();
+    Ok(LintReport { findings, allowed, unused_allows, files_scanned: files.len() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flags_hash_map_and_set() {
+        let src = "use std::collections::HashMap;\nfn f() { let s: HashSet<u32> = Default::default(); }\n";
+        let f = scan_source("src/x.rs", src);
+        assert_eq!(f.len(), 2);
+        assert_eq!(f[0].rule, RULE_MAP_ITER);
+        assert_eq!(f[0].line, 1);
+        assert_eq!(f[1].line, 2);
+    }
+
+    #[test]
+    fn ignores_hazards_in_comments_and_strings() {
+        let src = "// HashMap iteration order would be bad here.\n\
+                   /* SystemTime::now() in a /* nested */ block comment */\n\
+                   fn f() -> &'static str { \"HashMap Instant::now() thread_rng\" }\n\
+                   const R: &str = r#\"partial_cmp(a).unwrap()\"#;\n";
+        assert!(scan_source("src/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn flags_partial_cmp_unwrap_but_not_total_cmp() {
+        let bad = "v.sort_by(|a, b| a.partial_cmp(b).unwrap());";
+        let f = scan_source("src/x.rs", bad);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, RULE_FLOAT_SORT);
+        let good = "v.sort_by(|a, b| a.total_cmp(b));\nlet c = a.partial_cmp(&b);\n";
+        assert!(scan_source("src/x.rs", good).is_empty());
+    }
+
+    #[test]
+    fn flags_wall_clock_outside_timing_utils() {
+        let src = "let t = std::time::Instant::now();\nlet s = SystemTime::now();";
+        let f = scan_source("src/sim/mod.rs", src);
+        assert_eq!(f.len(), 2);
+        assert!(f.iter().all(|x| x.rule == RULE_WALL_CLOCK));
+        // The same source inside the timing utilities is fine.
+        assert!(scan_source("src/util/bench.rs", src).is_empty());
+        assert!(scan_source("src/sweep/probe.rs", src).is_empty());
+        // `Instant` as a type name alone (no ::now) is fine.
+        assert!(scan_source("src/x.rs", "fn f(t: Instant) -> Instant { t }").is_empty());
+    }
+
+    #[test]
+    fn flags_unseeded_rng() {
+        let src = "let mut r = rand::thread_rng();\nlet g = SmallRng::from_entropy();\nlet o = OsRng;";
+        let f = scan_source("src/x.rs", src);
+        assert_eq!(f.len(), 3);
+        assert!(f.iter().all(|x| x.rule == RULE_UNSEEDED_RNG));
+        // Seeded construction is fine.
+        assert!(scan_source("src/x.rs", "let r = Rng::new(seed);").is_empty());
+    }
+
+    #[test]
+    fn allowlist_parses_and_suppresses() {
+        let toml = r#"
+# audited exceptions
+[[allow]]
+file = "src/train/mod.rs"    # step timing
+rule = "wall-clock"
+reason = "operator-facing step timing, never in artifacts"
+"#;
+        let allows = parse_allowlist(toml).unwrap();
+        assert_eq!(allows.len(), 1);
+        assert_eq!(allows[0].rule, "wall-clock");
+        assert!(allows[0].reason.contains("step timing"));
+    }
+
+    #[test]
+    fn allowlist_rejects_incomplete_entries() {
+        assert!(parse_allowlist("[[allow]]\nfile = \"x.rs\"\n").is_err());
+        assert!(parse_allowlist("file = \"x.rs\"\n").is_err());
+        assert!(parse_allowlist("[[allow]]\nfile = x.rs\nrule = \"r\"\nreason = \"z\"").is_err());
+    }
+
+    #[test]
+    fn finding_display_is_greppable() {
+        let f = Finding {
+            file: "src/x.rs".into(),
+            line: 7,
+            rule: RULE_MAP_ITER,
+            snippet: "HashMap".into(),
+        };
+        assert_eq!(f.to_string(), "src/x.rs:7: [map-iteration] HashMap");
+    }
+
+    #[test]
+    fn synthetic_hazard_fixture_fails_and_allowlist_scopes_it() {
+        // End-to-end over a temp tree: a hazard fixture must fail the lint,
+        // and an allowlist entry for it must flip the run clean while an
+        // unrelated entry is reported unused.
+        let dir = std::env::temp_dir().join(format!(
+            "chunkflow-lint-test-{}",
+            std::process::id()
+        ));
+        let sub = dir.join("deep");
+        std::fs::create_dir_all(&sub).unwrap();
+        std::fs::write(
+            sub.join("hazard.rs"),
+            "use std::collections::HashMap;\nfn t() { let _ = std::time::Instant::now(); }\n",
+        )
+        .unwrap();
+        std::fs::write(dir.join("clean.rs"), "fn ok() -> u32 { 1 }\n").unwrap();
+
+        let report = lint_tree(&dir, &[]).unwrap();
+        assert_eq!(report.files_scanned, 2);
+        assert_eq!(report.findings.len(), 2);
+        assert!(!report.is_clean());
+
+        let allows = vec![
+            AllowEntry {
+                file: "deep/hazard.rs".into(),
+                rule: RULE_MAP_ITER.into(),
+                reason: "test fixture".into(),
+            },
+            AllowEntry {
+                file: "deep/hazard.rs".into(),
+                rule: RULE_WALL_CLOCK.into(),
+                reason: "test fixture".into(),
+            },
+            AllowEntry {
+                file: "nonexistent.rs".into(),
+                rule: RULE_MAP_ITER.into(),
+                reason: "stale".into(),
+            },
+        ];
+        let report = lint_tree(&dir, &allows).unwrap();
+        assert!(report.findings.is_empty());
+        assert_eq!(report.allowed.len(), 2);
+        assert_eq!(report.unused_allows.len(), 1);
+        assert!(!report.is_clean(), "unused allowlist entries must fail");
+
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

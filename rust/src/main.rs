@@ -7,6 +7,8 @@
 //!   sweep      parallel scenario sweep -> BENCH_chunkflow.json
 //!   benchdiff  compare two BENCH_chunkflow.json artifacts for metric drift
 //!   tune       (ChunkSize, K) grid search (§5)
+//!   check      static schedule/memory verification of scenario plans
+//!   lint-src   determinism lint over the Rust source tree
 //!   data       inspect the synthetic long-tail datasets
 //!   help       this text
 
@@ -56,6 +58,10 @@ fn flags() -> Vec<FlagSpec> {
         flag("iters", true, "simulation iterations to average"),
         flag("out", true, "output JSON path"),
         flag("scenario", true, "sweep scenarios: smoke|paper|<name>[,<name>...]"),
+        flag("all", false, "check: verify every registered scenario (registry + smoke)"),
+        flag("skip-preflight", false, "skip the static plan verification pre-flight"),
+        flag("root", true, "lint-src: source tree to scan (default rust/src)"),
+        flag("allowlist", true, "lint-src: audited-exception file (default rust/lint-allow.toml)"),
         flag("measure-exec", false, "attach measured executor bubble ratios (reference probe)"),
         flag("serial", false, "run the sweep serially (reference order)"),
         flag("threads", true, "sweep worker threads (default: all cores)"),
@@ -72,6 +78,8 @@ const SUBCOMMANDS: &[(&str, &str)] = &[
     ("sweep", "parallel scenario sweep writing BENCH_chunkflow.json"),
     ("benchdiff", "compare two BENCH_chunkflow.json artifacts: benchdiff <old> <new>"),
     ("tune", "grid-search (ChunkSize, K) for a configuration"),
+    ("check", "statically verify scenario plans (schedule/memory rules)"),
+    ("lint-src", "scan the source tree for determinism hazards"),
     ("data", "print dataset distribution statistics"),
 ];
 
@@ -103,6 +111,8 @@ fn main() {
         Some("sweep") => cmd_sweep(&args),
         Some("benchdiff") => cmd_benchdiff(&args),
         Some("tune") => cmd_tune(&args),
+        Some("check") => cmd_check(&args),
+        Some("lint-src") => cmd_lint_src(&args),
         Some("data") => cmd_data(&args),
         _ => {
             println!("{}", render_help("chunkflow", SUBCOMMANDS, &spec));
@@ -184,11 +194,15 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
 
     // Clamp the sampled lengths to backend coverage via a suitable
     // distribution: reuse the evaluation shape truncated at the context.
-    let dist = LengthDistribution::from_cdf(
-        "train",
-        &[(256, 0.60), (512, 0.85), (cfg.context_length.max(513), 0.99)],
-        cfg.context_length,
-    );
+    // Rows at or beyond the context collapse into the final bucket, so
+    // short contexts (< 513) construct a valid CDF instead of tripping
+    // `from_cdf`'s bound assertion.
+    let mut dist_rows: Vec<(u64, f64)> = [(256, 0.60), (512, 0.85)]
+        .into_iter()
+        .filter(|&(hi, _)| hi < cfg.context_length)
+        .collect();
+    dist_rows.push((cfg.context_length, 0.99));
+    let dist = LengthDistribution::from_cdf("train", &dist_rows, cfg.context_length);
     match args.get_or("backend", "reference") {
         "reference" => {
             // The reference backend compiles nothing, so --chunk-size is free
@@ -225,6 +239,34 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
             parallel.dp = dp as u64;
             parallel.sp = sp;
             cfg.parallel = parallel;
+            // Static pre-flight: build the plan this configuration generates
+            // for a probe batch and verify every schedule/memory rule before
+            // constructing the backend. A bad strategy fails here with the
+            // violated rule id and offending op, not a mid-training error.
+            if !args.get_bool("skip-preflight") {
+                let probe = BatchSampler::new(
+                    dist.clone(),
+                    cfg.context_length,
+                    cfg.global_batch_size as usize,
+                    cfg.seed,
+                )
+                .next_batch();
+                let set = chunkflow::chunk::construct_chunks(&probe, chunk_size);
+                let mm = chunkflow::memory::MemoryModel::new(
+                    cfg.model.clone(),
+                    cfg.parallel.clone(),
+                );
+                chunkflow::verify::preflight(
+                    "train pre-flight",
+                    &set,
+                    sp,
+                    policy,
+                    k as usize,
+                    stages,
+                    &mm,
+                    cfg.context_length,
+                )?;
+            }
             let max_chunks = cfg.context_length.div_ceil(chunk_size) as usize;
             let manifest = Manifest::for_reference(&cfg.model, chunk_size as usize, max_chunks)?;
             let mut backend = ReferenceBackend::new(manifest)?;
@@ -425,6 +467,17 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
     let seed = args.get_u64("seed", chunkflow::sweep::scenario::DEFAULT_SEED)?;
     for s in &mut scenarios {
         s.seed = seed;
+    }
+    // Static pre-flight: every candidate plan of every selected scenario
+    // must verify before any sweep compute (or journal write) happens.
+    if !args.get_bool("skip-preflight") {
+        for s in &scenarios {
+            let report = chunkflow::verify::check_scenario(s)?;
+            chunkflow::verify::ensure_clean(
+                &format!("sweep pre-flight ({})", s.name),
+                &report.diagnostics,
+            )?;
+        }
     }
     let engine = if args.get_bool("serial") {
         SweepEngine::serial()
@@ -688,6 +741,9 @@ fn tune_joint(gs: &GridSearch, args: &Args) -> anyhow::Result<()> {
     let dps = axis(gs.parallel.dp);
     let pps = axis(gs.parallel.pp);
     let sps = axis(gs.parallel.sp);
+    if !args.get_bool("skip-preflight") {
+        gs.preflight()?;
+    }
     let ranked = gs.run_joint(&dps, &pps, &sps, &SweepEngine::auto());
     println!(
         "{:>4} {:>4} {:>4} {:>10} {:>4} {:>14} {:>12}  {}",
@@ -767,6 +823,111 @@ fn tune_joint(gs: &GridSearch, args: &Args) -> anyhow::Result<()> {
         );
         j.write_file(std::path::Path::new(out))?;
     }
+    Ok(())
+}
+
+fn cmd_check(args: &Args) -> anyhow::Result<()> {
+    let scenarios = if args.get_bool("all") {
+        let mut all = Scenario::select("all")?;
+        all.extend(Scenario::smoke());
+        all
+    } else {
+        Scenario::select(args.get_or("scenario", "smoke"))?
+    };
+    let mut reports = Vec::new();
+    let mut total = 0usize;
+    for s in &scenarios {
+        let r = chunkflow::verify::check_scenario(s)?;
+        println!(
+            "{:<28} {:>3} plan(s)  {}",
+            r.scenario,
+            r.plans,
+            if r.is_clean() { "OK" } else { "FAIL" }
+        );
+        for d in &r.diagnostics {
+            println!("  {d}");
+        }
+        total += r.diagnostics.len();
+        reports.push(r);
+    }
+    if let Some(out) = args.get("out") {
+        let j = Json::Arr(
+            reports
+                .iter()
+                .map(|r| {
+                    Json::obj(vec![
+                        ("scenario", Json::str(r.scenario.clone())),
+                        ("plans", Json::num(r.plans as f64)),
+                        (
+                            "diagnostics",
+                            Json::Arr(r.diagnostics.iter().map(|d| d.to_json()).collect()),
+                        ),
+                    ])
+                })
+                .collect(),
+        );
+        j.write_file(std::path::Path::new(out))?;
+        println!("wrote {out}");
+    }
+    anyhow::ensure!(
+        total == 0,
+        "{total} diagnostic(s) across {} scenario(s)",
+        scenarios.len()
+    );
+    println!(
+        "\nOK: {} scenario(s), every candidate plan statically verified",
+        scenarios.len()
+    );
+    Ok(())
+}
+
+/// Resolve a default path that must work from both the workspace root
+/// (`cargo run` in CI) and the crate directory (test binaries).
+fn first_existing(cands: &[&str]) -> std::path::PathBuf {
+    cands
+        .iter()
+        .map(std::path::PathBuf::from)
+        .find(|p| p.exists())
+        .unwrap_or_else(|| std::path::PathBuf::from(cands[0]))
+}
+
+fn cmd_lint_src(args: &Args) -> anyhow::Result<()> {
+    let root = match args.get("root") {
+        Some(r) => std::path::PathBuf::from(r),
+        None => first_existing(&["rust/src", "src"]),
+    };
+    let allow_path = match args.get("allowlist") {
+        Some(p) => std::path::PathBuf::from(p),
+        None => first_existing(&["rust/lint-allow.toml", "lint-allow.toml"]),
+    };
+    let allows = if allow_path.exists() {
+        chunkflow::lint::parse_allowlist(&std::fs::read_to_string(&allow_path)?)?
+    } else {
+        Vec::new()
+    };
+    let report = chunkflow::lint::lint_tree(&root, &allows)?;
+    for (f, reason) in &report.allowed {
+        println!("allowed {f}  ({reason})");
+    }
+    for f in &report.findings {
+        println!("{f}");
+    }
+    for a in &report.unused_allows {
+        println!("unused allowlist entry: {} [{}] ({})", a.file, a.rule, a.reason);
+    }
+    anyhow::ensure!(
+        report.is_clean(),
+        "{} new determinism hazard(s), {} unused allowlist entr(y/ies) \
+         across {} file(s)",
+        report.findings.len(),
+        report.unused_allows.len(),
+        report.files_scanned
+    );
+    println!(
+        "OK: {} file(s) scanned, {} audited exception(s), no new determinism hazards",
+        report.files_scanned,
+        report.allowed.len()
+    );
     Ok(())
 }
 

@@ -185,9 +185,55 @@ impl MemoryModel {
             + self.kv_state_bytes(kv_tokens)
     }
 
+    /// The three named components of [`Self::chunkflow_peak_sp`]. The
+    /// static verifier (`verify`) re-derives the Table-5 bound per plan
+    /// from these terms — only the activation term depends on ChunkSize
+    /// and the live-chunk count, only the KV term depends on the context —
+    /// and cross-checks that their sum equals the model's own peak.
+    pub fn chunkflow_peak_terms(
+        &self,
+        chunk_size: u64,
+        live_chunks: u64,
+        context_length: u64,
+    ) -> PeakTerms {
+        let sp = self.parallel.sp.max(1);
+        let (rows, kv_tokens) = if sp <= 1 {
+            (chunk_size, context_length.saturating_sub(chunk_size))
+        } else {
+            (
+                chunk_size.div_ceil(sp),
+                context_length.saturating_sub(chunk_size).div_ceil(sp),
+            )
+        };
+        PeakTerms {
+            fixed: self.fixed_bytes(),
+            activation: self.chunkflow_activation_bytes(rows, live_chunks),
+            kv_state: self.kv_state_bytes(kv_tokens),
+        }
+    }
+
     /// Does a peak fit on the GPU?
     pub fn fits(&self, peak_bytes: u64) -> bool {
         peak_bytes <= GPU_CAPACITY
+    }
+}
+
+/// Named components of a ChunkFlow peak-memory bound
+/// (see [`MemoryModel::chunkflow_peak_terms`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PeakTerms {
+    /// Parameters, gradients, optimizer state and framework overhead.
+    pub fixed: u64,
+    /// Live chunk activations: a function of ChunkSize (per-rank rows under
+    /// sp) and the retained-chunk count, never of the max sequence length.
+    pub activation: u64,
+    /// Stored KV prefix state for the admitted context.
+    pub kv_state: u64,
+}
+
+impl PeakTerms {
+    pub fn total(&self) -> u64 {
+        self.fixed + self.activation + self.kv_state
     }
 }
 
@@ -387,5 +433,29 @@ mod tests {
         let pp4 =
             MemoryModel::new(spec, ParallelConfig::new(8, 4, RecomputeGranularity::Selective));
         assert!(pp4.fixed_bytes() < GPU_CAPACITY);
+    }
+
+    #[test]
+    fn peak_terms_sum_to_the_model_peak_for_all_sp() {
+        let spec = ModelSpec::preset("qwen2.5-7b").unwrap();
+        for sp in [1u64, 2, 4] {
+            let mut parallel = ParallelConfig::new(4, 2, RecomputeGranularity::Selective);
+            parallel.sp = sp;
+            let m = MemoryModel::new(spec.clone(), parallel);
+            for (cs, k, ctx) in [(2048u64, 1u64, 32 * 1024u64), (8192, 4, 256 * 1024)] {
+                let t = m.chunkflow_peak_terms(cs, k, ctx);
+                assert_eq!(t.total(), m.chunkflow_peak_sp(cs, k, ctx), "sp={sp} cs={cs}");
+            }
+        }
+    }
+
+    #[test]
+    fn activation_term_is_context_independent() {
+        let m = table5_model();
+        let a = m.chunkflow_peak_terms(4096, 2, 32 * 1024);
+        let b = m.chunkflow_peak_terms(4096, 2, 256 * 1024);
+        assert_eq!(a.fixed, b.fixed);
+        assert_eq!(a.activation, b.activation, "Table-5 shape: activations track ChunkSize");
+        assert!(b.kv_state > a.kv_state, "only KV state grows with context");
     }
 }

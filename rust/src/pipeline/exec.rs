@@ -316,15 +316,9 @@ pub fn execute_agendas_with(
         }
         None => StagePartition::equal(num_layers, p)?,
     };
-    // Retention policy, derived from the agendas themselves: a chunk whose
-    // agenda carries a recompute-forward was discarded at first forward.
-    // (The recompute set is identical on every stage by construction.)
-    let mut retain = vec![true; items.len()];
-    for op in agendas.iter().flatten() {
-        if op.kind == OpKind::RecomputeFwd {
-            retain[op.item] = false;
-        }
-    }
+    // Retention policy, derived from the agendas themselves (shared with
+    // the static verifier — `pipeline::derive_retain`).
+    let retain = super::derive_retain(agendas, items.len());
 
     // Boundary channels: activations flow s -> s+1, gradients s+1 -> s.
     let mut act_tx: Vec<Option<Sender<ActivationHandoff>>> = (0..p).map(|_| None).collect();

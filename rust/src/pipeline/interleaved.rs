@@ -285,7 +285,7 @@ mod tests {
                 .map(|o| (o.op.item / 2, o.start))
                 .collect();
             let mut sorted = starts.clone();
-            sorted.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+            sorted.sort_by(|a, b| a.1.total_cmp(&b.1));
             let order: Vec<usize> = sorted.iter().map(|x| x.0).collect();
             assert_eq!(order, vec![3, 2, 1, 0], "stage {s}");
         }

@@ -66,6 +66,31 @@ impl Op {
     }
 }
 
+impl std::fmt::Display for Op {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let kind = match self.kind {
+            OpKind::Fwd => "Fwd",
+            OpKind::RecomputeFwd => "RFwd",
+            OpKind::Bwd => "Bwd",
+        };
+        write!(f, "{kind}({})", self.item)
+    }
+}
+
+/// Retention policy derived from the agendas themselves: a chunk whose
+/// agenda carries a recompute-forward was discarded at first forward. (The
+/// recompute set is identical on every stage by construction.) Shared by
+/// the executor and the static verifier so both read the same contract.
+pub fn derive_retain(agendas: &[Vec<Op>], num_items: usize) -> Vec<bool> {
+    let mut retain = vec![true; num_items];
+    for op in agendas.iter().flatten() {
+        if op.kind == OpKind::RecomputeFwd && op.item < num_items {
+            retain[op.item] = false;
+        }
+    }
+    retain
+}
+
 /// Per-item op costs on one stage (seconds, or abstract units).
 #[derive(Clone, Copy, Debug)]
 pub struct OpCosts {

@@ -22,7 +22,7 @@
 
 use super::{ExtraEdges, Op, OpCosts};
 use crate::chunk::{ChunkKind, ChunkSet};
-use crate::schedule::{schedule_group, ChunkOp};
+use crate::schedule::schedule_group;
 
 /// A pipeline work item: `cost` is the *per-stage* forward cost.
 #[derive(Clone, Copy, Debug)]
@@ -84,15 +84,7 @@ pub(crate) fn state_aware_units(
         let plan = schedule_group(&ids, k);
         let n = ids.len();
         // Backward order from the plan (positions within group).
-        let mut order: Vec<(usize, bool)> = Vec::new(); // (pos, needs_recompute)
-        let mut pending_rf = vec![false; n];
-        for op in &plan.ops {
-            match *op {
-                ChunkOp::RecomputeForward { chunk } => pending_rf[chunk] = true,
-                ChunkOp::Backward { chunk } => order.push((chunk, pending_rf[chunk])),
-                ChunkOp::Forward { .. } => {}
-            }
-        }
+        let order = plan.backward_order();
         // Anchor all group backwards at the last chunk's position; emit in
         // plan order.
         let last_id = *ids.last().unwrap();
@@ -374,7 +366,7 @@ mod tests {
                 .filter(|o| o.stage == s && o.op.kind == super::super::OpKind::Bwd)
                 .map(|o| (o.op.item, o.start))
                 .collect();
-            bwd_times.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+            bwd_times.sort_by(|a, b| a.1.total_cmp(&b.1));
             let order: Vec<usize> = bwd_times.iter().map(|x| x.0).collect();
             assert_eq!(order, vec![4, 3, 2, 1, 0], "stage {s}");
         }

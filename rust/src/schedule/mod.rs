@@ -56,6 +56,26 @@ pub struct GroupPlan {
     pub ops: Vec<ChunkOp>,
 }
 
+impl GroupPlan {
+    /// The plan's backward stream as `(position within group,
+    /// needs_recompute)` pairs, in execution order — Algorithm 2's
+    /// descending order. Shared by the 1F1B agenda builders
+    /// (`pipeline::onef1b`) and the static verifier (`verify`), so the
+    /// generated schedule and the checked contract come from one place.
+    pub fn backward_order(&self) -> Vec<(usize, bool)> {
+        let mut order = Vec::with_capacity(self.chunk_ids.len());
+        let mut pending_rf = vec![false; self.chunk_ids.len()];
+        for op in &self.ops {
+            match *op {
+                ChunkOp::RecomputeForward { chunk } => pending_rf[chunk] = true,
+                ChunkOp::Backward { chunk } => order.push((chunk, pending_rf[chunk])),
+                ChunkOp::Forward { .. } => {}
+            }
+        }
+        order
+    }
+}
+
 /// Algorithm 2 for one group of `n` dependent chunks. Chunk ids in `ops`
 /// are *positions within the group* (0..n); `GroupPlan::chunk_ids` maps
 /// them back to ChunkSet ids.

@@ -267,7 +267,21 @@ pub fn search_elastic(
         makespan_equal,
         makespan_elastic,
     };
-    Ok(if choice.is_win() { Some(choice) } else { None })
+    if !choice.is_win() {
+        return Ok(None);
+    }
+    // Static guard before recommending the choice: the winning policy's
+    // plan for this set must pass every schedule rule (deadlock, prefix
+    // order, Alg-2 order, K budget). The train pre-flight would reject a
+    // bad recommendation anyway — fail here, at the source, with the rule
+    // id instead of downstream.
+    let plan =
+        crate::verify::Plan::build(set, cost.parallel.sp, choice.policy, k, p);
+    crate::verify::ensure_clean(
+        "elastic pipeline search",
+        &crate::verify::check_schedule(&plan),
+    )?;
+    Ok(Some(choice))
 }
 
 #[cfg(test)]

@@ -149,7 +149,9 @@ pub struct ScenarioResult {
 }
 
 impl ScenarioResult {
-    /// Fastest feasible candidate.
+    /// Fastest feasible candidate. `total_cmp` keeps the ranking NaN-safe:
+    /// a candidate with a NaN time loses to every finite one instead of
+    /// panicking the sweep (and corrupting the committed artifact's `best`).
     pub fn best(&self) -> Option<&CandidateResult> {
         self.candidates
             .iter()
@@ -157,8 +159,7 @@ impl ScenarioResult {
             .min_by(|a, b| {
                 a.metrics
                     .iteration_seconds
-                    .partial_cmp(&b.metrics.iteration_seconds)
-                    .unwrap()
+                    .total_cmp(&b.metrics.iteration_seconds)
             })
     }
 
@@ -638,6 +639,46 @@ mod tests {
 
     fn tiny_scenarios() -> Vec<Scenario> {
         Scenario::smoke()
+    }
+
+    #[test]
+    fn best_survives_nan_candidate_times() {
+        // Regression: `best()` used `partial_cmp(..).unwrap()`, which panics
+        // mid-sweep the moment a degenerate candidate yields a NaN time and
+        // corrupts the committed artifact's `best`. With `total_cmp` the NaN
+        // candidate simply loses to every finite one.
+        let candidate = |cs: u64, secs: f64, feasible: bool| CandidateResult {
+            chunk_size: cs,
+            k: 1,
+            metrics: UnitMetrics {
+                iteration_seconds: secs,
+                bubble_ratio: 0.1,
+                num_microbatches: 4.0,
+                peak_memory_bytes: 1,
+            },
+            feasible,
+        };
+        let result = ScenarioResult {
+            scenario: Scenario::smoke().remove(0),
+            baseline: UnitMetrics {
+                iteration_seconds: 10.0,
+                bubble_ratio: 0.5,
+                num_microbatches: 4.0,
+                peak_memory_bytes: 1,
+            },
+            candidates: vec![
+                candidate(1024, f64::NAN, true),
+                candidate(2048, 2.0, true),
+                candidate(4096, 1.0, false), // fastest but infeasible
+            ],
+            measured_exec: None,
+            dp_imbalance: None,
+            sp_sharding: None,
+            elastic_pipeline: None,
+        };
+        let best = result.best().expect("a finite feasible candidate exists");
+        assert_eq!(best.chunk_size, 2048, "NaN must lose; infeasible must be skipped");
+        assert_eq!(result.speedup(), Some(5.0));
     }
 
     #[test]

@@ -143,12 +143,47 @@ impl GridSearch {
                 });
             }
         }
-        results.sort_by(|a, b| {
-            (!a.feasible, a.avg_iteration_seconds)
-                .partial_cmp(&(!b.feasible, b.avg_iteration_seconds))
-                .unwrap()
-        });
+        rank_points(&mut results);
         results
+    }
+
+    /// Statically verify every (ChunkSize, K) candidate plan of this grid
+    /// under every registered schedule policy — the `tune --joint`
+    /// pre-flight. Runs on the search's first sampled batch (the same
+    /// stream every grid point averages over); failures name the violated
+    /// rule id and offending op (see [`crate::verify`]).
+    pub fn preflight(&self) -> anyhow::Result<()> {
+        let mut sampler = BatchSampler::new(
+            LengthDistribution::evaluation_dataset(),
+            self.context_length,
+            self.global_batch_size,
+            self.seed,
+        );
+        let batch = sampler.next_batch();
+        let mm = MemoryModel::new(self.model.clone(), self.parallel.clone());
+        let stages = self.parallel.pp.max(1) as usize;
+        for &cs in &self.chunk_sizes {
+            let set = construct_chunks(&batch, cs);
+            for &k in &self.ks {
+                for policy in crate::pipeline::PolicyKind::ALL {
+                    crate::verify::preflight(
+                        &format!(
+                            "tune pre-flight (cs={} k={k} policy={})",
+                            crate::util::format_tokens(cs),
+                            policy.name()
+                        ),
+                        &set,
+                        self.parallel.sp,
+                        policy,
+                        k as usize,
+                        stages,
+                        &mm,
+                        self.context_length,
+                    )?;
+                }
+            }
+        }
+        Ok(())
     }
 
     /// Evaluate a single (ChunkSize, K) point in isolation.
@@ -254,14 +289,27 @@ impl GridSearch {
                 }
             }
         }
+        // NaN-safe ranking (see `run_on`): a strategy with a NaN time sorts
+        // last instead of panicking the whole joint sweep.
         out.sort_by(|a, b| {
             a.point
                 .avg_iteration_seconds
-                .partial_cmp(&b.point.avg_iteration_seconds)
-                .unwrap()
+                .total_cmp(&b.point.avg_iteration_seconds)
         });
         out
     }
+}
+
+/// NaN-safe grid ranking: feasible points first, then ascending iteration
+/// time. `total_cmp` instead of `partial_cmp(..).unwrap()`: a NaN time
+/// (degenerate cost-model input) must not panic mid-rank — it sorts after
+/// every finite time within its feasibility class.
+fn rank_points(points: &mut [GridPoint]) {
+    points.sort_by(|a, b| {
+        (!a.feasible)
+            .cmp(&!b.feasible)
+            .then(a.avg_iteration_seconds.total_cmp(&b.avg_iteration_seconds))
+    });
 }
 
 /// One parallel-strategy candidate from [`GridSearch::run_joint`]: the
@@ -491,6 +539,45 @@ mod tests {
             *e.partition.last().unwrap() < 7,
             "the head-bearing last stage must shed layers: {e:?}"
         );
+    }
+
+    #[test]
+    fn nan_iteration_time_ranks_last_without_panicking() {
+        // Regression: ranking used `partial_cmp(..).unwrap()`, which panics
+        // the moment a degenerate cost model yields a NaN time. `total_cmp`
+        // must instead sort the NaN point last within its feasibility class.
+        let point = |secs: f64, feasible: bool| GridPoint {
+            chunk_size: 8192,
+            k: 4,
+            avg_iteration_seconds: secs,
+            bubble_ratio: 0.1,
+            peak_memory_bytes: 1,
+            feasible,
+        };
+        let mut pts = vec![
+            point(f64::NAN, true),
+            point(2.0, true),
+            point(f64::NAN, false),
+            point(1.0, true),
+            point(3.0, false),
+        ];
+        rank_points(&mut pts);
+        let times: Vec<f64> = pts.iter().map(|p| p.avg_iteration_seconds).collect();
+        assert_eq!(times[0], 1.0);
+        assert_eq!(times[1], 2.0);
+        assert!(times[2].is_nan(), "feasible NaN ranks after finite feasible");
+        assert!(pts[2].feasible);
+        assert_eq!(times[3], 3.0, "infeasible block follows every feasible point");
+        assert!(times[4].is_nan());
+    }
+
+    #[test]
+    fn preflight_accepts_the_standard_candidate_grid() {
+        let g = search();
+        g.preflight().expect("every standard grid plan must verify");
+        let mut sp = search();
+        sp.parallel.sp = 4;
+        sp.preflight().expect("sp-expanded plans must verify too");
     }
 
     #[test]

@@ -1,0 +1,1135 @@
+//! Static plan verification — `chunkflow check`.
+//!
+//! The repo's scheduling contracts are enforced *dynamically* elsewhere:
+//! the simulator errors on deadlock, the executor asserts agenda
+//! conformance, `schedule::validate_group_plan` replays Algorithm-2 plans.
+//! This module proves the same properties *statically*, before any compute,
+//! over the exact artifacts the runtime consumes — the per-stage agendas,
+//! the same-stage precedence edges and the (possibly sp-expanded) chunk
+//! set. Five rule families:
+//!
+//! | rule id                      | property                                          |
+//! |------------------------------|---------------------------------------------------|
+//! | `schedule/deadlock`          | DAG acyclicity under the executor's channel/inbox |
+//! |                              | semantics (warmup-skewed arrivals, same-stage     |
+//! |                              | edges), plus op-coverage well-formedness          |
+//! | `kv/prefix-order`            | KV-prefix chains: only last sp shards produce     |
+//! |                              | prefixes; every producer's forward precedes its   |
+//! |                              | consumers' on every stage                         |
+//! | `alg2/descending-recompute`  | each dependent group's backward stream follows    |
+//! |                              | Algorithm 2's descending order, declared by       |
+//! |                              | same-stage edges                                  |
+//! | `memory/k-budget`            | ≤ K live activations per group along every        |
+//! |                              | stage-local agenda path; K-budget edges present   |
+//! | `memory/chunk-size-bound`    | the symbolic peak bound is a function of          |
+//! |                              | ChunkSize (Table-5 shape), cross-checked against  |
+//! |                              | `MemoryModel::chunkflow_peak_sp`                  |
+//!
+//! Diagnostics are machine-readable (rule id, offending op/item/stage,
+//! suggested fix) and flow through the `train`/`tune --joint`/`sweep`
+//! pre-flights so a degenerate strategy is rejected with the violated rule
+//! named, not a generic error chain.
+
+use crate::chunk::{ChunkKind, ChunkSet, Segment};
+use crate::memory::MemoryModel;
+use crate::pipeline::{derive_retain, ExtraEdges, Op, OpKind, PolicyKind};
+use crate::schedule::schedule_group;
+use crate::sweep::Scenario;
+use crate::util::json::Json;
+
+pub const RULE_DEADLOCK: &str = "schedule/deadlock";
+pub const RULE_PREFIX: &str = "kv/prefix-order";
+pub const RULE_RECOMPUTE: &str = "alg2/descending-recompute";
+pub const RULE_KBUDGET: &str = "memory/k-budget";
+pub const RULE_MEMBOUND: &str = "memory/chunk-size-bound";
+
+/// One verifier finding: the violated rule, where it happened and what to
+/// do about it.
+#[derive(Clone, Debug)]
+pub struct Diagnostic {
+    /// Stable rule id (one of the `RULE_*` constants).
+    pub rule: &'static str,
+    /// Plan label (scenario candidate / policy), filled by scenario-level
+    /// checks; empty for direct plan verification.
+    pub plan: String,
+    pub stage: Option<usize>,
+    pub op: Option<Op>,
+    pub detail: String,
+    pub fix: String,
+}
+
+impl Diagnostic {
+    fn new(rule: &'static str, detail: String, fix: &str) -> Self {
+        Diagnostic {
+            rule,
+            plan: String::new(),
+            stage: None,
+            op: None,
+            detail,
+            fix: fix.to_string(),
+        }
+    }
+
+    fn at_stage(mut self, stage: usize) -> Self {
+        self.stage = Some(stage);
+        self
+    }
+
+    fn on_op(mut self, op: Op) -> Self {
+        self.op = Some(op);
+        self
+    }
+
+    /// The offending item (chunk id), when the diagnostic names an op.
+    pub fn item(&self) -> Option<usize> {
+        self.op.map(|o| o.item)
+    }
+
+    /// Machine-readable form (the `check --out` artifact rows).
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![("rule", Json::str(self.rule.to_string()))];
+        if !self.plan.is_empty() {
+            fields.push(("plan", Json::str(self.plan.clone())));
+        }
+        if let Some(s) = self.stage {
+            fields.push(("stage", Json::num(s as f64)));
+        }
+        if let Some(op) = self.op {
+            fields.push(("op", Json::str(op.to_string())));
+            fields.push(("item", Json::num(op.item as f64)));
+        }
+        fields.push(("detail", Json::str(self.detail.clone())));
+        fields.push(("fix", Json::str(self.fix.clone())));
+        Json::obj(fields)
+    }
+}
+
+impl std::fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "[{}]", self.rule)?;
+        if !self.plan.is_empty() {
+            write!(f, " {}", self.plan)?;
+        }
+        if let Some(s) = self.stage {
+            write!(f, " stage {s}")?;
+        }
+        if let Some(op) = self.op {
+            write!(f, " op {op}")?;
+        }
+        write!(f, ": {} (fix: {})", self.detail, self.fix)
+    }
+}
+
+/// A static plan: everything the verifier analyzes, exactly the artifacts
+/// the simulator/executor would consume. `set` is the (possibly
+/// sp-expanded) chunk set the agendas index.
+#[derive(Clone, Debug)]
+pub struct Plan {
+    pub set: ChunkSet,
+    /// Per item: ids of the same sequence's earlier prefix producers
+    /// (ascending) — mirrors `pipeline::exec::ExecItem::prefix_items`.
+    pub prefix_items: Vec<Vec<usize>>,
+    pub agendas: Vec<Vec<Op>>,
+    pub edges: ExtraEdges,
+    pub policy: PolicyKind,
+    pub k: usize,
+}
+
+impl Plan {
+    /// Build the plan a (policy, K, stages, sp) strategy generates for a
+    /// chunk set — the shape-only mirror of the executor's
+    /// `build_exec_items_sp` + `PolicyKind::agendas` path.
+    pub fn build(set: &ChunkSet, sp: u64, policy: PolicyKind, k: usize, stages: usize) -> Plan {
+        let (expanded, prefix_items) = sp_expand_shape(set, sp);
+        let (agendas, mut edges) = policy.agendas(&expanded, k, stages);
+        // Deterministic test seam in the spirit of `util::fault`'s env
+        // plans: dropping the declared precedence edges lets the CLI
+        // fail-fast paths be exercised end to end without a code change.
+        if std::env::var("CHUNKFLOW_VERIFY_MUTATE").as_deref() == Ok("drop-edges") {
+            edges.clear();
+        }
+        Plan { set: expanded, prefix_items, agendas, edges, policy, k }
+    }
+}
+
+/// Shape-only sequence-parallel expansion: the chunks and prefix chains
+/// `pipeline::exec::build_exec_items_sp` would produce, without touching
+/// token streams. `sp <= 1` returns the set verbatim with the
+/// dependent-group prefix chains (the bit-identity contract's shape).
+pub fn sp_expand_shape(set: &ChunkSet, sp: u64) -> (ChunkSet, Vec<Vec<usize>>) {
+    if sp <= 1 {
+        let mut prefix = vec![Vec::new(); set.chunks.len()];
+        for group in set.dependent_groups() {
+            let ids: Vec<usize> = group.iter().map(|c| c.id).collect();
+            for (i, &id) in ids.iter().enumerate() {
+                prefix[id] = ids[..i].to_vec();
+            }
+        }
+        return (set.clone(), prefix);
+    }
+    let mut expanded_count: std::collections::BTreeMap<u64, usize> = Default::default();
+    for ch in &set.chunks {
+        if let ChunkKind::Dependent { seq_id, .. } = ch.kind {
+            let shards = sp.min(ch.total_len().max(1)) as usize;
+            *expanded_count.entry(seq_id).or_insert(0) += shards;
+        }
+    }
+    let mut chunks = Vec::new();
+    let mut prefix: Vec<Vec<usize>> = Vec::new();
+    let mut last_shards: std::collections::BTreeMap<u64, Vec<usize>> = Default::default();
+    let mut next_index: std::collections::BTreeMap<u64, usize> = Default::default();
+    for ch in &set.chunks {
+        match ch.kind {
+            ChunkKind::Standalone => {
+                chunks.push(crate::chunk::Chunk {
+                    id: chunks.len(),
+                    kind: ChunkKind::Standalone,
+                    segments: ch.segments.clone(),
+                });
+                prefix.push(Vec::new());
+            }
+            ChunkKind::Dependent { seq_id, .. } => {
+                let total_len = ch.total_len() as usize;
+                let shards = (sp as usize).min(total_len.max(1));
+                let prefix_items = last_shards.entry(seq_id).or_default().clone();
+                let num_chunks = expanded_count[&seq_id];
+                let seg0 = ch.segments[0];
+                let rows = total_len.div_ceil(shards);
+                for s in 0..shards {
+                    let lo = s * rows;
+                    let hi = ((s + 1) * rows).min(total_len);
+                    let index = next_index.entry(seq_id).or_insert(0);
+                    chunks.push(crate::chunk::Chunk {
+                        id: chunks.len(),
+                        kind: ChunkKind::Dependent { seq_id, index: *index, num_chunks },
+                        segments: vec![Segment {
+                            seq_id,
+                            offset: seg0.offset + lo as u64,
+                            len: (hi - lo) as u64,
+                        }],
+                    });
+                    *index += 1;
+                    prefix.push(prefix_items.clone());
+                }
+                last_shards.get_mut(&seq_id).unwrap().push(chunks.len() - 1);
+            }
+        }
+    }
+    (ChunkSet { chunk_size: set.chunk_size, chunks }, prefix)
+}
+
+/// Run every rule family against a plan. Empty result = the plan is
+/// statically valid.
+pub fn verify_plan(plan: &Plan, mm: &MemoryModel, context_length: u64) -> Vec<Diagnostic> {
+    let mut diags = check_schedule(plan);
+    diags.extend(check_memory_bound(plan, mm, context_length));
+    diags
+}
+
+/// The four schedule rules (everything except the memory bound) — usable
+/// where no `MemoryModel` is in scope (e.g. the elastic-partition search).
+pub fn check_schedule(plan: &Plan) -> Vec<Diagnostic> {
+    let mut diags = check_deadlock(&plan.agendas, &plan.edges, plan.set.chunks.len());
+    if !diags.is_empty() {
+        // Malformed or deadlocked agendas make the path-sensitive rules
+        // meaningless; report the root cause alone.
+        return diags;
+    }
+    diags.extend(check_prefix_order(plan));
+    diags.extend(check_recompute_order(plan));
+    diags.extend(check_k_budget(plan));
+    diags
+}
+
+const FIX_DEADLOCK: &str =
+    "regenerate the agendas with a registered SchedulePolicy so every dependency precedes its consumer";
+const FIX_PREFIX: &str =
+    "schedule each prefix producer's forward before its consumers on every stage (prefix chains follow chunk-index order; only last sp shards produce)";
+const FIX_RECOMPUTE: &str =
+    "rebuild the group's backward units with schedule_group (Algorithm 2's descending order and its same-stage edges)";
+const FIX_KBUDGET: &str =
+    "delay each recompute-forward until a backward frees a retained slot, or raise --k";
+const FIX_MEMBOUND: &str =
+    "keep retained activations within K so the peak stays the ChunkSize-bound Table-5 shape (shrink --chunk-size/K or raise --sp for headroom)";
+
+#[inline]
+fn kidx(k: OpKind) -> usize {
+    match k {
+        OpKind::Fwd => 0,
+        OpKind::RecomputeFwd => 1,
+        OpKind::Bwd => 2,
+    }
+}
+
+/// Rule `schedule/deadlock`: op-coverage well-formedness plus a cost-free
+/// fixpoint over the exact dependency semantics of
+/// `pipeline::simulate_stagewise` (cross-stage channel order, rfwd-else-fwd
+/// at the last stage, same-stage edges). If the fixpoint stalls, each
+/// blocked stage's head op is reported with the dependency it waits on.
+fn check_deadlock(agendas: &[Vec<Op>], edges: &ExtraEdges, n: usize) -> Vec<Diagnostic> {
+    let p = agendas.len();
+    let mut diags = Vec::new();
+    if p == 0 {
+        diags.push(Diagnostic::new(
+            RULE_DEADLOCK,
+            "plan has zero stages".to_string(),
+            FIX_DEADLOCK,
+        ));
+        return diags;
+    }
+    for (s, agenda) in agendas.iter().enumerate() {
+        for op in agenda {
+            if op.item >= n {
+                diags.push(
+                    Diagnostic::new(
+                        RULE_DEADLOCK,
+                        format!("agenda references item {} but the set has {n} chunks", op.item),
+                        FIX_DEADLOCK,
+                    )
+                    .at_stage(s)
+                    .on_op(*op),
+                );
+                return diags;
+            }
+        }
+    }
+    for (before, after) in edges {
+        for op in [before, after] {
+            if op.item >= n {
+                diags.push(Diagnostic::new(
+                    RULE_DEADLOCK,
+                    format!("edge references item {} but the set has {n} chunks", op.item),
+                    FIX_DEADLOCK,
+                ));
+                return diags;
+            }
+        }
+    }
+    // Coverage: each stage runs every item's forward and backward exactly
+    // once (the executor's channels starve otherwise) and recomputes at
+    // most once; the recompute set must match stage 0 (retention is derived
+    // globally from the agendas).
+    let count_kinds = |agenda: &[Op]| -> Vec<[u32; 3]> {
+        let mut counts = vec![[0u32; 3]; n];
+        for op in agenda {
+            counts[op.item][kidx(op.kind)] += 1;
+        }
+        counts
+    };
+    let stage0 = count_kinds(&agendas[0]);
+    for (s, agenda) in agendas.iter().enumerate() {
+        let counts = if s == 0 { stage0.clone() } else { count_kinds(agenda) };
+        for (item, c) in counts.iter().enumerate() {
+            if c[0] != 1 || c[2] != 1 || c[1] > 1 {
+                diags.push(
+                    Diagnostic::new(
+                        RULE_DEADLOCK,
+                        format!(
+                            "agenda schedules item {item} as {}x Fwd / {}x RFwd / {}x Bwd \
+                             (need exactly one Fwd and one Bwd, at most one RFwd)",
+                            c[0], c[1], c[2]
+                        ),
+                        FIX_DEADLOCK,
+                    )
+                    .at_stage(s),
+                );
+            } else if c[1] != stage0[item][1] {
+                diags.push(
+                    Diagnostic::new(
+                        RULE_DEADLOCK,
+                        format!(
+                            "item {item} is recomputed on stage {s} but not on stage 0 \
+                             (the retention set must be identical on every stage)"
+                        ),
+                        FIX_DEADLOCK,
+                    )
+                    .at_stage(s)
+                    .on_op(Op::rfwd(item)),
+                );
+            }
+        }
+    }
+    if !diags.is_empty() {
+        return diags;
+    }
+
+    // Cost-free fixpoint mirroring `simulate_stagewise`.
+    let slot = |op: Op, s: usize| (s * 3 + kidx(op.kind)) * n + op.item;
+    let mut done = vec![false; p * 3 * n];
+    let mut cursor = vec![0usize; p];
+    let mut edges_by_after: Vec<Vec<Op>> = vec![Vec::new(); 3 * n];
+    for (before, after) in edges {
+        edges_by_after[kidx(after.kind) * n + after.item].push(*before);
+    }
+    let total: usize = agendas.iter().map(|a| a.len()).sum();
+    let mut completed = 0usize;
+    while completed < total {
+        let mut progressed = false;
+        for s in 0..p {
+            while cursor[s] < agendas[s].len() {
+                let op = agendas[s][cursor[s]];
+                let dep_ok = match op.kind {
+                    OpKind::Fwd | OpKind::RecomputeFwd => s == 0 || done[slot(op, s - 1)],
+                    OpKind::Bwd => {
+                        if s == p - 1 {
+                            done[slot(Op::rfwd(op.item), s)] || done[slot(Op::fwd(op.item), s)]
+                        } else {
+                            done[slot(op, s + 1)]
+                        }
+                    }
+                };
+                if !dep_ok {
+                    break;
+                }
+                if edges_by_after[kidx(op.kind) * n + op.item]
+                    .iter()
+                    .any(|b| !done[slot(*b, s)])
+                {
+                    break;
+                }
+                done[slot(op, s)] = true;
+                cursor[s] += 1;
+                completed += 1;
+                progressed = true;
+            }
+        }
+        if !progressed {
+            for s in 0..p {
+                if cursor[s] >= agendas[s].len() || diags.len() >= 4 {
+                    continue;
+                }
+                let op = agendas[s][cursor[s]];
+                let waits = describe_wait(op, s, p, &edges_by_after, &done, n, &slot);
+                diags.push(
+                    Diagnostic::new(
+                        RULE_DEADLOCK,
+                        format!("cannot start {op}: waits on {waits}, which never completes"),
+                        FIX_DEADLOCK,
+                    )
+                    .at_stage(s)
+                    .on_op(op),
+                );
+            }
+            break;
+        }
+    }
+    diags
+}
+
+fn describe_wait(
+    op: Op,
+    s: usize,
+    p: usize,
+    edges_by_after: &[Vec<Op>],
+    done: &[bool],
+    n: usize,
+    slot: &impl Fn(Op, usize) -> usize,
+) -> String {
+    let cross_unmet = match op.kind {
+        OpKind::Fwd | OpKind::RecomputeFwd => {
+            (s > 0 && !done[slot(op, s - 1)]).then(|| format!("{op} on stage {}", s - 1))
+        }
+        OpKind::Bwd => {
+            if s == p - 1 {
+                (!done[slot(Op::rfwd(op.item), s)] && !done[slot(Op::fwd(op.item), s)])
+                    .then(|| format!("a forward of item {} on this stage", op.item))
+            } else {
+                (!done[slot(op, s + 1)]).then(|| format!("{op} on stage {}", s + 1))
+            }
+        }
+    };
+    if let Some(w) = cross_unmet {
+        return w;
+    }
+    for b in &edges_by_after[kidx(op.kind) * n + op.item] {
+        if !done[slot(*b, s)] {
+            return format!("same-stage edge {b} -> {op}");
+        }
+    }
+    "an unknown dependency".to_string()
+}
+
+/// Rule `kv/prefix-order`: structural prefix-chain validity (only last sp
+/// shards produce prefixes; consumers list exactly the preceding chunk
+/// boundaries) and per-stage ordering (every producer's forward precedes
+/// each consumer's forward — the KV state is stored at first forward).
+fn check_prefix_order(plan: &Plan) -> Vec<Diagnostic> {
+    let mut diags = Vec::new();
+    let set = &plan.set;
+    let c = set.chunk_size;
+    for (item, producers) in plan.prefix_items.iter().enumerate() {
+        let chunk = &set.chunks[item];
+        if !chunk.is_dependent() {
+            if !producers.is_empty() {
+                diags.push(
+                    Diagnostic::new(
+                        RULE_PREFIX,
+                        format!("standalone chunk {item} must not consume a KV prefix"),
+                        FIX_PREFIX,
+                    )
+                    .on_op(Op::fwd(item)),
+                );
+            }
+            continue;
+        }
+        let seq = chunk.segments[0].seq_id;
+        // The consumer's own offset tells how many prefix blocks precede it.
+        let offset = chunk.segments[0].offset;
+        let blocks = (producers.len() as u64) * c;
+        if offset < blocks || offset >= blocks + c {
+            diags.push(
+                Diagnostic::new(
+                    RULE_PREFIX,
+                    format!(
+                        "chunk {item} at sequence offset {offset} lists {} prefix producer(s); \
+                         expected {} full ChunkSize blocks before it",
+                        producers.len(),
+                        offset / c.max(1)
+                    ),
+                    FIX_PREFIX,
+                )
+                .on_op(Op::fwd(item)),
+            );
+            continue;
+        }
+        for (pos, &prod) in producers.iter().enumerate() {
+            let Some(pc) = set.chunks.get(prod) else {
+                diags.push(Diagnostic::new(
+                    RULE_PREFIX,
+                    format!("chunk {item} lists unknown prefix producer {prod}"),
+                    FIX_PREFIX,
+                ));
+                continue;
+            };
+            let seg = &pc.segments[0];
+            if !pc.is_dependent() || seg.seq_id != seq || prod >= item {
+                diags.push(
+                    Diagnostic::new(
+                        RULE_PREFIX,
+                        format!(
+                            "chunk {item} (seq {seq}) lists prefix producer {prod}, which is \
+                             not an earlier dependent chunk of the same sequence"
+                        ),
+                        FIX_PREFIX,
+                    )
+                    .on_op(Op::fwd(prod)),
+                );
+                continue;
+            }
+            // Only a chunk ending on a ChunkSize boundary — the LAST shard
+            // of an original chunk — may produce prefix block `pos`.
+            if seg.offset + seg.len != (pos as u64 + 1) * c {
+                diags.push(
+                    Diagnostic::new(
+                        RULE_PREFIX,
+                        format!(
+                            "chunk {item} lists {prod} as prefix block {pos}, but {prod} ends \
+                             at sequence offset {} (not the block boundary {}); only the last \
+                             sp shard of a chunk enters the prefix chain",
+                            seg.offset + seg.len,
+                            (pos as u64 + 1) * c
+                        ),
+                        FIX_PREFIX,
+                    )
+                    .on_op(Op::fwd(prod)),
+                );
+            }
+        }
+    }
+    // Per-stage ordering: producer forwards precede consumer forwards.
+    for (s, agenda) in plan.agendas.iter().enumerate() {
+        let mut fwd_pos = vec![usize::MAX; set.chunks.len()];
+        for (i, op) in agenda.iter().enumerate() {
+            if op.kind == OpKind::Fwd {
+                fwd_pos[op.item] = i;
+            }
+        }
+        for (item, producers) in plan.prefix_items.iter().enumerate() {
+            for &prod in producers {
+                if prod < fwd_pos.len() && fwd_pos[prod] > fwd_pos[item] {
+                    diags.push(
+                        Diagnostic::new(
+                            RULE_PREFIX,
+                            format!(
+                                "prefix producer Fwd({prod}) is scheduled after its consumer \
+                                 Fwd({item}); the consumer would read KV state that does not \
+                                 exist yet"
+                            ),
+                            FIX_PREFIX,
+                        )
+                        .at_stage(s)
+                        .on_op(Op::fwd(item)),
+                    );
+                }
+            }
+        }
+        if !diags.is_empty() && s + 1 < plan.agendas.len() {
+            // Agendas share the forward order across stages by
+            // construction; one stage's report is enough.
+            break;
+        }
+    }
+    diags
+}
+
+/// Rule `alg2/descending-recompute`: every dependent group's backward
+/// stream follows Algorithm 2's order (retained chunks descending, then
+/// discarded chunks descending with a recompute-forward glued before each
+/// backward), the retention set matches the last-K rule, and the
+/// descending order is declared as same-stage edges.
+fn check_recompute_order(plan: &Plan) -> Vec<Diagnostic> {
+    let mut diags = Vec::new();
+    let n = plan.set.chunks.len();
+    let retain = derive_retain(&plan.agendas, n);
+    let edge_set: std::collections::BTreeSet<(Op, Op)> = plan.edges.iter().copied().collect();
+    for group in plan.set.dependent_groups() {
+        let ids: Vec<usize> = group.iter().map(|ch| ch.id).collect();
+        let ng = ids.len();
+        let plan_order = schedule_group(&ids, plan.k.max(1)).backward_order();
+        // Retention must be the last-min(N,K) rule.
+        let retained_from = ng - plan.k.max(1).min(ng);
+        for (pos, &id) in ids.iter().enumerate() {
+            let expect_retained = pos >= retained_from;
+            if retain[id] != expect_retained {
+                diags.push(
+                    Diagnostic::new(
+                        RULE_RECOMPUTE,
+                        format!(
+                            "chunk {id} (group position {pos}/{ng}) must be {} under \
+                             Algorithm 2 with K={}, but the agendas {} it",
+                            if expect_retained { "retained" } else { "recomputed" },
+                            plan.k,
+                            if retain[id] { "retain" } else { "recompute" }
+                        ),
+                        FIX_RECOMPUTE,
+                    )
+                    .on_op(Op::bwd(id)),
+                );
+            }
+        }
+        // Per-stage backward order must equal the Algorithm-2 plan order.
+        let expected: Vec<usize> = plan_order.iter().map(|&(pos, _)| ids[pos]).collect();
+        let in_group: std::collections::BTreeSet<usize> = ids.iter().copied().collect();
+        for (s, agenda) in plan.agendas.iter().enumerate() {
+            let actual: Vec<usize> = agenda
+                .iter()
+                .filter(|op| op.kind == OpKind::Bwd && in_group.contains(&op.item))
+                .map(|op| op.item)
+                .collect();
+            if actual != expected {
+                let bad = actual
+                    .iter()
+                    .zip(&expected)
+                    .find(|(a, e)| a != e)
+                    .map(|(a, _)| *a)
+                    .or_else(|| actual.first().copied())
+                    .unwrap_or(ids[0]);
+                diags.push(
+                    Diagnostic::new(
+                        RULE_RECOMPUTE,
+                        format!(
+                            "group of seq chunks {ids:?} runs backwards as {actual:?}, but \
+                             Algorithm 2's descending order is {expected:?}"
+                        ),
+                        FIX_RECOMPUTE,
+                    )
+                    .at_stage(s)
+                    .on_op(Op::bwd(bad)),
+                );
+                break; // one stage's report per group is enough
+            }
+            // A discarded chunk's recompute must precede its backward.
+            let mut pos_of = vec![usize::MAX; n];
+            for (i, op) in agenda.iter().enumerate() {
+                if op.kind == OpKind::RecomputeFwd {
+                    pos_of[op.item] = i;
+                }
+            }
+            let mut violated = false;
+            for (i, op) in agenda.iter().enumerate() {
+                if op.kind == OpKind::Bwd
+                    && in_group.contains(&op.item)
+                    && !retain[op.item]
+                    && pos_of[op.item] > i
+                {
+                    diags.push(
+                        Diagnostic::new(
+                            RULE_RECOMPUTE,
+                            format!(
+                                "Bwd({}) runs before the recompute-forward restoring its \
+                                 discarded activation",
+                                op.item
+                            ),
+                            FIX_RECOMPUTE,
+                        )
+                        .at_stage(s)
+                        .on_op(*op),
+                    );
+                    violated = true;
+                    break;
+                }
+            }
+            if violated {
+                break;
+            }
+        }
+        // Descending order must be *declared* as same-stage edges — the
+        // executor-enforced contract, not just incidental agenda order.
+        for pair in expected.windows(2) {
+            let edge = (Op::bwd(pair[0]), Op::bwd(pair[1]));
+            if !edge_set.contains(&edge) {
+                diags.push(
+                    Diagnostic::new(
+                        RULE_RECOMPUTE,
+                        format!(
+                            "missing same-stage edge Bwd({}) -> Bwd({}) declaring the group's \
+                             descending backward order",
+                            pair[0], pair[1]
+                        ),
+                        FIX_RECOMPUTE,
+                    )
+                    .on_op(Op::bwd(pair[1])),
+                );
+            }
+        }
+        // K-budget edges: RF(i) waits for the backward freeing its slot.
+        for &(pos, rf) in &plan_order {
+            if rf && pos + plan.k < ng {
+                let edge = (Op::bwd(ids[pos + plan.k]), Op::rfwd(ids[pos]));
+                if !edge_set.contains(&edge) {
+                    diags.push(
+                        Diagnostic::new(
+                            RULE_KBUDGET,
+                            format!(
+                                "missing same-stage edge Bwd({}) -> RFwd({}): the recompute \
+                                 must wait for the backward that frees its activation slot",
+                                ids[pos + plan.k],
+                                ids[pos]
+                            ),
+                            FIX_KBUDGET,
+                        )
+                        .on_op(Op::rfwd(ids[pos])),
+                    );
+                }
+            }
+        }
+    }
+    diags
+}
+
+/// Rule `memory/k-budget`: walking each stage's agenda in order (the
+/// executor runs agendas strictly in order), no dependent group ever holds
+/// more than K live activation caches. Standalone chunks are exempt — their
+/// warmup-depth residency is the 1F1B pipeline's, not Algorithm 2's.
+fn check_k_budget(plan: &Plan) -> Vec<Diagnostic> {
+    let mut diags = Vec::new();
+    let n = plan.set.chunks.len();
+    let retain = derive_retain(&plan.agendas, n);
+    let mut group_of = vec![usize::MAX; n];
+    let groups = plan.set.dependent_groups();
+    for (g, group) in groups.iter().enumerate() {
+        for ch in group {
+            group_of[ch.id] = g;
+        }
+    }
+    for (s, agenda) in plan.agendas.iter().enumerate() {
+        let mut live = vec![0i64; groups.len()];
+        for op in agenda {
+            let g = group_of[op.item];
+            if g == usize::MAX {
+                continue;
+            }
+            match op.kind {
+                OpKind::Fwd if retain[op.item] => live[g] += 1,
+                OpKind::RecomputeFwd => live[g] += 1,
+                OpKind::Bwd => live[g] -= 1,
+                OpKind::Fwd => {}
+            }
+            if live[g] > plan.k as i64 {
+                diags.push(
+                    Diagnostic::new(
+                        RULE_KBUDGET,
+                        format!(
+                            "{op} raises group {g}'s live activations to {} > K={} on this \
+                             stage-local path",
+                            live[g], plan.k
+                        ),
+                        FIX_KBUDGET,
+                    )
+                    .at_stage(s)
+                    .on_op(*op),
+                );
+                return diags; // the first overflow explains the rest
+            }
+        }
+    }
+    diags
+}
+
+/// Rule `memory/chunk-size-bound`: re-derive the plan's symbolic peak from
+/// the live-activation high-water-mark and the `MemoryModel` terms, then
+/// cross-check (a) the term sum equals `chunkflow_peak_sp`, (b) the plan
+/// stays within the declared K bound, and (c) the Table-5 shape — growing
+/// the context moves only the KV term, never the activation term.
+fn check_memory_bound(plan: &Plan, mm: &MemoryModel, context_length: u64) -> Vec<Diagnostic> {
+    let mut diags = Vec::new();
+    let cs = plan.set.chunk_size;
+    let n = plan.set.chunks.len();
+    let retain = derive_retain(&plan.agendas, n);
+    // Group-local live HWM over every stage-local path (the K-budget walk).
+    let mut group_of = vec![usize::MAX; n];
+    let groups = plan.set.dependent_groups();
+    for (g, group) in groups.iter().enumerate() {
+        for ch in group {
+            group_of[ch.id] = g;
+        }
+    }
+    let mut hwm: u64 = 0;
+    for agenda in &plan.agendas {
+        let mut live = vec![0i64; groups.len()];
+        for op in agenda {
+            let g = group_of[op.item];
+            if g == usize::MAX {
+                continue;
+            }
+            match op.kind {
+                OpKind::Fwd if retain[op.item] => live[g] += 1,
+                OpKind::RecomputeFwd => live[g] += 1,
+                OpKind::Bwd => live[g] -= 1,
+                OpKind::Fwd => {}
+            }
+            hwm = hwm.max(live[g].max(0) as u64);
+        }
+    }
+    let live = hwm.max(1); // a plan with no dependent groups still holds one
+    let terms = mm.chunkflow_peak_terms(cs, live, context_length);
+    if terms.total() != mm.chunkflow_peak_sp(cs, live, context_length) {
+        diags.push(Diagnostic::new(
+            RULE_MEMBOUND,
+            format!(
+                "symbolic terms (fixed {} + act {} + kv {}) disagree with \
+                 chunkflow_peak_sp — memory model drift",
+                terms.fixed, terms.activation, terms.kv_state
+            ),
+            FIX_MEMBOUND,
+        ));
+    }
+    let declared = mm.chunkflow_peak_sp(cs, plan.k as u64, context_length);
+    if terms.total() > declared {
+        diags.push(Diagnostic::new(
+            RULE_MEMBOUND,
+            format!(
+                "plan retains up to {hwm} live chunk activations, so its peak bound \
+                 ({} bytes) exceeds the declared ChunkSize bound at K={} ({declared} bytes)",
+                terms.total(),
+                plan.k
+            ),
+            FIX_MEMBOUND,
+        ));
+    }
+    // Table-5 shape: context growth must move only the KV term.
+    let stretched = mm.chunkflow_peak_terms(cs, live, context_length.saturating_mul(8));
+    if stretched.activation != terms.activation || stretched.fixed != terms.fixed {
+        diags.push(Diagnostic::new(
+            RULE_MEMBOUND,
+            "activation term changed with context length: the peak bound must be a \
+             function of ChunkSize, not of the max sequence length (Table 5)"
+                .to_string(),
+            FIX_MEMBOUND,
+        ));
+    }
+    diags
+}
+
+/// Scenario-level check result.
+#[derive(Clone, Debug)]
+pub struct CheckReport {
+    pub scenario: String,
+    /// Number of (candidate, policy) plans analyzed.
+    pub plans: usize,
+    pub diagnostics: Vec<Diagnostic>,
+}
+
+impl CheckReport {
+    pub fn is_clean(&self) -> bool {
+        self.diagnostics.is_empty()
+    }
+}
+
+/// Verify every (ChunkSize, K) candidate of a scenario under every
+/// registered schedule policy, on the scenario's first sampled batch (the
+/// batch stream is deterministic, and every batch shares the distribution's
+/// shape — the plan structure the rules check is batch-independent).
+pub fn check_scenario(s: &Scenario) -> anyhow::Result<CheckReport> {
+    let parallel = s.chunkflow_parallel();
+    let stages = parallel.pp.max(1) as usize;
+    let mm = MemoryModel::new(s.model.clone(), parallel.clone());
+    let mut sampler = crate::data::BatchSampler::new(
+        s.dist()?,
+        s.context_length,
+        s.global_batch_size,
+        s.seed,
+    );
+    let batch = sampler.next_batch();
+    let mut plans = 0usize;
+    let mut diagnostics = Vec::new();
+    for &(cs, k) in &s.candidates {
+        anyhow::ensure!(cs >= 1 && k >= 1, "candidate ({cs}, {k}) is degenerate");
+        let set = crate::chunk::construct_chunks(&batch, cs);
+        for policy in PolicyKind::ALL {
+            let plan = Plan::build(&set, parallel.sp, policy, k as usize, stages);
+            plans += 1;
+            let label = format!(
+                "cs={} k={k} policy={}",
+                crate::util::format_tokens(cs),
+                policy.name()
+            );
+            diagnostics.extend(verify_plan(&plan, &mm, s.context_length).into_iter().map(
+                |mut d| {
+                    d.plan = label.clone();
+                    d
+                },
+            ));
+        }
+    }
+    Ok(CheckReport { scenario: s.name.clone(), plans, diagnostics })
+}
+
+/// Fail-fast helper for the `train`/`tune --joint`/`sweep` pre-flights:
+/// formats the diagnostics (rule id + offending item) into the error the
+/// CLI prints, instead of a generic anyhow chain.
+pub fn ensure_clean(label: &str, diagnostics: &[Diagnostic]) -> anyhow::Result<()> {
+    if diagnostics.is_empty() {
+        return Ok(());
+    }
+    let mut msg = format!(
+        "{label}: static verification failed with {} diagnostic(s):",
+        diagnostics.len()
+    );
+    for d in diagnostics.iter().take(8) {
+        msg.push_str("\n  ");
+        msg.push_str(&d.to_string());
+    }
+    if diagnostics.len() > 8 {
+        msg.push_str(&format!("\n  ... and {} more", diagnostics.len() - 8));
+    }
+    anyhow::bail!(msg)
+}
+
+/// Pre-flight a single training/tuning strategy: build the plan its
+/// configuration generates for `set` and verify every rule.
+pub fn preflight(
+    label: &str,
+    set: &ChunkSet,
+    sp: u64,
+    policy: PolicyKind,
+    k: usize,
+    stages: usize,
+    mm: &MemoryModel,
+    context_length: u64,
+) -> anyhow::Result<()> {
+    let plan = Plan::build(set, sp, policy, k, stages);
+    ensure_clean(label, &verify_plan(&plan, mm, context_length))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chunk::construct_chunks;
+    use crate::config::{ModelSpec, ParallelConfig, RecomputeGranularity};
+    use crate::data::Sequence;
+
+    fn model() -> MemoryModel {
+        MemoryModel::new(
+            ModelSpec::preset("qwen2.5-7b").unwrap(),
+            ParallelConfig::new(4, 4, RecomputeGranularity::Selective),
+        )
+    }
+
+    fn mixed_set() -> ChunkSet {
+        // One long sequence (5 dependent chunks), several shorts.
+        let batch = vec![
+            Sequence { id: 0, len: 10 },
+            Sequence { id: 1, len: 2 },
+            Sequence { id: 2, len: 1 },
+            Sequence { id: 3, len: 1 },
+        ];
+        construct_chunks(&batch, 2)
+    }
+
+    fn rules(diags: &[Diagnostic]) -> Vec<&'static str> {
+        diags.iter().map(|d| d.rule).collect()
+    }
+
+    #[test]
+    fn generated_plans_verify_clean() {
+        let set = mixed_set();
+        for policy in PolicyKind::ALL {
+            for (k, p, sp) in [(1usize, 4usize, 1u64), (2, 3, 1), (1, 2, 2), (3, 4, 4)] {
+                let plan = Plan::build(&set, sp, policy, k, p);
+                let diags = verify_plan(&plan, &model(), 64);
+                assert!(
+                    diags.is_empty(),
+                    "{policy:?} k={k} p={p} sp={sp}: {:?}",
+                    diags.iter().map(|d| d.to_string()).collect::<Vec<_>>()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn swapped_fwd_bwd_order_deadlocks() {
+        let set = mixed_set();
+        let mut plan = Plan::build(&set, 1, PolicyKind::default(), 2, 3);
+        // Move the last stage's final Bwd in front of every forward: its
+        // rfwd-else-fwd dependency can never be satisfied in agenda order.
+        let agenda = plan.agendas.last_mut().unwrap();
+        let bwd = agenda.pop().unwrap();
+        agenda.insert(0, bwd);
+        let diags = verify_plan(&plan, &model(), 64);
+        assert!(rules(&diags).contains(&RULE_DEADLOCK), "{diags:?}");
+        let d = diags.iter().find(|d| d.rule == RULE_DEADLOCK).unwrap();
+        assert!(d.stage.is_some() && d.op.is_some(), "diagnostic names stage+op: {d}");
+    }
+
+    #[test]
+    fn dropped_descending_edge_is_rejected() {
+        let set = mixed_set();
+        let mut plan = Plan::build(&set, 1, PolicyKind::default(), 2, 3);
+        let before = plan.edges.len();
+        plan.edges.retain(|(b, a)| {
+            !(b.kind == OpKind::Bwd && a.kind == OpKind::Bwd)
+        });
+        assert!(plan.edges.len() < before, "mutation must drop an edge");
+        let diags = check_schedule(&plan);
+        assert!(rules(&diags).contains(&RULE_RECOMPUTE), "{diags:?}");
+    }
+
+    #[test]
+    fn dropped_k_budget_edge_is_rejected() {
+        let set = mixed_set();
+        let mut plan = Plan::build(&set, 1, PolicyKind::default(), 1, 3);
+        let before = plan.edges.len();
+        plan.edges.retain(|(_, a)| a.kind != OpKind::RecomputeFwd);
+        assert!(plan.edges.len() < before, "mutation must drop an RF edge");
+        let diags = check_schedule(&plan);
+        assert!(rules(&diags).contains(&RULE_KBUDGET), "{diags:?}");
+    }
+
+    #[test]
+    fn prefix_consumer_before_producer_is_rejected() {
+        let set = mixed_set();
+        let mut plan = Plan::build(&set, 1, PolicyKind::default(), 2, 3);
+        // Swap the forwards of the first two dependent chunks on stage 0:
+        // the consumer now runs before its prefix producer.
+        let ids: Vec<usize> =
+            plan.set.dependent_groups()[0].iter().map(|c| c.id).collect();
+        let agenda = &mut plan.agendas[0];
+        let p0 = agenda.iter().position(|o| *o == Op::fwd(ids[0])).unwrap();
+        let p1 = agenda.iter().position(|o| *o == Op::fwd(ids[1])).unwrap();
+        agenda.swap(p0, p1);
+        let diags = check_schedule(&plan);
+        assert!(rules(&diags).contains(&RULE_PREFIX), "{diags:?}");
+    }
+
+    #[test]
+    fn k_budget_overflow_is_rejected() {
+        let set = mixed_set();
+        let mut plan = Plan::build(&set, 1, PolicyKind::default(), 1, 1);
+        // Hoist the first recompute-forward to run right after the retained
+        // chunk's forward, before any backward frees a slot: the group then
+        // holds 2 live activations against K=1.
+        let ids: Vec<usize> =
+            plan.set.dependent_groups()[0].iter().map(|c| c.id).collect();
+        let retained = *ids.last().unwrap();
+        let agenda = &mut plan.agendas[0];
+        let rf_pos = agenda.iter().position(|o| o.kind == OpKind::RecomputeFwd).unwrap();
+        let rf = agenda.remove(rf_pos);
+        let f_last = agenda.iter().position(|o| *o == Op::fwd(retained)).unwrap();
+        agenda.insert(f_last + 1, rf);
+        // Drop the edge that would (correctly) deadlock the hoisted RF so
+        // the budget walk is what catches it.
+        plan.edges.retain(|(_, a)| *a != rf);
+        let walk = check_k_budget(&plan);
+        assert!(rules(&walk).contains(&RULE_KBUDGET), "{walk:?}");
+        let d = walk.iter().find(|d| d.rule == RULE_KBUDGET).unwrap();
+        assert_eq!(d.op.map(|o| o.kind), Some(OpKind::RecomputeFwd));
+        // The full rule set flags it too (walk + missing K-budget edge).
+        let diags = check_schedule(&plan);
+        assert!(rules(&diags).contains(&RULE_KBUDGET), "{diags:?}");
+    }
+
+    #[test]
+    fn retention_not_matching_last_k_is_rejected() {
+        let set = mixed_set();
+        let mut plan = Plan::build(&set, 1, PolicyKind::default(), 2, 2);
+        // Claim an extra recompute for a chunk Algorithm 2 retains.
+        let ids: Vec<usize> =
+            plan.set.dependent_groups()[0].iter().map(|c| c.id).collect();
+        let retained = *ids.last().unwrap();
+        for agenda in &mut plan.agendas {
+            let bwd = agenda.iter().position(|o| *o == Op::bwd(retained)).unwrap();
+            agenda.insert(bwd, Op::rfwd(retained));
+        }
+        let diags = check_schedule(&plan);
+        assert!(rules(&diags).contains(&RULE_RECOMPUTE), "{diags:?}");
+    }
+
+    #[test]
+    fn sp_expansion_shape_matches_executor_contract() {
+        let set = mixed_set();
+        let (expanded, prefix) = sp_expand_shape(&set, 2);
+        // 5 dependent chunks x 2 shards + 2 standalone bins.
+        let dep = expanded.chunks.iter().filter(|c| c.is_dependent()).count();
+        assert_eq!(dep, 10);
+        assert_eq!(prefix.len(), expanded.chunks.len());
+        // Every shard of original chunk j consumes exactly j producers, and
+        // every producer ends on a ChunkSize boundary.
+        for (i, ch) in expanded.chunks.iter().enumerate() {
+            if !ch.is_dependent() {
+                assert!(prefix[i].is_empty());
+                continue;
+            }
+            let blocks = ch.segments[0].offset / expanded.chunk_size;
+            assert_eq!(prefix[i].len() as u64, blocks, "chunk {i}");
+            for (pos, &p) in prefix[i].iter().enumerate() {
+                let seg = &expanded.chunks[p].segments[0];
+                assert_eq!(seg.offset + seg.len, (pos as u64 + 1) * expanded.chunk_size);
+            }
+        }
+    }
+
+    #[test]
+    fn diagnostics_are_machine_readable() {
+        let d = Diagnostic::new(RULE_KBUDGET, "over budget".into(), FIX_KBUDGET)
+            .at_stage(2)
+            .on_op(Op::rfwd(7));
+        let j = d.to_json();
+        assert_eq!(j.get("rule").and_then(|v| v.as_str()), Some(RULE_KBUDGET));
+        assert_eq!(j.get("item").and_then(|v| v.as_f64()), Some(7.0));
+        assert_eq!(j.get("op").and_then(|v| v.as_str()), Some("RFwd(7)"));
+        let text = d.to_string();
+        assert!(text.contains("memory/k-budget") && text.contains("stage 2"), "{text}");
+        assert!(text.contains("fix:"), "{text}");
+    }
+
+    #[test]
+    fn empty_set_verifies_clean() {
+        let set = construct_chunks(&[], 8);
+        for policy in PolicyKind::ALL {
+            let plan = Plan::build(&set, 1, policy, 1, 4);
+            assert!(verify_plan(&plan, &model(), 64).is_empty());
+        }
+    }
+
+    #[test]
+    fn ensure_clean_formats_rule_and_item() {
+        let d = Diagnostic::new(RULE_DEADLOCK, "stuck".into(), FIX_DEADLOCK)
+            .at_stage(1)
+            .on_op(Op::bwd(3));
+        let err = ensure_clean("train pre-flight", &[d]).unwrap_err().to_string();
+        assert!(err.contains("schedule/deadlock"), "{err}");
+        assert!(err.contains("Bwd(3)"), "{err}");
+        assert!(err.contains("train pre-flight"), "{err}");
+    }
+}

@@ -1,0 +1,223 @@
+//! Static verifier (`chunkflow check`) + determinism lint (`chunkflow
+//! lint-src`): scenario-level properties, mutation rejection on real
+//! workloads, and the CLI fail-fast surfaces.
+
+use chunkflow::chunk::construct_chunks;
+use chunkflow::data::BatchSampler;
+use chunkflow::pipeline::{OpKind, PolicyKind};
+use chunkflow::sweep::Scenario;
+use chunkflow::verify::{
+    check_scenario, check_schedule, Plan, RULE_DEADLOCK, RULE_RECOMPUTE,
+};
+
+// ----- scenario-level properties --------------------------------------------
+
+/// The standing contract: every shipped scenario's full candidate grid, under
+/// every registered schedule policy, passes static verification. This is the
+/// in-tree mirror of CI's `chunkflow check --all` gate.
+#[test]
+fn every_registry_and_smoke_scenario_passes_check() {
+    let mut all = Scenario::registry();
+    all.extend(Scenario::smoke());
+    assert!(all.len() >= 14, "expected a real registry, got {}", all.len());
+    for s in &all {
+        let report = check_scenario(s).expect("check runs");
+        assert!(
+            report.is_clean(),
+            "{}: {:?}",
+            s.name,
+            report
+                .diagnostics
+                .iter()
+                .map(|d| d.to_string())
+                .collect::<Vec<_>>()
+        );
+        // Every candidate is analyzed under every policy.
+        assert_eq!(report.plans, s.candidates.len() * PolicyKind::ALL.len(), "{}", s.name);
+    }
+}
+
+/// A real long-chunk workload for mutation tests: the continual-pretraining
+/// scenario's first batch is dominated by multi-chunk dependent groups at
+/// ChunkSize = 2K, so every schedule rule has something to protect.
+fn continual_pretrain_plan() -> Plan {
+    let s = Scenario::select("7b-32K-continual-pretrain")
+        .expect("registry scenario")
+        .remove(0);
+    let parallel = s.chunkflow_parallel();
+    let mut sampler =
+        BatchSampler::new(s.dist().unwrap(), s.context_length, s.global_batch_size, s.seed);
+    let set = construct_chunks(&sampler.next_batch(), 2048);
+    assert!(
+        set.dependent_groups().iter().any(|g| g.len() >= 2),
+        "workload must contain multi-chunk groups"
+    );
+    Plan::build(&set, parallel.sp, PolicyKind::default(), 2, parallel.pp.max(1) as usize)
+}
+
+#[test]
+fn real_scenario_plan_is_clean_and_dropped_edges_are_rejected() {
+    let plan = continual_pretrain_plan();
+    assert!(check_schedule(&plan).is_empty(), "generated plan must verify clean");
+
+    let mut mutated = plan.clone();
+    let before = mutated.edges.len();
+    mutated
+        .edges
+        .retain(|(b, a)| !(b.kind == OpKind::Bwd && a.kind == OpKind::Bwd));
+    assert!(mutated.edges.len() < before, "mutation must drop an edge");
+    let diags = check_schedule(&mutated);
+    assert!(
+        diags.iter().any(|d| d.rule == RULE_RECOMPUTE),
+        "{:?}",
+        diags.iter().map(|d| d.to_string()).collect::<Vec<_>>()
+    );
+}
+
+#[test]
+fn real_scenario_swapped_fwd_bwd_deadlocks() {
+    let mut plan = continual_pretrain_plan();
+    // Move the last stage's final backward in front of every forward: its
+    // same-stage forward dependency can never complete in agenda order.
+    let agenda = plan.agendas.last_mut().unwrap();
+    let last = *agenda.last().unwrap();
+    assert_eq!(last.kind, OpKind::Bwd, "agendas drain backwards last");
+    agenda.pop();
+    agenda.insert(0, last);
+    let diags = check_schedule(&plan);
+    assert!(
+        diags.iter().any(|d| d.rule == RULE_DEADLOCK),
+        "{:?}",
+        diags.iter().map(|d| d.to_string()).collect::<Vec<_>>()
+    );
+    let d = diags.iter().find(|d| d.rule == RULE_DEADLOCK).unwrap();
+    assert!(d.op.is_some(), "diagnostic names the blocked op: {d}");
+}
+
+// ----- CLI surface ----------------------------------------------------------
+
+fn chunkflow_bin() -> std::process::Command {
+    std::process::Command::new(env!("CARGO_BIN_EXE_chunkflow"))
+}
+
+fn combined_output(out: &std::process::Output) -> String {
+    format!(
+        "{}\n{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    )
+}
+
+#[test]
+fn cli_check_smoke_scenarios_pass() {
+    let out = chunkflow_bin().args(["check", "--scenario", "smoke"]).output().unwrap();
+    assert!(out.status.success(), "{}", combined_output(&out));
+    let text = combined_output(&out);
+    assert!(text.contains("statically verified"), "{text}");
+}
+
+#[test]
+fn cli_check_names_rule_id_on_mutated_plans() {
+    // CHUNKFLOW_VERIFY_MUTATE=drop-edges strips the declared precedence
+    // edges from every built plan (the deterministic test seam), so a
+    // long-chunk scenario must fail with the violated rule id and fix hint.
+    let out = chunkflow_bin()
+        .args(["check", "--scenario", "7b-32K-continual-pretrain"])
+        .env("CHUNKFLOW_VERIFY_MUTATE", "drop-edges")
+        .output()
+        .unwrap();
+    assert!(!out.status.success(), "mutated plans must fail the check");
+    let text = combined_output(&out);
+    assert!(text.contains("alg2/descending-recompute"), "{text}");
+    assert!(text.contains("fix:"), "{text}");
+    assert!(text.contains("FAIL"), "{text}");
+}
+
+#[test]
+fn cli_train_preflight_fails_fast_with_rule_id() {
+    // The train pre-flight must reject a broken plan before any backend is
+    // constructed, naming the rule and the offending op — and the same
+    // command with --skip-preflight must run, proving the pre-flight is the
+    // gate (the executor builds its own edges, so training itself is fine).
+    let args = [
+        "train", "--backend", "reference", "--model", "tiny", "--context", "1024",
+        "--chunk-size", "256", "--k", "1", "--steps", "1", "--batch", "4",
+    ];
+    let out = chunkflow_bin()
+        .args(args)
+        .env("CHUNKFLOW_VERIFY_MUTATE", "drop-edges")
+        .output()
+        .unwrap();
+    assert!(!out.status.success(), "pre-flight must fail on the mutated plan");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("train pre-flight"), "{stderr}");
+    assert!(stderr.contains("alg2/descending-recompute"), "{stderr}");
+    assert!(stderr.contains("fix:"), "{stderr}");
+
+    let out = chunkflow_bin()
+        .args(args)
+        .arg("--skip-preflight")
+        .env("CHUNKFLOW_VERIFY_MUTATE", "drop-edges")
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", combined_output(&out));
+}
+
+#[test]
+fn cli_lint_src_runs_clean_on_the_tree() {
+    // Test binaries run from the crate directory, so the defaults resolve
+    // to `src` + `lint-allow.toml` — the same invocation CI runs from the
+    // workspace root via `rust/src` + `rust/lint-allow.toml`.
+    let out = chunkflow_bin().args(["lint-src"]).output().unwrap();
+    assert!(out.status.success(), "{}", combined_output(&out));
+    let text = combined_output(&out);
+    assert!(text.contains("no new determinism hazards"), "{text}");
+}
+
+#[test]
+fn cli_lint_src_fails_on_synthetic_hazard_fixture() {
+    let dir = std::env::temp_dir().join(format!("chunkflow_it_lint_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(
+        dir.join("hazard.rs"),
+        "use std::collections::HashMap;\nfn f() -> u32 { 1 }\n",
+    )
+    .unwrap();
+    let allow = dir.join("allow.toml");
+    std::fs::write(&allow, "# no exceptions\n").unwrap();
+
+    let out = chunkflow_bin()
+        .args([
+            "lint-src",
+            "--root",
+            dir.to_str().unwrap(),
+            "--allowlist",
+            allow.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(!out.status.success(), "a new hazard must fail the lint");
+    let text = combined_output(&out);
+    assert!(text.contains("map-iteration"), "{text}");
+    assert!(text.contains("hazard.rs:1"), "{text}");
+
+    // An audited exception flips the same tree clean.
+    std::fs::write(
+        &allow,
+        "[[allow]]\nfile = \"hazard.rs\"\nrule = \"map-iteration\"\nreason = \"fixture\"\n",
+    )
+    .unwrap();
+    let out = chunkflow_bin()
+        .args([
+            "lint-src",
+            "--root",
+            dir.to_str().unwrap(),
+            "--allowlist",
+            allow.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", combined_output(&out));
+
+    std::fs::remove_dir_all(&dir).unwrap();
+}
